@@ -1,0 +1,79 @@
+//! The paper's headline (abstract, Fig. 1, Table 2): **OPT-175B fine-tuning
+//! within ~18 GB of GPU memory** — unreachable for AdamW/SGD/MeZO.
+//!
+//!     cargo run --release --example opt175b_18gb
+//!
+//! OPT-175B cannot execute for real on this testbed, so this example drives
+//! the *actual* scheduler/dependency machinery on virtual time with the
+//! calibrated A100-PCIe4 cost model (DESIGN.md §Hardware-Adaptation) and
+//! prints the memory accounting for each optimizer strategy.
+
+use zo2::costmodel::{gpu_memory_bytes, ComputeMode, Hardware, SimCost, Strategy, Workload};
+use zo2::model::opt_by_name;
+use zo2::precision::Codec;
+use zo2::sched::{build_plan, simulate, Policy};
+use zo2::util::fmt_mb;
+
+fn main() {
+    let hw = Hardware::a100_pcie4();
+    let shape = opt_by_name("OPT-175B").unwrap();
+    println!(
+        "OPT-175B: {} layers, d={}, {:.1}B params  |  device: {} ({} GB HBM)",
+        shape.n_layers,
+        shape.d_model,
+        shape.total_params() as f64 / 1e9,
+        hw.name,
+        hw.hbm_capacity >> 30
+    );
+    println!();
+
+    // --- memory: who fits? (Fig. 1) -----------------------------------------
+    println!("GPU memory required, B=1 T=2048 (MB; X = exceeds 80 GB):");
+    for (label, strat, pbytes) in [
+        ("AdamW  (fp32)", Strategy::AdamW, 4),
+        ("SGD    (fp32)", Strategy::Sgd, 4),
+        ("MeZO   (fp32)", Strategy::Mezo, 4),
+        ("MeZO   (fp16)", Strategy::Mezo, 2),
+        ("ZO2    (fp32)", Strategy::Zo2 { slots: 3 }, 4),
+        ("ZO2    (fp16)", Strategy::Zo2 { slots: 3 }, 2),
+    ] {
+        let wl = Workload {
+            shape: shape.clone(),
+            batch: 1,
+            seq: 2048,
+            wire: if pbytes == 2 { Codec::Fp16 } else { Codec::F32 },
+            compute: ComputeMode::Fp32,
+        };
+        let bytes = gpu_memory_bytes(strat, &wl, pbytes, &hw);
+        let fits = bytes <= hw.hbm_capacity;
+        println!(
+            "  {label:<14} {:>10} MB   {}",
+            fmt_mb(bytes),
+            if fits { "fits" } else { "X (OOM)" }
+        );
+    }
+    println!();
+
+    // --- throughput: the streaming schedule (Table 2 bottom row) ------------
+    for (label, wire, compute) in [
+        ("fp32 wire / fp32 compute", Codec::F32, ComputeMode::Fp32),
+        ("fp16 wire / fp16 compute", Codec::Fp16, ComputeMode::Fp16),
+    ] {
+        let wl = Workload { shape: shape.clone(), batch: 1, seq: 2048, wire, compute };
+        let costs = SimCost::new(&hw, &wl);
+        let policy = Policy::default();
+        let plan = build_plan(shape.n_layers, 3, policy);
+        let (sched, timeline) = simulate(&plan, &costs, policy);
+        let tokens = (wl.batch * wl.seq) as f64;
+        println!(
+            "{label}: {:>6.1} s/step  ->  {:>5.0} tokens/s   (upload busy {:.0}%, compute busy {:.0}%)",
+            sched.steady_step_s,
+            tokens / sched.steady_step_s,
+            100.0 * timeline.utilization("upload"),
+            100.0 * timeline.utilization("compute"),
+        );
+    }
+    println!();
+    println!("paper Table 2 reference: ZO2 OPT-175B = 34 GB fp32 / 18 GB fp16,");
+    println!("14 tokens/s fp32, 37 tokens/s fp16 (A100 measured).");
+}

@@ -1,0 +1,75 @@
+//! Phase-level profiler for one ZO2 training step (perf pass tooling).
+//!
+//!     cargo run --release --example profile_step -- --config gpt2-100m
+
+use anyhow::Result;
+use zo2::rng::GaussianRng;
+use zo2::runtime::{lit_f32, lit_i32, lit_scalar, lit_to_f32, Runtime};
+use zo2::util::cli::Args;
+
+fn t<R>(label: &str, f: impl FnOnce() -> R) -> R {
+    let t0 = std::time::Instant::now();
+    let r = f();
+    println!("{label:<28} {:>9.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    r
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let rt = Runtime::load_config(&args.get_or("config", "gpt2-100m"))?;
+    let m = rt.manifest().clone();
+    let (b, tt, nb) = (m.config.batch as i64, m.config.seq_len as i64, m.block.size);
+    t("compile_all", || rt.compile_all())?;
+
+    let mut rng = GaussianRng::new(1, 1);
+    let mut bucket = vec![0.0f32; nb];
+    rng.fill_gaussian(&mut bucket);
+    let mut z = vec![0.0f32; nb];
+
+    t("fill_gaussian 1 bucket", || rng.fill_gaussian(&mut z));
+    let lit_b = t("lit_f32 bucket", || lit_f32(&bucket, &[nb as i64]).unwrap());
+    let lit_z = t("lit_f32 z", || lit_f32(&z, &[nb as i64]).unwrap());
+
+    let h = vec![0.01f32; (b * tt) as usize * m.config.d_model];
+    let hp = lit_f32(&h, &[b, tt, m.config.d_model as i64])?;
+    let hm = hp.clone();
+    let ids: Vec<i32> = (0..b * tt).map(|i| (i % 100) as i32).collect();
+    let ids_lit = lit_i32(&ids, &[b, tt])?;
+
+    // Warm-up once (first exec includes lazy init).
+    let inputs = [
+        lit_b.clone(), lit_z.clone(), lit_scalar(0.0), lit_scalar(1e-4),
+        lit_z.clone(), lit_scalar(1e-3), hp.clone(), hm.clone(),
+    ];
+    t("block_step warmup", || rt.run("block_step", &inputs))?;
+    for i in 0..3 {
+        let out = t(&format!("block_step run {i}"), || rt.run("block_step", &inputs))?;
+        if i == 0 {
+            t("lit_to_f32 bucket out", || lit_to_f32(&out[0]).unwrap());
+        }
+    }
+    let up = [lit_b.clone(), lit_z.clone(), lit_scalar(1e-4), lit_scalar(0.5)];
+    t("update_block warmup", || rt.run("update_block", &up))?;
+    t("update_block run", || rt.run("update_block", &up))?;
+
+    let einputs = [
+        lit_f32(&vec![0.01f32; m.embed.size], &[m.embed.size as i64])?,
+        lit_f32(&vec![0.01f32; m.embed.size], &[m.embed.size as i64])?,
+        lit_scalar(0.0), lit_scalar(1e-4),
+        lit_f32(&vec![0.01f32; m.embed.size], &[m.embed.size as i64])?,
+        lit_scalar(1e-3), ids_lit.clone(),
+    ];
+    t("embed_step warmup", || rt.run("embed_step", &einputs))?;
+    t("embed_step run", || rt.run("embed_step", &einputs))?;
+
+    let hinputs = [
+        lit_f32(&vec![0.01f32; m.head.size], &[m.head.size as i64])?,
+        lit_f32(&vec![0.01f32; m.head.size], &[m.head.size as i64])?,
+        lit_scalar(0.0), lit_scalar(1e-4),
+        lit_f32(&vec![0.01f32; m.head.size], &[m.head.size as i64])?,
+        lit_scalar(1e-3), hp.clone(), hm.clone(), ids_lit,
+    ];
+    t("head_step warmup", || rt.run("head_step", &hinputs))?;
+    t("head_step run", || rt.run("head_step", &hinputs))?;
+    Ok(())
+}

@@ -1,0 +1,184 @@
+"""AOT compile path: lower every module executable to HLO *text* + manifest.
+
+Run once by `make artifacts`; python never appears on the training path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per config we emit, under artifacts/<name>/:
+
+  embed_step / block_step / head_step   fused deferred-update + dual-forward
+  embed_fwd  / block_fwd  / head_eval   single-forward eval path
+  update_embed / update_block / update_head   final-flush updates
+  manifest.json                         config + bucket layouts + signatures
+  golden/                               (tiny configs) input/output vectors
+                                        for the rust runtime integration test
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import (CONFIGS, ModelConfig, block_layout, embed_layout,
+                      head_layout, layout_offsets, layout_size, total_params)
+
+F32 = jnp.float32
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def executables(cfg: ModelConfig):
+    """name -> (fn, arg specs). Argument order is the rust-side ABI."""
+    pe = layout_size(embed_layout(cfg))
+    pb = layout_size(block_layout(cfg))
+    ph = layout_size(head_layout(cfg))
+    b, t, d, v = cfg.batch, cfg.seq_len, cfg.d_model, cfg.vocab
+    sc = _spec(())          # f32 scalar
+    ids = _spec((b, t), I32)
+    h = _spec((b, t, d))
+
+    key = _spec((2,), U32)  # threefry key data (the managed RNG state)
+
+    def step_args(p, *extra):
+        # bucket, key_prev, g_prev, lr, key_cur, eps, inputs...
+        return (_spec((p,)), key, sc, sc, key, sc) + extra
+
+    return {
+        "embed_step": (functools.partial(M.embed_step, cfg), step_args(pe, ids)),
+        "block_step": (functools.partial(M.block_step, cfg), step_args(pb, h, h)),
+        "head_step": (functools.partial(M.head_step, cfg), step_args(ph, h, h, ids)),
+        "embed_fwd": (functools.partial(M.embed_fwd, cfg), (_spec((pe,)), ids)),
+        "block_fwd": (functools.partial(M.block_fwd, cfg), (_spec((pb,)), h)),
+        "head_eval": (functools.partial(M.head_eval, cfg), (_spec((ph,)), h, ids)),
+        "update_embed": (M.update_bucket, (_spec((pe,)), key, sc, sc)),
+        "update_block": (M.update_bucket, (_spec((pb,)), key, sc, sc)),
+        "update_head": (M.update_bucket, (_spec((ph,)), key, sc, sc)),
+    }
+
+
+def _layout_json(layout):
+    return [
+        {"name": n, "offset": off, "shape": list(shape)}
+        for n, off, shape in layout_offsets(layout)
+    ]
+
+
+def manifest(cfg: ModelConfig, arts):
+    return {
+        "config": {
+            "name": cfg.name, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers, "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len, "batch": cfg.batch,
+            "ffn_mult": cfg.ffn_mult, "total_params": total_params(cfg),
+        },
+        "buckets": {
+            "embed": {"size": layout_size(embed_layout(cfg)),
+                      "layout": _layout_json(embed_layout(cfg))},
+            "block": {"size": layout_size(block_layout(cfg)),
+                      "layout": _layout_json(block_layout(cfg))},
+            "head": {"size": layout_size(head_layout(cfg)),
+                     "layout": _layout_json(head_layout(cfg))},
+        },
+        "artifacts": {name: f"{name}.hlo.txt" for name in arts},
+    }
+
+
+# --- golden vectors ---------------------------------------------------------
+
+def _dump_bin(path, arr):
+    a = np.asarray(arr)
+    dt = {"i": np.int32, "u": np.uint32}.get(a.dtype.kind, np.float32)
+    a.astype(dt).tofile(path)
+
+
+def emit_goldens(cfg: ModelConfig, outdir: str):
+    """Concrete input/output pairs the rust runtime test replays bit-for-bit."""
+    gdir = os.path.join(outdir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.RandomState(0)
+    exes = executables(cfg)
+    cases = []
+    for name in ("embed_step", "block_step", "head_step", "block_fwd",
+                 "head_eval", "update_block"):
+        fn, specs = exes[name]
+        args = []
+        for s in specs:
+            if s.dtype == I32:
+                args.append(rng.randint(0, cfg.vocab, size=s.shape).astype(np.int32))
+            elif s.dtype == U32:
+                args.append(rng.randint(0, 2**31, size=s.shape).astype(np.uint32))
+            elif s.shape == ():
+                args.append(np.float32(rng.uniform(0.001, 0.01)))
+            else:
+                args.append(rng.normal(0, 0.05, size=s.shape).astype(np.float32))
+        outs = jax.jit(fn)(*args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        case = {"exe": name, "inputs": [], "outputs": []}
+        for i, a in enumerate(args):
+            f = f"{name}_in{i}.bin"
+            _dump_bin(os.path.join(gdir, f), a)
+            a = np.asarray(a)
+            dt = {"i": "i32", "u": "u32"}.get(a.dtype.kind, "f32")
+            case["inputs"].append({"file": f, "dtype": dt, "shape": list(a.shape)})
+        for i, o in enumerate(outs):
+            f = f"{name}_out{i}.bin"
+            o = np.asarray(o)
+            _dump_bin(os.path.join(gdir, f), o)
+            case["outputs"].append({
+                "file": f, "dtype": "f32", "shape": list(o.shape)})
+        cases.append(case)
+    with open(os.path.join(gdir, "index.json"), "w") as f:
+        json.dump({"cases": cases}, f, indent=1)
+
+
+def build_config(cfg: ModelConfig, root: str, goldens: bool):
+    outdir = os.path.join(root, cfg.name)
+    os.makedirs(outdir, exist_ok=True)
+    arts = executables(cfg)
+    for name, (fn, specs) in arts.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(outdir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        print(f"  {cfg.name}/{name}: {len(text)} chars")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest(cfg, arts), f, indent=1)
+    if goldens:
+        emit_goldens(cfg, outdir)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", nargs="+", default=["tiny"])
+    args = ap.parse_args()
+    for name in args.configs:
+        cfg = CONFIGS[name]
+        print(f"lowering {name} ({total_params(cfg)/1e6:.1f}M params)")
+        build_config(cfg, args.out, goldens=name.startswith("tiny"))
+
+
+if __name__ == "__main__":
+    main()

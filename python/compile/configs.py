@@ -1,0 +1,114 @@
+"""Model configurations and bucket layouts — the single source of truth.
+
+The rust coordinator never sees python objects; it reads the manifest.json
+emitted by aot.py, which serialises exactly what is defined here.  Any change
+to the layout below therefore propagates to both sides through `make
+artifacts`.
+
+A *bucket* (paper §5.3, "communication buckets") is the flat, contiguous f32
+vector holding every parameter of one module (embedding / transformer block /
+LM head).  The rust side allocates, transfers, compresses and updates buckets;
+the JAX side unpacks them into weight views inside each AOT-lowered
+executable.  Layout order is the unpack order.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """An OPT-style decoder-only transformer, AOT-specialised to (B, T)."""
+
+    name: str
+    d_model: int
+    n_heads: int
+    n_layers: int
+    vocab: int
+    seq_len: int          # T fixed at AOT time (learned positional table size)
+    batch: int            # B fixed at AOT time
+    ffn_mult: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffn(self) -> int:
+        return self.ffn_mult * self.d_model
+
+
+# --- bucket layouts -------------------------------------------------------
+# Each entry: (param name, shape tuple).  Offsets are cumulative products.
+
+def embed_layout(cfg: ModelConfig):
+    return [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq_len, cfg.d_model)),
+    ]
+
+
+def block_layout(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ffn
+    return [
+        ("ln1_w", (d,)), ("ln1_b", (d,)),
+        ("wq", (d, d)), ("bq", (d,)),
+        ("wk", (d, d)), ("bk", (d,)),
+        ("wv", (d, d)), ("bv", (d,)),
+        ("wo", (d, d)), ("bo", (d,)),
+        ("ln2_w", (d,)), ("ln2_b", (d,)),
+        ("fc1_w", (d, f)), ("fc1_b", (f,)),
+        ("fc2_w", (f, d)), ("fc2_b", (d,)),
+    ]
+
+
+def head_layout(cfg: ModelConfig):
+    return [
+        ("lnf_w", (cfg.d_model,)), ("lnf_b", (cfg.d_model,)),
+        ("lm_w", (cfg.d_model, cfg.vocab)),
+    ]
+
+
+def layout_size(layout) -> int:
+    n = 0
+    for _, shape in layout:
+        m = 1
+        for s in shape:
+            m *= s
+        n += m
+    return n
+
+
+def layout_offsets(layout):
+    """[(name, offset, shape)] with offsets into the flat bucket."""
+    out, off = [], 0
+    for name, shape in layout:
+        m = 1
+        for s in shape:
+            m *= s
+        out.append((name, off, shape))
+        off += m
+    return out
+
+
+def total_params(cfg: ModelConfig) -> int:
+    return (
+        layout_size(embed_layout(cfg))
+        + cfg.n_layers * layout_size(block_layout(cfg))
+        + layout_size(head_layout(cfg))
+    )
+
+
+# --- the config zoo -------------------------------------------------------
+# `tiny*` are for tests; `gpt2-100m` is the end-to-end training example.
+# The OPT family (paper Table 1) exists rust-side for the analytic /
+# simulated experiments; only real-executable configs are listed here.
+
+CONFIGS = {
+    "tiny": ModelConfig("tiny", d_model=32, n_heads=2, n_layers=2,
+                        vocab=64, seq_len=16, batch=2),
+    "tiny-wide": ModelConfig("tiny-wide", d_model=48, n_heads=4, n_layers=3,
+                             vocab=96, seq_len=8, batch=1),
+    "gpt2-100m": ModelConfig("gpt2-100m", d_model=768, n_heads=12,
+                             n_layers=12, vocab=8192, seq_len=32, batch=4),
+}

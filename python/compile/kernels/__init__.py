@@ -1,0 +1,5 @@
+from .zo_dual_matmul import zo_dual_matmul, choose_block, vmem_bytes
+from .zo_update import zo_update
+from . import ref
+
+__all__ = ["zo_dual_matmul", "zo_update", "choose_block", "vmem_bytes", "ref"]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+These are deliberately the most naive possible formulations (materialise the
+perturbed weights, call jnp.dot) so that any tiling/accumulation/revisit bug
+in the kernels shows up as a numeric mismatch in pytest.
+"""
+
+import jax.numpy as jnp
+
+
+def zo_dual_matmul_ref(xp, xm, w, z, eps):
+    wp = w + eps * z
+    wm = w - eps * z
+    return jnp.dot(xp, wp), jnp.dot(xm, wm)
+
+
+def zo_update_ref(bucket, z, lr, g):
+    return bucket - (lr * g) * z

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: fused dual perturbed matmul — ZO2's core insight on TPU.
+
+The paper's system-level trick is "transfer each weight once, use it for both
+forward passes" (CPU->GPU over PCIe).  At the kernel level the same trick
+applies one memory tier down: each weight tile (and its Gaussian direction
+tile `z`) is streamed HBM->VMEM **once** and serves *both* perturbed matmuls
+
+    y+ = x+ @ (W + eps*z)
+    y- = x- @ (W - eps*z)
+
+halving weight traffic versus running two independent perturbed matmuls, and
+never materialising W+eps*z / W-eps*z in HBM (they exist only as VMEM tiles).
+
+Grid is (M/bm, N/bn, K/bk) with the K axis innermost; partial products are
+accumulated directly into the output tiles (revisited across the K axis),
+fp32 accumulate — the MXU-friendly schedule.  Block sizes are chosen by
+`choose_block` to divide the dims exactly: 128-aligned tiles at paper scale,
+whole-array tiles for the tiny test configs.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU perf is estimated from the VMEM footprint + MXU
+utilisation of these block shapes in DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile caps. Two profiles:
+#  - CPU/interpret (what we AOT for the PJRT CPU runtime): large tiles — the
+#    grid-step overhead of interpret mode dominates, and VMEM doesn't bind.
+#  - TPU: 128-aligned tiles sized so the (x+, x-, w, z, out+, out-) working
+#    set stays well under a core's ~16 MB VMEM; `vmem_bytes` below reports
+#    the footprint used for the DESIGN.md §Perf roofline estimate.
+BM_CAP = 512
+BN_CAP = 1024
+BK_CAP = 2048
+TPU_BM_CAP = 256
+TPU_BN_CAP = 512
+TPU_BK_CAP = 512
+
+
+def choose_block(dim: int, cap: int) -> int:
+    """Largest power-of-two-ish tile <= cap that divides `dim` exactly."""
+    if dim <= cap:
+        return dim
+    for c in (cap, 1024, 512, 384, 256, 192, 128, 64, 32, 16, 8, 4, 2):
+        if c <= cap and dim % c == 0:
+            return c
+    return dim  # prime-ish dim: single tile
+
+
+def _kernel(xp_ref, xm_ref, w_ref, z_ref, eps_ref, op_ref, om_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        op_ref[...] = jnp.zeros_like(op_ref)
+        om_ref[...] = jnp.zeros_like(om_ref)
+
+    eps = eps_ref[0, 0]
+    w = w_ref[...]
+    ez = eps * z_ref[...]
+    # One VMEM-resident (w, z) tile serves both perturbed products.
+    op_ref[...] += jnp.dot(xp_ref[...], w + ez, preferred_element_type=jnp.float32)
+    om_ref[...] += jnp.dot(xm_ref[...], w - ez, preferred_element_type=jnp.float32)
+
+
+def zo_dual_matmul(xp, xm, w, z, eps):
+    """(y+, y-) = (xp @ (w + eps*z), xm @ (w - eps*z)).
+
+    xp, xm: [M, K] f32;  w, z: [K, N] f32;  eps: scalar f32 (traced).
+    """
+    m, k = xp.shape
+    k2, n = w.shape
+    assert k == k2 and xm.shape == xp.shape and z.shape == w.shape
+    # Storage may be low-bit (AMP mode); the MXU path computes in f32.
+    xp, xm, w, z = (a.astype(jnp.float32) for a in (xp, xm, w, z))
+    bm = choose_block(m, BM_CAP)
+    bn = choose_block(n, BN_CAP)
+    bk = choose_block(k, BK_CAP)
+    grid = (m // bm, n // bn, k // bk)
+    eps2d = jnp.reshape(eps.astype(jnp.float32), (1, 1))
+
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+    ]
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # x+
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # x-
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # w
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # z
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),      # eps
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(xp, xm, w, z, eps2d)
+
+
+def vmem_bytes(m, n, k) -> int:
+    """VMEM working set of one grid step under the TPU tile profile."""
+    bm, bn, bk = (choose_block(m, TPU_BM_CAP), choose_block(n, TPU_BN_CAP),
+                  choose_block(k, TPU_BK_CAP))
+    # x+ x- tiles, w z tiles, two fp32 accum tiles
+    return 4 * (2 * bm * bk + 2 * bk * bn + 2 * bm * bn)

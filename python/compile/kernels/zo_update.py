@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: fused ZO parameter update over a flat bucket.
+
+    bucket' = bucket - (lr * g) * z
+
+`g` is the scalar projected gradient (paper Eq. 2) and `z` the Gaussian
+direction replayed from the managed RNG state, so the true gradient
+`g*z` is never materialised (paper §4.1 point 4) — the update streams the
+bucket through VMEM tile by tile with zero extra HBM buffers.
+
+This same kernel is used (a) inside every fused per-module *step* executable
+(deferred update, paper §5.4) and (b) in the standalone `update_*` artifacts
+used for the final flush after the last training step — one code path, so the
+flush is bit-identical to the in-step update by construction.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BP_CAP = 1 << 20  # 1M f32 per tile => ~12 MB VMEM for (w, z, out)
+
+
+def _kernel(w_ref, z_ref, s_ref, o_ref):
+    # The barrier pins the (mul, sub) rounding: without it, XLA may contract
+    # `w - s*z` into an FMA in one embedding executable but not another,
+    # producing 1-ulp divergence between the fused deferred update and the
+    # standalone flush — which would break MeZO≡ZO2 bit-parity.
+    delta = jax.lax.optimization_barrier(s_ref[0] * z_ref[...])
+    o_ref[...] = w_ref[...] - delta
+
+
+def pick_tile(p: int, cap: int, max_grid: int = 64) -> int:
+    """Largest tile that divides `p` with a small grid.
+
+    Flat bucket sizes are arbitrary (e.g. 7,087,872 for the gpt2-100m
+    block), so walking the *grid* count up and taking the first divisor
+    keeps the number of pallas grid steps tiny.  If no small grid exists
+    (prime-ish sizes), fall back to a single whole-bucket tile — on the CPU
+    interpret path VMEM does not bind; the TPU deployment note in DESIGN.md
+    covers padding strategies for that case.
+    """
+    if p <= cap:
+        return p
+    for g in range(2, max_grid + 1):
+        if p % g == 0 and p // g <= cap:
+            return p // g
+    return p  # single tile
+
+
+def zo_update(bucket, z, lr, g):
+    """Elementwise bucket update; bucket/z are flat f32 [P]."""
+    (p,) = bucket.shape
+    assert z.shape == (p,)
+    bucket = bucket.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+
+    bp = pick_tile(p, BP_CAP)
+    scale = jnp.reshape((lr * g).astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,
+    )(bucket, z, scale)

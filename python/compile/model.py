@@ -1,0 +1,219 @@
+"""L2: the OPT-style decoder model as *module-granular* JAX functions.
+
+ZO2 disaggregates the model into (embedding, N transformer blocks, LM head)
+and streams blocks through the GPU.  To let the rust coordinator drive that
+schedule, each module is AOT-lowered to its own executable.  Three families:
+
+  *_step  — the fused training executable (paper §5.4 "efficient parameter
+            update"):  given a module's flat parameter bucket, it first
+            applies the **deferred** update with the *previous* step's
+            projected gradient `g_prev` and its replayed direction `z_prev`
+            (a bit-exact no-op when g_prev == 0, i.e. the first step), then
+            runs the dual (+eps / -eps) forward with the *current* direction
+            `z_cur`.  One upload serves update + both forwards.
+  *_fwd   — single unperturbed forward (evaluation / inference path).
+  update  — standalone bucket update; used for the final flush after the
+            last step (paper Fig. 6b: `model.opt.zo_update(model)`).
+
+All perturbed matmuls go through the L1 Pallas kernel `zo_dual_matmul`
+(weights + z streamed once, both products computed); all non-matmul
+parameters (LayerNorm scales/shifts, biases, embedding tables) are perturbed
+elementwise in jnp.  The perturbed weights never exist outside the kernel's
+VMEM tiles / fused elementwise ops — exactly the paper's "in-place" property.
+
+Buckets are flat f32 vectors with the layout defined in configs.py; the same
+layout table is exported to rust via the artifact manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import (ModelConfig, block_layout, embed_layout, head_layout,
+                      layout_offsets)
+from .kernels import zo_dual_matmul, zo_update
+
+LN_EPS = 1e-5
+
+
+# --- bucket unpacking ------------------------------------------------------
+
+def unpack(bucket, layout):
+    """Flat f32 bucket -> dict of shaped views (static offsets)."""
+    out = {}
+    for name, off, shape in layout_offsets(layout):
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = bucket[off:off + size].reshape(shape)
+    return out
+
+
+# --- primitive dual helpers --------------------------------------------------
+
+def dual_elem(w, z, eps):
+    """Perturbed (+, -) views of a non-matmul parameter."""
+    ez = eps * z
+    return w + ez, w - ez
+
+
+def layer_norm(x, w, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + LN_EPS) * w + b
+
+
+def dual_linear(hp, hm, w, zw, b, zb, eps):
+    """Dual perturbed affine layer over [..., K] activations."""
+    k = w.shape[0]
+    shp = hp.shape
+    yp, ym = zo_dual_matmul(hp.reshape(-1, k), hm.reshape(-1, k), w, zw, eps)
+    bp, bm = dual_elem(b, zb, eps)
+    n = w.shape[1]
+    return (yp + bp).reshape(shp[:-1] + (n,)), (ym + bm).reshape(shp[:-1] + (n,))
+
+
+def causal_attention(q, k, v, cfg: ModelConfig):
+    b, t, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split(x):
+        return x.reshape(b, t, h, hd).transpose(0, 2, 1, 3)  # [B,H,T,hd]
+
+    q, k, v = split(q), split(k), split(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return ctx.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+# --- module forwards ---------------------------------------------------------
+
+def block_dual_fwd(cfg: ModelConfig, bucket, z, eps, hp, hm):
+    p = unpack(bucket, block_layout(cfg))
+    q = unpack(z, block_layout(cfg))
+
+    ln1w_p, ln1w_m = dual_elem(p["ln1_w"], q["ln1_w"], eps)
+    ln1b_p, ln1b_m = dual_elem(p["ln1_b"], q["ln1_b"], eps)
+    ap = layer_norm(hp, ln1w_p, ln1b_p)
+    am = layer_norm(hm, ln1w_m, ln1b_m)
+
+    qp, qm = dual_linear(ap, am, p["wq"], q["wq"], p["bq"], q["bq"], eps)
+    kp, km = dual_linear(ap, am, p["wk"], q["wk"], p["bk"], q["bk"], eps)
+    vp, vm = dual_linear(ap, am, p["wv"], q["wv"], p["bv"], q["bv"], eps)
+    cp = causal_attention(qp, kp, vp, cfg)
+    cm = causal_attention(qm, km, vm, cfg)
+    op_, om_ = dual_linear(cp, cm, p["wo"], q["wo"], p["bo"], q["bo"], eps)
+    hp = hp + op_
+    hm = hm + om_
+
+    ln2w_p, ln2w_m = dual_elem(p["ln2_w"], q["ln2_w"], eps)
+    ln2b_p, ln2b_m = dual_elem(p["ln2_b"], q["ln2_b"], eps)
+    ap = layer_norm(hp, ln2w_p, ln2b_p)
+    am = layer_norm(hm, ln2w_m, ln2b_m)
+    fp, fm = dual_linear(ap, am, p["fc1_w"], q["fc1_w"], p["fc1_b"], q["fc1_b"], eps)
+    fp = jax.nn.relu(fp)   # OPT uses ReLU activations
+    fm = jax.nn.relu(fm)
+    gp, gm = dual_linear(fp, fm, p["fc2_w"], q["fc2_w"], p["fc2_b"], q["fc2_b"], eps)
+    return hp + gp, hm + gm
+
+
+def block_fwd(cfg: ModelConfig, bucket, h):
+    p = unpack(bucket, block_layout(cfg))
+    a = layer_norm(h, p["ln1_w"], p["ln1_b"])
+    q_ = a @ p["wq"] + p["bq"]
+    k_ = a @ p["wk"] + p["bk"]
+    v_ = a @ p["wv"] + p["bv"]
+    h = h + (causal_attention(q_, k_, v_, cfg) @ p["wo"] + p["bo"])
+    a = layer_norm(h, p["ln2_w"], p["ln2_b"])
+    f = jax.nn.relu(a @ p["fc1_w"] + p["fc1_b"])
+    return h + (f @ p["fc2_w"] + p["fc2_b"])
+
+
+def embed_dual_fwd(cfg: ModelConfig, bucket, z, eps, ids):
+    p = unpack(bucket, embed_layout(cfg))
+    q = unpack(z, embed_layout(cfg))
+    tok_p, tok_m = dual_elem(p["tok_emb"], q["tok_emb"], eps)
+    pos_p, pos_m = dual_elem(p["pos_emb"], q["pos_emb"], eps)
+    hp = tok_p[ids] + pos_p[None, :, :]
+    hm = tok_m[ids] + pos_m[None, :, :]
+    return hp, hm
+
+
+def embed_fwd(cfg: ModelConfig, bucket, ids):
+    p = unpack(bucket, embed_layout(cfg))
+    return p["tok_emb"][ids] + p["pos_emb"][None, :, :]
+
+
+def _next_token_loss(logits, ids):
+    """Mean next-token cross-entropy over B*(T-1) positions."""
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = ids[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def head_dual_fwd(cfg: ModelConfig, bucket, z, eps, hp, hm, ids):
+    p = unpack(bucket, head_layout(cfg))
+    q = unpack(z, head_layout(cfg))
+    lnw_p, lnw_m = dual_elem(p["lnf_w"], q["lnf_w"], eps)
+    lnb_p, lnb_m = dual_elem(p["lnf_b"], q["lnf_b"], eps)
+    ap = layer_norm(hp, lnw_p, lnb_p)
+    am = layer_norm(hm, lnw_m, lnb_m)
+    b, t, d = ap.shape
+    lp, lm = zo_dual_matmul(ap.reshape(-1, d), am.reshape(-1, d),
+                            p["lm_w"], q["lm_w"], eps)
+    lp = lp.reshape(b, t, cfg.vocab)
+    lm = lm.reshape(b, t, cfg.vocab)
+    return _next_token_loss(lp, ids), _next_token_loss(lm, ids)
+
+
+def head_eval(cfg: ModelConfig, bucket, h, ids):
+    """Unperturbed loss + last-position logits (for label-token accuracy)."""
+    p = unpack(bucket, head_layout(cfg))
+    a = layer_norm(h, p["lnf_w"], p["lnf_b"])
+    logits = a @ p["lm_w"]
+    return _next_token_loss(logits, ids), logits[:, -1, :]
+
+
+# --- fused step executables (deferred update + dual forward) -----------------
+#
+# The Gaussian directions are generated ON DEVICE from 8-byte keys (threefry,
+# portable HLO) — the rust coordinator ships only the managed RNG *state*
+# (paper §5.1), never a z vector.  This mirrors the real system (torch
+# generator states on the GPU) and keeps the interconnect traffic equal to
+# the parameter bytes alone.
+
+def _zdraw(key_data, n):
+    key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
+    z = jax.random.normal(key, (n,), jnp.float32)
+    # Barrier: the draw must compile to the *same* rounding in every
+    # executable that embeds it (fused step vs standalone update), or the
+    # paper's bit-exactness guarantee (§5.1) breaks.  The barrier keeps the
+    # generation chain out of surrounding fusions.
+    return jax.lax.optimization_barrier(z)
+
+
+def embed_step(cfg, bucket, key_prev, g_prev, lr, key_cur, eps, ids):
+    b1 = zo_update(bucket, _zdraw(key_prev, bucket.shape[0]), lr, g_prev)
+    hp, hm = embed_dual_fwd(cfg, b1, _zdraw(key_cur, bucket.shape[0]), eps, ids)
+    return b1, hp, hm
+
+
+def block_step(cfg, bucket, key_prev, g_prev, lr, key_cur, eps, hp, hm):
+    b1 = zo_update(bucket, _zdraw(key_prev, bucket.shape[0]), lr, g_prev)
+    op_, om_ = block_dual_fwd(cfg, b1, _zdraw(key_cur, bucket.shape[0]), eps, hp, hm)
+    return b1, op_, om_
+
+
+def head_step(cfg, bucket, key_prev, g_prev, lr, key_cur, eps, hp, hm, ids):
+    b1 = zo_update(bucket, _zdraw(key_prev, bucket.shape[0]), lr, g_prev)
+    lp, lm = head_dual_fwd(cfg, b1, _zdraw(key_cur, bucket.shape[0]), eps, hp, hm, ids)
+    return b1, lp, lm
+
+
+def update_bucket(bucket, key, lr, g):
+    """Standalone flush executable — same kernel + key path as the in-step
+    update, so the final flush is bit-identical by construction."""
+    return zo_update(bucket, _zdraw(key, bucket.shape[0]), lr, g)

@@ -1,0 +1,59 @@
+"""AOT path: lowering smoke, manifest shape, golden replay."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+def test_lower_tiny_block_step_hlo_text():
+    cfg = CONFIGS["tiny"]
+    exes = aot.executables(cfg)
+    fn, specs = exes["block_step"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert text.startswith("HloModule")
+    assert "f32[12704]" in text  # tiny block bucket size
+
+
+def test_manifest_contents():
+    cfg = CONFIGS["tiny"]
+    m = aot.manifest(cfg, aot.executables(cfg))
+    assert m["config"]["n_layers"] == 2
+    assert m["buckets"]["block"]["size"] == 12704
+    names = [e["name"] for e in m["buckets"]["block"]["layout"]]
+    assert names[0] == "ln1_w" and names[-1] == "fc2_b"
+    assert set(m["artifacts"]) == {
+        "embed_step", "block_step", "head_step", "embed_fwd", "block_fwd",
+        "head_eval", "update_embed", "update_block", "update_head"}
+
+
+@pytest.mark.skipif(not os.path.isdir(os.path.join(ART, "golden")),
+                    reason="run `make artifacts` first")
+def test_golden_replay_bit_exact():
+    """Re-executing the jitted fns on the dumped inputs reproduces outputs."""
+    cfg = CONFIGS["tiny"]
+    gdir = os.path.join(ART, "golden")
+    with open(os.path.join(gdir, "index.json")) as f:
+        index = json.load(f)
+    exes = aot.executables(cfg)
+    for case in index["cases"]:
+        fn, _ = exes[case["exe"]]
+        args = []
+        for meta in case["inputs"]:
+            dt = {"i32": np.int32, "u32": np.uint32}.get(meta["dtype"], np.float32)
+            a = np.fromfile(os.path.join(gdir, meta["file"]), dtype=dt)
+            args.append(a.reshape(meta["shape"]) if meta["shape"] else dt(a[0]))
+        outs = jax.jit(fn)(*args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        for got, meta in zip(outs, case["outputs"]):
+            want = np.fromfile(os.path.join(gdir, meta["file"]), dtype=np.float32)
+            got = np.asarray(got).reshape(-1)
+            assert np.array_equal(got, want), case["exe"]

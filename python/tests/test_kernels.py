@@ -1,0 +1,115 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis-swept."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import choose_block, vmem_bytes, zo_dual_matmul, zo_update
+from compile.kernels.ref import zo_dual_matmul_ref, zo_update_ref
+
+DIMS = st.integers(min_value=1, max_value=96)
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return rng.normal(0, 1, size=shape).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS,
+       eps=st.floats(min_value=1e-6, max_value=1e-1),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_dual_matmul_matches_ref(m, k, n, eps, seed):
+    rng = np.random.RandomState(seed)
+    xp, xm = _rand(rng, m, k), _rand(rng, m, k)
+    w, z = _rand(rng, k, n), _rand(rng, k, n)
+    eps = jnp.float32(eps)
+    yp, ym = jax.jit(zo_dual_matmul)(xp, xm, w, z, eps)
+    rp, rm = zo_dual_matmul_ref(xp, xm, w, z, eps)
+    np.testing.assert_allclose(yp, rp, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(ym, rm, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 768, 768),     # gpt2-100m qkv/o projection shape
+    (128, 768, 3072),    # fc1
+    (128, 3072, 768),    # fc2
+    (2, 3, 5),           # prime-ish dims -> single-tile fallback
+    (1, 1, 1),
+])
+def test_dual_matmul_paper_shapes(m, k, n):
+    rng = np.random.RandomState(1)
+    xp, xm = _rand(rng, m, k), _rand(rng, m, k)
+    w, z = _rand(rng, k, n), _rand(rng, k, n)
+    eps = jnp.float32(1e-3)
+    yp, ym = jax.jit(zo_dual_matmul)(xp, xm, w, z, eps)
+    rp, rm = zo_dual_matmul_ref(xp, xm, w, z, eps)
+    np.testing.assert_allclose(yp, rp, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ym, rm, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_dual_matmul_low_bit_storage(dtype):
+    """AMP mode stores low-bit; the kernel must upcast and stay close."""
+    rng = np.random.RandomState(2)
+    xp = jnp.asarray(_rand(rng, 8, 16), dtype)
+    xm = jnp.asarray(_rand(rng, 8, 16), dtype)
+    w = jnp.asarray(_rand(rng, 16, 12), dtype)
+    z = jnp.asarray(_rand(rng, 16, 12), dtype)
+    eps = jnp.float32(1e-2)
+    yp, ym = jax.jit(zo_dual_matmul)(xp, xm, w, z, eps)
+    rp, rm = zo_dual_matmul_ref(xp.astype(jnp.float32), xm.astype(jnp.float32),
+                                w.astype(jnp.float32), z.astype(jnp.float32), eps)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(yp, rp, rtol=tol, atol=tol)
+    np.testing.assert_allclose(ym, rm, rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.integers(min_value=1, max_value=5000),
+       lr=st.floats(min_value=1e-8, max_value=1e-2),
+       g=st.floats(min_value=-10, max_value=10),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_update_matches_ref(p, lr, g, seed):
+    rng = np.random.RandomState(seed)
+    b, z = _rand(rng, p), _rand(rng, p)
+    lr, g = jnp.float32(lr), jnp.float32(g)
+    got = jax.jit(zo_update)(b, z, lr, g)
+    want = zo_update_ref(b, z, lr, g)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_update_zero_g_is_exact_noop():
+    """First-step deferred update (g_prev = 0) must be bit-exact identity."""
+    rng = np.random.RandomState(3)
+    b, z = _rand(rng, 4096), _rand(rng, 4096)
+    got = jax.jit(zo_update)(b, z, jnp.float32(1e-4), jnp.float32(0.0))
+    assert np.array_equal(np.asarray(got), b)
+
+
+def test_pick_tile_small_grids_for_real_bucket_sizes():
+    """The flat-bucket tiler must never explode the pallas grid (the
+    gpt2-100m block bucket is 7,087,872 = 2^8·3·11·839 — a naive divisor
+    walk once produced an 18,458-step grid and minutes-long steps)."""
+    from compile.kernels.zo_update import pick_tile, BP_CAP
+
+    for p in [7_087_872, 6_316_032, 6_292_992, 12_704, 1, 97, 1 << 22]:
+        tile = pick_tile(p, BP_CAP)
+        assert p % tile == 0
+        grid = p // tile
+        assert grid <= 64 or tile == p, (p, tile, grid)
+
+
+def test_choose_block_divides():
+    for dim in [1, 2, 7, 32, 97, 128, 768, 3072, 8192, 12288]:
+        for cap in [8, 128, 512, 1024, 2048]:
+            blk = choose_block(dim, cap)
+            assert dim % blk == 0
+            assert blk <= max(cap, dim if dim <= cap else dim)
+
+
+def test_vmem_budget_paper_scale():
+    """The chosen tiles must fit a TPU core's ~16MB VMEM at OPT-175B dims."""
+    assert vmem_bytes(2048, 12288, 12288) < 16 * 1024 * 1024
+    assert vmem_bytes(128, 3072, 768) < 16 * 1024 * 1024

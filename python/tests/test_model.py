@@ -1,0 +1,183 @@
+"""L2 model semantics: the fused step executables vs an Algorithm-1 oracle.
+
+The oracle perturbs whole buckets (theta +/- eps*z) and runs the plain
+single-forward model — exactly MeZO's monolithic view.  The production path
+fuses the perturbation into the Pallas dual-matmul per linear layer.  Both
+must agree, which validates the "perturb-inside-the-kernel" decomposition.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import (CONFIGS, block_layout, embed_layout, head_layout,
+                             layout_offsets, layout_size, total_params)
+
+CFG = CONFIGS["tiny"]
+
+
+def _buckets(rng, cfg=CFG):
+    pe = layout_size(embed_layout(cfg))
+    pb = layout_size(block_layout(cfg))
+    ph = layout_size(head_layout(cfg))
+    mk = lambda p: rng.normal(0, 0.05, size=(p,)).astype(np.float32)
+    return {
+        "embed": mk(pe),
+        "blocks": [mk(pb) for _ in range(cfg.n_layers)],
+        "head": mk(ph),
+    }
+
+
+def _keys(rng, cfg=CFG):
+    """Per-module threefry key data (what rust ships instead of z)."""
+    mk = lambda: rng.randint(0, 2**31, size=(2,)).astype(np.uint32)
+    return {"embed": mk(), "blocks": [mk() for _ in range(cfg.n_layers)], "head": mk()}
+
+
+def _zs_from_keys(keys, cfg=CFG):
+    """The z vectors the executables will generate on device."""
+    import jax.random as jr
+
+    def draw(k, n):
+        return np.asarray(M._zdraw(k, n))
+
+    from compile.configs import layout_size
+
+    return {
+        "embed": draw(keys["embed"], layout_size(embed_layout(cfg))),
+        "blocks": [draw(k, layout_size(block_layout(cfg))) for k in keys["blocks"]],
+        "head": draw(keys["head"], layout_size(head_layout(cfg))),
+    }
+
+
+def _ids(rng, cfg=CFG):
+    return rng.randint(0, cfg.vocab, size=(cfg.batch, cfg.seq_len)).astype(np.int32)
+
+
+def oracle_dual_losses(cfg, bk, zs, eps, ids):
+    """Monolithic MeZO: perturb every bucket, run the plain eval forwards."""
+    losses = []
+    for sign in (+1.0, -1.0):
+        e = M.embed_fwd(cfg, bk["embed"] + sign * eps * zs["embed"], ids)
+        h = e
+        for wb, zb in zip(bk["blocks"], zs["blocks"]):
+            h = M.block_fwd(cfg, wb + sign * eps * zb, h)
+        loss, _ = M.head_eval(cfg, bk["head"] + sign * eps * zs["head"], h, ids)
+        losses.append(loss)
+    return losses
+
+
+def fused_dual_losses(cfg, bk, keys, eps, ids):
+    """Production path: compose the *_step executables with g_prev = 0."""
+    zero = jnp.float32(0.0)
+    lr = jnp.float32(1e-4)
+    eps = jnp.float32(eps)
+    _, hp, hm = M.embed_step(cfg, bk["embed"], keys["embed"], zero, lr,
+                             keys["embed"], eps, ids)
+    for wb, kb in zip(bk["blocks"], keys["blocks"]):
+        _, hp, hm = M.block_step(cfg, wb, kb, zero, lr, kb, eps, hp, hm)
+    _, lp, lm = M.head_step(cfg, bk["head"], keys["head"], zero,
+                            lr, keys["head"], eps, hp, hm, ids)
+    return lp, lm
+
+
+@pytest.mark.parametrize("seed,eps", [(0, 1e-3), (1, 1e-2), (2, 1e-4)])
+def test_fused_step_matches_monolithic_mezo(seed, eps):
+    rng = np.random.RandomState(seed)
+    bk, keys, ids = _buckets(rng), _keys(rng), _ids(rng)
+    zs = _zs_from_keys(keys)  # replay exactly what the device generates
+    lo_p, lo_m = oracle_dual_losses(CFG, bk, zs, eps, ids)
+    lf_p, lf_m = fused_dual_losses(CFG, bk, keys, eps, ids)
+    np.testing.assert_allclose(lf_p, lo_p, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(lf_m, lo_m, rtol=2e-5, atol=2e-6)
+
+
+def test_deferred_update_equals_update_then_forward():
+    """step(bucket, key_prev, g_prev) == step(update(bucket,...), 0-g)."""
+    rng = np.random.RandomState(7)
+    bk, keys, ids = _buckets(rng), _keys(rng), _ids(rng)
+    kp = _keys(np.random.RandomState(8))
+    g = jnp.float32(1.7)
+    lr = jnp.float32(1e-3)
+    eps = jnp.float32(1e-3)
+    wb, kb, kprev = bk["blocks"][0], keys["blocks"][0], kp["blocks"][0]
+    hp = rng.normal(0, 1, (CFG.batch, CFG.seq_len, CFG.d_model)).astype(np.float32)
+    hm = hp + 0.01
+
+    b1, op1, om1 = M.block_step(CFG, wb, kprev, g, lr, kb, eps, hp, hm)
+    upd = M.update_bucket(wb, kprev, lr, g)
+    b2, op2, om2 = M.block_step(CFG, np.asarray(upd), kprev,
+                                jnp.float32(0.0), lr, kb, eps, hp, hm)
+    # Same kernel path on both sides -> bit-exact.
+    assert np.array_equal(np.asarray(b1), np.asarray(b2))
+    assert np.array_equal(np.asarray(op1), np.asarray(op2))
+    assert np.array_equal(np.asarray(om1), np.asarray(om2))
+
+
+def test_head_eval_loss_is_next_token_ce():
+    rng = np.random.RandomState(11)
+    bk, ids = _buckets(rng), _ids(rng)
+    h = rng.normal(0, 1, (CFG.batch, CFG.seq_len, CFG.d_model)).astype(np.float32)
+    loss, last = M.head_eval(CFG, bk["head"], h, ids)
+    p = M.unpack(bk["head"], head_layout(CFG))
+    a = M.layer_norm(h, p["lnf_w"], p["lnf_b"])
+    logits = a @ p["lm_w"]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    want = -np.mean(np.take_along_axis(np.asarray(lp), ids[:, 1:, None], axis=-1))
+    np.testing.assert_allclose(loss, want, rtol=1e-5)
+    assert last.shape == (CFG.batch, CFG.vocab)
+
+
+def test_layouts_are_dense_and_ordered():
+    for layout_fn in (embed_layout, block_layout, head_layout):
+        lay = layout_fn(CFG)
+        off = 0
+        for name, o, shape in layout_offsets(lay):
+            assert o == off
+            n = int(np.prod(shape))
+            off += n
+        assert off == layout_size(lay)
+
+
+def test_total_params_gpt2_100m_band():
+    n = total_params(CONFIGS["gpt2-100m"])
+    assert 85e6 < n < 120e6, n
+
+
+def test_perturbation_symmetry():
+    """loss(+eps) and loss(-eps) collapse to the same value when eps == 0."""
+    rng = np.random.RandomState(13)
+    bk, keys, ids = _buckets(rng), _keys(rng), _ids(rng)
+    lp, lm = fused_dual_losses(CFG, bk, keys, 0.0, ids)
+    assert np.array_equal(np.asarray(lp), np.asarray(lm))
+
+
+def test_projected_gradient_matches_directional_derivative():
+    """(l+ - l-)/2eps ~= z . grad L  for small eps (RGE sanity, Eq. 2)."""
+    rng = np.random.RandomState(17)
+    bk, ids = _buckets(rng), _ids(rng)
+    zs = _zs_from_keys(_keys(rng))
+    eps = 1e-4
+
+    def full_loss(flat):
+        pe = layout_size(embed_layout(CFG))
+        pb = layout_size(block_layout(CFG))
+        embed = flat[:pe]
+        blocks = [flat[pe + i * pb: pe + (i + 1) * pb] for i in range(CFG.n_layers)]
+        head = flat[pe + CFG.n_layers * pb:]
+        h = M.embed_fwd(CFG, embed, ids)
+        for b in blocks:
+            h = M.block_fwd(CFG, b, h)
+        loss, _ = M.head_eval(CFG, head, h, ids)
+        return loss
+
+    flat = np.concatenate([bk["embed"], *bk["blocks"], bk["head"]])
+    zflat = np.concatenate([zs["embed"], *zs["blocks"], zs["head"]])
+    lp = full_loss(flat + eps * zflat)
+    lm = full_loss(flat - eps * zflat)
+    g = (lp - lm) / (2 * eps)
+    grad = jax.grad(full_loss)(flat)
+    want = float(np.dot(np.asarray(grad), zflat))
+    np.testing.assert_allclose(float(g), want, rtol=5e-2, atol=5e-3)

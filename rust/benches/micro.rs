@@ -1,0 +1,233 @@
+//! Microbenchmarks of the L3 hot paths + real↔sim calibration.
+//!
+//!     cargo bench --bench micro
+//!
+//! Sections:
+//!   codecs       — precision encode/decode throughput (upload/offload path)
+//!   rng          — Gaussian fill throughput (z generation path)
+//!   sched        — scheduler plan+simulate overhead (must be negligible)
+//!   real-step    — real tiny-model step wallclock by mode (overlap vs seq)
+//!   calibration  — measured per-block compute feeds the simulator; its
+//!                  real-mode prediction must be within band of measurement
+
+use std::time::Instant;
+
+use zo2::data::SyntheticCorpus;
+use zo2::precision::Codec;
+use zo2::rng::GaussianRng;
+use zo2::runtime::Runtime;
+use zo2::sched::{build_plan, simulate, CostProvider, Module, Policy};
+use zo2::util::stats::bench;
+use zo2::zo::{RunMode, Zo2Engine, Zo2Options, ZoConfig};
+
+fn bench_codecs() {
+    println!("\n=== codecs (1M f32 elements) ===");
+    let mut rng = GaussianRng::new(1, 1);
+    let mut xs = vec![0.0f32; 1 << 20];
+    rng.fill_gaussian(&mut xs);
+    for codec in [Codec::F32, Codec::Bf16, Codec::Fp16, Codec::Fp8E4M3] {
+        let mut buf = Vec::new();
+        let enc = bench(2, 8, || codec.encode_into(&xs, &mut buf));
+        let payload = buf.len();
+        let mut out = vec![0.0f32; xs.len()];
+        let dec = bench(2, 8, || codec.decode_into(&buf, &mut out));
+        let gbs = |s: f64| (xs.len() * 4) as f64 / s / 1e9;
+        println!(
+            "{:>5}: encode {:>7.2} GB/s  decode {:>7.2} GB/s  (wire {:.0}% of fp32)",
+            codec.name(),
+            gbs(enc.percentile(50.0)),
+            gbs(dec.percentile(50.0)),
+            100.0 * payload as f64 / (xs.len() * 4) as f64
+        );
+    }
+}
+
+fn bench_rng() {
+    println!("\n=== rng (z generation, 1M gaussians) ===");
+    let mut z = vec![0.0f32; 1 << 20];
+    let mut rng = GaussianRng::new(7, 3);
+    let s = bench(2, 8, || rng.fill_gaussian(&mut z));
+    println!(
+        "fill_gaussian: {:.1} M elems/s ({:.2} ms per 1M)",
+        (z.len() as f64 / s.percentile(50.0)) / 1e6,
+        s.percentile(50.0) * 1e3
+    );
+}
+
+fn bench_sched() {
+    println!("\n=== scheduler (plan + simulate, 96 blocks x 4 steps) ===");
+    struct C;
+    impl CostProvider for C {
+        fn upload_s(&self) -> f64 {
+            0.01
+        }
+        fn offload_s(&self) -> f64 {
+            0.01
+        }
+        fn compute_s(&self, _m: Module) -> f64 {
+            0.02
+        }
+        fn update_s(&self) -> f64 {
+            0.001
+        }
+    }
+    let p = Policy::default();
+    let s = bench(3, 20, || {
+        let plan = build_plan(96, 4, p);
+        let _ = simulate(&plan, &C, p);
+    });
+    println!(
+        "plan+simulate: {:.2} ms median (coordinator overhead per simulated run)",
+        s.percentile(50.0) * 1e3
+    );
+}
+
+fn bench_real_step() {
+    println!("\n=== real tiny-model step (PJRT CPU) ===");
+    let Ok(rt) = Runtime::load_config("tiny") else {
+        println!("(skipped: run `make artifacts`)");
+        return;
+    };
+    rt.compile_all().unwrap();
+    let m = rt.manifest();
+    let (b, t, v) = (m.config.batch, m.config.seq_len, m.config.vocab);
+    let mut corpus = SyntheticCorpus::new(v, 5);
+    let ids = corpus.sample(b, t).ids;
+
+    for (label, mode) in [("sequential", RunMode::Sequential), ("overlapped", RunMode::Overlapped)] {
+        let rt = Runtime::load_config("tiny").unwrap();
+        rt.compile_all().unwrap();
+        let mut e = Zo2Engine::new(
+            rt,
+            ZoConfig::default(),
+            Zo2Options { run_mode: mode, ..Default::default() },
+        )
+        .unwrap();
+        // warmup
+        for _ in 0..3 {
+            e.train_step(&ids).unwrap();
+        }
+        let t0 = Instant::now();
+        let iters = 10;
+        for _ in 0..iters {
+            e.train_step(&ids).unwrap();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "{label:>11}: {:.2} ms/step  ({:.0} tokens/s)",
+            per * 1e3,
+            (b * t) as f64 / per
+        );
+        // The real engine's own Fig. 4 trace (tiny scale): the measured
+        // counterpart of the simulated timelines in paper_tables -- fig4.
+        println!("{}", e.last_timeline.to_ascii_gantt(80));
+    }
+}
+
+fn bench_calibration() {
+    println!("\n=== calibration: sim prediction vs real sequential step ===");
+    let Ok(rt) = Runtime::load_config("tiny") else {
+        println!("(skipped: run `make artifacts`)");
+        return;
+    };
+    rt.compile_all().unwrap();
+    let m = rt.manifest();
+    let (b, t, v) = (m.config.batch, m.config.seq_len, m.config.vocab);
+    let n_blocks = m.config.n_layers;
+    let block_sz = m.block.size;
+    let mut corpus = SyntheticCorpus::new(v, 5);
+    let ids = corpus.sample(b, t).ids;
+
+    // Measure the real per-phase costs on this machine.
+    let mut e = Zo2Engine::new(
+        rt,
+        ZoConfig::default(),
+        Zo2Options { run_mode: RunMode::Sequential, ..Default::default() },
+    )
+    .unwrap();
+    for _ in 0..3 {
+        e.train_step(&ids).unwrap();
+    }
+    let t0 = Instant::now();
+    let iters = 10;
+    for _ in 0..iters {
+        e.train_step(&ids).unwrap();
+    }
+    let real_step = t0.elapsed().as_secs_f64() / iters as f64;
+
+    // Fit a measured CostProvider from the engine's own timeline.
+    let tl = &e.last_timeline;
+    let avg = |prefix: &str| {
+        let evs: Vec<f64> = tl
+            .events
+            .iter()
+            .filter(|ev| ev.label.starts_with(prefix))
+            .map(|ev| ev.end - ev.start)
+            .collect();
+        evs.iter().sum::<f64>() / evs.len().max(1) as f64
+    };
+    struct Measured {
+        u: f64,
+        c: f64,
+        o: f64,
+    }
+    impl CostProvider for Measured {
+        fn upload_s(&self) -> f64 {
+            self.u
+        }
+        fn offload_s(&self) -> f64 {
+            self.o
+        }
+        fn compute_s(&self, m: Module) -> f64 {
+            match m {
+                Module::Block(_) => self.c,
+                _ => self.c * 0.5, // embed/head measured separately below
+            }
+        }
+        fn update_s(&self) -> f64 {
+            self.c * 0.1
+        }
+    }
+    let costs = Measured { u: avg("U"), c: avg("C"), o: avg("O") };
+    let policy = Policy { overlap: false, ..Policy::default() };
+    let plan = build_plan(n_blocks, 1, policy);
+    let (sched, _) = simulate(&plan, &costs, policy);
+    // The sim covers blocks only; embed/head/ids overhead remains real.
+    let blocks_real: f64 = tl.events.iter().map(|ev| ev.end - ev.start).sum();
+    let blocks_sim: f64 = sched.makespan
+        - 2.0 * costs.compute_s(Module::Embed); // subtract the embed+head placeholders
+    println!(
+        "real step {:.2} ms (blocks portion {:.2} ms) | sim blocks {:.2} ms | block bucket {} elems x{}",
+        real_step * 1e3,
+        blocks_real * 1e3,
+        blocks_sim * 1e3,
+        block_sz,
+        n_blocks
+    );
+    let rel = (blocks_sim - blocks_real).abs() / blocks_real;
+    println!(
+        "sim-vs-real relative error on the block pipeline: {:.1}% {}",
+        rel * 100.0,
+        if rel < 0.35 { "(within calibration band)" } else { "(OUT OF BAND)" }
+    );
+}
+
+fn main() {
+    let filter = std::env::args().nth(1).unwrap_or_default();
+    let run = |name: &str| filter.is_empty() || filter == "--bench" || name.contains(&filter);
+    if run("codecs") {
+        bench_codecs();
+    }
+    if run("rng") {
+        bench_rng();
+    }
+    if run("sched") {
+        bench_sched();
+    }
+    if run("real-step") {
+        bench_real_step();
+    }
+    if run("calibration") {
+        bench_calibration();
+    }
+}

@@ -1,0 +1,381 @@
+//! Regenerates every table and figure of the paper's evaluation (§7).
+//!
+//!     cargo bench --bench paper_tables            # all
+//!     cargo bench --bench paper_tables -- table2  # one
+//!
+//! Paper-scale OPT models run through the discrete-event simulator (the
+//! real scheduler/dependency logic on virtual time with the calibrated
+//! A100-PCIe4 cost model — see DESIGN.md §Hardware-Adaptation); the tiny
+//! config additionally runs for real to anchor Table 3 and Figure 4.
+//! Absolute numbers are not expected to match the authors' testbed; the
+//! *shapes* (who wins, by what factor, where crossovers fall) are.
+
+use zo2::baselines::{comm_ops_per_block, first_order_comm_per_step, zo2_comm_per_step};
+use zo2::costmodel::{
+    gpu_memory_bytes, mezo_step_s, ComputeMode, Hardware, SimCost, Strategy, Workload,
+};
+use zo2::model::{opt_by_name, opt_family, ModelShape};
+use zo2::precision::Codec;
+use zo2::sched::{build_plan, simulate, Policy};
+use zo2::util::fmt_mb;
+
+const SIM_STEPS: usize = 4;
+
+fn wl(shape: &ModelShape, batch: usize, seq: usize, wire: Codec, compute: ComputeMode) -> Workload {
+    Workload { shape: shape.clone(), batch, seq, wire, compute }
+}
+
+/// ZO2 steady-state tokens/s under `policy`.
+fn zo2_tokens_per_s(hw: &Hardware, w: &Workload, policy: Policy) -> f64 {
+    let costs = SimCost::new(hw, w);
+    let plan = build_plan(w.shape.n_layers, SIM_STEPS, policy);
+    let (sched, _) = simulate(&plan, &costs, policy);
+    (w.batch * w.seq) as f64 / sched.steady_step_s
+}
+
+/// MeZO tokens/s (resident; `None` when it does not fit in HBM).
+fn mezo_tokens_per_s(hw: &Hardware, w: &Workload, param_bytes: usize) -> Option<f64> {
+    let mem = gpu_memory_bytes(Strategy::Mezo, w, param_bytes, hw);
+    if mem > hw.hbm_capacity {
+        return None;
+    }
+    let costs = SimCost::new(hw, w);
+    Some((w.batch * w.seq) as f64 / mezo_step_s(hw, w))
+}
+
+fn fig1_memory(hw: &Hardware) {
+    println!("\n=== Figure 1: GPU memory by optimizer (B=1, T=2048; MB; X = >80GB) ===");
+    println!("{:<10} {:>10} {:>10} {:>10} {:>10}", "model", "AdamW", "SGD", "MeZO", "ZO2");
+    for shape in opt_family() {
+        let w = wl(&shape, 1, 2048, Codec::F32, ComputeMode::Fp32);
+        let cell = |s: Strategy| {
+            let b = gpu_memory_bytes(s, &w, 4, hw);
+            if b > hw.hbm_capacity {
+                format!("X")
+            } else {
+                fmt_mb(b)
+            }
+        };
+        println!(
+            "{:<10} {:>10} {:>10} {:>10} {:>10}",
+            shape.name,
+            cell(Strategy::AdamW),
+            cell(Strategy::Sgd),
+            cell(Strategy::Mezo),
+            cell(Strategy::Zo2 { slots: 3 })
+        );
+    }
+}
+
+fn table2_main(hw: &Hardware) {
+    println!("\n=== Table 2: memory (MB) + throughput (tokens/s), MeZO vs ZO2, FP32/FP16 ===");
+    println!(
+        "{:<10} | {:>9} {:>12} {:>9} {:>12} | {:>9} {:>11} {:>9} {:>11}",
+        "model", "MeZO32", "ZO2-32", "MeZO16", "ZO2-16", "MeZO32", "ZO2-32", "MeZO16", "ZO2-16"
+    );
+    for shape in opt_family() {
+        let mut mem = Vec::new();
+        let mut thr = Vec::new();
+        for (pbytes, wire, cm) in
+            [(4usize, Codec::F32, ComputeMode::Fp32), (2, Codec::Fp16, ComputeMode::Fp16)]
+        {
+            let w = wl(&shape, 1, 2048, wire, cm);
+            let mz_mem = gpu_memory_bytes(Strategy::Mezo, &w, pbytes, hw);
+            let zo_mem = gpu_memory_bytes(Strategy::Zo2 { slots: 3 }, &w, pbytes, hw);
+            let mz_thr = mezo_tokens_per_s(hw, &w, pbytes);
+            let zo_thr = zo2_tokens_per_s(hw, &w, Policy::default());
+            let ratio_mem = zo_mem as f64 / mz_mem as f64;
+            mem.push(match mz_thr {
+                Some(_) => format!("{}", fmt_mb(mz_mem)),
+                None => "-".into(),
+            });
+            mem.push(format!("{}(x{ratio_mem:.2})", fmt_mb(zo_mem)));
+            thr.push(match mz_thr {
+                Some(t) => format!("{t:.0}"),
+                None => "-".into(),
+            });
+            thr.push(match mz_thr {
+                Some(t) => format!("{:.0}(x{:.2})", zo_thr, zo_thr / t),
+                None => format!("{zo_thr:.0}"),
+            });
+        }
+        println!(
+            "{:<10} | {:>9} {:>12} {:>9} {:>12} | {:>9} {:>11} {:>9} {:>11}",
+            shape.name, mem[0], mem[1], mem[2], mem[3], thr[0], thr[1], thr[2], thr[3]
+        );
+    }
+    println!("(paper: ZO2 ~x0.97-0.98 of MeZO throughput; memory ratio shrinking with size;");
+    println!(" 30B+ MeZO = '-' (OOM); ZO2 OPT-175B fp16 ~18GB)");
+}
+
+fn table4_ablation(hw: &Hardware) {
+    println!("\n=== Table 4: reverse ablation, throughput (tokens/s) ===");
+    println!(
+        "{:<10} {:>9} {:>14} {:>14} {:>14} {:>9}",
+        "model", "MeZO", "no-scheduler", "no-reuse-mem", "no-eff-update", "ZO2"
+    );
+    for shape in opt_family() {
+        let w = wl(&shape, 1, 2048, Codec::F32, ComputeMode::Fp32);
+        let mz = mezo_tokens_per_s(hw, &w, 4);
+        let full = zo2_tokens_per_s(hw, &w, Policy::default());
+        let nosched = zo2_tokens_per_s(hw, &w, Policy::naive());
+        let noreuse = zo2_tokens_per_s(hw, &w, Policy { reusable_mem: false, ..Policy::default() });
+        let noeff =
+            zo2_tokens_per_s(hw, &w, Policy { efficient_update: false, ..Policy::default() });
+        let r = |t: f64| match mz {
+            Some(m) => format!("{t:.0}(x{:.2})", t / m),
+            None => format!("{t:.0}"),
+        };
+        println!(
+            "{:<10} {:>9} {:>14} {:>14} {:>14} {:>9}",
+            shape.name,
+            mz.map(|t| format!("{t:.0}")).unwrap_or("-".into()),
+            r(nosched),
+            r(noreuse),
+            r(noeff),
+            r(full)
+        );
+    }
+    println!("(paper: no-reuse worst x0.37-0.39, no-scheduler x0.39-0.56, no-eff x0.74-0.78)");
+}
+
+fn table5_amp(hw: &Hardware) {
+    println!("\n=== Table 5: AMP mode, throughput (tokens/s) by compression codec ===");
+    for cm in [ComputeMode::Fp16, ComputeMode::Bf16] {
+        println!(
+            "-- autocast {} --\n{:<10} {:>12} {:>14} {:>14} {:>14}",
+            cm.name(), "model", "non-compress", "fp16", "bf16", "fp8"
+        );
+        for shape in opt_family() {
+            let base = zo2_tokens_per_s(hw, &wl(&shape, 1, 2048, Codec::F32, cm), Policy::default());
+            let row: Vec<String> = [Codec::Fp16, Codec::Bf16, Codec::Fp8E4M3]
+                .iter()
+                .map(|&c| {
+                    let t = zo2_tokens_per_s(hw, &wl(&shape, 1, 2048, c, cm), Policy::default());
+                    format!("{t:.0}(x{:.3})", t / base)
+                })
+                .collect();
+            println!(
+                "{:<10} {:>12.0} {:>14} {:>14} {:>14}",
+                shape.name, base, row[0], row[1], row[2]
+            );
+        }
+    }
+    println!("(paper: compression wins x1.3-1.7 for >=6.7B; ~x0.99 at 1.3B; fp8 best)");
+}
+
+fn table6_batch(hw: &Hardware) {
+    println!("\n=== Table 6: batch-size sweep (memory MB / tokens/s) ===");
+    println!(
+        "{:<10} {:>3} | {:>10} {:>14} | {:>9} {:>13}",
+        "model", "B", "MeZO-mem", "ZO2-mem", "MeZO-t/s", "ZO2-t/s"
+    );
+    for b in [1usize, 2, 4, 8] {
+        for name in ["OPT-1.3B", "OPT-2.7B", "OPT-6.7B", "OPT-13B"] {
+            let shape = opt_by_name(name).unwrap();
+            let w = wl(&shape, b, 2048, Codec::F32, ComputeMode::Fp32);
+            let mz_mem = gpu_memory_bytes(Strategy::Mezo, &w, 4, hw);
+            let zo_mem = gpu_memory_bytes(Strategy::Zo2 { slots: 3 }, &w, 4, hw);
+            let mz = mezo_tokens_per_s(hw, &w, 4);
+            let zo = zo2_tokens_per_s(hw, &w, Policy::default());
+            println!(
+                "{:<10} {:>3} | {:>10} {:>8}(x{:.2}) | {:>9} {:>7}({})",
+                name,
+                b,
+                if mz.is_some() { fmt_mb(mz_mem) } else { "-".into() },
+                fmt_mb(zo_mem),
+                zo_mem as f64 / mz_mem as f64,
+                mz.map(|t| format!("{t:.0}")).unwrap_or("-".into()),
+                format!("{zo:.0}"),
+                mz.map(|t| format!("x{:.2}", zo / t)).unwrap_or("-".into()),
+            );
+        }
+    }
+    println!("(paper: throughput parity x0.97-0.99 at every batch size)");
+}
+
+fn table7_seqlen(hw: &Hardware) {
+    println!("\n=== Table 7: sequence-length sweep (memory MB / tokens/s) ===");
+    println!(
+        "{:<10} {:>5} | {:>10} {:>14} | {:>9} {:>13}",
+        "model", "T", "MeZO-mem", "ZO2-mem", "MeZO-t/s", "ZO2-t/s"
+    );
+    for t in [1024usize, 2048, 4096, 8192] {
+        for name in ["OPT-1.3B", "OPT-2.7B", "OPT-6.7B", "OPT-13B"] {
+            let shape = opt_by_name(name).unwrap();
+            let w = wl(&shape, 1, t, Codec::F32, ComputeMode::Fp32);
+            let mz_mem = gpu_memory_bytes(Strategy::Mezo, &w, 4, hw);
+            let zo_mem = gpu_memory_bytes(Strategy::Zo2 { slots: 3 }, &w, 4, hw);
+            let mz = mezo_tokens_per_s(hw, &w, 4);
+            let zo = zo2_tokens_per_s(hw, &w, Policy::default());
+            println!(
+                "{:<10} {:>5} | {:>10} {:>8}(x{:.2}) | {:>9} {:>7}({})",
+                name,
+                t,
+                if mz.is_some() { fmt_mb(mz_mem) } else { "-".into() },
+                fmt_mb(zo_mem),
+                zo_mem as f64 / mz_mem as f64,
+                mz.map(|x| format!("{x:.0}")).unwrap_or("-".into()),
+                format!("{zo:.0}"),
+                mz.map(|x| format!("x{:.2}", zo / x)).unwrap_or("-".into()),
+            );
+        }
+    }
+}
+
+fn fig3_comm(_hw: &Hardware) {
+    println!("\n=== Figure 3: per-step interconnect traffic, first-order vs ZO2 ===");
+    println!("{:<10} {:>12} {:>12} {:>7} | ops/block: FO {} vs ZO {}",
+             "model", "FO (MB)", "ZO2 (MB)", "ratio",
+             comm_ops_per_block(true), comm_ops_per_block(false));
+    for shape in opt_family().into_iter().take(4) {
+        let w = wl(&shape, 1, 2048, Codec::F32, ComputeMode::Fp32);
+        let fo = first_order_comm_per_step(&w);
+        let zo = zo2_comm_per_step(&w);
+        println!(
+            "{:<10} {:>12} {:>12} {:>6.1}x",
+            shape.name,
+            fmt_mb(fo.total()),
+            fmt_mb(zo.total()),
+            fo.total() as f64 / zo.total() as f64
+        );
+    }
+}
+
+fn fig4_timeline(hw: &Hardware) {
+    println!("\n=== Figure 4: naive vs overlapped schedule (OPT-13B fp32, 1 step) ===");
+    let shape = opt_by_name("OPT-13B").unwrap();
+    let w = wl(&shape, 1, 2048, Codec::F32, ComputeMode::Fp32);
+    let costs = SimCost::new(hw, &w);
+    for (label, policy) in [("naive (Fig. 4a)", Policy::naive()), ("overlapped (Fig. 4b)", Policy::default())] {
+        let plan = build_plan(shape.n_layers, 1, policy);
+        let (sched, tl) = simulate(&plan, &costs, policy);
+        println!("-- {label}: makespan {:.3}s --", sched.makespan);
+        println!("{}", tl.to_ascii_gantt(100));
+    }
+}
+
+/// Extra design-choice ablations beyond the paper's Table 4 (DESIGN.md §7).
+fn ablations(hw: &Hardware) {
+    println!("\n=== Ablations beyond the paper (DESIGN.md §7) ===");
+    let shape = opt_by_name("OPT-13B").unwrap();
+    let w = wl(&shape, 1, 2048, Codec::F32, ComputeMode::Fp32);
+
+    // (a) prefetch depth: slot-ring size 1..4.
+    println!("-- reusable-buffer slots (prefetch depth), OPT-13B fp32 --");
+    for slots in [1usize, 2, 3, 4] {
+        let t = zo2_tokens_per_s(hw, &w, Policy { slots, ..Policy::default() });
+        println!("  slots={slots}: {t:.0} tokens/s");
+    }
+
+    // (b) bucketed vs per-tensor transfers (§5.3 communication buckets):
+    // without bucketing, each of the block's 16 tensors is a separate
+    // cudaMemcpyAsync — paying per-op driver overhead (~300 µs) instead of
+    // one launch per block.  Visible in the comm-bound AMP regime.
+    let w_amp = wl(&shape, 1, 2048, Codec::F32, ComputeMode::Fp16);
+    struct PerTensor<'a>(SimCost<'a>, usize, f64);
+    impl<'a> zo2::sched::CostProvider for PerTensor<'a> {
+        fn upload_s(&self) -> f64 {
+            self.0.upload_s() + self.1 as f64 * self.2
+        }
+        fn offload_s(&self) -> f64 {
+            self.0.offload_s() + self.1 as f64 * self.2
+        }
+        fn compute_s(&self, m: zo2::sched::Module) -> f64 {
+            self.0.compute_s(m)
+        }
+        fn update_s(&self) -> f64 {
+            self.0.update_s()
+        }
+    }
+    let policy = Policy::default();
+    let plan = build_plan(shape.n_layers, SIM_STEPS, policy);
+    let bucketed = SimCost::new(hw, &w_amp);
+    let (sb, _) = simulate(&plan, &bucketed, policy);
+    let per_tensor = PerTensor(SimCost::new(hw, &w_amp), 16, 300e-6);
+    let (spt, _) = simulate(&plan, &per_tensor, policy);
+    println!(
+        "-- transfers (AMP comm-bound regime): bucketed {:.0} tokens/s vs \
+         per-tensor(16 frags) {:.0} tokens/s (x{:.3})",
+        2048.0 / sb.steady_step_s,
+        2048.0 / spt.steady_step_s,
+        (2048.0 / spt.steady_step_s) / (2048.0 / sb.steady_step_s)
+    );
+
+    // (c) the paper's §8 limitation, quantified: eval/inference runs a
+    // SINGLE forward per block, halving compute while uploads stay — the
+    // overlap that hides transfers during training breaks down.
+    let w16 = wl(&shape, 1, 2048, Codec::Fp16, ComputeMode::Fp16);
+    struct SingleFwd<'a>(SimCost<'a>);
+    impl<'a> zo2::sched::CostProvider for SingleFwd<'a> {
+        fn upload_s(&self) -> f64 {
+            self.0.upload_s()
+        }
+        fn offload_s(&self) -> f64 {
+            // Eval doesn't write parameters back; offload is a slot release.
+            1e-6
+        }
+        fn compute_s(&self, m: zo2::sched::Module) -> f64 {
+            self.0.compute_s(m) / 2.0 // single forward, no update
+        }
+        fn update_s(&self) -> f64 {
+            0.0
+        }
+    }
+    let train16 = SimCost::new(hw, &w16);
+    let (st16, _) = simulate(&plan, &train16, policy);
+    let single = SingleFwd(SimCost::new(hw, &w16));
+    let (se, _) = simulate(&plan, &single, policy);
+    let train_tps = 2048.0 / st16.steady_step_s;
+    let eval_tps = 2048.0 / se.steady_step_s;
+    println!(
+        "-- §8 limitation (fp16): train {:.0} tokens/s, streamed eval {:.0} tokens/s \
+         = only {:.2}x of the 2x single-forward headroom (comm-bound)",
+        train_tps, eval_tps, eval_tps / (2.0 * train_tps)
+    );
+
+    // (d) ZO-AdamW (host-side moments): device memory unchanged; host gains
+    // 2 x params fp32 — the ZeRO-Offload trade reproduced for ZO.
+    let host_extra = 2u64 * shape.total_params() as u64 * 4;
+    println!(
+        "-- ZO-AdamW: device bytes unchanged; host optimizer state +{} MB (2x params fp32)",
+        fmt_mb(host_extra)
+    );
+}
+
+fn main() {
+    let filter = std::env::args().nth(1).unwrap_or_default();
+    let hw = Hardware::a100_pcie4();
+    let run = |name: &str| filter.is_empty() || filter == "--bench" || name.contains(&filter);
+
+    println!("ZO2 paper-table regeneration (simulated {}, see DESIGN.md)", hw.name);
+    if run("fig1") {
+        fig1_memory(&hw);
+    }
+    if run("table2") {
+        table2_main(&hw);
+    }
+    if run("table4") {
+        table4_ablation(&hw);
+    }
+    if run("table5") {
+        table5_amp(&hw);
+    }
+    if run("table6") {
+        table6_batch(&hw);
+    }
+    if run("table7") {
+        table7_seqlen(&hw);
+    }
+    if run("fig3") {
+        fig3_comm(&hw);
+    }
+    if run("fig4") {
+        fig4_timeline(&hw);
+    }
+    if run("ablations") {
+        ablations(&hw);
+    }
+    println!("\n(Table 3 is regenerated by `cargo run --release --example accuracy_parity`");
+    println!(" and asserted bit-exactly by `cargo test --test parity`.)");
+}

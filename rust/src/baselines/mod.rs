@@ -1,0 +1,108 @@
+//! First-order offloading baselines (paper §4.1, Fig. 3, Fig. 1).
+//!
+//! The paper motivates ZO2 by the *communication structure* of first-order
+//! offloading: every block's parameters must be on the GPU twice per step
+//! (forward + backward), activations must round-trip, and gradients (same
+//! size as parameters) must move for the optimizer step.  We model that
+//! structure analytically — the point of these baselines is transfer volume
+//! and schedule shape, not FO numerics (which ZO2 never runs).
+
+use crate::costmodel::Workload;
+
+/// Per-step interconnect traffic (bytes) for one strategy, per §4.1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommVolume {
+    pub h2d: u64,
+    pub d2h: u64,
+}
+
+impl CommVolume {
+    pub fn total(&self) -> u64 {
+        self.h2d + self.d2h
+    }
+}
+
+/// ZO2: each block crosses once per direction per step (§5.4 deferred
+/// update fuses the update into the same cycle).
+pub fn zo2_comm_per_step(wl: &Workload) -> CommVolume {
+    let blocks = wl.shape.n_layers as u64;
+    let wire = wl.block_wire_bytes();
+    CommVolume { h2d: blocks * wire, d2h: blocks * wire }
+}
+
+/// First-order offloading (§4.1): parameters uploaded for forward AND
+/// backward; activations offloaded during forward and re-uploaded for
+/// backward; gradients offloaded; updated params re-uploaded next step
+/// (counted via the double parameter upload).
+pub fn first_order_comm_per_step(wl: &Workload) -> CommVolume {
+    let blocks = wl.shape.n_layers as u64;
+    let pbytes = (wl.shape.block_params() * 4) as u64;
+    let b = wl.batch as u64;
+    let t = wl.seq as u64;
+    let d = wl.shape.d_model as u64;
+    let f = wl.shape.d_ffn() as u64;
+    let h = wl.shape.n_heads as u64;
+    // Retained activations per block (hidden + attn probs + ffn mid), fp32.
+    let act = b * t * d * 4 + b * h * t * t * 4 + b * t * f * 4;
+    CommVolume {
+        // params twice (fwd + bwd) per block; activations re-uploaded for bwd
+        h2d: blocks * (2 * pbytes + act),
+        // activations offloaded after fwd; gradients offloaded after bwd
+        d2h: blocks * (act + pbytes),
+    }
+}
+
+/// Communication *operations* per block per step (Fig. 3's "multiple
+/// communication operations" point).
+pub fn comm_ops_per_block(first_order: bool) -> u64 {
+    if first_order {
+        // fwd upload, act offload, act upload, bwd upload(param), grad offload
+        5
+    } else {
+        // ZO2: one upload + one offload
+        2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::ComputeMode;
+    use crate::model::opt_by_name;
+    use crate::precision::Codec;
+
+    fn wl() -> Workload {
+        Workload {
+            shape: opt_by_name("OPT-1.3B").unwrap(),
+            batch: 1,
+            seq: 2048,
+            wire: Codec::F32,
+            compute: ComputeMode::Fp32,
+        }
+    }
+
+    #[test]
+    fn first_order_moves_far_more_data() {
+        let w = wl();
+        let zo = zo2_comm_per_step(&w);
+        let fo = first_order_comm_per_step(&w);
+        assert!(fo.total() > 2 * zo.total(),
+                "FO {} should be >2x ZO2 {}", fo.total(), zo.total());
+        assert!(fo.h2d > 2 * zo.h2d, "param double-upload plus activations");
+    }
+
+    #[test]
+    fn zo2_comm_is_exactly_param_volume_both_ways() {
+        let w = wl();
+        let zo = zo2_comm_per_step(&w);
+        let expect = (w.shape.n_layers * w.shape.block_params() * 4) as u64;
+        assert_eq!(zo.h2d, expect);
+        assert_eq!(zo.d2h, expect);
+    }
+
+    #[test]
+    fn op_counts() {
+        assert_eq!(comm_ops_per_block(true), 5);
+        assert_eq!(comm_ops_per_block(false), 2);
+    }
+}

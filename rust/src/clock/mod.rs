@@ -1,0 +1,86 @@
+//! Time sources: real wallclock and the virtual clock used by the
+//! discrete-event simulator (paper-scale models cannot run for real on this
+//! testbed, so Tables 2/4/5/6/7 at OPT sizes are simulated on virtual time).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic seconds source.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> f64;
+}
+
+/// Wallclock (real mode).
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Virtual clock: advanced explicitly by the simulator.  Stored as
+/// nanoseconds in an atomic so traces can be taken from any thread.
+pub struct VirtualClock {
+    nanos: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self { nanos: AtomicU64::new(0) }
+    }
+
+    pub fn advance_to(&self, t: f64) {
+        let n = (t * 1e9) as u64;
+        self.nanos.fetch_max(n, Ordering::SeqCst);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.nanos.load(Ordering::SeqCst) as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_monotone() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance_to(1.0); // never goes backwards
+        assert!((c.now() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wallclock_advances() {
+        let c = WallClock::new();
+        let a = c.now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(c.now() > a);
+    }
+}

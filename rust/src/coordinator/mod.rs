@@ -1,0 +1,151 @@
+//! The trainer: data → engine → metrics, with the user-facing API shape of
+//! the paper's Fig. 6b (configure, loop `train_step`, `eval`, final
+//! `flush_updates`).
+
+use anyhow::Result;
+
+use crate::data::SyntheticCorpus;
+use crate::precision::Codec;
+use crate::runtime::Runtime;
+use crate::telemetry::Series;
+use crate::zo::{MezoEngine, RunMode, StepStats, Zo2Engine, Zo2Options, ZoConfig};
+
+/// Which engine backs the trainer.
+pub enum Engine {
+    Mezo(MezoEngine),
+    Zo2(Zo2Engine),
+}
+
+impl Engine {
+    pub fn train_step(&mut self, ids: &[i32]) -> Result<StepStats> {
+        match self {
+            Engine::Mezo(e) => e.train_step(ids),
+            Engine::Zo2(e) => e.train_step(ids),
+        }
+    }
+
+    pub fn eval(&mut self, ids: &[i32]) -> Result<(f32, Vec<f32>)> {
+        match self {
+            Engine::Mezo(e) => e.eval(ids),
+            Engine::Zo2(e) => e.eval(ids),
+        }
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        match self {
+            Engine::Mezo(_) => Ok(()), // MeZO updates in-step
+            Engine::Zo2(e) => e.flush_updates(),
+        }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        match self {
+            Engine::Mezo(e) => e.runtime(),
+            Engine::Zo2(e) => e.runtime(),
+        }
+    }
+}
+
+/// Training configuration for the CLI / examples.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub config_name: String,
+    pub steps: usize,
+    pub zo: ZoConfig,
+    pub engine: EngineKind,
+    pub wire: Codec,
+    pub run_mode: RunMode,
+    pub log_every: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Mezo,
+    Zo2,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            config_name: "tiny".into(),
+            steps: 20,
+            zo: ZoConfig::default(),
+            engine: EngineKind::Zo2,
+            wire: Codec::F32,
+            run_mode: RunMode::Overlapped,
+            log_every: 10,
+        }
+    }
+}
+
+/// Outcome of a training run.
+pub struct TrainReport {
+    pub losses: Series,
+    pub tokens_per_s: f64,
+    pub final_eval_loss: f32,
+    pub device_peak_bytes: u64,
+    pub transfer_bytes: u64,
+}
+
+/// Build an engine for `cfg`, loading the AOT artifacts.
+pub fn build_engine(cfg: &TrainConfig) -> Result<Engine> {
+    let rt = Runtime::load_config(&cfg.config_name)?;
+    rt.manifest().validate()?;
+    rt.compile_all()?;
+    Ok(match cfg.engine {
+        EngineKind::Mezo => Engine::Mezo(MezoEngine::new(rt, cfg.zo)?),
+        EngineKind::Zo2 => Engine::Zo2(Zo2Engine::new(
+            rt,
+            cfg.zo,
+            Zo2Options { wire: cfg.wire, run_mode: cfg.run_mode, ..Zo2Options::default() },
+        )?),
+    })
+}
+
+/// Train on the synthetic corpus and report loss curve + throughput.
+pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
+    let mut engine = build_engine(cfg)?;
+    let (b, t) = {
+        let m = engine.runtime().manifest();
+        (m.config.batch, m.config.seq_len)
+    };
+    let vocab = engine.runtime().manifest().config.vocab;
+    let mut corpus = SyntheticCorpus::new(vocab, cfg.zo.seed ^ 0xDA7A);
+
+    let mut losses = Series::new("loss");
+    let mut tokens = 0usize;
+    let t0 = std::time::Instant::now();
+    for step in 0..cfg.steps {
+        let batch = corpus.sample(b, t);
+        let stats = engine.train_step(&batch.ids)?;
+        tokens += b * t;
+        losses.push(step as f64, stats.loss() as f64);
+        if verbose && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            println!(
+                "step {:>5}  loss {:.4}  g {:+.3e}  {:.0} tok/s",
+                step,
+                stats.loss(),
+                stats.g,
+                tokens as f64 / t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    let train_secs = t0.elapsed().as_secs_f64();
+    engine.flush()?;
+
+    let eval_batch = corpus.sample(b, t);
+    let (final_eval_loss, _) = engine.eval(&eval_batch.ids)?;
+
+    let (device_peak_bytes, transfer_bytes) = match &engine {
+        Engine::Zo2(e) => (e.device.peak(), e.transfers.lock().unwrap().total_bytes()),
+        Engine::Mezo(e) => (e.device.peak(), 0),
+    };
+
+    Ok(TrainReport {
+        losses,
+        tokens_per_s: tokens as f64 / train_secs,
+        final_eval_loss,
+        device_peak_bytes,
+        transfer_bytes,
+    })
+}

@@ -1,0 +1,54 @@
+//! # ZO2 — Zeroth-Order Offloading for extremely large LLM fine-tuning
+//!
+//! Rust coordinator (L3) of the three-layer reproduction of
+//! *ZO2: Scalable Zeroth-Order Fine-Tuning for Extremely Large Language
+//! Models with Limited GPU Memory* (Wang et al., 2025).
+//!
+//! The compute graph (L2, JAX) and its hot-spot kernels (L1, Pallas) are
+//! AOT-lowered once by `make artifacts` into per-module HLO-text
+//! executables; this crate loads them through the PJRT C API (`xla` crate)
+//! and drives the paper's system around them:
+//!
+//! * [`rng`] — counter-based Gaussian streams + the RNG state manager
+//!   (paper §5.1, Algorithm 2) that makes block-disaggregated ZO training
+//!   bit-identical to monolithic MeZO.
+//! * [`memory`] — two-tier (host "DDR" / device "HBM") pools, communication
+//!   buckets, the reusable block buffer (§5.3) and the transfer engine.
+//! * [`sched`] — the three-stream dynamic scheduler (§5.2, Algorithm 3),
+//!   its naive global-sync counterpart (ablation), and a discrete-event
+//!   simulator sharing one dependency-rule core.
+//! * [`precision`] — bf16 / fp16 / fp8(e4m3) transfer codecs (AMP, §5.5).
+//! * [`zo`] — ZO-SGD math, the MeZO baseline engine (Algorithm 1) and the
+//!   ZO2 engine (Algorithms 2 + 3, deferred updates §5.4).
+//! * [`baselines`] — first-order (SGD / AdamW) offloading cost + memory
+//!   models for Figure 1 / §4.1 comparisons.
+//! * [`costmodel`] — analytic compute/transfer cost model + calibration
+//!   used by the discrete-event simulator for paper-scale (OPT-175B) runs.
+//! * [`runtime`] — PJRT client, artifact manifests, executable cache.
+//! * [`coordinator`] — the trainer: data, train/eval loops, metrics.
+
+pub mod baselines;
+pub mod clock;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod memory;
+pub mod model;
+pub mod precision;
+pub mod rng;
+pub mod runtime;
+pub mod sched;
+pub mod telemetry;
+pub mod util;
+pub mod zo;
+
+/// Locate the artifacts directory: `$ZO2_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("ZO2_ARTIFACTS") {
+        return p.into();
+    }
+    let base = std::env::var("CARGO_MANIFEST_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    base.join("artifacts")
+}

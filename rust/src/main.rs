@@ -1,0 +1,154 @@
+//! zo2 — CLI for the ZO2 reproduction.
+//!
+//! Subcommands:
+//!   train     train a compiled config with MeZO or ZO2 (real PJRT execution)
+//!   simulate  paper-scale throughput/memory via the discrete-event simulator
+//!   memory    print the Fig. 1 memory table (analytic accounting)
+//!   info      show a config's manifest summary
+
+use anyhow::{bail, Result};
+
+use zo2::coordinator::{train, EngineKind, TrainConfig};
+use zo2::costmodel::{gpu_memory_bytes, ComputeMode, Hardware, SimCost, Strategy, Workload};
+use zo2::model::{opt_by_name, opt_family};
+use zo2::precision::Codec;
+use zo2::runtime::Runtime;
+use zo2::sched::{build_plan, simulate, Policy};
+use zo2::util::cli::Args;
+use zo2::util::fmt_mb;
+use zo2::zo::{RunMode, ZoConfig};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("memory") => cmd_memory(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: zo2 <train|simulate|memory|info> [--config tiny] [--engine zo2|mezo]\n\
+                 \x20      [--steps N] [--lr F] [--eps F] [--seed N] [--wire fp32|bf16|fp16|fp8]\n\
+                 \x20      [--mode seq|overlap] [--model OPT-13B] [--compute fp32|tf32|fp16]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig {
+        config_name: args.get_or("config", "tiny"),
+        steps: args.get_usize("steps", 20),
+        zo: ZoConfig {
+            lr: args.get_f64("lr", 1e-4) as f32,
+            eps: args.get_f64("eps", 1e-3) as f32,
+            seed: args.get_usize("seed", 42) as u64,
+        },
+        engine: match args.get_or("engine", "zo2").as_str() {
+            "mezo" => EngineKind::Mezo,
+            "zo2" => EngineKind::Zo2,
+            e => bail!("unknown engine `{e}`"),
+        },
+        wire: Codec::parse(&args.get_or("wire", "fp32")).ok_or_else(|| anyhow::anyhow!("bad wire"))?,
+        run_mode: match args.get_or("mode", "overlap").as_str() {
+            "seq" => RunMode::Sequential,
+            "overlap" => RunMode::Overlapped,
+            m => bail!("unknown mode `{m}`"),
+        },
+        log_every: args.get_usize("log-every", 10),
+    };
+    let report = train(&cfg, true)?;
+    println!(
+        "done: {:.0} tok/s, final eval loss {:.4}, device peak {} MB, transfers {} MB",
+        report.tokens_per_s,
+        report.final_eval_loss,
+        fmt_mb(report.device_peak_bytes),
+        fmt_mb(report.transfer_bytes)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "OPT-13B");
+    let shape = opt_by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let hw = Hardware::a100_pcie4();
+    let wl = Workload {
+        shape,
+        batch: args.get_usize("batch", 1),
+        seq: args.get_usize("seq", 2048),
+        wire: Codec::parse(&args.get_or("wire", "fp32")).unwrap(),
+        compute: match args.get_or("compute", "fp32").as_str() {
+            "tf32" => ComputeMode::Tf32,
+            "fp16" => ComputeMode::Fp16,
+            "bf16" => ComputeMode::Bf16,
+            _ => ComputeMode::Fp32,
+        },
+    };
+    let policy = Policy {
+        overlap: args.get_or("mode", "overlap") != "seq",
+        reusable_mem: !args.has("no-reusable-mem"),
+        efficient_update: !args.has("no-efficient-update"),
+        slots: args.get_usize("slots", 3),
+    };
+    let steps = args.get_usize("sim-steps", 4);
+    let costs = SimCost::new(&hw, &wl);
+    let plan = build_plan(wl.shape.n_layers, steps, policy);
+    let (sched, timeline) = simulate(&plan, &costs, policy);
+    let tokens = (wl.batch * wl.seq) as f64;
+    println!(
+        "{name}: step {:.3}s  ->  {:.0} tokens/s  (makespan {:.3}s over {steps} steps)",
+        sched.steady_step_s,
+        tokens / sched.steady_step_s,
+        sched.makespan
+    );
+    if args.has("timeline") {
+        println!("{}", timeline.to_ascii_gantt(100));
+    }
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let hw = Hardware::a100_pcie4();
+    let batch = args.get_usize("batch", 1);
+    let seq = args.get_usize("seq", 2048);
+    println!("{:<10} {:>12} {:>12} {:>12} {:>12}   (MB, B={batch} T={seq})",
+             "model", "AdamW", "SGD", "MeZO", "ZO2");
+    for shape in opt_family() {
+        let wl = Workload { shape: shape.clone(), batch, seq, wire: Codec::F32, compute: ComputeMode::Fp32 };
+        let cell = |s: Strategy| {
+            let b = gpu_memory_bytes(s, &wl, 4, &hw);
+            if b > hw.hbm_capacity {
+                format!("X({})", fmt_mb(b))
+            } else {
+                fmt_mb(b)
+            }
+        };
+        println!(
+            "{:<10} {:>12} {:>12} {:>12} {:>12}",
+            shape.name,
+            cell(Strategy::AdamW),
+            cell(Strategy::Sgd),
+            cell(Strategy::Mezo),
+            cell(Strategy::Zo2 { slots: 3 })
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::load_config(&args.get_or("config", "tiny"))?;
+    let m = rt.manifest();
+    m.validate()?;
+    println!(
+        "{}: d={} h={} L={} V={} B={} T={}  params={:.2}M  buckets: embed {} / block {} / head {}",
+        m.config.name, m.config.d_model, m.config.n_heads, m.config.n_layers,
+        m.config.vocab, m.config.batch, m.config.seq_len,
+        m.config.total_params as f64 / 1e6,
+        m.embed.size, m.block.size, m.head.size
+    );
+    for (name, file) in &m.artifacts {
+        println!("  {name:<14} {file}");
+    }
+    Ok(())
+}

@@ -1,0 +1,255 @@
+//! Two-tier memory substrate: host "CPU DDR" pool, device "GPU HBM" pool,
+//! communication buckets (§5.3), the reusable block buffer (§5.3) and the
+//! transfer engine with its PCIe cost model.
+//!
+//! The real testbed has no GPU, so the *device* tier is an accounted region
+//! of host memory: every allocation that would live in HBM is registered
+//! with [`DevicePool`], which enforces a capacity, tracks the peak (the
+//! numbers in paper Fig. 1 / Table 2) and charges a per-allocation latency
+//! when the reusable buffer is disabled (the Table 4 "no reusable memory"
+//! ablation — cudaMalloc is what that feature removes).
+
+pub mod transfer;
+
+pub use transfer::{TransferEngine, TransferModel};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::precision::Codec;
+
+/// A host-side parameter bucket: the master copy of one module's parameters
+/// in the storage format of the current mode (fp32, or compressed when AMP
+/// low-bit transfer compression is on — paper §5.5 keeps the *CPU-side*
+/// copy in the wire format and restores fp32 on the GPU).
+#[derive(Debug, Clone)]
+pub struct HostBucket {
+    codec: Codec,
+    numel: usize,
+    bytes: Vec<u8>,
+}
+
+impl HostBucket {
+    /// Create from an fp32 master copy, encoding into `codec`.
+    pub fn from_f32(data: &[f32], codec: Codec) -> Self {
+        let mut bytes = Vec::new();
+        codec.encode_into(data, &mut bytes);
+        Self { codec, numel: data.len(), bytes }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.numel
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Bytes that cross the interconnect when this bucket is transferred.
+    pub fn wire_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Decode ("upload + decompress on GPU") into a device-side f32 slot.
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.numel);
+        self.codec.decode_into(&self.bytes, out);
+    }
+
+    /// Encode ("compress + offload to CPU") from a device-side f32 slot.
+    pub fn encode_from(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.numel);
+        self.codec.encode_into(src, &mut self.bytes);
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.codec.decode(&self.bytes, self.numel)
+    }
+}
+
+/// Accounted "GPU HBM" region with capacity enforcement and peak tracking.
+#[derive(Debug)]
+pub struct DevicePool {
+    capacity: u64,
+    used: AtomicU64,
+    peak: AtomicU64,
+    allocs: AtomicU64,
+}
+
+impl DevicePool {
+    pub fn new(capacity_bytes: u64) -> Arc<Self> {
+        Arc::new(Self {
+            capacity: capacity_bytes,
+            used: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+            allocs: AtomicU64::new(0),
+        })
+    }
+
+    pub fn unlimited() -> Arc<Self> {
+        Self::new(u64::MAX)
+    }
+
+    pub fn alloc(&self, bytes: u64) -> Result<()> {
+        let prev = self.used.fetch_add(bytes, Ordering::SeqCst);
+        let now = prev + bytes;
+        if now > self.capacity {
+            self.used.fetch_sub(bytes, Ordering::SeqCst);
+            bail!(
+                "device OOM: {} + {} exceeds capacity {} (simulated HBM)",
+                prev, bytes, self.capacity
+            );
+        }
+        self.peak.fetch_max(now, Ordering::SeqCst);
+        self.allocs.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    pub fn free(&self, bytes: u64) {
+        self.used.fetch_sub(bytes, Ordering::SeqCst);
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used.load(Ordering::SeqCst)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::SeqCst)
+    }
+
+    pub fn alloc_count(&self) -> u64 {
+        self.allocs.load(Ordering::SeqCst)
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+}
+
+/// The §5.3 reusable block buffer: `slots` pre-allocated block-sized f32
+/// regions on the device, assigned round-robin to in-flight blocks.  With
+/// the feature disabled each acquisition is a fresh device allocation that
+/// the cost model charges cudaMalloc latency for.
+pub struct ReusableBlockBuffer {
+    pool: Arc<DevicePool>,
+    numel: usize,
+    slots: Vec<Vec<f32>>,
+    reusable: bool,
+}
+
+impl ReusableBlockBuffer {
+    /// `numel` — block bucket size; `n_slots` — in-flight blocks
+    /// (compute + prefetch + offload = 3 for the full dynamic scheduler).
+    pub fn new(pool: Arc<DevicePool>, numel: usize, n_slots: usize, reusable: bool) -> Result<Self> {
+        let mut slots = Vec::new();
+        if reusable {
+            // One up-front allocation, held for the lifetime of training.
+            pool.alloc((numel * n_slots * 4) as u64)?;
+            for _ in 0..n_slots {
+                slots.push(vec![0.0f32; numel]);
+            }
+        }
+        Ok(Self { pool, numel, slots, reusable })
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn reusable(&self) -> bool {
+        self.reusable
+    }
+
+    /// Take the slot for block position `i` (round-robin). In non-reusable
+    /// mode this is a fresh allocation (caller charges malloc latency).
+    pub fn acquire(&mut self, i: usize) -> Result<Vec<f32>> {
+        if self.reusable {
+            let n = self.slots.len();
+            Ok(std::mem::take(&mut self.slots[i % n]))
+        } else {
+            self.pool.alloc((self.numel * 4) as u64)?;
+            Ok(vec![0.0f32; self.numel])
+        }
+    }
+
+    /// Return a slot after its block was offloaded.
+    pub fn release(&mut self, i: usize, buf: Vec<f32>) {
+        if self.reusable {
+            let n = self.slots.len();
+            self.slots[i % n] = buf;
+        } else {
+            self.pool.free((self.numel * 4) as u64);
+            drop(buf);
+        }
+    }
+}
+
+impl Drop for ReusableBlockBuffer {
+    fn drop(&mut self) {
+        if self.reusable {
+            self.pool.free((self.numel * self.slots.capacity().max(self.slots.len()) * 4) as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_bucket_roundtrip_f32_exact() {
+        let data: Vec<f32> = (0..100).map(|i| i as f32 * 0.3).collect();
+        let hb = HostBucket::from_f32(&data, Codec::F32);
+        assert_eq!(hb.wire_bytes(), 400);
+        assert_eq!(hb.to_f32(), data);
+    }
+
+    #[test]
+    fn host_bucket_compressed_wire_volume() {
+        let data = vec![0.5f32; 1000];
+        assert_eq!(HostBucket::from_f32(&data, Codec::Bf16).wire_bytes(), 2000);
+        assert_eq!(HostBucket::from_f32(&data, Codec::Fp8E4M3).wire_bytes(), 1000);
+        // 0.5 is exactly representable everywhere.
+        assert_eq!(HostBucket::from_f32(&data, Codec::Fp8E4M3).to_f32(), data);
+    }
+
+    #[test]
+    fn device_pool_enforces_capacity_and_tracks_peak() {
+        let p = DevicePool::new(1000);
+        p.alloc(600).unwrap();
+        p.alloc(300).unwrap();
+        assert!(p.alloc(200).is_err(), "should OOM");
+        assert_eq!(p.used(), 900);
+        p.free(300);
+        assert_eq!(p.used(), 600);
+        assert_eq!(p.peak(), 900);
+        assert_eq!(p.alloc_count(), 2);
+    }
+
+    #[test]
+    fn reusable_buffer_constant_memory() {
+        let p = DevicePool::new(10_000_000);
+        let mut rb = ReusableBlockBuffer::new(p.clone(), 1000, 3, true).unwrap();
+        let base = p.used();
+        for i in 0..10 {
+            let buf = rb.acquire(i).unwrap();
+            assert_eq!(p.used(), base, "reusable: no per-step allocations");
+            rb.release(i, buf);
+        }
+        assert_eq!(p.alloc_count(), 1, "single up-front allocation");
+    }
+
+    #[test]
+    fn non_reusable_buffer_allocates_per_acquire() {
+        let p = DevicePool::new(10_000_000);
+        let mut rb = ReusableBlockBuffer::new(p.clone(), 1000, 3, false).unwrap();
+        for i in 0..5 {
+            let buf = rb.acquire(i).unwrap();
+            rb.release(i, buf);
+        }
+        assert_eq!(p.alloc_count(), 5);
+        assert_eq!(p.used(), 0);
+    }
+}

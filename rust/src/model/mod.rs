@@ -1,0 +1,132 @@
+//! Model shapes: the OPT family (paper Table 1) for analytic/simulated
+//! experiments, plus mirrors of the AOT-compiled configs.
+//!
+//! Parameter-count formulas must match `python/compile/configs.py` layouts
+//! exactly (validated against the manifest in tests).
+
+use crate::runtime::Manifest;
+
+/// Architecture dimensions (decoder-only, OPT-style, ReLU FFN, learned
+/// positional embeddings).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelShape {
+    pub name: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub ffn_mult: usize,
+}
+
+impl ModelShape {
+    pub fn new(name: &str, d_model: usize, n_heads: usize, n_layers: usize,
+               vocab: usize, max_seq: usize) -> Self {
+        Self { name: name.into(), d_model, n_heads, n_layers, vocab, max_seq, ffn_mult: 4 }
+    }
+
+    pub fn d_ffn(&self) -> usize {
+        self.ffn_mult * self.d_model
+    }
+
+    /// Embedding bucket elements: token + learned positional tables.
+    pub fn embed_params(&self) -> usize {
+        self.vocab * self.d_model + self.max_seq * self.d_model
+    }
+
+    /// One transformer block's bucket elements
+    /// (2 LayerNorms, q/k/v/o projections + biases, 2-layer FFN + biases).
+    pub fn block_params(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ffn();
+        2 * d                       // ln1
+            + 4 * (d * d + d)       // wq/bq wk/bk wv/bv wo/bo
+            + 2 * d                 // ln2
+            + (d * f + f)           // fc1
+            + (f * d + d)           // fc2
+    }
+
+    /// LM head bucket elements (final LN + untied projection).
+    pub fn head_params(&self) -> usize {
+        2 * self.d_model + self.d_model * self.vocab
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.embed_params() + self.n_layers * self.block_params() + self.head_params()
+    }
+
+    /// From an artifact manifest (AOT-compiled configs).
+    pub fn from_manifest(m: &Manifest) -> Self {
+        Self {
+            name: m.config.name.clone(),
+            d_model: m.config.d_model,
+            n_heads: m.config.n_heads,
+            n_layers: m.config.n_layers,
+            vocab: m.config.vocab,
+            max_seq: m.config.seq_len,
+            ffn_mult: m.config.ffn_mult,
+        }
+    }
+}
+
+/// The OPT family exactly as in paper Table 1 (seq len 2048; OPT vocab
+/// 50272 plus 2048 learned positions).
+pub fn opt_family() -> Vec<ModelShape> {
+    const V: usize = 50272;
+    const T: usize = 2048;
+    vec![
+        ModelShape::new("OPT-1.3B", 2048, 32, 24, V, T),
+        ModelShape::new("OPT-2.7B", 2560, 32, 32, V, T),
+        ModelShape::new("OPT-6.7B", 4096, 32, 32, V, T),
+        ModelShape::new("OPT-13B", 5120, 40, 40, V, T),
+        ModelShape::new("OPT-30B", 7168, 56, 48, V, T),
+        ModelShape::new("OPT-66B", 9216, 72, 64, V, T),
+        ModelShape::new("OPT-175B", 12288, 96, 96, V, T),
+    ]
+}
+
+pub fn opt_by_name(name: &str) -> Option<ModelShape> {
+    opt_family().into_iter().find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt_param_counts_land_on_nameplates() {
+        // Param-count formulas should reproduce the nameplate sizes within
+        // a few percent (exact OPT has tied embeddings & slight variations).
+        let expect = [
+            ("OPT-1.3B", 1.3e9),
+            ("OPT-2.7B", 2.7e9),
+            ("OPT-6.7B", 6.7e9),
+            ("OPT-13B", 13e9),
+            ("OPT-30B", 30e9),
+            ("OPT-66B", 66e9),
+            ("OPT-175B", 175e9),
+        ];
+        for (name, want) in expect {
+            let m = opt_by_name(name).unwrap();
+            let got = m.total_params() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.10, "{name}: {got:.3e} vs nameplate {want:.1e} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn block_formula_matches_tiny_manifest_layout() {
+        // tiny config: d=32, f=128 -> 12704 elements (pinned in python tests).
+        let t = ModelShape::new("tiny", 32, 2, 2, 64, 16);
+        assert_eq!(t.block_params(), 12704);
+        assert_eq!(t.embed_params(), 64 * 32 + 16 * 32);
+        assert_eq!(t.head_params(), 2 * 32 + 32 * 64);
+    }
+
+    #[test]
+    fn gpt2_100m_in_band() {
+        let g = ModelShape::new("gpt2-100m", 768, 12, 12, 8192, 32);
+        let p = g.total_params() as f64;
+        assert!(85e6 < p && p < 120e6, "{p}");
+    }
+}

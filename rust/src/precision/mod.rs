@@ -1,0 +1,421 @@
+//! Low-bit transfer codecs for AMP mode (paper §5.5).
+//!
+//! In AMP mode ZO2 *compresses parameters when offloading GPU→CPU* and
+//! *decompresses back to FP32 on upload* so updates stay high-precision
+//! while PCIe traffic shrinks 2× (bf16/fp16) or 4× (fp8).  The offline
+//! build has no `half` crate, so the conversions are hand bit-twiddled and
+//! property-tested.
+//!
+//! fp8 follows the e4m3 variant used by NVIDIA/OCP: 1 sign, 4 exponent
+//! (bias 7), 3 mantissa bits; no infinities; 0x7F/0xFF are NaN; max finite
+//! magnitude 448.
+
+/// Transfer/storage format of a host-side bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    F32,
+    Bf16,
+    Fp16,
+    Fp8E4M3,
+}
+
+impl Codec {
+    pub fn bytes_per_el(self) -> usize {
+        match self {
+            Codec::F32 => 4,
+            Codec::Bf16 | Codec::Fp16 => 2,
+            Codec::Fp8E4M3 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::F32 => "fp32",
+            Codec::Bf16 => "bf16",
+            Codec::Fp16 => "fp16",
+            Codec::Fp8E4M3 => "fp8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s {
+            "fp32" | "f32" | "none" => Some(Codec::F32),
+            "bf16" => Some(Codec::Bf16),
+            "fp16" | "f16" => Some(Codec::Fp16),
+            "fp8" | "fp8e4m3" => Some(Codec::Fp8E4M3),
+            _ => None,
+        }
+    }
+
+    /// Encode f32 slice into `out` (resized to exactly the payload).
+    pub fn encode_into(self, src: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(src.len() * self.bytes_per_el());
+        match self {
+            Codec::F32 => {
+                // Identity format: single memcpy (hot offload path).
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(src.as_ptr() as *const u8, src.len() * 4)
+                };
+                out.extend_from_slice(bytes);
+            }
+            Codec::Bf16 => {
+                for &x in src {
+                    out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+                }
+            }
+            Codec::Fp16 => {
+                for &x in src {
+                    out.extend_from_slice(&f32_to_fp16(x).to_le_bytes());
+                }
+            }
+            Codec::Fp8E4M3 => {
+                for &x in src {
+                    out.push(f32_to_fp8_e4m3(x));
+                }
+            }
+        }
+    }
+
+    /// Decode into an f32 buffer (must be pre-sized to the element count).
+    pub fn decode_into(self, src: &[u8], out: &mut [f32]) {
+        let n = out.len();
+        assert_eq!(src.len(), n * self.bytes_per_el(), "payload size mismatch");
+        match self {
+            Codec::F32 => {
+                // Identity format: single memcpy (hot upload path).
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        src.as_ptr(),
+                        out.as_mut_ptr() as *mut u8,
+                        src.len(),
+                    );
+                }
+            }
+            Codec::Bf16 => {
+                for (i, c) in src.chunks_exact(2).enumerate() {
+                    out[i] = bf16_to_f32(u16::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+            Codec::Fp16 => {
+                for (i, c) in src.chunks_exact(2).enumerate() {
+                    out[i] = fp16_to_f32(u16::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+            Codec::Fp8E4M3 => {
+                for (i, &b) in src.iter().enumerate() {
+                    out[i] = fp8_e4m3_to_f32(b);
+                }
+            }
+        }
+    }
+
+    pub fn encode(self, src: &[f32]) -> Vec<u8> {
+        let mut v = Vec::new();
+        self.encode_into(src, &mut v);
+        v
+    }
+
+    pub fn decode(self, src: &[u8], numel: usize) -> Vec<f32> {
+        let mut v = vec![0.0; numel];
+        self.decode_into(src, &mut v);
+        v
+    }
+}
+
+// --- bf16 --------------------------------------------------------------------
+
+/// Round-to-nearest-even truncation of the low 16 mantissa bits.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quieten, keep sign
+    }
+    let round_bit = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + round_bit)) >> 16) as u16
+}
+
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+// --- fp16 (IEEE binary16) ------------------------------------------------------
+
+#[inline]
+pub fn f32_to_fp16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    // Re-bias: f32 bias 127, f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal f16. Round mantissa 23 -> 10 bits, nearest-even.
+        let e16 = (unbiased + 15) as u32;
+        let mut out = (e16 << 10) | (man >> 13);
+        let rem = man & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+            out += 1; // may carry into exponent: that is correct rounding
+        }
+        return sign | out as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16: m = full · 2^(unbiased+1), i.e. shift right by
+        // (-unbiased - 1) ∈ [14, 24], rounding nearest-even.
+        let shift = (-unbiased - 1) as u32;
+        let full = man | 0x0080_0000; // implicit leading 1
+        let mut out = full >> shift;
+        let rem = full & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (out & 1) == 1) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    sign // underflow to signed zero
+}
+
+#[inline]
+pub fn fp16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: value = m * 2^-24.  Normalise around the highest
+            // set bit b: value = 2^(b-24) * (1 + frac).
+            let b = 31 - m.leading_zeros(); // 0..=9
+            let e32 = 103 + b; // 127 + (b - 24)
+            let m32 = (m << (23 - b)) & 0x007F_FFFF;
+            sign | (e32 << 23) | m32
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13) | 0x0040_0000,
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+// --- fp8 e4m3 ------------------------------------------------------------------
+
+/// Encode with round-to-nearest-even, clamping to ±448 (no inf in e4m3).
+#[inline]
+pub fn f32_to_fp8_e4m3(x: f32) -> u8 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 24) & 0x80) as u8;
+    if x.is_nan() {
+        return sign | 0x7F;
+    }
+    let ax = x.abs();
+    if ax >= 448.0 {
+        return sign | 0x7E; // clamp to max finite (s.1111.110 = 448)
+    }
+    if ax < 2f32.powi(-10) {
+        // Below half the smallest subnormal (2^-9): round to zero...
+        // except exactly half rounds to even (0), so `<` on 2^-10 keeps the
+        // tie at zero which is the even choice.
+        if ax <= 2f32.powi(-10) {
+            return sign;
+        }
+    }
+    // Scale into integer multiples of the subnormal step 2^-9 for exact
+    // nearest-even rounding in the subnormal range.
+    let exp = ((bits >> 23) & 0xFF) as i32 - 127;
+    if exp < -6 {
+        // Subnormal target: value = m * 2^-9, m in 1..=7
+        let scaled = ax * 512.0; // / 2^-9
+        let m = scaled.round_ties_even() as u8;
+        if m == 0 {
+            return sign;
+        }
+        if m >= 8 {
+            return sign | 0x08; // rounds up into the first normal
+        }
+        return sign | m;
+    }
+    // Normal target: exponent bias 7.
+    let man = bits & 0x007F_FFFF;
+    let mut e8 = (exp + 7) as u32;
+    let mut m8 = man >> 20; // top 3 mantissa bits
+    let rem = man & 0x000F_FFFF;
+    let half = 0x0008_0000;
+    if rem > half || (rem == half && (m8 & 1) == 1) {
+        m8 += 1;
+        if m8 == 8 {
+            m8 = 0;
+            e8 += 1;
+        }
+    }
+    if e8 >= 16 || (e8 == 15 && m8 == 7) {
+        return sign | 0x7E; // overflow clamps to 448
+    }
+    sign | ((e8 as u8) << 3) | m8 as u8
+}
+
+#[inline]
+pub fn fp8_e4m3_to_f32(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((b >> 3) & 0x0F) as i32;
+    let man = (b & 0x07) as f32;
+    if exp == 0x0F && (b & 0x07) == 0x07 {
+        return f32::NAN * sign;
+    }
+    if exp == 0 {
+        return sign * man * 2f32.powi(-9); // subnormal: m * 2^-6 * 2^-3
+    }
+    sign * (1.0 + man / 8.0) * 2f32.powi(exp - 7)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(c: Codec, xs: &[f32]) -> Vec<f32> {
+        c.decode(&c.encode(xs), xs.len())
+    }
+
+    #[test]
+    fn f32_codec_is_identity() {
+        let xs = [0.0, -1.5, 3.7e-12, f32::MAX, -f32::MIN_POSITIVE];
+        let ys = roundtrip(Codec::F32, &xs);
+        for (a, b) in xs.iter().zip(&ys) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_error_band() {
+        let mut r = crate::rng::GaussianRng::new(1, 1);
+        let mut xs = vec![0.0f32; 10_000];
+        r.fill_gaussian(&mut xs);
+        let ys = roundtrip(Codec::Bf16, &xs);
+        for (a, b) in xs.iter().zip(&ys) {
+            assert!((a - b).abs() <= a.abs() * 0.008 + 1e-38, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn bf16_exact_values() {
+        for &x in &[0.0f32, -0.0, 1.0, -2.0, 0.5, 256.0] {
+            let y = bf16_to_f32(f32_to_bf16(x));
+            assert_eq!(x.to_bits(), y.to_bits(), "{x}");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn fp16_matches_reference_cases() {
+        // Reference values from the IEEE 754 binary16 spec.
+        assert_eq!(f32_to_fp16(1.0), 0x3C00);
+        assert_eq!(f32_to_fp16(-2.0), 0xC000);
+        assert_eq!(f32_to_fp16(65504.0), 0x7BFF); // max normal
+        assert_eq!(f32_to_fp16(1e5), 0x7C00); // overflow -> inf
+        assert_eq!(f32_to_fp16(6.1035156e-5), 0x0400); // min normal
+        assert_eq!(f32_to_fp16(5.9604645e-8), 0x0001); // min subnormal
+        assert_eq!(f32_to_fp16(0.0), 0x0000);
+        assert_eq!(f32_to_fp16(-0.0), 0x8000);
+        assert_eq!(fp16_to_f32(0x3C00), 1.0);
+        assert_eq!(fp16_to_f32(0x0001), 5.9604645e-8);
+        assert_eq!(fp16_to_f32(0x0400), 6.1035156e-5);
+        assert_eq!(fp16_to_f32(0x7BFF), 65504.0);
+        assert!(fp16_to_f32(0x7E00).is_nan());
+        assert_eq!(fp16_to_f32(0xFC00), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn fp16_roundtrip_error_band() {
+        let mut r = crate::rng::GaussianRng::new(2, 1);
+        let mut xs = vec![0.0f32; 10_000];
+        r.fill_gaussian(&mut xs);
+        let ys = roundtrip(Codec::Fp16, &xs);
+        for (a, b) in xs.iter().zip(&ys) {
+            assert!((a - b).abs() <= a.abs() * 0.001 + 1e-7, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn fp16_every_finite_value_roundtrips_bitexact() {
+        // f16 -> f32 -> f16 must be the identity on all 63488 finite codes.
+        for h in 0..=0xFFFFu16 {
+            let exp = (h >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf / NaN
+            }
+            let x = fp16_to_f32(h);
+            assert_eq!(f32_to_fp16(x), h, "code {h:#06x} value {x}");
+        }
+    }
+
+    #[test]
+    fn fp8_reference_cases() {
+        assert_eq!(fp8_e4m3_to_f32(0x00), 0.0);
+        assert_eq!(fp8_e4m3_to_f32(0x01), 2f32.powi(-9)); // min subnormal
+        assert_eq!(fp8_e4m3_to_f32(0x08), 2f32.powi(-6)); // min normal
+        assert_eq!(fp8_e4m3_to_f32(0x7E), 448.0); // max finite
+        assert!(fp8_e4m3_to_f32(0x7F).is_nan());
+        assert_eq!(f32_to_fp8_e4m3(448.0), 0x7E);
+        assert_eq!(f32_to_fp8_e4m3(1e9), 0x7E); // clamp
+        assert_eq!(f32_to_fp8_e4m3(-1.0), 0x80 | 0x38);
+        assert_eq!(fp8_e4m3_to_f32(0x38), 1.0);
+    }
+
+    #[test]
+    fn fp8_every_finite_value_roundtrips_bitexact() {
+        for b in 0..=0xFFu8 {
+            if (b & 0x7F) == 0x7F {
+                continue; // NaN
+            }
+            if b == 0x80 {
+                continue; // -0 encodes to +0 sign-preserved? keep: check below
+            }
+            let x = fp8_e4m3_to_f32(b);
+            assert_eq!(f32_to_fp8_e4m3(x), b, "code {b:#04x} value {x}");
+        }
+    }
+
+    #[test]
+    fn fp8_roundtrip_error_band() {
+        let mut r = crate::rng::GaussianRng::new(3, 1);
+        let mut xs = vec![0.0f32; 10_000];
+        r.fill_gaussian(&mut xs);
+        // Parameter-scale values (~0.02 std) — what actually gets encoded.
+        for x in xs.iter_mut() {
+            *x *= 0.02;
+        }
+        let ys = roundtrip(Codec::Fp8E4M3, &xs);
+        for (a, b) in xs.iter().zip(&ys) {
+            assert!((a - b).abs() <= a.abs() * 0.0715 + 2f32.powi(-10), "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn payload_sizes() {
+        let xs = vec![1.0f32; 100];
+        assert_eq!(Codec::F32.encode(&xs).len(), 400);
+        assert_eq!(Codec::Bf16.encode(&xs).len(), 200);
+        assert_eq!(Codec::Fp16.encode(&xs).len(), 200);
+        assert_eq!(Codec::Fp8E4M3.encode(&xs).len(), 100);
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16; ties to
+        // even -> 1.0.
+        assert_eq!(f32_to_fp16(1.0 + 2f32.powi(-11)), 0x3C00);
+        // 1 + 3*2^-11 is halfway between nextafter(1) and next-next; ties to
+        // even -> mantissa 2.
+        assert_eq!(f32_to_fp16(1.0 + 3.0 * 2f32.powi(-11)), 0x3C02);
+    }
+}

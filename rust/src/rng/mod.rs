@@ -1,0 +1,268 @@
+//! Counter-based Gaussian streams + the RNG state manager (paper §5.1).
+//!
+//! The whole correctness story of ZO2 hangs on one invariant: the Gaussian
+//! direction `z` used to *perturb* a module at step `j` must be replayed
+//! **identically** when that module is *updated* (which ZO2 defers to step
+//! `j+1`, §5.4).  MeZO gets this by resetting a global seed; ZO2 cannot,
+//! because the dual-forward is disaggregated per block and interleaved with
+//! transfers.  The paper's fix — and ours — is to capture the RNG state
+//! before each module's perturbation and restore it at update time
+//! (Algorithm 2's `rs` / `lrs` / `rsb`).
+//!
+//! We use a *counter-based* generator (SplitMix64 mixing of
+//! `(seed, stream, counter)`), so a state is three u64s: trivially
+//! save/restorable, O(1) memory, and random-access.  `z` itself is never
+//! stored — regenerating it from the saved state is the paper's §4.1
+//! point (4): the true gradient `g·z` never materialises.
+
+use std::collections::VecDeque;
+
+/// A snapshot of a generator — the paper's `rng_state`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RngState {
+    pub seed: u64,
+    pub stream: u64,
+    pub counter: u64,
+}
+
+/// Deterministic counter-based Gaussian generator.
+///
+/// Each `counter` tick yields one u64 which is split into two uniforms and
+/// Box–Muller-transformed into two f32 Gaussians; array fills consume
+/// `ceil(n/2)` ticks.  Identical `(seed, stream, counter)` ⇒ identical
+/// output, on any thread, in any engine.
+#[derive(Debug, Clone)]
+pub struct GaussianRng {
+    state: RngState,
+}
+
+#[inline]
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl GaussianRng {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        Self { state: RngState { seed, stream, counter: 0 } }
+    }
+
+    pub fn from_state(state: RngState) -> Self {
+        Self { state }
+    }
+
+    /// The paper's `GetRngState`.
+    pub fn state(&self) -> RngState {
+        self.state
+    }
+
+    /// The paper's `SetRngState`.
+    pub fn set_state(&mut self, state: RngState) {
+        self.state = state;
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let k = splitmix64(self.state.seed ^ splitmix64(self.state.stream));
+        let v = splitmix64(k ^ self.state.counter.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        self.state.counter += 1;
+        v
+    }
+
+    /// One Box–Muller pair per counter tick.
+    #[inline]
+    fn next_pair(&mut self) -> (f32, f32) {
+        let v = self.next_u64();
+        // u1 in (0, 1]: avoids ln(0). u2 in [0, 1).
+        let u1 = ((v >> 32) as f64 + 1.0) / 4_294_967_296.0;
+        let u2 = (v & 0xFFFF_FFFF) as f64 / 4_294_967_296.0;
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        ((r * th.cos()) as f32, (r * th.sin()) as f32)
+    }
+
+    /// Fill `out` with standard Gaussians (the module's direction `z`).
+    pub fn fill_gaussian(&mut self, out: &mut [f32]) {
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let (a, b) = self.next_pair();
+            out[i] = a;
+            out[i + 1] = b;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.next_pair().0; // odd tail: second value discarded
+        }
+    }
+
+    pub fn next_gaussian(&mut self) -> f32 {
+        self.next_pair().0
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        // Modulo bias is irrelevant at our n << 2^64.
+        self.next_u64() % n.max(1)
+    }
+}
+
+/// Per-iteration record of module perturbation states — one entry of the
+/// paper's random state buffer `rsb`.
+#[derive(Debug, Clone)]
+pub struct IterStates {
+    pub iter: u64,
+    /// State *before* module `m`'s `z` was drawn, indexed by module position
+    /// (0 = embedding, 1..=N = blocks, N+1 = LM head).
+    pub per_module: Vec<RngState>,
+}
+
+/// The paper's RNG state manager (Algorithm 2 lines 4–9, 18–30).
+///
+/// `begin_iter` starts the iteration stream and records per-module states as
+/// the engine draws each module's `z`; `pop_last_states` exposes `lrs` — the
+/// previous iteration's states — so deferred updates replay the exact
+/// perturbation directions.
+#[derive(Debug)]
+pub struct RngStateManager {
+    base_seed: u64,
+    rsb: VecDeque<IterStates>,
+}
+
+impl RngStateManager {
+    pub fn new(base_seed: u64) -> Self {
+        Self { base_seed, rsb: VecDeque::new() }
+    }
+
+    pub fn base_seed(&self) -> u64 {
+        self.base_seed
+    }
+
+    /// Start iteration `j`: returns its Gaussian stream (counter 0) and
+    /// pushes an empty state record onto `rsb`.
+    pub fn begin_iter(&mut self, iter: u64) -> GaussianRng {
+        self.rsb.push_back(IterStates { iter, per_module: Vec::new() });
+        GaussianRng::new(self.base_seed, iter)
+    }
+
+    /// Record the state *before* drawing module `m`'s z (must be called in
+    /// module order).
+    pub fn record_module_state(&mut self, state: RngState) {
+        self.rsb.back_mut().expect("begin_iter first").per_module.push(state);
+    }
+
+    /// The paper's `lrs = PopLeft(rsb)`: the *previous* iteration's record.
+    /// Returns None on the first iteration (no deferred update yet).
+    pub fn pop_last_states(&mut self) -> Option<IterStates> {
+        if self.rsb.len() >= 2 {
+            self.rsb.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Peek the record for the current iteration (testing / introspection).
+    pub fn current(&self) -> Option<&IterStates> {
+        self.rsb.back()
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.rsb.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = GaussianRng::new(42, 7);
+        let mut b = GaussianRng::new(42, 7);
+        let mut va = vec![0.0; 1001];
+        let mut vb = vec![0.0; 1001];
+        a.fill_gaussian(&mut va);
+        b.fill_gaussian(&mut vb);
+        assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn state_restore_replays_exactly() {
+        let mut r = GaussianRng::new(1, 2);
+        let mut skip = vec![0.0; 37];
+        r.fill_gaussian(&mut skip);
+        let st = r.state();
+        let mut z1 = vec![0.0; 501];
+        r.fill_gaussian(&mut z1);
+        r.set_state(st);
+        let mut z2 = vec![0.0; 501];
+        r.fill_gaussian(&mut z2);
+        assert_eq!(z1, z2, "restored state must replay the same z");
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = GaussianRng::new(5, 0);
+        let mut b = GaussianRng::new(5, 1);
+        let (x, _) = a.next_pair();
+        let (y, _) = b.next_pair();
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = GaussianRng::new(123, 0);
+        let mut v = vec![0.0f32; 200_000];
+        r.fill_gaussian(&mut v);
+        let n = v.len() as f64;
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        // Tail sanity: |z| > 7 should be absent at this sample size,
+        // |z| > 3 present.
+        assert!(v.iter().all(|x| x.abs() < 7.0));
+        assert!(v.iter().any(|x| x.abs() > 3.0));
+    }
+
+    #[test]
+    fn manager_rsb_protocol() {
+        let mut m = RngStateManager::new(9);
+        let mut r0 = m.begin_iter(0);
+        for _ in 0..3 {
+            m.record_module_state(r0.state());
+            let mut z = vec![0.0; 10];
+            r0.fill_gaussian(&mut z);
+        }
+        assert!(m.pop_last_states().is_none(), "no lrs on first iter");
+
+        let mut r1 = m.begin_iter(1);
+        m.record_module_state(r1.state());
+        let lrs = m.pop_last_states().expect("lrs available from iter 0");
+        assert_eq!(lrs.iter, 0);
+        assert_eq!(lrs.per_module.len(), 3);
+
+        // The recorded state for module 1 equals a fresh generator's state
+        // after it consumed module 0's draw.
+        let mut fresh = GaussianRng::new(9, 0);
+        let mut z0 = vec![0.0; 10];
+        fresh.fill_gaussian(&mut z0);
+        assert_eq!(fresh.state(), lrs.per_module[1]);
+    }
+
+    #[test]
+    fn uniform_below_bounds() {
+        let mut r = GaussianRng::new(3, 3);
+        for _ in 0..1000 {
+            assert!(r.next_below(17) < 17);
+            let u = r.next_uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+}

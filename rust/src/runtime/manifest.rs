@@ -1,0 +1,148 @@
+//! Artifact manifest — the python↔rust ABI, emitted by `compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One named parameter inside a flat bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Layout of one module bucket (embedding / block / head).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BucketSpec {
+    pub size: usize,
+    pub layout: Vec<ParamEntry>,
+}
+
+/// Model dimensions the artifacts were specialised to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub name: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub ffn_mult: usize,
+    pub total_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelDims,
+    pub embed: BucketSpec,
+    pub block: BucketSpec,
+    pub head: BucketSpec,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+fn bucket(j: &Json) -> Result<BucketSpec> {
+    let mut layout = Vec::new();
+    for e in j.get("layout")?.as_arr()? {
+        layout.push(ParamEntry {
+            name: e.get("name")?.as_str()?.to_string(),
+            offset: e.get("offset")?.as_usize()?,
+            shape: e.get("shape")?.as_arr()?.iter().map(|s| s.as_usize()).collect::<Result<_>>()?,
+        });
+    }
+    Ok(BucketSpec { size: j.get("size")?.as_usize()?, layout })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let c = j.get("config")?;
+        let config = ModelDims {
+            name: c.get("name")?.as_str()?.to_string(),
+            d_model: c.get("d_model")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            n_layers: c.get("n_layers")?.as_usize()?,
+            vocab: c.get("vocab")?.as_usize()?,
+            seq_len: c.get("seq_len")?.as_usize()?,
+            batch: c.get("batch")?.as_usize()?,
+            ffn_mult: c.get("ffn_mult")?.as_usize()?,
+            total_params: c.get("total_params")?.as_usize()?,
+        };
+        let b = j.get("buckets")?;
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(k.clone(), v.as_str()?.to_string());
+        }
+        Ok(Manifest {
+            config,
+            embed: bucket(b.get("embed")?)?,
+            block: bucket(b.get("block")?)?,
+            head: bucket(b.get("head")?)?,
+            artifacts,
+        })
+    }
+
+    /// Consistency invariant: layouts are dense, ordered and sum to `size`.
+    pub fn validate(&self) -> Result<()> {
+        for (name, spec) in [("embed", &self.embed), ("block", &self.block), ("head", &self.head)] {
+            let mut off = 0;
+            for p in &spec.layout {
+                anyhow::ensure!(p.offset == off, "{name}: `{}` offset {} != {off}", p.name, p.offset);
+                off += p.numel();
+            }
+            anyhow::ensure!(off == spec.size, "{name}: layout sums to {off}, size {}", spec.size);
+        }
+        let total = self.embed.size + self.config.n_layers * self.block.size + self.head.size;
+        anyhow::ensure!(total == self.config.total_params,
+            "total_params {} != layout total {total}", self.config.total_params);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"name": "t", "d_model": 4, "n_heads": 2, "n_layers": 1,
+                 "vocab": 8, "seq_len": 2, "batch": 1, "ffn_mult": 4,
+                 "total_params": 20},
+      "buckets": {
+        "embed": {"size": 8, "layout": [{"name": "tok", "offset": 0, "shape": [2, 4]}]},
+        "block": {"size": 8, "layout": [{"name": "w", "offset": 0, "shape": [8]}]},
+        "head": {"size": 4, "layout": [{"name": "h", "offset": 0, "shape": [4]}]}
+      },
+      "artifacts": {"block_step": "block_step.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parse_and_validate() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.d_model, 4);
+        assert_eq!(m.block.size, 8);
+        assert_eq!(m.embed.layout[0].numel(), 8);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_bad_total() {
+        let bad = SAMPLE.replace("\"total_params\": 20", "\"total_params\": 21");
+        assert!(Manifest::parse(&bad).unwrap().validate().is_err());
+    }
+}

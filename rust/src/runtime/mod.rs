@@ -1,0 +1,156 @@
+//! PJRT runtime: load AOT-lowered HLO-text artifacts and execute them.
+//!
+//! The interchange format is HLO **text** (see `python/compile/aot.py`): jax
+//! >= 0.5 serialises HloModuleProto with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly.
+//!
+//! In this reproduction the PJRT **CPU** client plays the role of the
+//! paper's GPU: it runs exactly the executables a GPU/TPU deployment would
+//! run (same HLO, Pallas kernels under interpret=True), while the paper's
+//! CPU side is the plain rust heap.  Transfer timing between the two tiers
+//! is modelled by [`crate::memory::transfer`].
+
+mod manifest;
+
+pub use manifest::{BucketSpec, Manifest, ModelDims, ParamEntry};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Executable names emitted by aot.py for every config.
+pub const EXE_NAMES: &[&str] = &[
+    "embed_step", "block_step", "head_step",
+    "embed_fwd", "block_fwd", "head_eval",
+    "update_embed", "update_block", "update_head",
+];
+
+/// A loaded artifact bundle for one model config.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Load `artifacts/<config>/` (manifest now, executables lazily).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        Ok(Self { client, dir: dir.to_path_buf(), manifest, exes: RefCell::new(HashMap::new()) })
+    }
+
+    /// Load by config name from the repo artifacts dir.
+    pub fn load_config(name: &str) -> Result<Self> {
+        Self::load(&crate::artifacts_dir().join(name))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (once) and cache the named executable.
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let rel = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown executable `{name}`"))?;
+        let path = self.dir.join(rel);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `name` with the given inputs; outputs are the decomposed
+    /// elements of the (always-tupled) root.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).unwrap();
+        let bufs = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Warm every executable (used by the trainer so that compile time never
+    /// lands inside a timed region).
+    pub fn compile_all(&self) -> Result<()> {
+        for name in EXE_NAMES {
+            if self.manifest.artifacts.contains_key(*name) {
+                self.ensure_compiled(name)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// --- literal helpers ---------------------------------------------------------
+
+fn as_bytes<T>(data: &[T]) -> &[u8] {
+    // Plain-old-data views for literal construction (single-copy path).
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+/// f32 tensor literal with the given dims (one copy, no reshape round-trip).
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "dims {:?} vs len {}", dims, data.len());
+    let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, as_bytes(data))
+        .map_err(|e| anyhow!("literal f32: {e:?}"))
+}
+
+/// i32 tensor literal.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "dims {:?} vs len {}", dims, data.len());
+    let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, &dims, as_bytes(data))
+        .map_err(|e| anyhow!("literal i32: {e:?}"))
+}
+
+/// u32[2] threefry key-data literal (the shipped RNG state, §5.1).
+pub fn lit_key(key: [u32; 2]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U32, &[2], as_bytes(&key))
+        .map_err(|e| anyhow!("literal key: {e:?}"))
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract a literal's payload as Vec<f32>.
+pub fn lit_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Extract a scalar f32 literal.
+pub fn lit_to_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v = lit_to_f32(lit)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}

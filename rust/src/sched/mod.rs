@@ -1,0 +1,312 @@
+//! The ZO2 dynamic scheduler (paper §5.2, Algorithm 3).
+//!
+//! Three logical streams — Upload, Compute, Offload — mirror the three CUDA
+//! streams of the paper.  Two dependency rules define correctness:
+//!
+//!  1. per-block chain:   U(Wᵢ) → C(Wᵢ) → O(Wᵢ)
+//!  2. per-stream FIFO:   X(Wᵢ) waits for X(Wᵢ₋₁) of the same stream
+//!
+//! plus the resource rule that an upload needs a free slot of the reusable
+//! block buffer (slot of block *i* frees when O(Wᵢ) completes; with S slots
+//! U(Wᵢ) therefore waits on O(Wᵢ₋ₛ)).
+//!
+//! The same task DAG drives two executions:
+//!  * [`analytic`]: a deterministic discrete-event schedule on virtual time
+//!    using a [`CostProvider`] — this is how paper-scale (OPT-30B…175B)
+//!    configurations are evaluated, and what emits the Fig. 4 timelines;
+//!  * the *real* threaded engine in [`crate::zo::zo2_engine`], which
+//!    realises the same dependency structure with worker threads around
+//!    actual PJRT executions.
+//!
+//! Ablation flags reproduce Table 4:
+//!  * `overlap = false` — the naive §5.2/Fig. 4a schedule: global sync after
+//!    every task (single CUDA stream).
+//!  * `reusable_mem = false` — every upload pays a cudaMalloc, and (as with
+//!    real cudaMalloc) synchronises with the compute stream.
+//!  * `efficient_update = false` — the §5.4 fusion is disabled: each step
+//!    appends a second upload→update→offload round per block (Fig. 5a).
+
+pub mod analytic;
+
+pub use analytic::{simulate, Schedule};
+
+/// Which stream a task runs on (paper Fig. 2's three CUDA streams).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stream {
+    Upload,
+    Compute,
+    Offload,
+}
+
+/// Module position in the forward order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Module {
+    Embed,
+    Block(usize),
+    Head,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Upload a block bucket CPU→GPU (includes decompression in AMP mode).
+    Upload,
+    /// Dual-forward compute (+ fused deferred update, §5.4).
+    Compute,
+    /// Offload a block bucket GPU→CPU (includes compression in AMP mode).
+    Offload,
+    /// Standalone parameter-update compute (only in the
+    /// `efficient_update = false` ablation, Fig. 5a).
+    Update,
+}
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: usize,
+    pub step: usize,
+    pub module: Module,
+    pub kind: TaskKind,
+    pub stream: Stream,
+    /// Indices of tasks that must complete first (beyond stream FIFO).
+    pub deps: Vec<usize>,
+    /// Extra fixed latency charged at task start (cudaMalloc in the
+    /// no-reusable-memory ablation).
+    pub extra_latency: f64,
+}
+
+/// Scheduler policy / ablation switches (Table 4).
+#[derive(Debug, Clone, Copy)]
+pub struct Policy {
+    pub overlap: bool,
+    pub reusable_mem: bool,
+    pub efficient_update: bool,
+    /// Reusable buffer slots (3 = compute + prefetch + offload in flight).
+    pub slots: usize,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Self { overlap: true, reusable_mem: true, efficient_update: true, slots: 3 }
+    }
+}
+
+impl Policy {
+    pub fn naive() -> Self {
+        Self { overlap: false, ..Self::default() }
+    }
+}
+
+/// Build the task DAG for `steps` training steps over `n_blocks` offloaded
+/// transformer blocks (embedding and LM head stay GPU-resident, §5.2).
+pub fn build_plan(n_blocks: usize, steps: usize, policy: Policy) -> Vec<Task> {
+    let mut tasks: Vec<Task> = Vec::new();
+    // Per-stream last task id, for FIFO chaining.
+    let mut last_on: [Option<usize>; 3] = [None, None, None];
+    // id of O(Wᵢ) per in-flight slot ring.
+    let mut offload_ring: Vec<Option<usize>> = vec![None; policy.slots.max(1)];
+    let mut ring_pos = 0usize;
+    // id of the last task overall (for naive global sync).
+    let mut prev_any: Option<usize> = None;
+    // id of the previous *compute* task (cudaMalloc sync in the
+    // no-reusable-memory ablation).
+    let mut prev_compute: Option<usize> = None;
+
+    let stream_idx = |s: Stream| match s {
+        Stream::Upload => 0,
+        Stream::Compute => 1,
+        Stream::Offload => 2,
+    };
+
+    let push = |tasks: &mut Vec<Task>,
+                    last_on: &mut [Option<usize>; 3],
+                    prev_any: &mut Option<usize>,
+                    prev_compute: &mut Option<usize>,
+                    step: usize,
+                    module: Module,
+                    kind: TaskKind,
+                    mut deps: Vec<usize>,
+                    extra_latency: f64| {
+        let stream = if policy.overlap {
+            match kind {
+                TaskKind::Upload => Stream::Upload,
+                TaskKind::Compute | TaskKind::Update => Stream::Compute,
+                TaskKind::Offload => Stream::Offload,
+            }
+        } else {
+            Stream::Compute // naive: one stream serialises everything
+        };
+        let id = tasks.len();
+        // Stream FIFO.
+        if let Some(p) = last_on[stream_idx(stream)] {
+            deps.push(p);
+        }
+        // Naive global sync: depend on *every* previous task (equivalent to
+        // depending on the last one since the single stream is FIFO anyway).
+        if !policy.overlap {
+            if let Some(p) = *prev_any {
+                deps.push(p);
+            }
+        }
+        deps.sort_unstable();
+        deps.dedup();
+        tasks.push(Task { id, step, module, kind, stream, deps, extra_latency });
+        last_on[stream_idx(stream)] = Some(id);
+        *prev_any = Some(id);
+        if matches!(kind, TaskKind::Compute | TaskKind::Update) {
+            *prev_compute = Some(id);
+        }
+        id
+    };
+
+    let malloc_sync = !policy.reusable_mem;
+
+    for step in 0..steps {
+        // C(Embedding) — resident, no upload.
+        let c_embed = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                           step, Module::Embed, TaskKind::Compute, vec![], 0.0);
+        let mut prev_c = c_embed;
+
+        // Upload of block 0 may overlap the embedding compute (§5.2).
+        let mut upload_ids: Vec<usize> = Vec::with_capacity(n_blocks);
+        let mut compute_ids: Vec<usize> = Vec::with_capacity(n_blocks);
+
+        for i in 0..n_blocks {
+            // Slot reuse: U waits for the offload that frees this slot.
+            let mut deps = Vec::new();
+            if let Some(o) = offload_ring[ring_pos] {
+                deps.push(o);
+            }
+            if malloc_sync {
+                // cudaMalloc synchronises with the device: the upload cannot
+                // overlap in-flight compute.
+                if let Some(c) = prev_compute {
+                    deps.push(c);
+                }
+            }
+            let extra = 0.0; // malloc latency charged via CostProvider::malloc_s
+            let u = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                         step, Module::Block(i), TaskKind::Upload, deps, extra);
+            upload_ids.push(u);
+
+            // C(Wᵢ) ← U(Wᵢ) (+ FIFO after previous compute).
+            let c = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                         step, Module::Block(i), TaskKind::Compute, vec![u, prev_c], 0.0);
+            compute_ids.push(c);
+            prev_c = c;
+
+            // O(Wᵢ) ← C(Wᵢ) (+ FIFO after previous offload).
+            let o = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                         step, Module::Block(i), TaskKind::Offload, vec![c], 0.0);
+            offload_ring[ring_pos] = Some(o);
+            ring_pos = (ring_pos + 1) % offload_ring.len();
+        }
+
+        // C(LMHead) — resident.
+        let _c_head = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                           step, Module::Head, TaskKind::Compute, vec![prev_c], 0.0);
+
+        if !policy.efficient_update {
+            // Fig. 5a: a second upload→update→offload round per block, after
+            // the step's projected gradient is known (i.e. after the head).
+            for i in 0..n_blocks {
+                let mut deps = Vec::new();
+                if let Some(o) = offload_ring[ring_pos] {
+                    deps.push(o);
+                }
+                if malloc_sync {
+                    if let Some(c) = prev_compute {
+                        deps.push(c);
+                    }
+                }
+                let u = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                             step, Module::Block(i), TaskKind::Upload, deps, 0.0);
+                let c = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                             step, Module::Block(i), TaskKind::Update, vec![u], 0.0);
+                let o = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                             step, Module::Block(i), TaskKind::Offload, vec![c], 0.0);
+                offload_ring[ring_pos] = Some(o);
+                ring_pos = (ring_pos + 1) % offload_ring.len();
+            }
+        }
+    }
+    tasks
+}
+
+/// Task durations, supplied either by the analytic cost model
+/// ([`crate::costmodel`]) or by real measurements (calibration tests).
+pub trait CostProvider {
+    /// Upload duration for one block bucket (wire bytes / H2D bandwidth).
+    fn upload_s(&self) -> f64;
+    /// Offload duration for one block bucket.
+    fn offload_s(&self) -> f64;
+    /// Dual-forward (+fused update) duration for the given module.
+    fn compute_s(&self, module: Module) -> f64;
+    /// Standalone update duration (non-efficient-update ablation).
+    fn update_s(&self) -> f64;
+    /// cudaMalloc latency charged per upload when the reusable buffer is
+    /// disabled.
+    fn malloc_s(&self) -> f64 {
+        300e-6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_shape_one_step() {
+        let p = build_plan(4, 1, Policy::default());
+        // embed + 4*(U,C,O) + head = 14 tasks
+        assert_eq!(p.len(), 14);
+        let uploads = p.iter().filter(|t| t.kind == TaskKind::Upload).count();
+        let offloads = p.iter().filter(|t| t.kind == TaskKind::Offload).count();
+        assert_eq!(uploads, 4);
+        assert_eq!(offloads, 4);
+    }
+
+    #[test]
+    fn non_efficient_update_doubles_transfers() {
+        let p = build_plan(4, 1, Policy { efficient_update: false, ..Policy::default() });
+        let uploads = p.iter().filter(|t| t.kind == TaskKind::Upload).count();
+        let offloads = p.iter().filter(|t| t.kind == TaskKind::Offload).count();
+        assert_eq!(uploads, 8, "each block uploaded twice per step (Fig. 5a)");
+        assert_eq!(offloads, 8);
+    }
+
+    #[test]
+    fn deps_point_backwards_and_chain() {
+        let p = build_plan(6, 3, Policy::default());
+        for t in &p {
+            for &d in &t.deps {
+                assert!(d < t.id, "dep {} of task {} must precede it", d, t.id);
+            }
+        }
+        // Every compute on a block depends on its upload.
+        for t in &p {
+            if let (TaskKind::Compute, Module::Block(i)) = (t.kind, t.module) {
+                let has_upload_dep = t.deps.iter().any(|&d| {
+                    p[d].kind == TaskKind::Upload && p[d].module == Module::Block(i)
+                        && p[d].step == t.step
+                });
+                assert!(has_upload_dep, "C(W{i}) must wait for U(W{i})");
+            }
+        }
+    }
+
+    #[test]
+    fn naive_plan_is_single_stream() {
+        let p = build_plan(4, 2, Policy::naive());
+        assert!(p.iter().all(|t| t.stream == Stream::Compute));
+    }
+
+    #[test]
+    fn slot_ring_blocks_uploads() {
+        // With 1 slot, U(W1) must depend on O(W0).
+        let p = build_plan(3, 1, Policy { slots: 1, ..Policy::default() });
+        let u1 = p.iter().find(|t| t.kind == TaskKind::Upload && t.module == Module::Block(1)).unwrap();
+        let dep_is_offload0 = u1.deps.iter().any(|&d| {
+            p[d].kind == TaskKind::Offload && p[d].module == Module::Block(0)
+        });
+        assert!(dep_is_offload0);
+    }
+}

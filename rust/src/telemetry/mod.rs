@@ -1,0 +1,151 @@
+//! Telemetry: timeline traces (paper Fig. 4), memory reports, throughput.
+
+use std::fmt::Write as _;
+
+/// One scheduled interval on a stream.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub stream: &'static str,
+    pub label: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A collection of trace events with CSV + ASCII-gantt rendering.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, e: TraceEvent) {
+        self.events.push(e);
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.events.iter().map(|e| e.end).fold(0.0, f64::max)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("stream,label,start_s,end_s\n");
+        for e in &self.events {
+            let _ = writeln!(s, "{},{},{:.9},{:.9}", e.stream, e.label.replace(',', ";"), e.start, e.end);
+        }
+        s
+    }
+
+    /// Render an ASCII gantt chart (one row per stream), `width` columns.
+    /// This is the textual Figure 4.
+    pub fn to_ascii_gantt(&self, width: usize) -> String {
+        let total = self.makespan();
+        if total <= 0.0 || self.events.is_empty() {
+            return String::from("(empty timeline)\n");
+        }
+        let mut streams: Vec<&'static str> = Vec::new();
+        for e in &self.events {
+            if !streams.contains(&e.stream) {
+                streams.push(e.stream);
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "timeline: {:.3} ms total, {} tasks", total * 1e3, self.events.len());
+        for s in streams {
+            let mut row = vec![' '; width];
+            for e in self.events.iter().filter(|e| e.stream == s) {
+                let a = ((e.start / total) * width as f64) as usize;
+                let b = (((e.end / total) * width as f64).ceil() as usize).min(width);
+                let ch = match e.label.chars().next().unwrap_or('?') {
+                    'U' => 'U',
+                    'O' => 'O',
+                    'C' => '#',
+                    c => c,
+                };
+                for cell in row.iter_mut().take(b).skip(a) {
+                    *cell = ch;
+                }
+            }
+            let _ = writeln!(out, "{:>8} |{}|", s, row.iter().collect::<String>());
+        }
+        out
+    }
+
+    /// Fraction of the makespan each stream is busy.
+    pub fn utilization(&self, stream: &str) -> f64 {
+        let total = self.makespan();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.events.iter().filter(|e| e.stream == stream).map(|e| e.end - e.start).sum();
+        busy / total
+    }
+}
+
+/// Loss-curve / metric series writer (CSV) for the e2e example.
+#[derive(Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = format!("step,{}\n", self.name);
+        for (x, y) in &self.points {
+            let _ = writeln!(s, "{x},{y}");
+        }
+        s
+    }
+
+    /// Mean of the last `k` values (used to report converged loss).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.points.len();
+        let k = k.min(n);
+        self.points[n - k..].iter().map(|p| p.1).sum::<f64>() / k as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gantt_and_utilization() {
+        let mut t = Timeline::new();
+        t.push(TraceEvent { stream: "compute", label: "C b0".into(), start: 0.0, end: 2.0 });
+        t.push(TraceEvent { stream: "upload", label: "U b1".into(), start: 0.0, end: 1.0 });
+        t.push(TraceEvent { stream: "compute", label: "C b1".into(), start: 2.0, end: 4.0 });
+        assert_eq!(t.makespan(), 4.0);
+        assert!((t.utilization("compute") - 1.0).abs() < 1e-12);
+        assert!((t.utilization("upload") - 0.25).abs() < 1e-12);
+        let g = t.to_ascii_gantt(40);
+        assert!(g.contains("compute"));
+        assert!(g.contains('#'));
+        let csv = t.to_csv();
+        assert!(csv.lines().count() == 4);
+    }
+
+    #[test]
+    fn series_tail_mean() {
+        let mut s = Series::new("loss");
+        for i in 0..10 {
+            s.push(i as f64, 10.0 - i as f64);
+        }
+        assert!((s.tail_mean(2) - 1.5).abs() < 1e-12);
+        assert!(s.to_csv().starts_with("step,loss"));
+    }
+}

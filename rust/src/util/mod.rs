@@ -1,0 +1,22 @@
+//! Small self-contained utilities (the offline build has no serde / clap /
+//! criterion, so the crate carries its own JSON, CLI and stats helpers).
+
+pub mod cli;
+pub mod json;
+pub mod stats;
+
+/// Human-readable byte count (MiB with paper-style "MB" label).
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.0}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+/// Human-readable duration from seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}

@@ -1,0 +1,227 @@
+//! Host-side ZO optimizers (extension; paper §3: "Our idea can be applied
+//! to other ZO optimizers").
+//!
+//! Two reasons these exist:
+//!
+//! 1. **ZO-AdamW** — the projected-gradient trick generalises: the full
+//!    gradient estimate is `g·z`, so Adam's moments are updated elementwise
+//!    with `g·z_i` while `z` is replayed from the managed RNG state.  The
+//!    moments (2 extra copies of the parameters) live in **CPU DRAM** — on
+//!    the GPU they would erase ZO2's memory win, which is exactly the
+//!    ZeRO-Offload argument for CPU-side optimizer state.
+//! 2. **Update-site ablation** (DESIGN.md §7): ZO2 updates on the GPU fused
+//!    with the dual forward (§5.4).  The alternative — update on the CPU
+//!    while the bucket is host-resident — costs zero extra transfers but
+//!    puts elementwise work on the slow side.  `CpuZoSgd` implements it
+//!    bit-compatibly with the device path (same mul/mul/sub rounding as the
+//!    barriered kernel) so the two sites can be compared for *throughput*
+//!    without a numerics confound.
+//!
+//! z replay note: the device path draws z from threefry keys; replaying that
+//! exact draw on the host (threefry + erfinv) is not practical, so CPU
+//! optimizers draw from the host counter RNG (`fill_z`).  They are
+//! therefore their *own* optimizer trajectory — deterministic and
+//! self-consistent (deferred vs immediate application commutes bit-exactly,
+//! see `deferred_equals_immediate` below), but not bitwise the GPU
+//! trajectory.  DESIGN.md records this as the one place the two sites
+//! differ.
+
+use crate::rng::RngState;
+use crate::zo::fill_z;
+
+/// Elementwise ZO-SGD on a host-resident fp32 bucket:
+/// `θ ← θ − η·g·z`, z replayed from `state`.
+pub fn cpu_zo_sgd_update(bucket: &mut [f32], state: RngState, lr: f32, g: f32, z_scratch: &mut Vec<f32>) {
+    if z_scratch.len() < bucket.len() {
+        z_scratch.resize(bucket.len(), 0.0);
+    }
+    let z = &mut z_scratch[..bucket.len()];
+    fill_z(state, z);
+    let scale = lr * g;
+    for (w, &zi) in bucket.iter_mut().zip(z.iter()) {
+        // Same op order as the barriered device kernel: mul, then sub.
+        *w -= scale * zi;
+    }
+}
+
+/// Adam moments for one bucket (CPU DRAM resident).
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+}
+
+impl AdamState {
+    pub fn new(n: usize) -> Self {
+        Self { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    /// Host bytes this state occupies (for the memory accounting story).
+    pub fn bytes(&self) -> u64 {
+        (self.m.len() + self.v.len()) as u64 * 4
+    }
+}
+
+/// ZO-AdamW hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamHp {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamHp {
+    fn default() -> Self {
+        Self { lr: 1e-4, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+/// One ZO-AdamW step on a host bucket: gradient estimate `gi = g·z_i`
+/// (never materialised as a whole — consumed streaming), moments updated in
+/// place, decoupled weight decay.
+pub fn cpu_zo_adamw_update(
+    bucket: &mut [f32],
+    st: &mut AdamState,
+    state: RngState,
+    hp: AdamHp,
+    g: f32,
+    z_scratch: &mut Vec<f32>,
+) {
+    assert_eq!(st.m.len(), bucket.len());
+    if z_scratch.len() < bucket.len() {
+        z_scratch.resize(bucket.len(), 0.0);
+    }
+    let z = &mut z_scratch[..bucket.len()];
+    fill_z(state, z);
+    st.t += 1;
+    let b1t = 1.0 - hp.beta1.powi(st.t as i32);
+    let b2t = 1.0 - hp.beta2.powi(st.t as i32);
+    for i in 0..bucket.len() {
+        let gi = g * z[i];
+        st.m[i] = hp.beta1 * st.m[i] + (1.0 - hp.beta1) * gi;
+        st.v[i] = hp.beta2 * st.v[i] + (1.0 - hp.beta2) * gi * gi;
+        let mhat = st.m[i] / b1t;
+        let vhat = st.v[i] / b2t;
+        bucket[i] -= hp.lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * bucket[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::RngState;
+
+    fn state(c: u64) -> RngState {
+        RngState { seed: 7, stream: 1, counter: c }
+    }
+
+    #[test]
+    fn sgd_update_matches_manual() {
+        let mut b = vec![1.0f32, -2.0, 0.5, 3.0];
+        let mut want = b.clone();
+        let mut z = Vec::new();
+        cpu_zo_sgd_update(&mut b, state(0), 0.1, 2.0, &mut z);
+        let mut zv = vec![0.0; 4];
+        fill_z(state(0), &mut zv);
+        for (w, zi) in want.iter_mut().zip(&zv) {
+            *w -= 0.2 * zi;
+        }
+        assert_eq!(b, want);
+    }
+
+    #[test]
+    fn sgd_zero_g_is_noop() {
+        let mut b = vec![1.0f32; 100];
+        let orig = b.clone();
+        let mut z = Vec::new();
+        cpu_zo_sgd_update(&mut b, state(3), 1e-3, 0.0, &mut z);
+        assert_eq!(b, orig);
+    }
+
+    #[test]
+    fn adam_first_step_is_sign_sgd_like() {
+        // With t=1, mhat = gi and vhat = gi², so the step is
+        // lr·gi/(|gi|+eps) ≈ lr·sign(gi) — the classic Adam property.
+        let mut b = vec![0.0f32; 1000];
+        let mut st = AdamState::new(1000);
+        let hp = AdamHp { lr: 1e-2, ..Default::default() };
+        let mut z = Vec::new();
+        cpu_zo_adamw_update(&mut b, &mut st, state(0), hp, 1.5, &mut z);
+        let mut zv = vec![0.0; 1000];
+        fill_z(state(0), &mut zv);
+        for (w, zi) in b.iter().zip(&zv) {
+            let expect = -1e-2 * (1.5 * zi).signum();
+            assert!((w - expect).abs() < 1e-4, "{w} vs {expect}");
+        }
+        assert_eq!(st.t, 1);
+    }
+
+    #[test]
+    fn adam_moments_decay_and_converge_direction() {
+        // Feeding the same g and z repeatedly must keep stepping the same
+        // direction with bounded magnitude (lr), never NaN.
+        let mut b = vec![0.5f32; 64];
+        let mut st = AdamState::new(64);
+        let hp = AdamHp { lr: 1e-3, ..Default::default() };
+        let mut z = Vec::new();
+        let before = b.clone();
+        for _ in 0..50 {
+            cpu_zo_adamw_update(&mut b, &mut st, state(5), hp, 2.0, &mut z);
+        }
+        let mut zv = vec![0.0; 64];
+        fill_z(state(5), &mut zv);
+        for ((w0, w), zi) in before.iter().zip(&b).zip(&zv) {
+            assert!(w.is_finite());
+            // moved against the sign of g*z
+            if zi.abs() > 1e-3 {
+                assert!((w0 - w).signum() == (2.0 * zi).signum(), "{w0} -> {w}, z {zi}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut b = vec![1.0f32; 32];
+        let mut st = AdamState::new(32);
+        let hp = AdamHp { lr: 1e-2, weight_decay: 0.1, ..Default::default() };
+        let mut z = Vec::new();
+        cpu_zo_adamw_update(&mut b, &mut st, state(9), hp, 0.0, &mut z);
+        // g = 0: pure decay, θ ← θ(1 − lr·wd)
+        for w in &b {
+            assert!((w - (1.0 - 1e-3)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn adam_state_bytes() {
+        assert_eq!(AdamState::new(1000).bytes(), 8000);
+    }
+
+    #[test]
+    fn deferred_equals_immediate() {
+        // The §5.4 reordering argument at the CPU site: applying update j
+        // right after step j (MeZO order) or deferring it to just before
+        // step j+1's use (ZO2 order) yields bit-identical parameters,
+        // because updates are independent per bucket and replay the same z.
+        let mut immediate = vec![0.3f32; 500];
+        let mut z = Vec::new();
+        for j in 0..5u64 {
+            cpu_zo_sgd_update(&mut immediate, state(j), 1e-3, 0.5 + j as f32, &mut z);
+        }
+        let mut deferred = vec![0.3f32; 500];
+        let mut pending: Option<(RngState, f32)> = None;
+        for j in 0..5u64 {
+            if let Some((st, g)) = pending.take() {
+                cpu_zo_sgd_update(&mut deferred, st, 1e-3, g, &mut z);
+            }
+            pending = Some((state(j), 0.5 + j as f32));
+        }
+        if let Some((st, g)) = pending {
+            cpu_zo_sgd_update(&mut deferred, st, 1e-3, g, &mut z); // flush
+        }
+        assert!(immediate.iter().zip(&deferred).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+}

@@ -1,0 +1,213 @@
+//! MeZO baseline engine (paper Algorithm 1): whole model GPU-resident.
+//!
+//! Canonical MeZO order: dual-forward through every module with the
+//! *current* parameters, compute the projected gradient, then re-walk the
+//! modules applying the update with `z` **replayed from the recorded RNG
+//! states** — the z vectors are never stored or shipped (MeZO's memory
+//! trick, §3): only the 8-byte key derived from the managed state reaches
+//! the device, which regenerates `z` locally.
+
+use anyhow::Result;
+
+use crate::memory::DevicePool;
+use crate::precision::Codec;
+use crate::rng::RngStateManager;
+use crate::runtime::{lit_f32, lit_i32, lit_key, lit_scalar, lit_to_f32, lit_to_scalar, Runtime};
+use crate::zo::{key_of, module_states, ParamStore, StepStats, ZoConfig};
+
+pub struct MezoEngine {
+    rt: Runtime,
+    pub params: ParamStore,
+    cfg: ZoConfig,
+    manager: RngStateManager,
+    step: u64,
+    pub device: std::sync::Arc<DevicePool>,
+}
+
+impl MezoEngine {
+    pub fn new(rt: Runtime, cfg: ZoConfig) -> Result<Self> {
+        let params = ParamStore::init(rt.manifest(), cfg.seed, Codec::F32);
+        let device = DevicePool::unlimited();
+        // MeZO keeps every parameter resident on the device.
+        let total: usize = params.module_sizes().iter().sum();
+        device.alloc((total * 4) as u64)?;
+        Ok(Self {
+            rt,
+            params,
+            cfg,
+            manager: RngStateManager::new(cfg.seed),
+            step: 0,
+            device,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// One Algorithm-1 iteration on a [B, T] batch of token ids.
+    pub fn train_step(&mut self, ids: &[i32]) -> Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        let m = self.rt.manifest();
+        let (b, t) = (m.config.batch as i64, m.config.seq_len as i64);
+        anyhow::ensure!(ids.len() as i64 == b * t, "batch shape mismatch");
+
+        let sizes = self.params.module_sizes();
+        let states = module_states(self.cfg.seed, self.step, &sizes);
+        // Bookkeeping mirrors Algorithm 2's rsb even though MeZO applies the
+        // update in-step (states are consumed again below for the update).
+        let _rng = self.manager.begin_iter(self.step);
+        for &st in &states {
+            self.manager.record_module_state(st);
+        }
+
+        let lr = lit_scalar(self.cfg.lr);
+        let eps = lit_scalar(self.cfg.eps);
+        let zero = lit_scalar(0.0);
+        let ids_lit = lit_i32(ids, &[b, t])?;
+
+        // --- dual forward (perturbation fused into the executables).
+        // g_prev = 0 makes the fused deferred update an exact no-op, so the
+        // current key doubles as key_prev.
+        let n_emb = self.params.embed.len();
+        let k_emb = lit_key(key_of(states[0]))?;
+        let outs = self.rt.run(
+            "embed_step",
+            &[
+                lit_f32(&self.params.embed, &[n_emb as i64])?,
+                k_emb.clone(),
+                zero.clone(),
+                lr.clone(),
+                k_emb,
+                eps.clone(),
+                ids_lit.clone(),
+            ],
+        )?;
+        let mut it = outs.into_iter().skip(1);
+        let mut hp = it.next().unwrap();
+        let mut hm = it.next().unwrap();
+
+        for i in 0..self.params.n_blocks() {
+            let n = self.params.blocks[i].numel();
+            let k = lit_key(key_of(states[1 + i]))?;
+            let outs = self.rt.run(
+                "block_step",
+                &[
+                    lit_f32(&self.params.blocks[i].to_f32(), &[n as i64])?,
+                    k.clone(),
+                    zero.clone(),
+                    lr.clone(),
+                    k,
+                    eps.clone(),
+                    hp,
+                    hm,
+                ],
+            )?;
+            let mut it = outs.into_iter().skip(1);
+            hp = it.next().unwrap();
+            hm = it.next().unwrap();
+        }
+
+        let n_head = self.params.head.len();
+        let k_head = lit_key(key_of(states[1 + self.params.n_blocks()]))?;
+        let outs = self.rt.run(
+            "head_step",
+            &[
+                lit_f32(&self.params.head, &[n_head as i64])?,
+                k_head.clone(),
+                zero,
+                lr,
+                k_head,
+                eps,
+                hp,
+                hm,
+                ids_lit,
+            ],
+        )?;
+        let loss_plus = lit_to_scalar(&outs[1])?;
+        let loss_minus = lit_to_scalar(&outs[2])?;
+        let g = (loss_plus - loss_minus) / (2.0 * self.cfg.eps);
+
+        // --- in-step update: replay z on device from the recorded states.
+        self.apply_update(g, &states)?;
+
+        self.step += 1;
+        Ok(StepStats { step: self.step - 1, loss_plus, loss_minus, g, wall_s: t0.elapsed().as_secs_f64() })
+    }
+
+    /// θ ← θ − η·g·z for every module, z replayed from `states`.
+    fn apply_update(&mut self, g: f32, states: &[crate::rng::RngState]) -> Result<()> {
+        let lr = lit_scalar(self.cfg.lr);
+        let gl = lit_scalar(g);
+
+        let n_emb = self.params.embed.len();
+        let out = self.rt.run(
+            "update_embed",
+            &[
+                lit_f32(&self.params.embed, &[n_emb as i64])?,
+                lit_key(key_of(states[0]))?,
+                lr.clone(),
+                gl.clone(),
+            ],
+        )?;
+        self.params.embed = lit_to_f32(&out[0])?;
+
+        for i in 0..self.params.n_blocks() {
+            let n = self.params.blocks[i].numel();
+            let out = self.rt.run(
+                "update_block",
+                &[
+                    lit_f32(&self.params.blocks[i].to_f32(), &[n as i64])?,
+                    lit_key(key_of(states[1 + i]))?,
+                    lr.clone(),
+                    gl.clone(),
+                ],
+            )?;
+            let updated = lit_to_f32(&out[0])?;
+            self.params.blocks[i].encode_from(&updated);
+        }
+
+        let n_head = self.params.head.len();
+        let out = self.rt.run(
+            "update_head",
+            &[
+                lit_f32(&self.params.head, &[n_head as i64])?,
+                lit_key(key_of(states[1 + self.params.n_blocks()]))?,
+                lr,
+                gl,
+            ],
+        )?;
+        self.params.head = lit_to_f32(&out[0])?;
+        Ok(())
+    }
+
+    /// Unperturbed forward: (mean next-token loss, last-position logits).
+    pub fn eval(&self, ids: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let m = self.rt.manifest();
+        let (b, t) = (m.config.batch as i64, m.config.seq_len as i64);
+        let ids_lit = lit_i32(ids, &[b, t])?;
+        let out = self.rt.run(
+            "embed_fwd",
+            &[lit_f32(&self.params.embed, &[self.params.embed.len() as i64])?, ids_lit.clone()],
+        )?;
+        let mut h = out.into_iter().next().unwrap();
+        for blk in &self.params.blocks {
+            let out = self
+                .rt
+                .run("block_fwd", &[lit_f32(&blk.to_f32(), &[blk.numel() as i64])?, h])?;
+            h = out.into_iter().next().unwrap();
+        }
+        let out = self.rt.run(
+            "head_eval",
+            &[lit_f32(&self.params.head, &[self.params.head.len() as i64])?, h, ids_lit],
+        )?;
+        let mut it = out.into_iter();
+        let loss = lit_to_scalar(&it.next().unwrap())?;
+        let logits = lit_to_f32(&it.next().unwrap())?;
+        Ok((loss, logits))
+    }
+}

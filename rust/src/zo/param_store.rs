@@ -1,0 +1,162 @@
+//! Parameter store: per-module flat buckets with layout-aware init.
+//!
+//! Initialisation is deterministic in the seed and identical across engines
+//! (a precondition of the parity experiments): LayerNorm scales start at 1,
+//! biases at 0, matrices/embeddings at N(0, 0.02) drawn from a dedicated
+//! init stream of the counter RNG.
+
+use crate::memory::HostBucket;
+use crate::precision::Codec;
+use crate::rng::GaussianRng;
+use crate::runtime::{BucketSpec, Manifest};
+
+/// Host-side master copies of every module bucket.
+///
+/// `embed` / `head` are kept as fp32 vectors (they are GPU-resident in ZO2,
+/// §5.2, so they never cross the interconnect); `blocks` are [`HostBucket`]s
+/// in the wire codec (fp32, or compressed in AMP mode §5.5).
+pub struct ParamStore {
+    pub embed: Vec<f32>,
+    pub blocks: Vec<HostBucket>,
+    pub head: Vec<f32>,
+}
+
+const INIT_STREAM: u64 = 0xFFFF_FFFF_0000_0001;
+
+/// Fill one bucket according to its layout.
+fn init_bucket(spec: &BucketSpec, rng: &mut GaussianRng, std: f32) -> Vec<f32> {
+    let mut b = vec![0.0f32; spec.size];
+    for p in &spec.layout {
+        let sl = &mut b[p.offset..p.offset + p.numel()];
+        if p.name.ends_with("_w") && p.shape.len() == 1 {
+            // LayerNorm scale.
+            sl.fill(1.0);
+        } else if p.name.ends_with("_b") {
+            sl.fill(0.0);
+        } else {
+            rng.fill_gaussian(sl);
+            for x in sl.iter_mut() {
+                *x *= std;
+            }
+        }
+    }
+    b
+}
+
+impl ParamStore {
+    /// Deterministic init from the manifest layouts.
+    pub fn init(manifest: &Manifest, seed: u64, wire: Codec) -> Self {
+        let mut rng = GaussianRng::new(seed, INIT_STREAM);
+        let std = 0.02f32;
+        let embed = init_bucket(&manifest.embed, &mut rng, std);
+        let mut blocks = Vec::with_capacity(manifest.config.n_layers);
+        for _ in 0..manifest.config.n_layers {
+            let b = init_bucket(&manifest.block, &mut rng, std);
+            blocks.push(HostBucket::from_f32(&b, wire));
+        }
+        let head = init_bucket(&manifest.head, &mut rng, std);
+        Self { embed, blocks, head }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Module bucket sizes in forward order (embed, blocks…, head) — the
+    /// order of the per-iteration RNG state walk.
+    pub fn module_sizes(&self) -> Vec<usize> {
+        let mut v = Vec::with_capacity(self.blocks.len() + 2);
+        v.push(self.embed.len());
+        for b in &self.blocks {
+            v.push(b.numel());
+        }
+        v.push(self.head.len());
+        v
+    }
+
+    /// Flatten everything to fp32 (test/parity comparisons).
+    pub fn to_flat_f32(&self) -> Vec<f32> {
+        let mut out = self.embed.clone();
+        for b in &self.blocks {
+            out.extend(b.to_f32());
+        }
+        out.extend(self.head.iter());
+        out
+    }
+
+    /// Total wire bytes of all block buckets (one direction of one step).
+    pub fn block_wire_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.wire_bytes() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "config": {"name": "t", "d_model": 4, "n_heads": 2, "n_layers": 2,
+                         "vocab": 8, "seq_len": 2, "batch": 1, "ffn_mult": 4,
+                         "total_params": 108},
+              "buckets": {
+                "embed": {"size": 40, "layout": [
+                    {"name": "tok_emb", "offset": 0, "shape": [8, 4]},
+                    {"name": "pos_emb", "offset": 32, "shape": [2, 4]}]},
+                "block": {"size": 14, "layout": [
+                    {"name": "ln1_w", "offset": 0, "shape": [4]},
+                    {"name": "ln1_b", "offset": 4, "shape": [4]},
+                    {"name": "wq", "offset": 8, "shape": [2, 3]}]},
+                "head": {"size": 40, "layout": [
+                    {"name": "lnf_w", "offset": 0, "shape": [4]},
+                    {"name": "lnf_b", "offset": 4, "shape": [4]},
+                    {"name": "lm_w", "offset": 8, "shape": [4, 8]}]}
+              },
+              "artifacts": {}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_respects_layout_semantics() {
+        let m = manifest();
+        let s = ParamStore::init(&m, 1, Codec::F32);
+        // ln weights = 1, biases = 0, matrices ~ N(0, 0.02).
+        let b0 = s.blocks[0].to_f32();
+        assert!(b0[0..4].iter().all(|&x| x == 1.0));
+        assert!(b0[4..8].iter().all(|&x| x == 0.0));
+        assert!(b0[8..14].iter().any(|&x| x != 0.0));
+        assert!(b0[8..14].iter().all(|&x| x.abs() < 0.2));
+        // Embedding is random.
+        assert!(s.embed.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let m = manifest();
+        let a = ParamStore::init(&m, 7, Codec::F32).to_flat_f32();
+        let b = ParamStore::init(&m, 7, Codec::F32).to_flat_f32();
+        let c = ParamStore::init(&m, 8, Codec::F32).to_flat_f32();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn module_sizes_order() {
+        let m = manifest();
+        let s = ParamStore::init(&m, 1, Codec::F32);
+        assert_eq!(s.module_sizes(), vec![40, 14, 14, 40]);
+    }
+
+    #[test]
+    fn compressed_store_wire_bytes() {
+        let m = manifest();
+        let s32 = ParamStore::init(&m, 1, Codec::F32);
+        let s16 = ParamStore::init(&m, 1, Codec::Bf16);
+        assert_eq!(s32.block_wire_bytes(), 2 * 14 * 4);
+        assert_eq!(s16.block_wire_bytes(), 2 * 14 * 2);
+    }
+}

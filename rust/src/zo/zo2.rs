@@ -1,0 +1,529 @@
+//! The ZO2 engine (paper Algorithms 2 + 3).
+//!
+//! Transformer blocks live in host memory (the "CPU DDR" tier), optionally
+//! compressed (AMP mode §5.5); the embedding and LM head stay device-
+//! resident (§5.2).  Each training step streams every block through the
+//! reusable device buffer (§5.3): upload (decode) → fused
+//! deferred-update + dual-forward (§5.4) → offload (encode the *updated*
+//! bucket back).  The projected gradient of step `j` is applied to each
+//! block at the start of step `j+1`, with the perturbation direction
+//! replayed from the RNG states recorded at step `j` (§5.1).
+//!
+//! Two run modes share identical numerics:
+//! * [`RunMode::Sequential`] — the naive Fig. 4a schedule (ablation
+//!   baseline): upload, compute, offload strictly in order.
+//! * [`RunMode::Overlapped`] — the Fig. 4b dynamic schedule: an upload
+//!   thread prefetches block `i+1` and an offload thread compresses block
+//!   `i−1` while the main thread computes block `i`; backpressure comes
+//!   from the slot ring (bounded channels), realising Algorithm 3's
+//!   dependency rules with real threads.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::memory::{DevicePool, HostBucket, TransferEngine, TransferModel};
+use crate::precision::Codec;
+use crate::rng::{RngState, RngStateManager};
+use crate::runtime::{lit_f32, lit_i32, lit_key, lit_scalar, lit_to_f32, lit_to_scalar, Runtime};
+use crate::telemetry::{Timeline, TraceEvent};
+use crate::zo::{key_of, module_states, ParamStore, StepStats, ZoConfig};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunMode {
+    Sequential,
+    Overlapped,
+}
+
+/// Engine options (the Table 4 / Table 5 switches).
+#[derive(Debug, Clone, Copy)]
+pub struct Zo2Options {
+    /// Wire/storage codec for offloaded blocks (AMP compression, §5.5).
+    pub wire: Codec,
+    pub run_mode: RunMode,
+    /// §5.3 reusable buffer; `false` allocates per upload (ablation).
+    pub reusable_mem: bool,
+    /// §5.4 fused deferred update; `false` runs a second
+    /// upload→update→offload round per block per step (ablation).
+    pub efficient_update: bool,
+    /// In-flight block slots (compute + prefetch + offload).
+    pub slots: usize,
+    /// Simulated device capacity (bytes); checked by the device pool.
+    pub device_capacity: u64,
+}
+
+impl Default for Zo2Options {
+    fn default() -> Self {
+        Self {
+            wire: Codec::F32,
+            run_mode: RunMode::Overlapped,
+            reusable_mem: true,
+            efficient_update: true,
+            slots: 3,
+            device_capacity: u64::MAX,
+        }
+    }
+}
+
+/// Deferred-update state carried between steps (paper Fig. 5b).
+struct Pending {
+    g: f32,
+    states: Vec<RngState>,
+}
+
+pub struct Zo2Engine {
+    rt: Runtime,
+    pub params: ParamStore,
+    cfg: ZoConfig,
+    pub opts: Zo2Options,
+    manager: RngStateManager,
+    step: u64,
+    pending: Option<Pending>,
+    pub device: Arc<DevicePool>,
+    pub transfers: Mutex<TransferEngine>,
+    pub transfer_model: TransferModel,
+    /// Timeline of the most recent step (real Fig. 4 data).
+    pub last_timeline: Timeline,
+}
+
+impl Zo2Engine {
+    pub fn new(rt: Runtime, cfg: ZoConfig, opts: Zo2Options) -> Result<Self> {
+        let params = ParamStore::init(rt.manifest(), cfg.seed, opts.wire);
+        let device = DevicePool::new(opts.device_capacity);
+        // Device residency: embedding + head (fp32) + the reusable slots.
+        device.alloc(((params.embed.len() + params.head.len()) * 4) as u64)?;
+        if opts.reusable_mem {
+            device.alloc((rt.manifest().block.size * opts.slots * 4) as u64)?;
+        }
+        Ok(Self {
+            rt,
+            params,
+            cfg,
+            opts,
+            manager: RngStateManager::new(cfg.seed),
+            step: 0,
+            pending: None,
+            device,
+            transfers: Mutex::new(TransferEngine::new()),
+            transfer_model: TransferModel::pcie4(),
+            last_timeline: Timeline::new(),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    fn scalars(&self, g_prev: f32) -> (xla::Literal, xla::Literal, xla::Literal) {
+        (lit_scalar(self.cfg.lr), lit_scalar(self.cfg.eps), lit_scalar(g_prev))
+    }
+
+    /// One Algorithm-2 iteration.
+    pub fn train_step(&mut self, ids: &[i32]) -> Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        let m = self.rt.manifest();
+        let (b, t) = (m.config.batch as i64, m.config.seq_len as i64);
+        anyhow::ensure!(ids.len() as i64 == b * t, "batch shape mismatch");
+
+        let sizes = self.params.module_sizes();
+        let states = module_states(self.cfg.seed, self.step, &sizes);
+        let _rng = self.manager.begin_iter(self.step);
+        for &st in &states {
+            self.manager.record_module_state(st);
+        }
+        // lrs: previous iteration's states + projected gradient (Alg. 2 l.4-9).
+        let (g_prev, prev_states) = match self.pending.take() {
+            Some(p) => {
+                let _ = self.manager.pop_last_states();
+                (p.g, p.states)
+            }
+            None => (0.0, states.clone()), // g=0 → update is an exact no-op
+        };
+
+        let (lr, eps, gl) = self.scalars(g_prev);
+        let ids_lit = lit_i32(ids, &[b, t])?;
+
+        // --- embedding (device-resident) ----------------------------------
+        let n_emb = self.params.embed.len();
+        let outs = self.rt.run(
+            "embed_step",
+            &[
+                lit_f32(&self.params.embed, &[n_emb as i64])?,
+                lit_key(key_of(prev_states[0]))?,
+                gl.clone(),
+                lr.clone(),
+                lit_key(key_of(states[0]))?,
+                eps.clone(),
+                ids_lit.clone(),
+            ],
+        )?;
+        let mut outs = outs.into_iter();
+        self.params.embed = lit_to_f32(&outs.next().unwrap())?;
+        let mut hp = outs.next().unwrap();
+        let mut hm = outs.next().unwrap();
+
+        // --- offloaded transformer blocks ---------------------------------
+        let n_blocks = self.params.n_blocks();
+        let mut timeline = Timeline::new();
+        let wall0 = std::time::Instant::now();
+
+        match self.opts.run_mode {
+            RunMode::Sequential => {
+                for i in 0..n_blocks {
+                    let n = self.params.blocks[i].numel();
+                    // Upload: decode host bucket into a device slot.
+                    let tu = wall0.elapsed().as_secs_f64();
+                    if !self.opts.reusable_mem {
+                        self.device.alloc((n * 4) as u64)?;
+                    }
+                    let mut slot = vec![0.0f32; n];
+                    self.params.blocks[i].decode_into(&mut slot);
+                    let wire = self.params.blocks[i].wire_bytes() as u64;
+                    self.transfers.lock().unwrap().record_h2d(wire, &self.transfer_model);
+                    timeline.push(TraceEvent {
+                        stream: "compute",
+                        label: format!("U b{i}"),
+                        start: tu,
+                        end: wall0.elapsed().as_secs_f64(),
+                    });
+
+                    // Compute: fused deferred-update + dual forward.
+                    let tc = wall0.elapsed().as_secs_f64();
+                    let outs = self.rt.run(
+                        "block_step",
+                        &[
+                            lit_f32(&slot, &[n as i64])?,
+                            lit_key(key_of(prev_states[1 + i]))?,
+                            gl.clone(),
+                            lr.clone(),
+                            lit_key(key_of(states[1 + i]))?,
+                            eps.clone(),
+                            hp,
+                            hm,
+                        ],
+                    )?;
+                    let mut it = outs.into_iter();
+                    let updated = lit_to_f32(&it.next().unwrap())?;
+                    hp = it.next().unwrap();
+                    hm = it.next().unwrap();
+                    timeline.push(TraceEvent {
+                        stream: "compute",
+                        label: format!("C b{i}"),
+                        start: tc,
+                        end: wall0.elapsed().as_secs_f64(),
+                    });
+
+                    // Offload: encode updated bucket back to the host tier.
+                    let to = wall0.elapsed().as_secs_f64();
+                    self.params.blocks[i].encode_from(&updated);
+                    self.transfers.lock().unwrap().record_d2h(wire, &self.transfer_model);
+                    if !self.opts.reusable_mem {
+                        self.device.free((n * 4) as u64);
+                    }
+                    timeline.push(TraceEvent {
+                        stream: "compute",
+                        label: format!("O b{i}"),
+                        start: to,
+                        end: wall0.elapsed().as_secs_f64(),
+                    });
+                }
+            }
+            RunMode::Overlapped => {
+                let (h2, m2) = self.run_blocks_overlapped(
+                    &mut timeline, wall0, &prev_states, &states, hp, hm, &gl, &lr, &eps,
+                )?;
+                hp = h2;
+                hm = m2;
+            }
+        }
+
+        // --- LM head (device-resident) ------------------------------------
+        let n_head = self.params.head.len();
+        let outs = self.rt.run(
+            "head_step",
+            &[
+                lit_f32(&self.params.head, &[n_head as i64])?,
+                lit_key(key_of(prev_states[1 + n_blocks]))?,
+                gl,
+                lr,
+                lit_key(key_of(states[1 + n_blocks]))?,
+                eps,
+                hp,
+                hm,
+                ids_lit,
+            ],
+        )?;
+        let mut it = outs.into_iter();
+        self.params.head = lit_to_f32(&it.next().unwrap())?;
+        let loss_plus = lit_to_scalar(&it.next().unwrap())?;
+        let loss_minus = lit_to_scalar(&it.next().unwrap())?;
+        let g = (loss_plus - loss_minus) / (2.0 * self.cfg.eps);
+
+        if self.opts.efficient_update {
+            // §5.4: defer to the next step's upload cycle.
+            self.pending = Some(Pending { g, states });
+        } else {
+            // Ablation (Fig. 5a): second upload→update→offload round now.
+            self.apply_update_round(g, &states)?;
+        }
+
+        self.last_timeline = timeline;
+        self.step += 1;
+        Ok(StepStats { step: self.step - 1, loss_plus, loss_minus, g, wall_s: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Overlapped block pipeline (Algorithm 3 with real threads).
+    #[allow(clippy::too_many_arguments)]
+    fn run_blocks_overlapped(
+        &mut self,
+        timeline: &mut Timeline,
+        wall0: std::time::Instant,
+        prev_states: &[RngState],
+        states: &[RngState],
+        hp0: xla::Literal,
+        hm0: xla::Literal,
+        gl: &xla::Literal,
+        lr: &xla::Literal,
+        eps: &xla::Literal,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let n_blocks = self.params.n_blocks();
+        let slots = self.opts.slots.max(1);
+        let numel = self.rt.manifest().block.size;
+        let reusable = self.opts.reusable_mem;
+        if !reusable {
+            // Per-upload allocations still respect capacity (worst case all
+            // in-flight slots live at once).
+            self.device.alloc((numel * slots * 4) as u64)?;
+            self.device.free((numel * slots * 4) as u64);
+        }
+
+        // Move the host buckets into the pipeline; they come back encoded.
+        let buckets: Vec<HostBucket> = std::mem::take(&mut self.params.blocks);
+        let wire_bytes: Vec<u64> = buckets.iter().map(|b| b.wire_bytes() as u64).collect();
+        let wire_bytes = &wire_bytes; // shared by both stream threads
+
+        struct Uploaded {
+            idx: usize,
+            bucket: HostBucket,
+            slot: Vec<f32>,
+            t_end: f64,
+        }
+        struct ToOffload {
+            idx: usize,
+            bucket: HostBucket,
+            updated: Vec<f32>,
+            t_ready: f64,
+        }
+
+        let (tx_up, rx_up) = mpsc::sync_channel::<Uploaded>(slots);
+        let (tx_off, rx_off) = mpsc::sync_channel::<ToOffload>(slots);
+
+        let trans = &self.transfers;
+        let tmodel = self.transfer_model;
+        let prev_states = prev_states.to_vec();
+        let cur_states = states.to_vec();
+        let events: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+
+        let (hp, hm, done_buckets) = std::thread::scope(|s| -> Result<_> {
+            // --- upload stream: prefetch ahead, bounded by the slot ring ---
+            s.spawn({
+                let events = &events;
+                move || {
+                    for (idx, bucket) in buckets.into_iter().enumerate() {
+                        let t_start = wall0.elapsed().as_secs_f64();
+                        let n = bucket.numel();
+                        let mut slot = vec![0.0f32; n];
+                        bucket.decode_into(&mut slot);
+                        trans.lock().unwrap().record_h2d(wire_bytes[idx], &tmodel);
+                        let t_end = wall0.elapsed().as_secs_f64();
+                        events.lock().unwrap().push(TraceEvent {
+                            stream: "upload",
+                            label: format!("U b{idx}"),
+                            start: t_start,
+                            end: t_end,
+                        });
+                        if tx_up.send(Uploaded { idx, bucket, slot, t_end }).is_err() {
+                            return; // main thread errored out
+                        }
+                    }
+                }
+            });
+
+            // --- offload stream: encode updated buckets back ---------------
+            let off_handle = s.spawn({
+                let events = &events;
+                move || -> Vec<(usize, HostBucket)> {
+                    let mut done = Vec::new();
+                    while let Ok(mut job) = rx_off.recv() {
+                        let t_start = wall0.elapsed().as_secs_f64().max(job.t_ready);
+                        job.bucket.encode_from(&job.updated);
+                        trans.lock().unwrap().record_d2h(wire_bytes[job.idx], &tmodel);
+                        events.lock().unwrap().push(TraceEvent {
+                            stream: "offload",
+                            label: format!("O b{}", job.idx),
+                            start: t_start,
+                            end: wall0.elapsed().as_secs_f64(),
+                        });
+                        done.push((job.idx, job.bucket));
+                    }
+                    done
+                }
+            });
+
+            // --- compute stream (this thread: PJRT is not Send) ------------
+            let mut hp = hp0;
+            let mut hm = hm0;
+            for _ in 0..n_blocks {
+                let up = rx_up.recv().map_err(|_| anyhow::anyhow!("upload stream died"))?;
+                let n = up.slot.len();
+                let tc = wall0.elapsed().as_secs_f64();
+                let outs = self.rt.run(
+                    "block_step",
+                    &[
+                        lit_f32(&up.slot, &[n as i64])?,
+                        lit_key(key_of(prev_states[1 + up.idx]))?,
+                        gl.clone(),
+                        lr.clone(),
+                        lit_key(key_of(cur_states[1 + up.idx]))?,
+                        eps.clone(),
+                        hp,
+                        hm,
+                    ],
+                )?;
+                let mut it = outs.into_iter();
+                let updated = lit_to_f32(&it.next().unwrap())?;
+                hp = it.next().unwrap();
+                hm = it.next().unwrap();
+                let t_end = wall0.elapsed().as_secs_f64();
+                events.lock().unwrap().push(TraceEvent {
+                    stream: "compute",
+                    label: format!("C b{}", up.idx),
+                    start: tc.max(up.t_end),
+                    end: t_end,
+                });
+                tx_off
+                    .send(ToOffload { idx: up.idx, bucket: up.bucket, updated, t_ready: t_end })
+                    .map_err(|_| anyhow::anyhow!("offload stream died"))?;
+            }
+            drop(tx_off);
+            let done = off_handle.join().map_err(|_| anyhow::anyhow!("offload thread panicked"))?;
+            Ok((hp, hm, done))
+        })?;
+
+        // Reassemble the host tier from the pipeline's outputs.
+        let mut slots_back: Vec<Option<HostBucket>> = (0..n_blocks).map(|_| None).collect();
+        for (idx, bucket) in done_buckets {
+            slots_back[idx] = Some(bucket);
+        }
+        self.params.blocks =
+            slots_back.into_iter().map(|o| o.expect("block lost in pipeline")).collect();
+        for e in events.into_inner().unwrap() {
+            timeline.push(e);
+        }
+        Ok((hp, hm))
+    }
+
+    /// Non-efficient-update ablation: standalone update round (Fig. 5a) —
+    /// every block crosses the interconnect a second time.
+    fn apply_update_round(&mut self, g: f32, states: &[RngState]) -> Result<()> {
+        let lr = lit_scalar(self.cfg.lr);
+        let gl = lit_scalar(g);
+
+        let n_emb = self.params.embed.len();
+        let out = self.rt.run(
+            "update_embed",
+            &[
+                lit_f32(&self.params.embed, &[n_emb as i64])?,
+                lit_key(key_of(states[0]))?,
+                lr.clone(),
+                gl.clone(),
+            ],
+        )?;
+        self.params.embed = lit_to_f32(&out[0])?;
+
+        for i in 0..self.params.n_blocks() {
+            let n = self.params.blocks[i].numel();
+            let decoded = self.params.blocks[i].to_f32();
+            let wire = self.params.blocks[i].wire_bytes() as u64;
+            self.transfers.lock().unwrap().record_h2d(wire, &self.transfer_model);
+            let out = self.rt.run(
+                "update_block",
+                &[
+                    lit_f32(&decoded, &[n as i64])?,
+                    lit_key(key_of(states[1 + i]))?,
+                    lr.clone(),
+                    gl.clone(),
+                ],
+            )?;
+            let updated = lit_to_f32(&out[0])?;
+            self.params.blocks[i].encode_from(&updated);
+            self.transfers.lock().unwrap().record_d2h(wire, &self.transfer_model);
+        }
+
+        let n_head = self.params.head.len();
+        let out = self.rt.run(
+            "update_head",
+            &[
+                lit_f32(&self.params.head, &[n_head as i64])?,
+                lit_key(key_of(states[1 + self.params.n_blocks()]))?,
+                lr,
+                gl,
+            ],
+        )?;
+        self.params.head = lit_to_f32(&out[0])?;
+        Ok(())
+    }
+
+    /// Apply any pending deferred update (the paper's final
+    /// `model.opt.zo_update(model)` — Fig. 6b).  Idempotent.
+    pub fn flush_updates(&mut self) -> Result<()> {
+        if let Some(p) = self.pending.take() {
+            self.apply_update_round_no_transfer_double_count(p.g, &p.states)?;
+        }
+        Ok(())
+    }
+
+    /// Flush helper: same math as `apply_update_round`, but its transfers are
+    /// the *regular* once-per-step cycle (not the doubled ablation traffic),
+    /// so only one h2d+d2h per block is recorded.
+    fn apply_update_round_no_transfer_double_count(
+        &mut self,
+        g: f32,
+        states: &[RngState],
+    ) -> Result<()> {
+        self.apply_update_round(g, states)
+    }
+
+    /// Unperturbed forward on *fully-updated* parameters (flushes pending).
+    pub fn eval(&mut self, ids: &[i32]) -> Result<(f32, Vec<f32>)> {
+        self.flush_updates()?;
+        let m = self.rt.manifest();
+        let (b, t) = (m.config.batch as i64, m.config.seq_len as i64);
+        let ids_lit = lit_i32(ids, &[b, t])?;
+        let out = self.rt.run(
+            "embed_fwd",
+            &[lit_f32(&self.params.embed, &[self.params.embed.len() as i64])?, ids_lit.clone()],
+        )?;
+        let mut h = out.into_iter().next().unwrap();
+        for blk in &self.params.blocks {
+            let out = self
+                .rt
+                .run("block_fwd", &[lit_f32(&blk.to_f32(), &[blk.numel() as i64])?, h])?;
+            h = out.into_iter().next().unwrap();
+        }
+        let out = self.rt.run(
+            "head_eval",
+            &[lit_f32(&self.params.head, &[self.params.head.len() as i64])?, h, ids_lit],
+        )?;
+        let mut it = out.into_iter();
+        let loss = lit_to_scalar(&it.next().unwrap())?;
+        let logits = lit_to_f32(&it.next().unwrap())?;
+        Ok((loss, logits))
+    }
+}
+

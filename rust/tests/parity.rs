@@ -1,0 +1,133 @@
+//! The paper's central correctness claim (§5.1, Table 3): ZO2 is
+//! **bit-identical** to MeZO — offloading, deferred updates, compression
+//! scheduling and thread overlap change *when* and *where* math happens,
+//! never *what* is computed.
+//!
+//! Requires `make artifacts` (tiny config).
+
+use zo2::precision::Codec;
+use zo2::runtime::Runtime;
+use zo2::zo::{MezoEngine, RunMode, Zo2Engine, Zo2Options, ZoConfig};
+
+const STEPS: usize = 6;
+
+fn batches(rt: &Runtime, seed: u64) -> Vec<Vec<i32>> {
+    let m = rt.manifest();
+    let mut corpus = zo2::data::SyntheticCorpus::new(m.config.vocab, seed);
+    (0..STEPS).map(|_| corpus.sample(m.config.batch, m.config.seq_len).ids).collect()
+}
+
+fn cfg() -> ZoConfig {
+    ZoConfig { lr: 1e-3, eps: 1e-3, seed: 1234 }
+}
+
+fn run_mezo() -> (Vec<(f32, f32)>, Vec<f32>) {
+    let rt = Runtime::load_config("tiny").unwrap();
+    let data = batches(&rt, 99);
+    let mut e = MezoEngine::new(rt, cfg()).unwrap();
+    let mut losses = Vec::new();
+    for ids in &data {
+        let s = e.train_step(ids).unwrap();
+        losses.push((s.loss_plus, s.loss_minus));
+    }
+    (losses, e.params.to_flat_f32())
+}
+
+fn run_zo2(opts: Zo2Options) -> (Vec<(f32, f32)>, Vec<f32>) {
+    let rt = Runtime::load_config("tiny").unwrap();
+    let data = batches(&rt, 99);
+    let mut e = Zo2Engine::new(rt, cfg(), opts).unwrap();
+    let mut losses = Vec::new();
+    for ids in &data {
+        let s = e.train_step(ids).unwrap();
+        losses.push((s.loss_plus, s.loss_minus));
+    }
+    e.flush_updates().unwrap(); // the paper's final zo_update (Fig. 6b)
+    (losses, e.params.to_flat_f32())
+}
+
+fn assert_bit_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let diffs = a.iter().zip(b).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+    assert_eq!(diffs, 0, "{what}: {diffs}/{} values differ bitwise", a.len());
+}
+
+#[test]
+fn zo2_sequential_is_bit_identical_to_mezo() {
+    let (ml, mp) = run_mezo();
+    let (zl, zp) = run_zo2(Zo2Options { run_mode: RunMode::Sequential, ..Default::default() });
+    for (i, (a, b)) in ml.iter().zip(&zl).enumerate() {
+        assert_eq!(a.0.to_bits(), b.0.to_bits(), "step {i} loss+");
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "step {i} loss-");
+    }
+    assert_bit_equal(&mp, &zp, "final parameters");
+}
+
+#[test]
+fn zo2_overlapped_is_bit_identical_to_mezo() {
+    let (ml, mp) = run_mezo();
+    let (zl, zp) = run_zo2(Zo2Options { run_mode: RunMode::Overlapped, ..Default::default() });
+    for (i, (a, b)) in ml.iter().zip(&zl).enumerate() {
+        assert_eq!(a.0.to_bits(), b.0.to_bits(), "step {i} loss+ (threads must not change math)");
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "step {i} loss-");
+    }
+    assert_bit_equal(&mp, &zp, "final parameters (overlapped)");
+}
+
+#[test]
+fn non_efficient_update_ablation_same_numerics() {
+    // Fig. 5a ordering (update right after the step) is mathematically the
+    // same trajectory — only the transfer schedule differs.
+    let (ml, mp) = run_mezo();
+    let (zl, zp) = run_zo2(Zo2Options {
+        efficient_update: false,
+        run_mode: RunMode::Sequential,
+        ..Default::default()
+    });
+    for (a, b) in ml.iter().zip(&zl) {
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+    }
+    assert_bit_equal(&mp, &zp, "final parameters (non-efficient update)");
+}
+
+#[test]
+fn amp_compression_stays_in_format_error_band() {
+    // AMP low-bit storage (§5.5) is *not* bit-exact by design; it must stay
+    // within the format's quantisation band of the fp32 run.
+    let (_, mp) = run_mezo();
+    let (_, zp) = run_zo2(Zo2Options {
+        wire: Codec::Bf16,
+        run_mode: RunMode::Sequential,
+        ..Default::default()
+    });
+    assert_eq!(mp.len(), zp.len());
+    // Individual elements can accumulate multi-ulp drift over repeated
+    // quantize→train→quantize cycles; the aggregate (relative L2) must stay
+    // within a small multiple of bf16's ~0.4% step.
+    let (mut d2, mut n2) = (0f64, 0f64);
+    for (a, b) in mp.iter().zip(&zp) {
+        d2 += ((a - b) as f64).powi(2);
+        n2 += (*a as f64).powi(2);
+    }
+    let rel_l2 = (d2 / n2).sqrt();
+    assert!(rel_l2 < 0.02, "bf16 storage rel-L2 drift {rel_l2} beyond band");
+    assert!(rel_l2 > 0.0, "bf16 run should differ from fp32 somewhere");
+}
+
+#[test]
+fn deferred_update_really_is_deferred() {
+    // Before the flush, ZO2's parameters lag MeZO's by exactly the last
+    // gradient application; after the flush they coincide.
+    let rt = Runtime::load_config("tiny").unwrap();
+    let data = batches(&rt, 99);
+    let mut e = Zo2Engine::new(rt, cfg(), Zo2Options::default()).unwrap();
+    for ids in &data {
+        e.train_step(ids).unwrap();
+    }
+    let before = e.params.to_flat_f32();
+    e.flush_updates().unwrap();
+    let after = e.params.to_flat_f32();
+    assert_ne!(before, after, "flush must apply the pending g_T");
+    let (_, mezo_final) = run_mezo();
+    assert_bit_equal(&after, &mezo_final, "post-flush parameters");
+}

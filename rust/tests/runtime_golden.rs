@@ -1,0 +1,90 @@
+//! Runtime↔python golden test: replay the input/output vectors dumped by
+//! `compile/aot.py --goldens` through the rust PJRT path and require
+//! bit-exact agreement.  This pins the whole interchange: HLO text parse,
+//! compile, literal marshalling, tuple decomposition.
+
+use std::path::Path;
+
+use zo2::runtime::{lit_f32, lit_i32, lit_scalar, Runtime};
+use zo2::util::json::Json;
+
+fn read_f32(path: &Path) -> Vec<f32> {
+    let bytes = std::fs::read(path).unwrap();
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn read_i32(path: &Path) -> Vec<i32> {
+    let bytes = std::fs::read(path).unwrap();
+    bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn read_u32(path: &Path) -> Vec<u32> {
+    let bytes = std::fs::read(path).unwrap();
+    bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+#[test]
+fn golden_replay_bit_exact() {
+    let dir = zo2::artifacts_dir().join("tiny");
+    let gdir = dir.join("golden");
+    if !gdir.is_dir() {
+        panic!("run `make artifacts` first (missing {})", gdir.display());
+    }
+    let rt = Runtime::load(&dir).unwrap();
+    rt.manifest().validate().unwrap();
+
+    let index = Json::parse(&std::fs::read_to_string(gdir.join("index.json")).unwrap()).unwrap();
+    let cases = index.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 5, "expected several golden cases");
+
+    for case in cases {
+        let exe = case.get("exe").unwrap().as_str().unwrap();
+        let mut inputs = Vec::new();
+        for meta in case.get("inputs").unwrap().as_arr().unwrap() {
+            let file = gdir.join(meta.get("file").unwrap().as_str().unwrap());
+            let shape: Vec<i64> = meta
+                .get("shape").unwrap().as_arr().unwrap()
+                .iter().map(|s| s.as_usize().unwrap() as i64).collect();
+            let dtype = meta.get("dtype").unwrap().as_str().unwrap();
+            let lit = match (dtype, shape.is_empty()) {
+                ("f32", true) => lit_scalar(read_f32(&file)[0]),
+                ("f32", false) => lit_f32(&read_f32(&file), &shape).unwrap(),
+                ("i32", false) => lit_i32(&read_i32(&file), &shape).unwrap(),
+                ("u32", false) => {
+                    let v = read_u32(&file);
+                    assert_eq!(v.len(), 2, "keys are u32[2]");
+                    zo2::runtime::lit_key([v[0], v[1]]).unwrap()
+                }
+                _ => panic!("unsupported golden dtype {dtype}"),
+            };
+            inputs.push(lit);
+        }
+        let outs = rt.run(exe, &inputs).unwrap();
+        let metas = case.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outs.len(), metas.len(), "{exe}: output arity");
+        for (i, (got, meta)) in outs.iter().zip(metas).enumerate() {
+            let want = read_f32(&gdir.join(meta.get("file").unwrap().as_str().unwrap()));
+            let got = got.to_vec::<f32>().unwrap();
+            assert_eq!(got.len(), want.len(), "{exe}: output length");
+            // The goldens were produced by jaxlib's XLA (>= 0.8); the rust
+            // side compiles the same HLO with xla_extension 0.5.1.  Different
+            // XLA versions fuse/reorder float reductions differently, so the
+            // comparison is tolerance-based (tight), not bit-exact.  The
+            // bit-exactness claims of the paper (MeZO == ZO2) are *within*
+            // the rust runtime and covered by tests/parity.rs.
+            let mut max_abs = 0f32;
+            let mut max_rel = 0f32;
+            for (a, b) in got.iter().zip(&want) {
+                let d = (a - b).abs();
+                max_abs = max_abs.max(d);
+                if b.abs() > 1e-3 {
+                    max_rel = max_rel.max(d / b.abs());
+                }
+            }
+            assert!(
+                max_abs < 1e-3 && max_rel < 1e-3,
+                "{exe} out{i}: max_abs={max_abs:e} max_rel={max_rel:e}"
+            );
+        }
+    }
+}

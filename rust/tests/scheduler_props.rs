@@ -1,0 +1,185 @@
+//! Property tests over the dynamic scheduler (no proptest in the offline
+//! build — randomised cases come from the crate's own deterministic RNG).
+//!
+//! Invariants checked across random (n_blocks, steps, durations, policies):
+//!  1. dependency safety: no task starts before any dependency ends;
+//!  2. stream exclusivity: tasks on one stream never overlap;
+//!  3. overlap dominance: the dynamic schedule is never slower than naive;
+//!  4. critical-path lower bounds hold;
+//!  5. slot safety: at most `slots` blocks in flight at any instant.
+
+use zo2::rng::GaussianRng;
+use zo2::sched::{build_plan, simulate, CostProvider, Module, Policy, Stream, TaskKind};
+
+struct RandCosts {
+    up: f64,
+    off: f64,
+    comp: f64,
+    upd: f64,
+}
+
+impl CostProvider for RandCosts {
+    fn upload_s(&self) -> f64 {
+        self.up
+    }
+    fn offload_s(&self) -> f64 {
+        self.off
+    }
+    fn compute_s(&self, _m: Module) -> f64 {
+        self.comp
+    }
+    fn update_s(&self) -> f64 {
+        self.upd
+    }
+}
+
+fn rand_case(rng: &mut GaussianRng) -> (usize, usize, RandCosts, Policy) {
+    let n_blocks = 1 + rng.next_below(12) as usize;
+    let steps = 1 + rng.next_below(4) as usize;
+    let costs = RandCosts {
+        up: 0.01 + rng.next_uniform() * 2.0,
+        off: 0.01 + rng.next_uniform() * 2.0,
+        comp: 0.01 + rng.next_uniform() * 4.0,
+        upd: 0.01 + rng.next_uniform() * 0.5,
+    };
+    let policy = Policy {
+        overlap: true,
+        reusable_mem: rng.next_below(2) == 0,
+        efficient_update: rng.next_below(2) == 0,
+        slots: 1 + rng.next_below(4) as usize,
+    };
+    (n_blocks, steps, costs, policy)
+}
+
+#[test]
+fn dependencies_and_stream_exclusivity_hold() {
+    let mut rng = GaussianRng::new(2024, 0);
+    for case in 0..60 {
+        let (n, steps, costs, policy) = rand_case(&mut rng);
+        let plan = build_plan(n, steps, policy);
+        let (sched, _) = simulate(&plan, &costs, policy);
+
+        for t in &plan {
+            for &d in &t.deps {
+                assert!(
+                    sched.start[t.id] >= sched.end[d] - 1e-12,
+                    "case {case}: task {} starts before dep {}",
+                    t.id,
+                    d
+                );
+            }
+        }
+        for s in [Stream::Upload, Stream::Compute, Stream::Offload] {
+            let mut ivals: Vec<(f64, f64)> = plan
+                .iter()
+                .filter(|t| t.stream == s)
+                .map(|t| (sched.start[t.id], sched.end[t.id]))
+                .collect();
+            ivals.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in ivals.windows(2) {
+                assert!(w[1].0 >= w[0].1 - 1e-12, "case {case}: stream {s:?} overlap");
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_never_loses_to_naive() {
+    let mut rng = GaussianRng::new(7, 1);
+    for case in 0..40 {
+        let (n, steps, costs, _) = rand_case(&mut rng);
+        let dynamic = Policy::default();
+        let naive = Policy::naive();
+        let (sd, _) = simulate(&build_plan(n, steps, dynamic), &costs, dynamic);
+        let (sn, _) = simulate(&build_plan(n, steps, naive), &costs, naive);
+        assert!(
+            sd.makespan <= sn.makespan + 1e-9,
+            "case {case}: dynamic {} > naive {}",
+            sd.makespan,
+            sn.makespan
+        );
+    }
+}
+
+#[test]
+fn critical_path_lower_bounds() {
+    let mut rng = GaussianRng::new(99, 2);
+    for _ in 0..40 {
+        let (n, steps, costs, policy) = rand_case(&mut rng);
+        let plan = build_plan(n, steps, policy);
+        let (sched, _) = simulate(&plan, &costs, policy);
+        // Compute stream total is a lower bound (it is one FIFO processor).
+        let compute_total: f64 = plan
+            .iter()
+            .filter(|t| t.stream == Stream::Compute)
+            .map(|t| match t.kind {
+                TaskKind::Compute => costs.compute_s(t.module),
+                TaskKind::Update => costs.update_s(),
+                TaskKind::Upload => costs.upload_s() + if policy.reusable_mem { 0.0 } else { costs.malloc_s() },
+                TaskKind::Offload => costs.offload_s(),
+            })
+            .sum();
+        assert!(sched.makespan >= compute_total - 1e-9);
+        // Per-block chain U→C→O is a lower bound too.
+        let chain = costs.upload_s() + costs.compute_s(Module::Block(0)) + costs.offload_s();
+        assert!(sched.makespan >= chain - 1e-9);
+    }
+}
+
+#[test]
+fn slot_ring_bounds_in_flight_blocks() {
+    let mut rng = GaussianRng::new(5, 3);
+    for _ in 0..30 {
+        let (n, steps, costs, policy) = rand_case(&mut rng);
+        let plan = build_plan(n, steps, policy);
+        let (sched, _) = simulate(&plan, &costs, policy);
+        // A block occupies a slot from U start to O end.  Count max overlap
+        // of those intervals; it must never exceed `slots`.
+        let mut intervals: Vec<(f64, f64)> = Vec::new();
+        for t in &plan {
+            if t.kind == TaskKind::Upload {
+                if let Module::Block(i) = t.module {
+                    // find the matching offload of the same round
+                    let off = plan.iter().find(|o| {
+                        o.kind == TaskKind::Offload
+                            && o.module == Module::Block(i)
+                            && o.step == t.step
+                            && o.id > t.id
+                    });
+                    if let Some(o) = off {
+                        intervals.push((sched.start[t.id], sched.end[o.id]));
+                    }
+                }
+            }
+        }
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for (a, b) in &intervals {
+            events.push((*a, 1));
+            events.push((*b, -1));
+        }
+        events.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        let mut cur = 0;
+        let mut peak = 0;
+        for (_, d) in events {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        assert!(
+            peak as usize <= policy.slots.max(1),
+            "{peak} blocks in flight with {} slots",
+            policy.slots
+        );
+    }
+}
+
+#[test]
+fn efficient_update_halves_interconnect_busy_time() {
+    let costs = RandCosts { up: 1.0, off: 1.0, comp: 0.5, upd: 0.05 };
+    let base = Policy::default();
+    let noeff = Policy { efficient_update: false, ..base };
+    let (s1, _) = simulate(&build_plan(8, 2, base), &costs, base);
+    let (s2, _) = simulate(&build_plan(8, 2, noeff), &costs, noeff);
+    let b1 = s1.busy.get("upload").unwrap() + s1.busy.get("offload").unwrap();
+    let b2 = s2.busy.get("upload").unwrap() + s2.busy.get("offload").unwrap();
+    assert!((b2 / b1 - 2.0).abs() < 0.2, "transfer busy should ~double: {b1} -> {b2}");
+}
