@@ -1,0 +1,89 @@
+//! Beyond the paper's headline: **OPT-175B on a 64 GB-DRAM workstation.**
+//!
+//!     cargo run --release --example opt175b_64gb_dram
+//!
+//! The paper's two-tier system assumes the CPU side holds every master copy
+//! (~350 GB for fp16, ~700 GB for fp32) — a DGX-class assumption.  The
+//! three-tier extension spills the overflow to NVMe and streams it through
+//! a DRAM staging window, so the same 18 GB-GPU scenario runs on a
+//! workstation.  This example sweeps the DRAM budget and shows throughput
+//! recovering from disk-bound to two-tier parity as the budget grows,
+//! using the discrete-event simulator over the real five-stream dependency
+//! machinery (R→U→C→O→W) with the calibrated A100 + PCIe4-NVMe cost model.
+
+use zo2::costmodel::{
+    plan_three_tier, two_tier_dram_bytes, ComputeMode, Hardware, MemoryBudget, SimCost, Workload,
+};
+use zo2::model::opt_by_name;
+use zo2::precision::Codec;
+use zo2::sched::{build_plan, simulate, Policy};
+use zo2::util::fmt_mb;
+
+const SIM_STEPS: usize = 3;
+
+fn main() {
+    let hw = Hardware::a100_pcie4();
+    let shape = opt_by_name("OPT-175B").unwrap();
+    let wl = Workload {
+        shape: shape.clone(),
+        batch: 1,
+        seq: 2048,
+        wire: Codec::Fp16,
+        compute: ComputeMode::Fp16,
+    };
+    let costs = SimCost::new(&hw, &wl);
+    println!(
+        "OPT-175B fp16: {} layers x {} MB buckets = {} MB of master copies \
+         (two-tier DDR requirement)",
+        shape.n_layers,
+        fmt_mb(wl.block_wire_bytes()),
+        fmt_mb(two_tier_dram_bytes(&wl))
+    );
+    println!(
+        "box: 18 GB HBM, NVMe read {:.1} / write {:.1} GB/s, DRAM swept below\n",
+        hw.nvme_read.bytes_per_s / 1e9,
+        hw.nvme_write.bytes_per_s / 1e9
+    );
+
+    // Two-tier reference (needs the full DDR footprint).
+    let two = Policy::default();
+    let (s2, _) = simulate(&build_plan(shape.n_layers, SIM_STEPS, two), &costs, two);
+    let tokens = (wl.batch * wl.seq) as f64;
+    let t2 = tokens / s2.steady_step_s;
+
+    println!(
+        "{:>9} {:>9} {:>9} {:>11} {:>11} {:>11} {:>10} {:>9} {:>14}",
+        "DRAM", "resident", "spilled", "HBM peak", "DDR peak", "NVMe peak", "tokens/s",
+        "vs 2tier", "bottleneck"
+    );
+    for gb in [16u64, 32, 64, 96, 128, 192, 256, 384, 512] {
+        let budget = MemoryBudget { hbm: 18 << 30, dram: gb << 30, nvme: 2 << 40 };
+        let plan = plan_three_tier(&wl, &budget, 3, 4, 2, &hw);
+        let policy = plan.policy();
+        let (s, _) = simulate(&build_plan(shape.n_layers, SIM_STEPS, policy), &costs, policy);
+        let tps = tokens / s.steady_step_s;
+        let fits = if budget.fits(&plan.peaks) { "" } else { "  OVER BUDGET" };
+        println!(
+            "{:>6} GB {:>9} {:>9} {:>8} MB {:>8} MB {:>8} MB {:>10.1} {:>8.2}x {:>14}{}",
+            gb,
+            plan.resident_blocks,
+            plan.spilled_blocks,
+            fmt_mb(plan.peaks.hbm),
+            fmt_mb(plan.peaks.dram),
+            fmt_mb(plan.peaks.nvme),
+            tps,
+            tps / t2,
+            s.bottleneck(),
+            fits
+        );
+    }
+    println!(
+        "\ntwo-tier reference: {:.1} tokens/s ({}; DDR {} MB — does not fit below ~350 GB)",
+        t2,
+        s2.bottleneck(),
+        fmt_mb(two_tier_dram_bytes(&wl))
+    );
+    println!("(64 GB row = the paper's 18 GB-GPU headline on a workstation, paid for in NVMe");
+    println!(" bandwidth; the ratio column shows the overhead of the disk tier vanishing as");
+    println!(" DRAM grows and the spill set empties.)");
+}

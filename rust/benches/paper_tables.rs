@@ -10,14 +10,18 @@
 //! Absolute numbers are not expected to match the authors' testbed; the
 //! *shapes* (who wins, by what factor, where crossovers fall) are.
 
+use std::collections::BTreeMap;
+
 use zo2::baselines::{comm_ops_per_block, first_order_comm_per_step, zo2_comm_per_step};
 use zo2::costmodel::{
-    gpu_memory_bytes, mezo_step_s, ComputeMode, Hardware, SimCost, Strategy, Workload,
+    gpu_memory_bytes, mezo_step_s, plan_three_tier, two_tier_dram_bytes, ComputeMode, Hardware,
+    MemoryBudget, SimCost, Strategy, Workload,
 };
 use zo2::model::{opt_by_name, opt_family, ModelShape};
 use zo2::precision::Codec;
 use zo2::sched::{build_plan, simulate, Policy};
 use zo2::util::fmt_mb;
+use zo2::util::json::Json;
 
 const SIM_STEPS: usize = 4;
 
@@ -343,6 +347,67 @@ fn ablations(hw: &Hardware) {
     );
 }
 
+/// Beyond the paper: the disk tier's throughput/DRAM trade.  Sweeps the
+/// DRAM budget at fixed model size (OPT-175B fp16, 18 GB HBM) and writes
+/// `BENCH_disk_tier.json` so the perf trajectory of the three-tier
+/// subsystem is tracked across PRs.
+fn table_disk_tier(hw: &Hardware) {
+    println!("\n=== Disk tier: OPT-175B fp16 throughput vs DRAM budget (18 GB HBM) ===");
+    let shape = opt_by_name("OPT-175B").unwrap();
+    let w = wl(&shape, 1, 2048, Codec::Fp16, ComputeMode::Fp16);
+    let costs = SimCost::new(hw, &w);
+    let tokens = 2048.0;
+
+    let two = Policy::default();
+    let (s2, _) = simulate(&build_plan(shape.n_layers, SIM_STEPS, two), &costs, two);
+    let base_tps = tokens / s2.steady_step_s;
+
+    println!(
+        "{:>9} {:>9} {:>10} {:>9} {:>14}  (two-tier: {base_tps:.1} tokens/s, DDR {} MB)",
+        "DRAM", "spilled", "tokens/s", "vs 2tier", "bottleneck",
+        fmt_mb(two_tier_dram_bytes(&w))
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for gb in [16u64, 32, 64, 128, 256, 512] {
+        let budget = MemoryBudget { hbm: 18 << 30, dram: gb << 30, nvme: 2 << 40 };
+        let plan = plan_three_tier(&w, &budget, 3, 4, 2, hw);
+        let policy = plan.policy();
+        let (s, _) = simulate(&build_plan(shape.n_layers, SIM_STEPS, policy), &costs, policy);
+        let tps = tokens / s.steady_step_s;
+        println!(
+            "{:>6} GB {:>9} {:>10.1} {:>8.2}x {:>14}",
+            gb,
+            plan.spilled_blocks,
+            tps,
+            tps / base_tps,
+            s.bottleneck()
+        );
+        let mut row = BTreeMap::new();
+        row.insert("dram_gb".to_string(), Json::Num(gb as f64));
+        row.insert("spilled_blocks".to_string(), Json::Num(plan.spilled_blocks as f64));
+        row.insert("resident_blocks".to_string(), Json::Num(plan.resident_blocks as f64));
+        row.insert("tokens_per_s".to_string(), Json::Num(tps));
+        row.insert("ratio_vs_two_tier".to_string(), Json::Num(tps / base_tps));
+        row.insert("bottleneck".to_string(), Json::Str(s.bottleneck().to_string()));
+        row.insert("hbm_peak_bytes".to_string(), Json::Num(plan.peaks.hbm as f64));
+        row.insert("dram_peak_bytes".to_string(), Json::Num(plan.peaks.dram as f64));
+        row.insert("nvme_peak_bytes".to_string(), Json::Num(plan.peaks.nvme as f64));
+        rows.push(Json::Obj(row));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("disk_tier".to_string()));
+    doc.insert("model".to_string(), Json::Str("OPT-175B".to_string()));
+    doc.insert("wire".to_string(), Json::Str("fp16".to_string()));
+    doc.insert("hbm_gb".to_string(), Json::Num(18.0));
+    doc.insert("two_tier_tokens_per_s".to_string(), Json::Num(base_tps));
+    doc.insert("rows".to_string(), Json::Arr(rows));
+    let path = "BENCH_disk_tier.json";
+    match std::fs::write(path, Json::Obj(doc).to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let filter = std::env::args().nth(1).unwrap_or_default();
     let hw = Hardware::a100_pcie4();
@@ -375,6 +440,9 @@ fn main() {
     }
     if run("ablations") {
         ablations(&hw);
+    }
+    if run("disk_tier") {
+        table_disk_tier(&hw);
     }
     println!("\n(Table 3 is regenerated by `cargo run --release --example accuracy_parity`");
     println!(" and asserted bit-exactly by `cargo test --test parity`.)");

@@ -8,7 +8,7 @@ use crate::data::SyntheticCorpus;
 use crate::precision::Codec;
 use crate::runtime::Runtime;
 use crate::telemetry::Series;
-use crate::zo::{MezoEngine, RunMode, StepStats, Zo2Engine, Zo2Options, ZoConfig};
+use crate::zo::{MezoEngine, RunMode, StepStats, Tiering, Zo2Engine, Zo2Options, ZoConfig};
 
 /// Which engine backs the trainer.
 pub enum Engine {
@@ -56,6 +56,14 @@ pub struct TrainConfig {
     pub wire: Codec,
     pub run_mode: RunMode,
     pub log_every: usize,
+    /// Two-tier (all blocks in DDR) or three-tier (spill below the DRAM
+    /// budget to the NVMe pool).
+    pub tiering: Tiering,
+    /// DRAM budget in bytes for block master copies (three-tier only;
+    /// `None` = keep everything resident even in three-tier mode).
+    pub dram_budget_bytes: Option<u64>,
+    /// Staging-window slots for spilled buckets.
+    pub dram_slots: usize,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -74,6 +82,9 @@ impl Default for TrainConfig {
             wire: Codec::F32,
             run_mode: RunMode::Overlapped,
             log_every: 10,
+            tiering: Tiering::TwoTier,
+            dram_budget_bytes: None,
+            dram_slots: 4,
         }
     }
 }
@@ -85,6 +96,10 @@ pub struct TrainReport {
     pub final_eval_loss: f32,
     pub device_peak_bytes: u64,
     pub transfer_bytes: u64,
+    /// NVMe traffic of the disk tier (0 in two-tier mode).
+    pub disk_bytes: u64,
+    /// Blocks whose master copy lived on the disk tier.
+    pub spilled_blocks: usize,
 }
 
 /// Build an engine for `cfg`, loading the AOT artifacts.
@@ -94,11 +109,40 @@ pub fn build_engine(cfg: &TrainConfig) -> Result<Engine> {
     rt.compile_all()?;
     Ok(match cfg.engine {
         EngineKind::Mezo => Engine::Mezo(MezoEngine::new(rt, cfg.zo)?),
-        EngineKind::Zo2 => Engine::Zo2(Zo2Engine::new(
-            rt,
-            cfg.zo,
-            Zo2Options { wire: cfg.wire, run_mode: cfg.run_mode, ..Zo2Options::default() },
-        )?),
+        EngineKind::Zo2 => {
+            // Convert the DRAM byte budget into a resident-block count via
+            // the same placement rule the analytic planner uses.
+            let dram_resident_blocks = match (cfg.tiering, cfg.dram_budget_bytes) {
+                (Tiering::ThreeTier, Some(budget)) => {
+                    let n = rt.manifest().config.n_layers;
+                    let wire = (rt.manifest().block.size * cfg.wire.bytes_per_el()) as u64;
+                    let resident = crate::costmodel::resident_blocks_for_budget(
+                        n,
+                        wire,
+                        budget,
+                        cfg.dram_slots,
+                    );
+                    if resident >= n {
+                        usize::MAX
+                    } else {
+                        resident
+                    }
+                }
+                _ => usize::MAX,
+            };
+            Engine::Zo2(Zo2Engine::new(
+                rt,
+                cfg.zo,
+                Zo2Options {
+                    wire: cfg.wire,
+                    run_mode: cfg.run_mode,
+                    tiering: cfg.tiering,
+                    dram_slots: cfg.dram_slots,
+                    dram_resident_blocks,
+                    ..Zo2Options::default()
+                },
+            )?)
+        }
     })
 }
 
@@ -136,9 +180,14 @@ pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
     let eval_batch = corpus.sample(b, t);
     let (final_eval_loss, _) = engine.eval(&eval_batch.ids)?;
 
-    let (device_peak_bytes, transfer_bytes) = match &engine {
-        Engine::Zo2(e) => (e.device.peak(), e.transfers.lock().unwrap().total_bytes()),
-        Engine::Mezo(e) => (e.device.peak(), 0),
+    let (device_peak_bytes, transfer_bytes, disk_bytes, spilled_blocks) = match &engine {
+        Engine::Zo2(e) => (
+            e.device.peak(),
+            e.transfers.lock().unwrap().total_bytes(),
+            e.disk_stats().map_or(0, |(r, w)| r.bytes + w.bytes),
+            e.spilled_blocks(),
+        ),
+        Engine::Mezo(e) => (e.device.peak(), 0, 0, 0),
     };
 
     Ok(TrainReport {
@@ -147,5 +196,7 @@ pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
         final_eval_loss,
         device_peak_bytes,
         transfer_bytes,
+        disk_bytes,
+        spilled_blocks,
     })
 }

@@ -12,18 +12,26 @@
 //! * [`rng`] — counter-based Gaussian streams + the RNG state manager
 //!   (paper §5.1, Algorithm 2) that makes block-disaggregated ZO training
 //!   bit-identical to monolithic MeZO.
-//! * [`memory`] — two-tier (host "DDR" / device "HBM") pools, communication
-//!   buckets, the reusable block buffer (§5.3) and the transfer engine.
-//! * [`sched`] — the three-stream dynamic scheduler (§5.2, Algorithm 3),
-//!   its naive global-sync counterpart (ablation), and a discrete-event
+//! * [`memory`] — the tiered memory substrate: host "DDR" and device "HBM"
+//!   pools, communication buckets, the reusable block buffer (§5.3), the
+//!   transfer engine, and the disk tier ([`memory::disk`]) — file-backed
+//!   NVMe buckets below DDR with an accounted DRAM staging window.
+//! * [`sched`] — the dynamic scheduler (§5.2, Algorithm 3): three streams
+//!   in two-tier mode, five (± DiskRead/DiskWrite) in three-tier mode, its
+//!   naive global-sync counterpart (ablation), and a discrete-event
 //!   simulator sharing one dependency-rule core.
-//! * [`precision`] — bf16 / fp16 / fp8(e4m3) transfer codecs (AMP, §5.5).
+//! * [`precision`] — bf16 / fp16 / fp8(e4m3) transfer codecs (AMP, §5.5);
+//!   the disk tier stores spilled buckets in the same wire format.
 //! * [`zo`] — ZO-SGD math, the MeZO baseline engine (Algorithm 1) and the
-//!   ZO2 engine (Algorithms 2 + 3, deferred updates §5.4).
+//!   ZO2 engine (Algorithms 2 + 3, deferred updates §5.4) with
+//!   [`sched::Tiering`] selecting two- or three-tier parameter placement
+//!   (bit-identical trajectories either way).
 //! * [`baselines`] — first-order (SGD / AdamW) offloading cost + memory
 //!   models for Figure 1 / §4.1 comparisons.
 //! * [`costmodel`] — analytic compute/transfer cost model + calibration
-//!   used by the discrete-event simulator for paper-scale (OPT-175B) runs.
+//!   used by the discrete-event simulator for paper-scale (OPT-175B) runs,
+//!   including NVMe bandwidths and the [`costmodel::MemoryBudget`] /
+//!   [`costmodel::plan_three_tier`] tier placement.
 //! * [`runtime`] — PJRT client, artifact manifests, executable cache.
 //! * [`coordinator`] — the trainer: data, train/eval loops, metrics.
 
@@ -51,4 +59,12 @@ pub fn artifacts_dir() -> std::path::PathBuf {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|_| std::path::PathBuf::from("."));
     base.join("artifacts")
+}
+
+/// Whether the AOT artifacts for `config` exist (i.e. `make artifacts` ran,
+/// or `$ZO2_ARTIFACTS` points at a bundle).  Tests that execute real PJRT
+/// steps skip — with a message — when this is false, so `cargo test` stays
+/// green on machines that only build the rust layer.
+pub fn artifacts_available(config: &str) -> bool {
+    artifacts_dir().join(config).join("manifest.json").is_file()
 }

@@ -9,17 +9,24 @@
 use anyhow::{bail, Result};
 
 use zo2::coordinator::{train, EngineKind, TrainConfig};
-use zo2::costmodel::{gpu_memory_bytes, ComputeMode, Hardware, SimCost, Strategy, Workload};
+use zo2::costmodel::{
+    gpu_memory_bytes, plan_three_tier, two_tier_dram_bytes, ComputeMode, Hardware, MemoryBudget,
+    SimCost, Strategy, Workload,
+};
 use zo2::model::{opt_by_name, opt_family};
 use zo2::precision::Codec;
 use zo2::runtime::Runtime;
-use zo2::sched::{build_plan, simulate, Policy};
+use zo2::sched::{build_plan, simulate, Policy, Tiering};
 use zo2::util::cli::Args;
 use zo2::util::fmt_mb;
 use zo2::zo::{RunMode, ZoConfig};
 
+/// Flags that never take a value (so `zo2 run --timeline cfg.json` keeps
+/// `cfg.json` positional — see `util::cli`).
+const BOOL_FLAGS: &[&str] = &["timeline", "no-reusable-mem", "no-efficient-update"];
+
 fn main() -> Result<()> {
-    let args = Args::from_env();
+    let args = Args::from_env_with_bools(BOOL_FLAGS);
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -29,14 +36,36 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: zo2 <train|simulate|memory|info> [--config tiny] [--engine zo2|mezo]\n\
                  \x20      [--steps N] [--lr F] [--eps F] [--seed N] [--wire fp32|bf16|fp16|fp8]\n\
-                 \x20      [--mode seq|overlap] [--model OPT-13B] [--compute fp32|tf32|fp16]"
+                 \x20      [--mode seq|overlap] [--model OPT-13B] [--compute fp32|tf32|fp16]\n\
+                 \x20      [--tiering two|three] [--dram-budget GB] [--dram-slots N]\n\
+                 \x20      [--nvme-gbps F] [--nvme-write-gbps F]"
             );
             Ok(())
         }
     }
 }
 
+fn parse_tiering(args: &Args) -> Result<Tiering> {
+    match args.get_or("tiering", "two").as_str() {
+        "two" | "2" => Ok(Tiering::TwoTier),
+        "three" | "3" => Ok(Tiering::ThreeTier),
+        t => bail!("unknown tiering `{t}` (expected two|three)"),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    let tiering = parse_tiering(args)?;
+    let dram_budget_bytes = match args.get("dram-budget") {
+        None => None,
+        Some(s) => match s.parse::<f64>() {
+            Ok(gb) if gb > 0.0 => Some((gb * (1u64 << 30) as f64) as u64),
+            _ => bail!("bad --dram-budget `{s}` (gigabytes, e.g. 64)"),
+        },
+    };
+    // Refuse to silently train two-tier when the user asked for three.
+    if tiering == Tiering::ThreeTier && dram_budget_bytes.is_none() {
+        bail!("--tiering three requires --dram-budget <GB> (the DDR budget that decides which blocks spill)");
+    }
     let cfg = TrainConfig {
         config_name: args.get_or("config", "tiny"),
         steps: args.get_usize("steps", 20),
@@ -57,6 +86,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             m => bail!("unknown mode `{m}`"),
         },
         log_every: args.get_usize("log-every", 10),
+        tiering,
+        dram_budget_bytes,
+        dram_slots: args.get_usize("dram-slots", 4),
     };
     let report = train(&cfg, true)?;
     println!(
@@ -66,18 +98,28 @@ fn cmd_train(args: &Args) -> Result<()> {
         fmt_mb(report.device_peak_bytes),
         fmt_mb(report.transfer_bytes)
     );
+    if report.spilled_blocks > 0 {
+        println!(
+            "disk tier: {} spilled blocks, {} MB NVMe traffic",
+            report.spilled_blocks,
+            fmt_mb(report.disk_bytes)
+        );
+    }
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let name = args.get_or("model", "OPT-13B");
     let shape = opt_by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
-    let hw = Hardware::a100_pcie4();
+    let read_gbps = args.get_f64("nvme-gbps", 6.8);
+    let write_gbps = args.get_f64("nvme-write-gbps", read_gbps * 0.75);
+    let hw = Hardware::a100_pcie4().with_nvme_gbps(read_gbps, write_gbps);
+    let wire = Codec::parse(&args.get_or("wire", "fp32")).unwrap();
     let wl = Workload {
         shape,
         batch: args.get_usize("batch", 1),
         seq: args.get_usize("seq", 2048),
-        wire: Codec::parse(&args.get_or("wire", "fp32")).unwrap(),
+        wire,
         compute: match args.get_or("compute", "fp32").as_str() {
             "tf32" => ComputeMode::Tf32,
             "fp16" => ComputeMode::Fp16,
@@ -85,22 +127,48 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             _ => ComputeMode::Fp32,
         },
     };
-    let policy = Policy {
+    let param_bytes = wire.bytes_per_el().min(4);
+    let tiering = parse_tiering(args)?;
+    let dram_slots = args.get_usize("dram-slots", 4);
+    let mut policy = Policy {
         overlap: args.get_or("mode", "overlap") != "seq",
         reusable_mem: !args.has("no-reusable-mem"),
         efficient_update: !args.has("no-efficient-update"),
         slots: args.get_usize("slots", 3),
+        ..Policy::default()
     };
+    if tiering == Tiering::ThreeTier {
+        let budget = MemoryBudget {
+            hbm: hw.hbm_capacity,
+            dram: (args.get_f64("dram-budget", 64.0) * (1u64 << 30) as f64) as u64,
+            nvme: 2 << 40,
+        };
+        let plan = plan_three_tier(&wl, &budget, policy.slots, dram_slots, param_bytes, &hw);
+        policy.tiering = Tiering::ThreeTier;
+        policy.spilled = plan.spilled_blocks;
+        policy.dram_slots = plan.dram_slots.max(1);
+        println!(
+            "tiers: {} blocks in DDR + {} on NVMe | peaks: HBM {} MB, DDR {} MB \
+             (two-tier would need {} MB), NVMe {} MB",
+            plan.resident_blocks,
+            plan.spilled_blocks,
+            fmt_mb(plan.peaks.hbm),
+            fmt_mb(plan.peaks.dram),
+            fmt_mb(two_tier_dram_bytes(&wl)),
+            fmt_mb(plan.peaks.nvme),
+        );
+    }
     let steps = args.get_usize("sim-steps", 4);
     let costs = SimCost::new(&hw, &wl);
     let plan = build_plan(wl.shape.n_layers, steps, policy);
     let (sched, timeline) = simulate(&plan, &costs, policy);
     let tokens = (wl.batch * wl.seq) as f64;
     println!(
-        "{name}: step {:.3}s  ->  {:.0} tokens/s  (makespan {:.3}s over {steps} steps)",
+        "{name}: step {:.3}s  ->  {:.0} tokens/s  (makespan {:.3}s over {steps} steps, {})",
         sched.steady_step_s,
         tokens / sched.steady_step_s,
-        sched.makespan
+        sched.makespan,
+        sched.bottleneck(),
     );
     if args.has("timeline") {
         println!("{}", timeline.to_ascii_gantt(100));

@@ -1,0 +1,349 @@
+//! Disk (NVMe) tier below host DDR: file-backed parameter buckets with an
+//! accounted DRAM staging window.
+//!
+//! The paper's two-tier system still assumes the CPU side can hold every
+//! master copy — ~700 GB of DRAM for OPT-175B fp32.  This module adds the
+//! third tier: block buckets that do not fit the DRAM budget *spill* to a
+//! pool file on disk, stored in the same wire codec they would cross PCIe
+//! in (compressed storage, so AMP shrinks the disk footprint and the NVMe
+//! traffic by the same factor as the link traffic).
+//!
+//! As with [`super::DevicePool`], the *data movement* is real — bytes are
+//! written to and re-read from an actual file — while the *time* an NVMe
+//! device would take is given by a [`TransferModel`] pair (read/write
+//! bandwidths differ on real drives).  The [`DramWindow`] is the staging
+//! counterpart of the §5.3 reusable device buffer: a fixed number of
+//! block-sized DRAM slots through which spilled buckets stream, giving the
+//! disk prefetcher a bounded look-ahead of `slots` blocks.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::transfer::{TransferModel, TransferStats};
+use crate::precision::Codec;
+
+/// Handle to one codec-encoded bucket inside a [`DiskPool`] file.
+#[derive(Debug, Clone)]
+pub struct DiskBucket {
+    codec: Codec,
+    numel: usize,
+    offset: u64,
+    len: usize,
+}
+
+impl DiskBucket {
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    pub fn numel(&self) -> usize {
+        self.numel
+    }
+
+    /// On-disk (= wire-format) bytes of this bucket.
+    pub fn wire_len(&self) -> usize {
+        self.len
+    }
+}
+
+/// File-backed bucket pool with capacity accounting and an NVMe cost model.
+///
+/// Reads and writes take `&self` (the file handle is behind a mutex) so the
+/// disk-read and disk-write pipeline threads can share one pool.
+#[derive(Debug)]
+pub struct DiskPool {
+    file: Mutex<File>,
+    path: PathBuf,
+    end: AtomicU64,
+    capacity: u64,
+    pub read_model: TransferModel,
+    pub write_model: TransferModel,
+    reads: Mutex<TransferStats>,
+    writes: Mutex<TransferStats>,
+}
+
+impl DiskPool {
+    /// Create (truncating) a pool file at `path`.
+    pub fn create(
+        path: PathBuf,
+        capacity: u64,
+        read_model: TransferModel,
+        write_model: TransferModel,
+    ) -> Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("creating disk pool {}", path.display()))?;
+        Ok(Self {
+            file: Mutex::new(file),
+            path,
+            end: AtomicU64::new(0),
+            capacity,
+            read_model,
+            write_model,
+            reads: Mutex::new(TransferStats::default()),
+            writes: Mutex::new(TransferStats::default()),
+        })
+    }
+
+    /// Create a pool file with a unique name in the system temp directory.
+    pub fn in_temp(
+        capacity: u64,
+        read_model: TransferModel,
+        write_model: TransferModel,
+    ) -> Result<Self> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::SeqCst);
+        let path =
+            std::env::temp_dir().join(format!("zo2-disk-{}-{}.pool", std::process::id(), n));
+        Self::create(path, capacity, read_model, write_model)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append a new bucket (initial spill of a block to the disk tier).
+    pub fn append(&self, codec: Codec, numel: usize, bytes: &[u8]) -> Result<DiskBucket> {
+        anyhow::ensure!(
+            bytes.len() == numel * codec.bytes_per_el(),
+            "bucket payload {} bytes vs {} x {}-byte elements",
+            bytes.len(),
+            numel,
+            codec.bytes_per_el()
+        );
+        let len = bytes.len();
+        let offset = self.end.fetch_add(len as u64, Ordering::SeqCst);
+        if offset + len as u64 > self.capacity {
+            self.end.fetch_sub(len as u64, Ordering::SeqCst);
+            bail!(
+                "disk tier full: {} + {} exceeds capacity {} (simulated NVMe)",
+                offset,
+                len,
+                self.capacity
+            );
+        }
+        self.write_at(offset, bytes)?;
+        self.record(&self.writes, len as u64, &self.write_model);
+        Ok(DiskBucket { codec, numel, offset, len })
+    }
+
+    /// Read a bucket's encoded bytes back into DRAM.
+    pub fn read(&self, b: &DiskBucket) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; b.len];
+        {
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(b.offset))?;
+            f.read_exact(&mut buf)
+                .with_context(|| format!("disk read at {}+{}", b.offset, b.len))?;
+        }
+        self.record(&self.reads, b.len as u64, &self.read_model);
+        Ok(buf)
+    }
+
+    /// Overwrite a bucket in place (write-back of an updated block).  The
+    /// wire codec is fixed-width, so the encoded length never changes.
+    pub fn write(&self, b: &DiskBucket, bytes: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            bytes.len() == b.len,
+            "bucket rewrite {} bytes vs reserved {}",
+            bytes.len(),
+            b.len
+        );
+        self.write_at(b.offset, bytes)?;
+        self.record(&self.writes, b.len as u64, &self.write_model);
+        Ok(())
+    }
+
+    fn write_at(&self, offset: u64, bytes: &[u8]) -> Result<()> {
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(offset))?;
+        f.write_all(bytes)
+            .with_context(|| format!("disk write at {}+{}", offset, bytes.len()))?;
+        Ok(())
+    }
+
+    fn record(&self, which: &Mutex<TransferStats>, bytes: u64, model: &TransferModel) {
+        let mut s = which.lock().unwrap();
+        s.ops += 1;
+        s.bytes += bytes;
+        s.modeled_s += model.time_for(bytes);
+    }
+
+    /// Bytes currently occupied in the pool file (== peak: buckets are
+    /// appended once and rewritten in place).
+    pub fn used(&self) -> u64 {
+        self.end.load(Ordering::SeqCst)
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn read_stats(&self) -> TransferStats {
+        self.reads.lock().unwrap().clone()
+    }
+
+    pub fn write_stats(&self) -> TransferStats {
+        self.writes.lock().unwrap().clone()
+    }
+}
+
+impl Drop for DiskPool {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Accounted DRAM staging window for the disk tier: at most `slots`
+/// block-sized buckets of spilled blocks may be DRAM-resident at once
+/// (from disk-read start until write-back end).  Backpressure itself comes
+/// from the pipeline's bounded token ring; this type *enforces and tracks*
+/// the invariant, mirroring how [`super::DevicePool`] accounts HBM.
+#[derive(Debug)]
+pub struct DramWindow {
+    slots: usize,
+    slot_bytes: u64,
+    in_flight: AtomicU64,
+    used_bytes: AtomicU64,
+    peak_slots: AtomicU64,
+    peak_bytes: AtomicU64,
+}
+
+impl DramWindow {
+    pub fn new(slots: usize, slot_bytes: u64) -> Self {
+        Self {
+            slots: slots.max(1),
+            slot_bytes,
+            in_flight: AtomicU64::new(0),
+            used_bytes: AtomicU64::new(0),
+            peak_slots: AtomicU64::new(0),
+            peak_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Claim one staging slot for `bytes` of encoded bucket.
+    pub fn acquire(&self, bytes: u64) -> Result<()> {
+        let now = self.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+        if now as usize > self.slots {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            bail!("DRAM staging window exhausted: {} slots all in flight", self.slots);
+        }
+        self.peak_slots.fetch_max(now, Ordering::SeqCst);
+        let used = self.used_bytes.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.peak_bytes.fetch_max(used, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Return a staging slot after its bucket left DRAM.
+    pub fn release(&self, bytes: u64) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        self.used_bytes.fetch_sub(bytes, Ordering::SeqCst);
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.slots as u64 * self.slot_bytes
+    }
+
+    pub fn peak_slots(&self) -> usize {
+        self.peak_slots.load(Ordering::SeqCst) as usize
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::HostBucket;
+
+    fn models() -> (TransferModel, TransferModel) {
+        (TransferModel::nvme_read(), TransferModel::nvme_write())
+    }
+
+    #[test]
+    fn bucket_roundtrip_is_byte_exact() {
+        let (r, w) = models();
+        let pool = DiskPool::in_temp(u64::MAX, r, w).unwrap();
+        let data: Vec<f32> = (0..257).map(|i| (i as f32) * 0.37 - 11.0).collect();
+        for codec in [Codec::F32, Codec::Bf16, Codec::Fp8E4M3] {
+            let hb = HostBucket::from_f32(&data, codec);
+            let entry = pool.append(codec, data.len(), hb.wire()).unwrap();
+            let back = pool.read(&entry).unwrap();
+            assert_eq!(back, hb.wire(), "{codec:?}: disk must preserve wire bytes");
+            let rebuilt = HostBucket::from_wire(codec, data.len(), back);
+            assert_eq!(rebuilt.to_f32(), hb.to_f32());
+        }
+    }
+
+    #[test]
+    fn rewrite_in_place_and_accounting() {
+        let (r, w) = models();
+        let pool = DiskPool::in_temp(u64::MAX, r, w).unwrap();
+        let a = vec![1u8; 64];
+        let b = vec![2u8; 64];
+        let e0 = pool.append(Codec::Fp8E4M3, 64, &a).unwrap();
+        let e1 = pool.append(Codec::Fp8E4M3, 64, &b).unwrap();
+        assert_eq!(pool.used(), 128);
+        pool.write(&e0, &b).unwrap();
+        assert_eq!(pool.read(&e0).unwrap(), b);
+        assert_eq!(pool.read(&e1).unwrap(), b, "neighbour untouched");
+        assert_eq!(pool.used(), 128, "rewrite must not grow the pool");
+        let ws = pool.write_stats();
+        let rs = pool.read_stats();
+        assert_eq!(ws.ops, 3);
+        assert_eq!(ws.bytes, 192);
+        assert_eq!(rs.ops, 2);
+        assert!(ws.modeled_s > 0.0 && rs.modeled_s > 0.0);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let (r, w) = models();
+        let pool = DiskPool::in_temp(100, r, w).unwrap();
+        pool.append(Codec::Fp8E4M3, 60, &vec![0u8; 60]).unwrap();
+        assert!(pool.append(Codec::Fp8E4M3, 60, &vec![0u8; 60]).is_err(), "should hit capacity");
+        assert_eq!(pool.used(), 60, "failed append must roll back");
+    }
+
+    #[test]
+    fn pool_file_removed_on_drop() {
+        let (r, w) = models();
+        let pool = DiskPool::in_temp(u64::MAX, r, w).unwrap();
+        let path = pool.path().to_path_buf();
+        pool.append(Codec::F32, 4, &[0u8; 16]).unwrap();
+        assert!(path.is_file());
+        drop(pool);
+        assert!(!path.exists(), "pool file should be cleaned up");
+    }
+
+    #[test]
+    fn dram_window_enforces_slots_and_tracks_peaks() {
+        let win = DramWindow::new(2, 100);
+        win.acquire(100).unwrap();
+        win.acquire(100).unwrap();
+        assert!(win.acquire(100).is_err(), "third slot must be refused");
+        assert_eq!(win.peak_slots(), 2);
+        assert_eq!(win.peak_bytes(), 200);
+        win.release(100);
+        win.acquire(100).unwrap();
+        assert_eq!(win.peak_slots(), 2, "peak unchanged by steady streaming");
+        win.release(100);
+        win.release(100);
+        assert_eq!(win.capacity_bytes(), 200);
+    }
+}

@@ -1,16 +1,21 @@
-//! Two-tier memory substrate: host "CPU DDR" pool, device "GPU HBM" pool,
-//! communication buckets (§5.3), the reusable block buffer (§5.3) and the
-//! transfer engine with its PCIe cost model.
+//! Tiered memory substrate: host "CPU DDR" pool, device "GPU HBM" pool,
+//! the disk (NVMe) tier below DDR, communication buckets (§5.3), the
+//! reusable block buffer (§5.3) and the transfer engine with its PCIe cost
+//! model.
 //!
 //! The real testbed has no GPU, so the *device* tier is an accounted region
 //! of host memory: every allocation that would live in HBM is registered
 //! with [`DevicePool`], which enforces a capacity, tracks the peak (the
 //! numbers in paper Fig. 1 / Table 2) and charges a per-allocation latency
 //! when the reusable buffer is disabled (the Table 4 "no reusable memory"
-//! ablation — cudaMalloc is what that feature removes).
+//! ablation — cudaMalloc is what that feature removes).  The disk tier
+//! ([`DiskPool`]) is file-backed for real: spilled buckets round-trip
+//! through an actual pool file, staged through the accounted [`DramWindow`].
 
+pub mod disk;
 pub mod transfer;
 
+pub use disk::{DiskBucket, DiskPool, DramWindow};
 pub use transfer::{TransferEngine, TransferModel};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,6 +42,31 @@ impl HostBucket {
         let mut bytes = Vec::new();
         codec.encode_into(data, &mut bytes);
         Self { codec, numel: data.len(), bytes }
+    }
+
+    /// Rebuild from wire-format bytes (e.g. read back from the disk tier).
+    pub fn from_wire(codec: Codec, numel: usize, bytes: Vec<u8>) -> Self {
+        assert_eq!(bytes.len(), numel * codec.bytes_per_el(), "wire payload size");
+        Self { codec, numel, bytes }
+    }
+
+    /// Shape-only stand-in for a bucket whose bytes live on the disk tier.
+    /// Keeps `numel`/`codec` queries valid while the payload is spilled;
+    /// decoding a placeholder is a bug (guard with [`Self::is_materialized`]).
+    pub fn placeholder(codec: Codec, numel: usize) -> Self {
+        Self { codec, numel, bytes: Vec::new() }
+    }
+
+    /// Whether the encoded payload is DRAM-resident (false for spilled
+    /// placeholders).
+    pub fn is_materialized(&self) -> bool {
+        self.numel == 0 || !self.bytes.is_empty()
+    }
+
+    /// Wire-format payload (what crosses PCIe, and what the disk tier
+    /// stores verbatim).
+    pub fn wire(&self) -> &[u8] {
+        &self.bytes
     }
 
     pub fn numel(&self) -> usize {
@@ -213,6 +243,19 @@ mod tests {
         assert_eq!(HostBucket::from_f32(&data, Codec::Fp8E4M3).wire_bytes(), 1000);
         // 0.5 is exactly representable everywhere.
         assert_eq!(HostBucket::from_f32(&data, Codec::Fp8E4M3).to_f32(), data);
+    }
+
+    #[test]
+    fn host_bucket_wire_rebuild_and_placeholder() {
+        let data: Vec<f32> = (0..64).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let hb = HostBucket::from_f32(&data, Codec::Bf16);
+        let rebuilt = HostBucket::from_wire(Codec::Bf16, data.len(), hb.wire().to_vec());
+        assert_eq!(rebuilt.to_f32(), hb.to_f32());
+        assert!(rebuilt.is_materialized());
+        let ph = HostBucket::placeholder(Codec::Bf16, data.len());
+        assert!(!ph.is_materialized());
+        assert_eq!(ph.numel(), data.len());
+        assert_eq!(ph.codec(), Codec::Bf16);
     }
 
     #[test]

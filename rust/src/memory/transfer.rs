@@ -23,6 +23,23 @@ impl TransferModel {
         Self { latency_s: 10e-6, bytes_per_s: 16e9 }
     }
 
+    /// PCIe 4.0 x4 NVMe, sequential read: ~6.8 GB/s, ~100 µs per op
+    /// (submission + flash read latency).
+    pub fn nvme_read() -> Self {
+        Self { latency_s: 100e-6, bytes_per_s: 6.8e9 }
+    }
+
+    /// PCIe 4.0 x4 NVMe, sustained sequential write: ~5 GB/s (post-SLC-cache
+    /// rate on datacenter drives), ~100 µs per op.
+    pub fn nvme_write() -> Self {
+        Self { latency_s: 100e-6, bytes_per_s: 5.0e9 }
+    }
+
+    /// Scale to a target sustained bandwidth in GB/s (CLI `--nvme-gbps`).
+    pub fn with_gbps(self, gbps: f64) -> Self {
+        Self { bytes_per_s: gbps * 1e9, ..self }
+    }
+
     pub fn time_for(&self, bytes: u64) -> f64 {
         self.latency_s + bytes as f64 / self.bytes_per_s
     }

@@ -1,7 +1,8 @@
-//! The ZO2 dynamic scheduler (paper §5.2, Algorithm 3).
+//! The ZO2 dynamic scheduler (paper §5.2, Algorithm 3), extended with a
+//! disk tier.
 //!
-//! Three logical streams — Upload, Compute, Offload — mirror the three CUDA
-//! streams of the paper.  Two dependency rules define correctness:
+//! Two-tier mode mirrors the paper's three CUDA streams — Upload, Compute,
+//! Offload — with two dependency rules:
 //!
 //!  1. per-block chain:   U(Wᵢ) → C(Wᵢ) → O(Wᵢ)
 //!  2. per-stream FIFO:   X(Wᵢ) waits for X(Wᵢ₋₁) of the same stream
@@ -10,13 +11,26 @@
 //! block buffer (slot of block *i* frees when O(Wᵢ) completes; with S slots
 //! U(Wᵢ) therefore waits on O(Wᵢ₋ₛ)).
 //!
+//! Three-tier mode ([`Tiering::ThreeTier`]) adds two streams — DiskRead,
+//! DiskWrite — for blocks spilled to NVMe.  A spilled block's chain grows
+//! to R(Wᵢ) → U(Wᵢ) → C(Wᵢ) → O(Wᵢ) → W(Wᵢ), with two more rules:
+//!
+//!  3. DRAM-window resource rule (mirror of the reusable-buffer rule): a
+//!     disk read needs a free slot of the DRAM staging window; the slot of
+//!     block *i* frees when W(Wᵢ) completes, so with D slots R waits on the
+//!     W that ran D spills earlier.  The window is also the *look-ahead*
+//!     of the prefetcher: reads run up to D spilled blocks ahead of
+//!     compute, so the read for block i+k overlaps compute on block i.
+//!  4. disk read-after-write: R of block *i* at step *j+1* waits for W of
+//!     block *i* at step *j* (the bucket on disk is the updated one).
+//!
 //! The same task DAG drives two executions:
 //!  * [`analytic`]: a deterministic discrete-event schedule on virtual time
 //!    using a [`CostProvider`] — this is how paper-scale (OPT-30B…175B)
 //!    configurations are evaluated, and what emits the Fig. 4 timelines;
-//!  * the *real* threaded engine in [`crate::zo::zo2_engine`], which
+//!  * the *real* threaded engine in [`crate::zo::Zo2Engine`], which
 //!    realises the same dependency structure with worker threads around
-//!    actual PJRT executions.
+//!    actual PJRT executions (plus real file I/O for the disk tier).
 //!
 //! Ablation flags reproduce Table 4:
 //!  * `overlap = false` — the naive §5.2/Fig. 4a schedule: global sync after
@@ -30,13 +44,19 @@ pub mod analytic;
 
 pub use analytic::{simulate, Schedule};
 
-/// Which stream a task runs on (paper Fig. 2's three CUDA streams).
+/// Which stream a task runs on (the paper's three CUDA streams, plus the
+/// two disk queues of the three-tier extension).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Stream {
     Upload,
     Compute,
     Offload,
+    DiskRead,
+    DiskWrite,
 }
+
+pub const ALL_STREAMS: [Stream; 5] =
+    [Stream::Upload, Stream::Compute, Stream::Offload, Stream::DiskRead, Stream::DiskWrite];
 
 /// Module position in the forward order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,6 +77,10 @@ pub enum TaskKind {
     /// Standalone parameter-update compute (only in the
     /// `efficient_update = false` ablation, Fig. 5a).
     Update,
+    /// Read a spilled block bucket NVMe→DDR (three-tier prefetch).
+    DiskRead,
+    /// Write an updated spilled bucket DDR→NVMe (three-tier write-back).
+    DiskWrite,
 }
 
 #[derive(Debug, Clone)]
@@ -73,7 +97,17 @@ pub struct Task {
     pub extra_latency: f64,
 }
 
-/// Scheduler policy / ablation switches (Table 4).
+/// Where block master copies live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tiering {
+    /// Paper baseline: every block bucket DDR-resident.
+    TwoTier,
+    /// Disk tier below DDR: buckets beyond the DRAM budget spill to NVMe
+    /// and stream through the DRAM staging window.
+    ThreeTier,
+}
+
+/// Scheduler policy / ablation switches (Table 4 + the disk tier).
 #[derive(Debug, Clone, Copy)]
 pub struct Policy {
     pub overlap: bool,
@@ -81,11 +115,25 @@ pub struct Policy {
     pub efficient_update: bool,
     /// Reusable buffer slots (3 = compute + prefetch + offload in flight).
     pub slots: usize,
+    pub tiering: Tiering,
+    /// DRAM staging-window slots = disk prefetch look-ahead (three-tier).
+    pub dram_slots: usize,
+    /// Number of trailing blocks spilled to the disk tier (three-tier;
+    /// 0 = everything fits in DDR and the plan degenerates to two-tier).
+    pub spilled: usize,
 }
 
 impl Default for Policy {
     fn default() -> Self {
-        Self { overlap: true, reusable_mem: true, efficient_update: true, slots: 3 }
+        Self {
+            overlap: true,
+            reusable_mem: true,
+            efficient_update: true,
+            slots: 3,
+            tiering: Tiering::TwoTier,
+            dram_slots: 4,
+            spilled: 0,
+        }
     }
 }
 
@@ -93,31 +141,51 @@ impl Policy {
     pub fn naive() -> Self {
         Self { overlap: false, ..Self::default() }
     }
+
+    /// Three-tier policy with `spilled` blocks on the disk tier.
+    pub fn three_tier(spilled: usize, dram_slots: usize) -> Self {
+        Self { tiering: Tiering::ThreeTier, spilled, dram_slots, ..Self::default() }
+    }
 }
 
 /// Build the task DAG for `steps` training steps over `n_blocks` offloaded
 /// transformer blocks (embedding and LM head stay GPU-resident, §5.2).
+/// In three-tier mode the last `policy.spilled` blocks additionally stream
+/// through the disk tier (R before U, W after O).
 pub fn build_plan(n_blocks: usize, steps: usize, policy: Policy) -> Vec<Task> {
     let mut tasks: Vec<Task> = Vec::new();
     // Per-stream last task id, for FIFO chaining.
-    let mut last_on: [Option<usize>; 3] = [None, None, None];
+    let mut last_on: [Option<usize>; 5] = [None; 5];
     // id of O(Wᵢ) per in-flight slot ring.
     let mut offload_ring: Vec<Option<usize>> = vec![None; policy.slots.max(1)];
     let mut ring_pos = 0usize;
+    // id of W(Wᵢ) per DRAM staging-window slot ring (three-tier).
+    let mut dram_ring: Vec<Option<usize>> = vec![None; policy.dram_slots.max(1)];
+    let mut dram_pos = 0usize;
+    // id of the last DiskWrite per block (read-after-write across steps).
+    let mut last_write: Vec<Option<usize>> = vec![None; n_blocks];
     // id of the last task overall (for naive global sync).
     let mut prev_any: Option<usize> = None;
     // id of the previous *compute* task (cudaMalloc sync in the
     // no-reusable-memory ablation).
     let mut prev_compute: Option<usize> = None;
 
+    let spilled = match policy.tiering {
+        Tiering::TwoTier => 0,
+        Tiering::ThreeTier => policy.spilled.min(n_blocks),
+    };
+    let on_disk = |i: usize| i >= n_blocks - spilled;
+
     let stream_idx = |s: Stream| match s {
         Stream::Upload => 0,
         Stream::Compute => 1,
         Stream::Offload => 2,
+        Stream::DiskRead => 3,
+        Stream::DiskWrite => 4,
     };
 
     let push = |tasks: &mut Vec<Task>,
-                    last_on: &mut [Option<usize>; 3],
+                    last_on: &mut [Option<usize>; 5],
                     prev_any: &mut Option<usize>,
                     prev_compute: &mut Option<usize>,
                     step: usize,
@@ -130,6 +198,8 @@ pub fn build_plan(n_blocks: usize, steps: usize, policy: Policy) -> Vec<Task> {
                 TaskKind::Upload => Stream::Upload,
                 TaskKind::Compute | TaskKind::Update => Stream::Compute,
                 TaskKind::Offload => Stream::Offload,
+                TaskKind::DiskRead => Stream::DiskRead,
+                TaskKind::DiskWrite => Stream::DiskWrite,
             }
         } else {
             Stream::Compute // naive: one stream serialises everything
@@ -166,12 +236,27 @@ pub fn build_plan(n_blocks: usize, steps: usize, policy: Policy) -> Vec<Task> {
         let mut prev_c = c_embed;
 
         // Upload of block 0 may overlap the embedding compute (§5.2).
-        let mut upload_ids: Vec<usize> = Vec::with_capacity(n_blocks);
-        let mut compute_ids: Vec<usize> = Vec::with_capacity(n_blocks);
-
         for i in 0..n_blocks {
-            // Slot reuse: U waits for the offload that frees this slot.
             let mut deps = Vec::new();
+            // Three-tier: R(Wᵢ) stages the spilled bucket into the DRAM
+            // window before the upload can push it over PCIe.
+            if on_disk(i) {
+                let mut rdeps = Vec::new();
+                // DRAM-window rule: R needs a free staging slot, freed by
+                // the W that ran `dram_slots` spills earlier.
+                if let Some(w) = dram_ring[dram_pos] {
+                    rdeps.push(w);
+                }
+                // Read-after-write: the on-disk bucket is the one the
+                // previous step's W wrote back.
+                if let Some(w) = last_write[i] {
+                    rdeps.push(w);
+                }
+                let r = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                             step, Module::Block(i), TaskKind::DiskRead, rdeps, 0.0);
+                deps.push(r);
+            }
+            // Slot reuse: U waits for the offload that frees this slot.
             if let Some(o) = offload_ring[ring_pos] {
                 deps.push(o);
             }
@@ -185,12 +270,10 @@ pub fn build_plan(n_blocks: usize, steps: usize, policy: Policy) -> Vec<Task> {
             let extra = 0.0; // malloc latency charged via CostProvider::malloc_s
             let u = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
                          step, Module::Block(i), TaskKind::Upload, deps, extra);
-            upload_ids.push(u);
 
             // C(Wᵢ) ← U(Wᵢ) (+ FIFO after previous compute).
             let c = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
                          step, Module::Block(i), TaskKind::Compute, vec![u, prev_c], 0.0);
-            compute_ids.push(c);
             prev_c = c;
 
             // O(Wᵢ) ← C(Wᵢ) (+ FIFO after previous offload).
@@ -198,6 +281,16 @@ pub fn build_plan(n_blocks: usize, steps: usize, policy: Policy) -> Vec<Task> {
                          step, Module::Block(i), TaskKind::Offload, vec![c], 0.0);
             offload_ring[ring_pos] = Some(o);
             ring_pos = (ring_pos + 1) % offload_ring.len();
+
+            // W(Wᵢ) ← O(Wᵢ): write the updated bucket back to NVMe and free
+            // its DRAM staging slot.
+            if on_disk(i) {
+                let w = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                             step, Module::Block(i), TaskKind::DiskWrite, vec![o], 0.0);
+                dram_ring[dram_pos] = Some(w);
+                dram_pos = (dram_pos + 1) % dram_ring.len();
+                last_write[i] = Some(w);
+            }
         }
 
         // C(LMHead) — resident.
@@ -209,6 +302,18 @@ pub fn build_plan(n_blocks: usize, steps: usize, policy: Policy) -> Vec<Task> {
             // the step's projected gradient is known (i.e. after the head).
             for i in 0..n_blocks {
                 let mut deps = Vec::new();
+                if on_disk(i) {
+                    let mut rdeps = Vec::new();
+                    if let Some(w) = dram_ring[dram_pos] {
+                        rdeps.push(w);
+                    }
+                    if let Some(w) = last_write[i] {
+                        rdeps.push(w);
+                    }
+                    let r = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                                 step, Module::Block(i), TaskKind::DiskRead, rdeps, 0.0);
+                    deps.push(r);
+                }
                 if let Some(o) = offload_ring[ring_pos] {
                     deps.push(o);
                 }
@@ -225,6 +330,13 @@ pub fn build_plan(n_blocks: usize, steps: usize, policy: Policy) -> Vec<Task> {
                              step, Module::Block(i), TaskKind::Offload, vec![c], 0.0);
                 offload_ring[ring_pos] = Some(o);
                 ring_pos = (ring_pos + 1) % offload_ring.len();
+                if on_disk(i) {
+                    let w = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                                 step, Module::Block(i), TaskKind::DiskWrite, vec![o], 0.0);
+                    dram_ring[dram_pos] = Some(w);
+                    dram_pos = (dram_pos + 1) % dram_ring.len();
+                    last_write[i] = Some(w);
+                }
             }
         }
     }
@@ -246,6 +358,15 @@ pub trait CostProvider {
     /// disabled.
     fn malloc_s(&self) -> f64 {
         300e-6
+    }
+    /// NVMe read of one spilled block bucket (three-tier only; two-tier
+    /// providers keep the zero default).
+    fn disk_read_s(&self) -> f64 {
+        0.0
+    }
+    /// NVMe write-back of one spilled block bucket.
+    fn disk_write_s(&self) -> f64 {
+        0.0
     }
 }
 
@@ -308,5 +429,65 @@ mod tests {
             p[d].kind == TaskKind::Offload && p[d].module == Module::Block(0)
         });
         assert!(dep_is_offload0);
+    }
+
+    #[test]
+    fn three_tier_with_zero_spill_equals_two_tier() {
+        let two = build_plan(5, 2, Policy::default());
+        let three = build_plan(5, 2, Policy::three_tier(0, 4));
+        assert_eq!(two.len(), three.len());
+        for (a, b) in two.iter().zip(&three) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.deps, b.deps);
+        }
+    }
+
+    #[test]
+    fn spilled_blocks_get_full_five_task_chain() {
+        // 6 blocks, 2 spilled: blocks 4 and 5 are on disk.
+        let p = build_plan(6, 1, Policy::three_tier(2, 4));
+        assert_eq!(p.len(), 14 + 6 + 2 * 2); // two-tier shape + 2 extra blocks' UCO + 2*(R+W)
+        for i in 0..6 {
+            let has_read = p.iter().any(|t| {
+                t.kind == TaskKind::DiskRead && t.module == Module::Block(i)
+            });
+            let has_write = p.iter().any(|t| {
+                t.kind == TaskKind::DiskWrite && t.module == Module::Block(i)
+            });
+            assert_eq!(has_read, i >= 4, "block {i} read");
+            assert_eq!(has_write, i >= 4, "block {i} write");
+        }
+        // Chain: U(W4) depends on R(W4); W(W4) depends on O(W4).
+        let r4 = p.iter().find(|t| t.kind == TaskKind::DiskRead && t.module == Module::Block(4)).unwrap();
+        let u4 = p.iter().find(|t| t.kind == TaskKind::Upload && t.module == Module::Block(4)).unwrap();
+        assert!(u4.deps.contains(&r4.id), "U(W4) must wait for R(W4)");
+        let o4 = p.iter().find(|t| t.kind == TaskKind::Offload && t.module == Module::Block(4)).unwrap();
+        let w4 = p.iter().find(|t| t.kind == TaskKind::DiskWrite && t.module == Module::Block(4)).unwrap();
+        assert!(w4.deps.contains(&o4.id), "W(W4) must wait for O(W4)");
+    }
+
+    #[test]
+    fn disk_read_waits_for_previous_steps_write() {
+        // All blocks spilled, 2 steps: R at step 1 must depend on the same
+        // block's W at step 0.
+        let p = build_plan(3, 2, Policy::three_tier(3, 8));
+        for i in 0..3 {
+            let w0 = p.iter().find(|t| {
+                t.kind == TaskKind::DiskWrite && t.module == Module::Block(i) && t.step == 0
+            }).unwrap();
+            let r1 = p.iter().find(|t| {
+                t.kind == TaskKind::DiskRead && t.module == Module::Block(i) && t.step == 1
+            }).unwrap();
+            assert!(r1.deps.contains(&w0.id), "R(W{i}) step 1 must wait for W(W{i}) step 0");
+        }
+    }
+
+    #[test]
+    fn dram_ring_blocks_reads() {
+        // 1 DRAM slot, all spilled: R(W1) must depend on W(W0).
+        let p = build_plan(3, 1, Policy::three_tier(3, 1));
+        let w0 = p.iter().find(|t| t.kind == TaskKind::DiskWrite && t.module == Module::Block(0)).unwrap();
+        let r1 = p.iter().find(|t| t.kind == TaskKind::DiskRead && t.module == Module::Block(1)).unwrap();
+        assert!(r1.deps.contains(&w0.id), "DRAM window of 1 must serialise spills");
     }
 }

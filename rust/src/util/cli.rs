@@ -1,4 +1,11 @@
 //! Tiny CLI flag parser (`--key value` / `--flag` / positionals).
+//!
+//! `--key value` syntax is inherently ambiguous for boolean flags: in
+//! `run --overlap config.json` the parser cannot know whether `config.json`
+//! is the flag's value or a positional.  Callers therefore declare their
+//! boolean flags ([`Args::parse_with_bools`] / [`Args::from_env_with_bools`]);
+//! a declared flag never consumes the next token.  `--flag=value` stays
+//! unambiguous and works for booleans too (`--overlap=false`).
 
 use std::collections::BTreeMap;
 
@@ -9,14 +16,24 @@ pub struct Args {
 }
 
 impl Args {
+    /// Parse with no declared boolean flags: every `--key token` pair is
+    /// treated as key/value (the historical behaviour).
     pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Self {
+        Self::parse_with_bools(it, &[])
+    }
+
+    /// Parse with `bools` declared as value-less flags: `--overlap x` keeps
+    /// `x` positional and records `overlap=true`.
+    pub fn parse_with_bools<I: IntoIterator<Item = String>>(it: I, bools: &[&str]) -> Self {
         let mut out = Args::default();
         let mut it = it.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if !bools.contains(&key)
+                    && it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                {
                     let v = it.next().unwrap();
                     out.flags.insert(key.to_string(), v);
                 } else {
@@ -33,6 +50,10 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    pub fn from_env_with_bools(bools: &[&str]) -> Self {
+        Self::parse_with_bools(std::env::args().skip(1), bools)
+    }
+
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
@@ -47,6 +68,20 @@ impl Args {
 
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Boolean flag value: absent → false; present with no value (or
+    /// `true`/`1`/`yes`/`on`) → true; `false`/`0`/`no`/`off` → false; any
+    /// other value (a swallowed token under un-declared parsing) → true,
+    /// since the flag was explicitly given.
+    pub fn get_bool(&self, key: &str) -> bool {
+        match self.get(key) {
+            None => false,
+            Some(v) => !matches!(
+                v.to_ascii_lowercase().as_str(),
+                "false" | "0" | "no" | "off"
+            ),
+        }
     }
 
     pub fn has(&self, key: &str) -> bool {
@@ -77,5 +112,49 @@ mod tests {
     fn trailing_flag() {
         let a = Args::parse(s(&["--dry-run"]));
         assert!(a.has("dry-run"));
+    }
+
+    #[test]
+    fn declared_bool_does_not_swallow_positional() {
+        // The motivating bug: `run --overlap config.json` used to parse as
+        // `overlap=config.json`, losing the positional.
+        let a = Args::parse_with_bools(s(&["run", "--overlap", "config.json"]), &["overlap"]);
+        assert_eq!(a.positional, vec!["run", "config.json"]);
+        assert_eq!(a.get("overlap"), Some("true"));
+        assert!(a.get_bool("overlap"));
+    }
+
+    #[test]
+    fn undeclared_flag_still_takes_a_value() {
+        let a = Args::parse_with_bools(s(&["run", "--config", "tiny"]), &["overlap"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("config"), Some("tiny"));
+    }
+
+    #[test]
+    fn declared_bool_accepts_explicit_eq_value() {
+        let a = Args::parse_with_bools(s(&["--overlap=false", "--trace=1"]), &["overlap", "trace"]);
+        assert!(!a.get_bool("overlap"));
+        assert!(a.get_bool("trace"));
+    }
+
+    #[test]
+    fn get_bool_semantics() {
+        let a = Args::parse(s(&["--a", "--b=no", "--c=ON", "--d", "weird"]));
+        assert!(a.get_bool("a"), "bare flag is true");
+        assert!(!a.get_bool("b"));
+        assert!(a.get_bool("c"), "case-insensitive");
+        assert!(a.get_bool("d"), "flag given with junk value still counts as set");
+        assert!(!a.get_bool("absent"));
+    }
+
+    #[test]
+    fn bool_flag_before_another_flag_and_at_end() {
+        let a = Args::parse_with_bools(s(&["--overlap", "--steps", "5", "--timeline"]),
+                                       &["overlap", "timeline"]);
+        assert!(a.get_bool("overlap"));
+        assert!(a.get_bool("timeline"));
+        assert_eq!(a.get_usize("steps", 0), 5);
+        assert!(a.positional.is_empty());
     }
 }

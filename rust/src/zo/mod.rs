@@ -27,6 +27,8 @@ pub use mezo::MezoEngine;
 pub use param_store::ParamStore;
 pub use zo2::{RunMode, Zo2Engine, Zo2Options};
 
+pub use crate::sched::Tiering;
+
 use crate::rng::{GaussianRng, RngState};
 
 /// Optimizer hyper-parameters (paper §7: lr 1e-7…, eps 1e-3, seed).

@@ -23,10 +23,14 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::memory::{DevicePool, HostBucket, TransferEngine, TransferModel};
+use crate::memory::{
+    DevicePool, DiskBucket, DiskPool, DramWindow, HostBucket, TransferEngine, TransferModel,
+};
+use crate::memory::transfer::TransferStats;
 use crate::precision::Codec;
 use crate::rng::{RngState, RngStateManager};
 use crate::runtime::{lit_f32, lit_i32, lit_key, lit_scalar, lit_to_f32, lit_to_scalar, Runtime};
+use crate::sched::Tiering;
 use crate::telemetry::{Timeline, TraceEvent};
 use crate::zo::{key_of, module_states, ParamStore, StepStats, ZoConfig};
 
@@ -36,10 +40,11 @@ pub enum RunMode {
     Overlapped,
 }
 
-/// Engine options (the Table 4 / Table 5 switches).
+/// Engine options (the Table 4 / Table 5 switches + the disk tier).
 #[derive(Debug, Clone, Copy)]
 pub struct Zo2Options {
     /// Wire/storage codec for offloaded blocks (AMP compression, §5.5).
+    /// The disk tier stores spilled buckets in the same codec.
     pub wire: Codec,
     pub run_mode: RunMode,
     /// §5.3 reusable buffer; `false` allocates per upload (ablation).
@@ -51,6 +56,16 @@ pub struct Zo2Options {
     pub slots: usize,
     /// Simulated device capacity (bytes); checked by the device pool.
     pub device_capacity: u64,
+    /// Where block master copies live.  `ThreeTier` spills every block
+    /// beyond `dram_resident_blocks` to a file-backed NVMe pool; the loss
+    /// trajectory is bit-identical to `TwoTier` (offload location never
+    /// changes the math, §5.1).
+    pub tiering: Tiering,
+    /// DRAM staging-window slots for spilled buckets (disk look-ahead).
+    pub dram_slots: usize,
+    /// Blocks whose master copy stays in DRAM under `ThreeTier`
+    /// (`usize::MAX` = all resident, i.e. an empty disk tier).
+    pub dram_resident_blocks: usize,
 }
 
 impl Default for Zo2Options {
@@ -62,6 +77,9 @@ impl Default for Zo2Options {
             efficient_update: true,
             slots: 3,
             device_capacity: u64::MAX,
+            tiering: Tiering::TwoTier,
+            dram_slots: 4,
+            dram_resident_blocks: usize::MAX,
         }
     }
 }
@@ -70,6 +88,17 @@ impl Default for Zo2Options {
 struct Pending {
     g: f32,
     states: Vec<RngState>,
+}
+
+/// The engine's disk tier: a pool file holding spilled buckets, one entry
+/// per spilled block, and the accounted DRAM staging window they stream
+/// through.
+struct DiskTier {
+    pool: DiskPool,
+    /// `Some(bucket)` exactly for spilled blocks (index-aligned with
+    /// `params.blocks`, whose spilled entries are placeholders).
+    entries: Vec<Option<DiskBucket>>,
+    window: DramWindow,
 }
 
 pub struct Zo2Engine {
@@ -83,19 +112,41 @@ pub struct Zo2Engine {
     pub device: Arc<DevicePool>,
     pub transfers: Mutex<TransferEngine>,
     pub transfer_model: TransferModel,
+    disk: Option<DiskTier>,
     /// Timeline of the most recent step (real Fig. 4 data).
     pub last_timeline: Timeline,
 }
 
 impl Zo2Engine {
     pub fn new(rt: Runtime, cfg: ZoConfig, opts: Zo2Options) -> Result<Self> {
-        let params = ParamStore::init(rt.manifest(), cfg.seed, opts.wire);
+        let mut params = ParamStore::init(rt.manifest(), cfg.seed, opts.wire);
         let device = DevicePool::new(opts.device_capacity);
         // Device residency: embedding + head (fp32) + the reusable slots.
         device.alloc(((params.embed.len() + params.head.len()) * 4) as u64)?;
         if opts.reusable_mem {
             device.alloc((rt.manifest().block.size * opts.slots * 4) as u64)?;
         }
+        // Disk tier: spill every block beyond the DRAM-resident budget to a
+        // file-backed pool, leaving shape-only placeholders in the store.
+        let n_blocks = params.blocks.len();
+        let resident = opts.dram_resident_blocks.min(n_blocks);
+        let disk = if opts.tiering == Tiering::ThreeTier && resident < n_blocks {
+            let wire = params.blocks[resident].wire_bytes() as u64;
+            let pool =
+                DiskPool::in_temp(u64::MAX, TransferModel::nvme_read(), TransferModel::nvme_write())?;
+            let window = DramWindow::new(opts.dram_slots.max(1), wire);
+            let mut entries: Vec<Option<DiskBucket>> = (0..n_blocks).map(|_| None).collect();
+            for i in resident..n_blocks {
+                let numel = params.blocks[i].numel();
+                let codec = params.blocks[i].codec();
+                let bucket =
+                    std::mem::replace(&mut params.blocks[i], HostBucket::placeholder(codec, numel));
+                entries[i] = Some(pool.append(codec, numel, bucket.wire())?);
+            }
+            Some(DiskTier { pool, entries, window })
+        } else {
+            None
+        };
         Ok(Self {
             rt,
             params,
@@ -107,8 +158,86 @@ impl Zo2Engine {
             device,
             transfers: Mutex::new(TransferEngine::new()),
             transfer_model: TransferModel::pcie4(),
+            disk,
             last_timeline: Timeline::new(),
         })
+    }
+
+    /// Whether block `i`'s master copy lives on the disk tier.
+    pub fn is_spilled(&self, i: usize) -> bool {
+        self.disk.as_ref().map_or(false, |t| t.entries[i].is_some())
+    }
+
+    /// Number of blocks on the disk tier (0 in two-tier mode).
+    pub fn spilled_blocks(&self) -> usize {
+        self.disk.as_ref().map_or(0, |t| t.entries.iter().filter(|e| e.is_some()).count())
+    }
+
+    /// Bytes occupied in the disk pool file.
+    pub fn disk_used_bytes(&self) -> u64 {
+        self.disk.as_ref().map_or(0, |t| t.pool.used())
+    }
+
+    /// (read, write) NVMe traffic stats, if the disk tier is active.
+    pub fn disk_stats(&self) -> Option<(TransferStats, TransferStats)> {
+        self.disk.as_ref().map(|t| (t.pool.read_stats(), t.pool.write_stats()))
+    }
+
+    /// Peak simultaneously-staged spilled buckets (≤ configured window).
+    pub fn dram_window_peak_slots(&self) -> usize {
+        self.disk.as_ref().map_or(0, |t| t.window.peak_slots())
+    }
+
+    /// Take block `i`'s encoded bucket into DRAM: a disk read (through the
+    /// staging window) for spilled blocks, a move out of the store for
+    /// resident ones (a placeholder is left behind either way).
+    fn stage_block(&mut self, i: usize) -> Result<HostBucket> {
+        if let Some(tier) = &self.disk {
+            if let Some(entry) = &tier.entries[i] {
+                tier.window.acquire(entry.wire_len() as u64)?;
+                let bytes = tier.pool.read(entry)?;
+                return Ok(HostBucket::from_wire(entry.codec(), entry.numel(), bytes));
+            }
+        }
+        let numel = self.params.blocks[i].numel();
+        let codec = self.params.blocks[i].codec();
+        Ok(std::mem::replace(&mut self.params.blocks[i], HostBucket::placeholder(codec, numel)))
+    }
+
+    /// Return block `i`'s bucket: write-back to disk (freeing its window
+    /// slot) for spilled blocks, back into the store for resident ones.
+    /// `dirty = false` (eval paths) skips the disk write.
+    fn unstage_block(&mut self, i: usize, bucket: HostBucket, dirty: bool) -> Result<()> {
+        if let Some(tier) = &self.disk {
+            if let Some(entry) = &tier.entries[i] {
+                if dirty {
+                    tier.pool.write(entry, bucket.wire())?;
+                }
+                tier.window.release(entry.wire_len() as u64);
+                return Ok(());
+            }
+        }
+        self.params.blocks[i] = bucket;
+        Ok(())
+    }
+
+    /// Every parameter as one fp32 vector, reading spilled blocks from the
+    /// disk tier (the tier-agnostic counterpart of
+    /// [`ParamStore::to_flat_f32`], for parity checks).
+    pub fn flat_params(&self) -> Result<Vec<f32>> {
+        let mut out = self.params.embed.clone();
+        for i in 0..self.params.blocks.len() {
+            if let Some(tier) = &self.disk {
+                if let Some(entry) = &tier.entries[i] {
+                    let bytes = tier.pool.read(entry)?;
+                    out.extend(entry.codec().decode(&bytes, entry.numel()));
+                    continue;
+                }
+            }
+            out.extend(self.params.blocks[i].to_f32());
+        }
+        out.extend(self.params.head.iter());
+        Ok(out)
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -129,6 +258,14 @@ impl Zo2Engine {
         let m = self.rt.manifest();
         let (b, t) = (m.config.batch as i64, m.config.seq_len as i64);
         anyhow::ensure!(ids.len() as i64 == b * t, "batch shape mismatch");
+        // A failed overlapped pipeline leaves the store incomplete; refuse
+        // to continue on wrong-shaped state rather than training silently.
+        anyhow::ensure!(
+            self.params.n_blocks() == m.config.n_layers,
+            "engine unusable: a previous pipeline error left {} of {} blocks in the store",
+            self.params.n_blocks(),
+            m.config.n_layers
+        );
 
         let sizes = self.params.module_sizes();
         let states = module_states(self.cfg.seed, self.step, &sizes);
@@ -175,15 +312,28 @@ impl Zo2Engine {
         match self.opts.run_mode {
             RunMode::Sequential => {
                 for i in 0..n_blocks {
-                    let n = self.params.blocks[i].numel();
+                    let spilled = self.is_spilled(i);
+                    // Disk read (three-tier): stage the spilled bucket into
+                    // the DRAM window.  R(Wᵢ) → U(Wᵢ).
+                    let tr = wall0.elapsed().as_secs_f64();
+                    let mut bucket = self.stage_block(i)?;
+                    if spilled {
+                        timeline.push(TraceEvent {
+                            stream: "compute",
+                            label: format!("R b{i}"),
+                            start: tr,
+                            end: wall0.elapsed().as_secs_f64(),
+                        });
+                    }
+                    let n = bucket.numel();
                     // Upload: decode host bucket into a device slot.
                     let tu = wall0.elapsed().as_secs_f64();
                     if !self.opts.reusable_mem {
                         self.device.alloc((n * 4) as u64)?;
                     }
                     let mut slot = vec![0.0f32; n];
-                    self.params.blocks[i].decode_into(&mut slot);
-                    let wire = self.params.blocks[i].wire_bytes() as u64;
+                    bucket.decode_into(&mut slot);
+                    let wire = bucket.wire_bytes() as u64;
                     self.transfers.lock().unwrap().record_h2d(wire, &self.transfer_model);
                     timeline.push(TraceEvent {
                         stream: "compute",
@@ -220,7 +370,7 @@ impl Zo2Engine {
 
                     // Offload: encode updated bucket back to the host tier.
                     let to = wall0.elapsed().as_secs_f64();
-                    self.params.blocks[i].encode_from(&updated);
+                    bucket.encode_from(&updated);
                     self.transfers.lock().unwrap().record_d2h(wire, &self.transfer_model);
                     if !self.opts.reusable_mem {
                         self.device.free((n * 4) as u64);
@@ -231,12 +381,30 @@ impl Zo2Engine {
                         start: to,
                         end: wall0.elapsed().as_secs_f64(),
                     });
+
+                    // Disk write-back (three-tier): O(Wᵢ) → W(Wᵢ).
+                    let tw = wall0.elapsed().as_secs_f64();
+                    self.unstage_block(i, bucket, true)?;
+                    if spilled {
+                        timeline.push(TraceEvent {
+                            stream: "compute",
+                            label: format!("W b{i}"),
+                            start: tw,
+                            end: wall0.elapsed().as_secs_f64(),
+                        });
+                    }
                 }
             }
             RunMode::Overlapped => {
-                let (h2, m2) = self.run_blocks_overlapped(
-                    &mut timeline, wall0, &prev_states, &states, hp, hm, &gl, &lr, &eps,
-                )?;
+                let (h2, m2) = if self.disk.is_some() {
+                    self.run_blocks_overlapped_disk(
+                        &mut timeline, wall0, &prev_states, &states, hp, hm, &gl, &lr, &eps,
+                    )?
+                } else {
+                    self.run_blocks_overlapped(
+                        &mut timeline, wall0, &prev_states, &states, hp, hm, &gl, &lr, &eps,
+                    )?
+                };
                 hp = h2;
                 hm = m2;
             }
@@ -428,6 +596,280 @@ impl Zo2Engine {
         Ok((hp, hm))
     }
 
+    /// Overlapped block pipeline with the disk tier: five streams realised
+    /// by four worker threads + the main compute thread, mirroring the
+    /// analytic DAG's R(Wᵢ)→U(Wᵢ)→C(Wᵢ)→O(Wᵢ)→W(Wᵢ) chains.  The disk-read
+    /// thread prefetches spilled buckets ahead of compute, bounded by a
+    /// token ring of `dram_slots` staging slots that disk-write returns as
+    /// it retires buckets to NVMe — the threaded form of the DRAM-window
+    /// resource rule.  Resident blocks flow through untouched, so with an
+    /// empty spill set this degenerates to the two-tier pipeline.
+    #[allow(clippy::too_many_arguments)]
+    fn run_blocks_overlapped_disk(
+        &mut self,
+        timeline: &mut Timeline,
+        wall0: std::time::Instant,
+        prev_states: &[RngState],
+        states: &[RngState],
+        hp0: xla::Literal,
+        hm0: xla::Literal,
+        gl: &xla::Literal,
+        lr: &xla::Literal,
+        eps: &xla::Literal,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let n_blocks = self.params.blocks.len();
+        let slots = self.opts.slots.max(1);
+        let numel = self.rt.manifest().block.size;
+        if !self.opts.reusable_mem {
+            // Per-upload allocations still respect capacity (worst case all
+            // in-flight slots live at once).
+            self.device.alloc((numel * slots * 4) as u64)?;
+            self.device.free((numel * slots * 4) as u64);
+        }
+
+        let tier = self.disk.as_ref().expect("disk pipeline requires a disk tier");
+        let dram_slots = tier.window.slots();
+        // Move the host buckets into the pipeline (placeholders for spilled
+        // blocks — their bytes are read off the pool file by the R stream).
+        let buckets: Vec<HostBucket> = std::mem::take(&mut self.params.blocks);
+        let wire_bytes: Vec<u64> = (0..n_blocks)
+            .map(|i| match &tier.entries[i] {
+                Some(e) => e.wire_len() as u64,
+                None => buckets[i].wire_bytes() as u64,
+            })
+            .collect();
+        let wire_bytes = &wire_bytes; // shared by the stream threads
+
+        struct Uploaded {
+            idx: usize,
+            bucket: HostBucket,
+            slot: Vec<f32>,
+            t_end: f64,
+        }
+        struct ToOffload {
+            idx: usize,
+            bucket: HostBucket,
+            updated: Vec<f32>,
+            t_ready: f64,
+        }
+
+        let (tx_feed, rx_feed) = mpsc::sync_channel::<(usize, HostBucket)>(dram_slots);
+        let (tx_up, rx_up) = mpsc::sync_channel::<Uploaded>(slots);
+        let (tx_off, rx_off) = mpsc::sync_channel::<ToOffload>(slots);
+        let (tx_wr, rx_wr) = mpsc::sync_channel::<(usize, HostBucket)>(slots);
+        // Staging-window token ring: R takes a token per spilled read, W
+        // returns it after the write-back retires the DRAM copy.
+        let (tx_tok, rx_tok) = mpsc::channel::<()>();
+        for _ in 0..dram_slots {
+            let _ = tx_tok.send(());
+        }
+
+        let trans = &self.transfers;
+        let tmodel = self.transfer_model;
+        let prev_states = prev_states.to_vec();
+        let cur_states = states.to_vec();
+        let events: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+        // First NVMe failure in either disk thread; surfaced as the step's
+        // error instead of a generic "stream died" / a reassembly panic.
+        let pipe_err: Mutex<Option<String>> = Mutex::new(None);
+
+        let (hp, hm, done_buckets) = std::thread::scope(|s| -> Result<_> {
+            // --- disk-read stream: prefetch spilled buckets off NVMe ------
+            s.spawn({
+                let events = &events;
+                let pipe_err = &pipe_err;
+                move || {
+                    for (idx, bucket) in buckets.into_iter().enumerate() {
+                        let staged = match &tier.entries[idx] {
+                            Some(entry) => {
+                                if rx_tok.recv().is_err() {
+                                    return; // write stream died
+                                }
+                                tier.window
+                                    .acquire(entry.wire_len() as u64)
+                                    .expect("DRAM staging window overflow");
+                                let t_start = wall0.elapsed().as_secs_f64();
+                                let bytes = match tier.pool.read(entry) {
+                                    Ok(b) => b,
+                                    Err(e) => {
+                                        *pipe_err.lock().unwrap() = Some(format!(
+                                            "disk read of block {idx} failed: {e}"
+                                        ));
+                                        return;
+                                    }
+                                };
+                                events.lock().unwrap().push(TraceEvent {
+                                    stream: "disk_read",
+                                    label: format!("R b{idx}"),
+                                    start: t_start,
+                                    end: wall0.elapsed().as_secs_f64(),
+                                });
+                                HostBucket::from_wire(entry.codec(), entry.numel(), bytes)
+                            }
+                            None => bucket,
+                        };
+                        if tx_feed.send((idx, staged)).is_err() {
+                            return; // downstream errored out
+                        }
+                    }
+                }
+            });
+
+            // --- upload stream: decode into device slots ------------------
+            s.spawn({
+                let events = &events;
+                move || {
+                    while let Ok((idx, bucket)) = rx_feed.recv() {
+                        let t_start = wall0.elapsed().as_secs_f64();
+                        let n = bucket.numel();
+                        let mut slot = vec![0.0f32; n];
+                        bucket.decode_into(&mut slot);
+                        trans.lock().unwrap().record_h2d(wire_bytes[idx], &tmodel);
+                        let t_end = wall0.elapsed().as_secs_f64();
+                        events.lock().unwrap().push(TraceEvent {
+                            stream: "upload",
+                            label: format!("U b{idx}"),
+                            start: t_start,
+                            end: t_end,
+                        });
+                        if tx_up.send(Uploaded { idx, bucket, slot, t_end }).is_err() {
+                            return; // main thread errored out
+                        }
+                    }
+                }
+            });
+
+            // --- offload stream: encode updated buckets back --------------
+            s.spawn({
+                let events = &events;
+                move || {
+                    while let Ok(mut job) = rx_off.recv() {
+                        let t_start = wall0.elapsed().as_secs_f64().max(job.t_ready);
+                        job.bucket.encode_from(&job.updated);
+                        trans.lock().unwrap().record_d2h(wire_bytes[job.idx], &tmodel);
+                        events.lock().unwrap().push(TraceEvent {
+                            stream: "offload",
+                            label: format!("O b{}", job.idx),
+                            start: t_start,
+                            end: wall0.elapsed().as_secs_f64(),
+                        });
+                        if tx_wr.send((job.idx, job.bucket)).is_err() {
+                            return;
+                        }
+                    }
+                }
+            });
+
+            // --- disk-write stream: retire spilled buckets to NVMe --------
+            let wr_handle = s.spawn({
+                let events = &events;
+                let pipe_err = &pipe_err;
+                move || -> Vec<(usize, HostBucket)> {
+                    let mut done = Vec::new();
+                    while let Ok((idx, bucket)) = rx_wr.recv() {
+                        match &tier.entries[idx] {
+                            Some(entry) => {
+                                let t_start = wall0.elapsed().as_secs_f64();
+                                if let Err(e) = tier.pool.write(entry, bucket.wire()) {
+                                    // Keep the pipeline complete (placeholder
+                                    // + token) and surface the error after
+                                    // the join instead of panicking on a
+                                    // missing block at reassembly.
+                                    let mut slot = pipe_err.lock().unwrap();
+                                    if slot.is_none() {
+                                        *slot = Some(format!(
+                                            "disk write-back of block {idx} failed: {e}"
+                                        ));
+                                    }
+                                }
+                                events.lock().unwrap().push(TraceEvent {
+                                    stream: "disk_write",
+                                    label: format!("W b{idx}"),
+                                    start: t_start,
+                                    end: wall0.elapsed().as_secs_f64(),
+                                });
+                                tier.window.release(entry.wire_len() as u64);
+                                let _ = tx_tok.send(());
+                                done.push((
+                                    idx,
+                                    HostBucket::placeholder(entry.codec(), entry.numel()),
+                                ));
+                            }
+                            None => done.push((idx, bucket)),
+                        }
+                    }
+                    done
+                }
+            });
+
+            // --- compute stream (this thread: PJRT is not Send) -----------
+            let mut hp = hp0;
+            let mut hm = hm0;
+            for _ in 0..n_blocks {
+                let up = match rx_up.recv() {
+                    Ok(up) => up,
+                    Err(_) => {
+                        let msg = pipe_err
+                            .lock()
+                            .unwrap()
+                            .take()
+                            .unwrap_or_else(|| "upload stream died".to_string());
+                        return Err(anyhow::anyhow!("{msg}"));
+                    }
+                };
+                let n = up.slot.len();
+                let tc = wall0.elapsed().as_secs_f64();
+                let outs = self.rt.run(
+                    "block_step",
+                    &[
+                        lit_f32(&up.slot, &[n as i64])?,
+                        lit_key(key_of(prev_states[1 + up.idx]))?,
+                        gl.clone(),
+                        lr.clone(),
+                        lit_key(key_of(cur_states[1 + up.idx]))?,
+                        eps.clone(),
+                        hp,
+                        hm,
+                    ],
+                )?;
+                let mut it = outs.into_iter();
+                let updated = lit_to_f32(&it.next().unwrap())?;
+                hp = it.next().unwrap();
+                hm = it.next().unwrap();
+                let t_end = wall0.elapsed().as_secs_f64();
+                events.lock().unwrap().push(TraceEvent {
+                    stream: "compute",
+                    label: format!("C b{}", up.idx),
+                    start: tc.max(up.t_end),
+                    end: t_end,
+                });
+                tx_off
+                    .send(ToOffload { idx: up.idx, bucket: up.bucket, updated, t_ready: t_end })
+                    .map_err(|_| anyhow::anyhow!("offload stream died"))?;
+            }
+            drop(tx_off);
+            let done =
+                wr_handle.join().map_err(|_| anyhow::anyhow!("disk-write thread panicked"))?;
+            if let Some(msg) = pipe_err.lock().unwrap().take() {
+                return Err(anyhow::anyhow!("{msg}"));
+            }
+            Ok((hp, hm, done))
+        })?;
+
+        // Reassemble the host tier (spilled slots come back as placeholders;
+        // their bytes now live on the pool file).
+        let mut slots_back: Vec<Option<HostBucket>> = (0..n_blocks).map(|_| None).collect();
+        for (idx, bucket) in done_buckets {
+            slots_back[idx] = Some(bucket);
+        }
+        self.params.blocks =
+            slots_back.into_iter().map(|o| o.expect("block lost in pipeline")).collect();
+        for e in events.into_inner().unwrap() {
+            timeline.push(e);
+        }
+        Ok((hp, hm))
+    }
+
     /// Non-efficient-update ablation: standalone update round (Fig. 5a) —
     /// every block crosses the interconnect a second time.
     fn apply_update_round(&mut self, g: f32, states: &[RngState]) -> Result<()> {
@@ -447,9 +889,10 @@ impl Zo2Engine {
         self.params.embed = lit_to_f32(&out[0])?;
 
         for i in 0..self.params.n_blocks() {
-            let n = self.params.blocks[i].numel();
-            let decoded = self.params.blocks[i].to_f32();
-            let wire = self.params.blocks[i].wire_bytes() as u64;
+            let mut bucket = self.stage_block(i)?;
+            let n = bucket.numel();
+            let decoded = bucket.to_f32();
+            let wire = bucket.wire_bytes() as u64;
             self.transfers.lock().unwrap().record_h2d(wire, &self.transfer_model);
             let out = self.rt.run(
                 "update_block",
@@ -461,8 +904,9 @@ impl Zo2Engine {
                 ],
             )?;
             let updated = lit_to_f32(&out[0])?;
-            self.params.blocks[i].encode_from(&updated);
+            bucket.encode_from(&updated);
             self.transfers.lock().unwrap().record_d2h(wire, &self.transfer_model);
+            self.unstage_block(i, bucket, true)?;
         }
 
         let n_head = self.params.head.len();
@@ -501,6 +945,12 @@ impl Zo2Engine {
 
     /// Unperturbed forward on *fully-updated* parameters (flushes pending).
     pub fn eval(&mut self, ids: &[i32]) -> Result<(f32, Vec<f32>)> {
+        anyhow::ensure!(
+            self.params.n_blocks() == self.rt.manifest().config.n_layers,
+            "engine unusable: a previous pipeline error left {} of {} blocks in the store",
+            self.params.n_blocks(),
+            self.rt.manifest().config.n_layers
+        );
         self.flush_updates()?;
         let m = self.rt.manifest();
         let (b, t) = (m.config.batch as i64, m.config.seq_len as i64);
@@ -510,11 +960,14 @@ impl Zo2Engine {
             &[lit_f32(&self.params.embed, &[self.params.embed.len() as i64])?, ids_lit.clone()],
         )?;
         let mut h = out.into_iter().next().unwrap();
-        for blk in &self.params.blocks {
+        for i in 0..self.params.n_blocks() {
+            let bucket = self.stage_block(i)?;
             let out = self
                 .rt
-                .run("block_fwd", &[lit_f32(&blk.to_f32(), &[blk.numel() as i64])?, h])?;
+                .run("block_fwd", &[lit_f32(&bucket.to_f32(), &[bucket.numel() as i64])?, h])?;
             h = out.into_iter().next().unwrap();
+            // Eval never mutates parameters: return the bucket clean.
+            self.unstage_block(i, bucket, false)?;
         }
         let out = self.rt.run(
             "head_eval",

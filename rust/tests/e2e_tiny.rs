@@ -7,8 +7,24 @@ use zo2::precision::Codec;
 use zo2::runtime::Runtime;
 use zo2::zo::{RunMode, Zo2Engine, Zo2Options, ZoConfig};
 
+/// Skip (with a message) when the PJRT artifacts are absent, instead of
+/// erroring: these tests need `make artifacts` (or `$ZO2_ARTIFACTS`).
+macro_rules! require_artifacts {
+    () => {
+        if !zo2::artifacts_available("tiny") {
+            eprintln!(
+                "SKIP {}: no PJRT artifacts for config `tiny` (run `make artifacts` \
+                 or set $ZO2_ARTIFACTS)",
+                module_path!()
+            );
+            return;
+        }
+    };
+}
+
 #[test]
 fn zo2_loss_decreases_on_synthetic_corpus() {
+    require_artifacts!();
     let cfg = TrainConfig {
         config_name: "tiny".into(),
         steps: 60,
@@ -17,6 +33,7 @@ fn zo2_loss_decreases_on_synthetic_corpus() {
         wire: Codec::F32,
         run_mode: RunMode::Overlapped,
         log_every: 1000,
+        ..TrainConfig::default()
     };
     let report = train(&cfg, false).unwrap();
     let first = report.losses.points[..10].iter().map(|p| p.1).sum::<f64>() / 10.0;
@@ -32,6 +49,7 @@ fn zo2_loss_decreases_on_synthetic_corpus() {
 
 #[test]
 fn eval_is_deterministic_and_flush_idempotent() {
+    require_artifacts!();
     let rt = Runtime::load_config("tiny").unwrap();
     let m = rt.manifest();
     let mut corpus = SyntheticCorpus::new(m.config.vocab, 3);
@@ -47,6 +65,7 @@ fn eval_is_deterministic_and_flush_idempotent() {
 
 #[test]
 fn classification_pipeline_runs_and_scores() {
+    require_artifacts!();
     // Table-3 style task plumbing: train briefly on one synthetic task and
     // verify the accuracy metric is computed from last-position logits.
     let rt = Runtime::load_config("tiny").unwrap();
@@ -68,6 +87,7 @@ fn classification_pipeline_runs_and_scores() {
 
 #[test]
 fn device_capacity_is_enforced() {
+    require_artifacts!();
     // A capacity too small for even the resident modules must fail fast.
     let rt = Runtime::load_config("tiny").unwrap();
     let err = Zo2Engine::new(
@@ -80,6 +100,7 @@ fn device_capacity_is_enforced() {
 
 #[test]
 fn transfer_accounting_matches_wire_format() {
+    require_artifacts!();
     let steps = 3usize;
     for (wire, bytes_per_el) in [(Codec::F32, 4u64), (Codec::Bf16, 2), (Codec::Fp8E4M3, 1)] {
         let rt = Runtime::load_config("tiny").unwrap();

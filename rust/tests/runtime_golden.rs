@@ -27,8 +27,13 @@ fn read_u32(path: &Path) -> Vec<u32> {
 fn golden_replay_bit_exact() {
     let dir = zo2::artifacts_dir().join("tiny");
     let gdir = dir.join("golden");
-    if !gdir.is_dir() {
-        panic!("run `make artifacts` first (missing {})", gdir.display());
+    if !zo2::artifacts_available("tiny") || !gdir.is_dir() {
+        eprintln!(
+            "SKIP golden_replay_bit_exact: no golden bundle at {} (run `make artifacts` \
+             or set $ZO2_ARTIFACTS)",
+            gdir.display()
+        );
+        return;
     }
     let rt = Runtime::load(&dir).unwrap();
     rt.manifest().validate().unwrap();

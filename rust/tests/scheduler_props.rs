@@ -1,21 +1,28 @@
 //! Property tests over the dynamic scheduler (no proptest in the offline
 //! build — randomised cases come from the crate's own deterministic RNG).
 //!
-//! Invariants checked across random (n_blocks, steps, durations, policies):
+//! Invariants checked across random (n_blocks, steps, durations, policies),
+//! including three-tier policies with random spill counts and DRAM windows:
 //!  1. dependency safety: no task starts before any dependency ends;
-//!  2. stream exclusivity: tasks on one stream never overlap;
+//!  2. stream exclusivity: tasks on one stream never overlap (all five);
 //!  3. overlap dominance: the dynamic schedule is never slower than naive;
 //!  4. critical-path lower bounds hold;
-//!  5. slot safety: at most `slots` blocks in flight at any instant.
+//!  5. slot safety: at most `slots` blocks in flight at any instant;
+//!  6. chain safety: spilled blocks run R(Wᵢ)→U(Wᵢ)→C(Wᵢ)→O(Wᵢ)→W(Wᵢ);
+//!  7. window safety: at most `dram_slots` spilled buckets staged at once.
 
 use zo2::rng::GaussianRng;
-use zo2::sched::{build_plan, simulate, CostProvider, Module, Policy, Stream, TaskKind};
+use zo2::sched::{
+    build_plan, simulate, CostProvider, Module, Policy, Stream, TaskKind, Tiering, ALL_STREAMS,
+};
 
 struct RandCosts {
     up: f64,
     off: f64,
     comp: f64,
     upd: f64,
+    read: f64,
+    write: f64,
 }
 
 impl CostProvider for RandCosts {
@@ -31,6 +38,12 @@ impl CostProvider for RandCosts {
     fn update_s(&self) -> f64 {
         self.upd
     }
+    fn disk_read_s(&self) -> f64 {
+        self.read
+    }
+    fn disk_write_s(&self) -> f64 {
+        self.write
+    }
 }
 
 fn rand_case(rng: &mut GaussianRng) -> (usize, usize, RandCosts, Policy) {
@@ -41,12 +54,19 @@ fn rand_case(rng: &mut GaussianRng) -> (usize, usize, RandCosts, Policy) {
         off: 0.01 + rng.next_uniform() * 2.0,
         comp: 0.01 + rng.next_uniform() * 4.0,
         upd: 0.01 + rng.next_uniform() * 0.5,
+        read: 0.01 + rng.next_uniform() * 3.0,
+        write: 0.01 + rng.next_uniform() * 3.0,
     };
+    // Half the cases are three-tier with a random spill count and window.
+    let three = rng.next_below(2) == 0;
     let policy = Policy {
         overlap: true,
         reusable_mem: rng.next_below(2) == 0,
         efficient_update: rng.next_below(2) == 0,
         slots: 1 + rng.next_below(4) as usize,
+        tiering: if three { Tiering::ThreeTier } else { Tiering::TwoTier },
+        spilled: if three { rng.next_below(1 + n_blocks as u64) as usize } else { 0 },
+        dram_slots: 1 + rng.next_below(4) as usize,
     };
     (n_blocks, steps, costs, policy)
 }
@@ -69,7 +89,7 @@ fn dependencies_and_stream_exclusivity_hold() {
                 );
             }
         }
-        for s in [Stream::Upload, Stream::Compute, Stream::Offload] {
+        for s in ALL_STREAMS {
             let mut ivals: Vec<(f64, f64)> = plan
                 .iter()
                 .filter(|t| t.stream == s)
@@ -87,9 +107,9 @@ fn dependencies_and_stream_exclusivity_hold() {
 fn overlap_never_loses_to_naive() {
     let mut rng = GaussianRng::new(7, 1);
     for case in 0..40 {
-        let (n, steps, costs, _) = rand_case(&mut rng);
-        let dynamic = Policy::default();
-        let naive = Policy::naive();
+        let (n, steps, costs, policy) = rand_case(&mut rng);
+        let dynamic = Policy { overlap: true, ..policy };
+        let naive = Policy { overlap: false, ..policy };
         let (sd, _) = simulate(&build_plan(n, steps, dynamic), &costs, dynamic);
         let (sn, _) = simulate(&build_plan(n, steps, naive), &costs, naive);
         assert!(
@@ -117,12 +137,18 @@ fn critical_path_lower_bounds() {
                 TaskKind::Update => costs.update_s(),
                 TaskKind::Upload => costs.upload_s() + if policy.reusable_mem { 0.0 } else { costs.malloc_s() },
                 TaskKind::Offload => costs.offload_s(),
+                TaskKind::DiskRead => costs.disk_read_s(),
+                TaskKind::DiskWrite => costs.disk_write_s(),
             })
             .sum();
         assert!(sched.makespan >= compute_total - 1e-9);
-        // Per-block chain U→C→O is a lower bound too.
+        // Per-block chain U→C→O is a lower bound too (R+…+W for spilled).
         let chain = costs.upload_s() + costs.compute_s(Module::Block(0)) + costs.offload_s();
         assert!(sched.makespan >= chain - 1e-9);
+        if policy.spilled > 0 && policy.tiering == Tiering::ThreeTier {
+            let full_chain = costs.disk_read_s() + chain + costs.disk_write_s();
+            assert!(sched.makespan >= full_chain - 1e-9, "five-task chain bound");
+        }
     }
 }
 
@@ -152,18 +178,7 @@ fn slot_ring_bounds_in_flight_blocks() {
                 }
             }
         }
-        let mut events: Vec<(f64, i32)> = Vec::new();
-        for (a, b) in &intervals {
-            events.push((*a, 1));
-            events.push((*b, -1));
-        }
-        events.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
-        let mut cur = 0;
-        let mut peak = 0;
-        for (_, d) in events {
-            cur += d;
-            peak = peak.max(cur);
-        }
+        let peak = max_overlap(&intervals);
         assert!(
             peak as usize <= policy.slots.max(1),
             "{peak} blocks in flight with {} slots",
@@ -172,9 +187,121 @@ fn slot_ring_bounds_in_flight_blocks() {
     }
 }
 
+/// Max number of simultaneously-open intervals.
+fn max_overlap(intervals: &[(f64, f64)]) -> i32 {
+    let mut events: Vec<(f64, i32)> = Vec::new();
+    for (a, b) in intervals {
+        events.push((*a, 1));
+        events.push((*b, -1));
+    }
+    events.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+    let mut cur = 0;
+    let mut peak = 0;
+    for (_, d) in events {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    peak
+}
+
+#[test]
+fn spilled_blocks_have_full_chain_in_order() {
+    // Rule 6: for every spilled block round, R → U → C → O → W hold as
+    // *scheduled times*, not just as declared deps.
+    let mut rng = GaussianRng::new(41, 4);
+    for case in 0..40 {
+        let (n, steps, costs, mut policy) = rand_case(&mut rng);
+        policy.tiering = Tiering::ThreeTier;
+        policy.spilled = 1 + rng.next_below(n as u64) as usize;
+        let plan = build_plan(n, steps, policy);
+        let (sched, _) = simulate(&plan, &costs, policy);
+        for r in plan.iter().filter(|t| t.kind == TaskKind::DiskRead) {
+            let (i, step) = match r.module {
+                Module::Block(i) => (i, r.step),
+                _ => unreachable!("disk reads are per-block"),
+            };
+            // Find the chain members of the same round (first with id > r.id).
+            let mut chain_end = sched.end[r.id];
+            for kind in [TaskKind::Upload, TaskKind::Compute, TaskKind::Offload, TaskKind::DiskWrite] {
+                let next = plan
+                    .iter()
+                    .find(|t| {
+                        t.id > r.id
+                            && t.step == step
+                            && t.module == Module::Block(i)
+                            && (t.kind == kind
+                                || (kind == TaskKind::Compute && t.kind == TaskKind::Update))
+                    })
+                    .unwrap_or_else(|| panic!("case {case}: missing {kind:?} after R(W{i})"));
+                assert!(
+                    sched.start[next.id] >= chain_end - 1e-12,
+                    "case {case}: {kind:?} of W{i} starts before previous chain task ends"
+                );
+                chain_end = sched.end[next.id];
+            }
+        }
+    }
+}
+
+#[test]
+fn per_stream_fifo_is_structural() {
+    // Rule 2 strengthened: on every stream, declared FIFO deps force start
+    // times to follow issue order exactly.
+    let mut rng = GaussianRng::new(17, 5);
+    for _ in 0..30 {
+        let (n, steps, costs, policy) = rand_case(&mut rng);
+        let plan = build_plan(n, steps, policy);
+        let (sched, _) = simulate(&plan, &costs, policy);
+        for s in ALL_STREAMS {
+            let ids: Vec<usize> =
+                plan.iter().filter(|t| t.stream == s).map(|t| t.id).collect();
+            for w in ids.windows(2) {
+                assert!(
+                    sched.start[w[1]] >= sched.end[w[0]] - 1e-12,
+                    "stream {s:?}: issue order {} -> {} violated",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dram_window_never_exceeds_slot_count() {
+    // Rule 7: a spilled bucket occupies a staging slot from R start to W
+    // end; the max overlap of those intervals is bounded by dram_slots in
+    // every simulated schedule.
+    let mut rng = GaussianRng::new(23, 6);
+    for case in 0..40 {
+        let (n, steps, costs, mut policy) = rand_case(&mut rng);
+        policy.tiering = Tiering::ThreeTier;
+        policy.spilled = 1 + rng.next_below(n as u64) as usize;
+        let plan = build_plan(n, steps, policy);
+        let (sched, _) = simulate(&plan, &costs, policy);
+        let mut intervals: Vec<(f64, f64)> = Vec::new();
+        for r in plan.iter().filter(|t| t.kind == TaskKind::DiskRead) {
+            let w = plan
+                .iter()
+                .find(|t| {
+                    t.id > r.id && t.kind == TaskKind::DiskWrite && t.module == r.module
+                        && t.step == r.step
+                })
+                .expect("every R has a matching W");
+            intervals.push((sched.start[r.id], sched.end[w.id]));
+        }
+        let peak = max_overlap(&intervals);
+        assert!(
+            peak as usize <= policy.dram_slots.max(1),
+            "case {case}: {peak} staged buckets with a {}-slot DRAM window",
+            policy.dram_slots
+        );
+    }
+}
+
 #[test]
 fn efficient_update_halves_interconnect_busy_time() {
-    let costs = RandCosts { up: 1.0, off: 1.0, comp: 0.5, upd: 0.05 };
+    let costs = RandCosts { up: 1.0, off: 1.0, comp: 0.5, upd: 0.05, read: 0.2, write: 0.2 };
     let base = Policy::default();
     let noeff = Policy { efficient_update: false, ..base };
     let (s1, _) = simulate(&build_plan(8, 2, base), &costs, base);

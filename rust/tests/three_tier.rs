@@ -1,0 +1,190 @@
+//! Three-tier (HBM / DDR / NVMe) acceptance tests.
+//!
+//! Real-execution half (needs `make artifacts`): moving block master copies
+//! to the disk tier must not change the math — two-tier and three-tier
+//! engines produce bit-identical loss trajectories and final parameters
+//! (the §5.1 RNG-replay argument extended one tier down).
+//!
+//! Analytic half (always runs): an OPT-175B fp16 config on an
+//! 18 GB-HBM / 64 GB-DRAM workstation fits every tier budget, and with
+//! ample DRAM the three-tier schedule's throughput is within 25% of the
+//! two-tier schedule (it degenerates to it).
+
+use zo2::costmodel::{
+    plan_three_tier, two_tier_dram_bytes, ComputeMode, Hardware, MemoryBudget, SimCost, Workload,
+};
+use zo2::model::opt_by_name;
+use zo2::precision::Codec;
+use zo2::runtime::Runtime;
+use zo2::sched::{build_plan, simulate, Policy, Tiering};
+use zo2::zo::{RunMode, Zo2Engine, Zo2Options, ZoConfig};
+
+macro_rules! require_artifacts {
+    () => {
+        if !zo2::artifacts_available("tiny") {
+            eprintln!(
+                "SKIP {}: no PJRT artifacts for config `tiny` (run `make artifacts` \
+                 or set $ZO2_ARTIFACTS)",
+                module_path!()
+            );
+            return;
+        }
+    };
+}
+
+const STEPS: usize = 5;
+
+fn cfg() -> ZoConfig {
+    ZoConfig { lr: 1e-3, eps: 1e-3, seed: 77 }
+}
+
+fn run(opts: Zo2Options) -> (Vec<(f32, f32)>, Vec<f32>) {
+    let rt = Runtime::load_config("tiny").unwrap();
+    let m = rt.manifest();
+    let mut corpus = zo2::data::SyntheticCorpus::new(m.config.vocab, 31);
+    let data: Vec<Vec<i32>> =
+        (0..STEPS).map(|_| corpus.sample(m.config.batch, m.config.seq_len).ids).collect();
+    let mut e = Zo2Engine::new(rt, cfg(), opts).unwrap();
+    let mut losses = Vec::new();
+    for ids in &data {
+        let s = e.train_step(ids).unwrap();
+        losses.push((s.loss_plus, s.loss_minus));
+    }
+    e.flush_updates().unwrap();
+    (losses, e.flat_params().unwrap())
+}
+
+fn assert_bit_equal(a: &[(f32, f32)], pa: &[f32], b: &[(f32, f32)], pb: &[f32], what: &str) {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{what}: step {i} loss+");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{what}: step {i} loss-");
+    }
+    assert_eq!(pa.len(), pb.len(), "{what}: param count");
+    let diffs = pa.iter().zip(pb).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+    assert_eq!(diffs, 0, "{what}: {diffs}/{} params differ bitwise", pa.len());
+}
+
+#[test]
+fn three_tier_is_bit_identical_to_two_tier() {
+    require_artifacts!();
+    let (l2, p2) = run(Zo2Options::default());
+    for (resident, label) in [(0usize, "all spilled"), (1, "partial spill")] {
+        for mode in [RunMode::Sequential, RunMode::Overlapped] {
+            let (l3, p3) = run(Zo2Options {
+                tiering: Tiering::ThreeTier,
+                dram_resident_blocks: resident,
+                dram_slots: 2,
+                run_mode: mode,
+                ..Zo2Options::default()
+            });
+            assert_bit_equal(&l2, &p2, &l3, &p3, &format!("{label} / {mode:?}"));
+        }
+    }
+}
+
+#[test]
+fn three_tier_disk_traffic_and_window_are_accounted() {
+    require_artifacts!();
+    let rt = Runtime::load_config("tiny").unwrap();
+    let m = rt.manifest();
+    let n_blocks = m.config.n_layers;
+    let block_bytes = (m.block.size * 4) as u64;
+    let mut corpus = zo2::data::SyntheticCorpus::new(m.config.vocab, 31);
+    let ids = corpus.sample(m.config.batch, m.config.seq_len).ids;
+    let mut e = Zo2Engine::new(
+        rt,
+        cfg(),
+        Zo2Options {
+            tiering: Tiering::ThreeTier,
+            dram_resident_blocks: 0,
+            dram_slots: 2,
+            run_mode: RunMode::Overlapped,
+            ..Zo2Options::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(e.spilled_blocks(), n_blocks);
+    assert_eq!(e.disk_used_bytes(), n_blocks as u64 * block_bytes);
+    let steps = 3u64;
+    for _ in 0..steps {
+        e.train_step(&ids).unwrap();
+    }
+    let (r, w) = e.disk_stats().unwrap();
+    // Initial spill writes + one write-back per block per step; one read
+    // per block per step.
+    assert_eq!(r.bytes, steps * n_blocks as u64 * block_bytes, "NVMe read traffic");
+    assert_eq!(w.bytes, (steps + 1) * n_blocks as u64 * block_bytes, "NVMe write traffic");
+    let peak = e.dram_window_peak_slots();
+    assert!(peak >= 1 && peak <= 2, "staging window peak {peak} must respect 2 slots");
+}
+
+#[test]
+fn opt175b_fits_64gb_workstation_and_ample_dram_matches_two_tier() {
+    let hw = Hardware::a100_pcie4();
+    let shape = opt_by_name("OPT-175B").unwrap();
+    let wl = Workload { shape, batch: 1, seq: 2048, wire: Codec::Fp16, compute: ComputeMode::Fp16 };
+    let costs = SimCost::new(&hw, &wl);
+    let sim_steps = 3;
+
+    // Two-tier reference (would need ~700 GB of DRAM for fp32, ~350 for
+    // fp16 — far beyond the workstation).
+    let two = Policy::default();
+    let (s2, _) = simulate(&build_plan(wl.shape.n_layers, sim_steps, two), &costs, two);
+
+    // 18 GB HBM / 64 GB DRAM workstation: every tier peak within budget.
+    let budget = MemoryBudget::workstation_64gb();
+    assert!(two_tier_dram_bytes(&wl) > budget.dram, "two-tier must not fit this box");
+    let plan = plan_three_tier(&wl, &budget, 3, 4, 2, &hw);
+    assert!(plan.spilled_blocks > 0);
+    assert!(budget.fits(&plan.peaks), "peaks {:?} vs budget {:?}", plan.peaks, budget);
+    let policy = plan.policy();
+    assert_eq!(policy.tiering, Tiering::ThreeTier);
+    let (s3, _) = simulate(&build_plan(wl.shape.n_layers, sim_steps, policy), &costs, policy);
+    assert!(
+        s3.steady_step_s >= s2.steady_step_s - 1e-9,
+        "the disk tier cannot be faster than DDR"
+    );
+    // The diagnosis must name the disk as the constraint on this box.
+    assert_eq!(s3.bottleneck(), "disk-bound");
+
+    // Ample DRAM (512 GB): nothing spills, schedule degenerates to
+    // two-tier, throughput within 25%.
+    let ample = MemoryBudget { hbm: budget.hbm, dram: 512 << 30, nvme: budget.nvme };
+    let plan = plan_three_tier(&wl, &ample, 3, 4, 2, &hw);
+    assert_eq!(plan.spilled_blocks, 0, "512 GB holds every fp16 bucket");
+    let policy = plan.policy();
+    let (sa, _) = simulate(&build_plan(wl.shape.n_layers, sim_steps, policy), &costs, policy);
+    assert!(
+        sa.steady_step_s <= s2.steady_step_s * 1.25,
+        "ample-DRAM three-tier {} vs two-tier {} exceeds 25%",
+        sa.steady_step_s,
+        s2.steady_step_s
+    );
+}
+
+#[test]
+fn throughput_recovers_monotonically_with_dram_budget() {
+    // Sweeping the DRAM budget up must never hurt: fewer spills, faster
+    // (or equal) steady-state step time.
+    let hw = Hardware::a100_pcie4();
+    let shape = opt_by_name("OPT-66B").unwrap();
+    let wl = Workload { shape, batch: 1, seq: 2048, wire: Codec::Fp16, compute: ComputeMode::Fp16 };
+    let costs = SimCost::new(&hw, &wl);
+    let mut last = f64::INFINITY;
+    let mut spills = Vec::new();
+    for gb in [16u64, 32, 64, 128, 256] {
+        let budget = MemoryBudget { hbm: 18 << 30, dram: gb << 30, nvme: 2 << 40 };
+        let plan = plan_three_tier(&wl, &budget, 3, 4, 2, &hw);
+        let policy = plan.policy();
+        let (s, _) = simulate(&build_plan(wl.shape.n_layers, 3, policy), &costs, policy);
+        assert!(
+            s.steady_step_s <= last + 1e-9,
+            "more DRAM ({gb} GB) must not be slower: {} > {last}",
+            s.steady_step_s
+        );
+        last = s.steady_step_s;
+        spills.push(plan.spilled_blocks);
+    }
+    assert!(spills.windows(2).all(|w| w[1] <= w[0]), "spill count falls with DRAM: {spills:?}");
+    assert!(spills[0] > spills[4], "the sweep must actually vary placement: {spills:?}");
+}
