@@ -17,11 +17,15 @@ use zo2::costmodel::{
     gpu_memory_bytes, mezo_step_s, plan_three_tier, two_tier_dram_bytes, ComputeMode, Hardware,
     MemoryBudget, SimCost, Strategy, Workload,
 };
+use zo2::hostpool::{fused, HostPool};
 use zo2::model::{opt_by_name, opt_family, ModelShape};
 use zo2::precision::Codec;
+use zo2::rng::{GaussianRng, RngState};
 use zo2::sched::{build_plan, simulate, Policy};
 use zo2::util::fmt_mb;
 use zo2::util::json::Json;
+use zo2::util::stats::bench;
+use zo2::zo::{cpu_zo_sgd_update, ZScratch};
 
 const SIM_STEPS: usize = 4;
 
@@ -408,6 +412,128 @@ fn table_disk_tier(hw: &Hardware) {
     }
 }
 
+/// Tentpole bench: host-kernel throughput per codec — scalar three-pass
+/// (decode → update → encode) vs the fused single pass vs fused+pool at
+/// 1/2/4/8 threads.  Writes `BENCH_host_kernels.json`, including the
+/// per-thread GB/s constants that calibrate `costmodel::HostKernels`.
+/// `ZO2_HOST_KERNEL_ELEMS` overrides the bucket size (CI smoke uses a tiny
+/// one).  Every variant is asserted bit-identical before timing.
+fn table_host_kernels(_hw: &Hardware) {
+    let elems: usize = std::env::var("ZO2_HOST_KERNEL_ELEMS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 22);
+    println!("\n=== Host kernels: fused decode->update->encode throughput ({elems} elems) ===");
+    println!(
+        "{:>5} | {:>12} {:>12} | {:>9} {:>9} {:>9} {:>9} | {:>8}",
+        "codec", "scalar GB/s", "fused GB/s", "p1", "p2", "p4", "p8", "f+p8/s"
+    );
+
+    let mut xs = vec![0.0f32; elems];
+    GaussianRng::new(2025, 1).fill_gaussian(&mut xs);
+    for x in xs.iter_mut() {
+        *x *= 0.02; // parameter-scale values (fp8-representable)
+    }
+    let state = RngState { seed: 9, stream: 4, counter: 0 };
+    let (lr, g) = (1e-4f32, 0.8f32);
+    let gbs = |t: f64| (elems * 4) as f64 / t / 1e9;
+    let thread_counts = [1usize, 2, 4, 8];
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut calib = BTreeMap::new();
+    for codec in [Codec::F32, Codec::Bf16, Codec::Fp16, Codec::Fp8E4M3] {
+        let wire0 = codec.encode(&xs);
+
+        // Bit-identity check: fused+pool == scalar composition, once.
+        {
+            let mut want_f32 = codec.decode(&wire0, elems);
+            let mut zs = ZScratch::new();
+            cpu_zo_sgd_update(&mut want_f32, state, lr, g, &mut zs);
+            let want = codec.encode(&want_f32);
+            let pool = HostPool::new(8);
+            let mut got = wire0.clone();
+            fused::fused_zo_sgd(codec, &mut got, elems, state, lr, g, &pool);
+            assert_eq!(got, want, "{codec:?}: fused+pool must be bit-identical");
+        }
+
+        // Scalar baseline: three passes + a bucket-sized fp32 intermediate.
+        let mut bytes = wire0.clone();
+        let mut tmp = vec![0.0f32; elems];
+        let mut zs = ZScratch::new();
+        let scalar = bench(1, 5, || {
+            codec.decode_into(&bytes, &mut tmp);
+            cpu_zo_sgd_update(&mut tmp, state, lr, g, &mut zs);
+            codec.encode_into(&tmp, &mut bytes);
+        })
+        .percentile(50.0);
+
+        // Fused single pass, serial (fusion win without the pool).
+        let mut bytes = wire0.clone();
+        let serial_pool = HostPool::new(1);
+        let fused_1 = bench(1, 5, || {
+            fused::fused_zo_sgd(codec, &mut bytes, elems, state, lr, g, &serial_pool);
+        })
+        .percentile(50.0);
+
+        // Fused + pool across thread counts.
+        let mut pooled = Vec::new();
+        for &threads in &thread_counts {
+            let pool = HostPool::new(threads);
+            let mut bytes = wire0.clone();
+            let t = bench(1, 5, || {
+                fused::fused_zo_sgd(codec, &mut bytes, elems, state, lr, g, &pool);
+            })
+            .percentile(50.0);
+            pooled.push(t);
+        }
+        let best = pooled.last().copied().unwrap_or(fused_1);
+        println!(
+            "{:>5} | {:>12.2} {:>12.2} | {:>9.2} {:>9.2} {:>9.2} {:>9.2} | {:>7.2}x",
+            codec.name(),
+            gbs(scalar),
+            gbs(fused_1),
+            gbs(pooled[0]),
+            gbs(pooled[1]),
+            gbs(pooled[2]),
+            gbs(pooled[3]),
+            scalar / best
+        );
+
+        let mut row = BTreeMap::new();
+        row.insert("codec".to_string(), Json::Str(codec.name().to_string()));
+        row.insert("elems".to_string(), Json::Num(elems as f64));
+        row.insert("scalar_gbps".to_string(), Json::Num(gbs(scalar)));
+        row.insert("fused_serial_gbps".to_string(), Json::Num(gbs(fused_1)));
+        for (i, &threads) in thread_counts.iter().enumerate() {
+            row.insert(format!("fused_pool{threads}_gbps"), Json::Num(gbs(pooled[i])));
+        }
+        row.insert(
+            "speedup_fused_pool8_vs_scalar".to_string(),
+            Json::Num(scalar / best),
+        );
+        rows.push(Json::Obj(row));
+        // Calibration constant: per-thread rate of the serial fused pass
+        // (what `costmodel::HostKernels` consumes, × threads).
+        calib.insert(
+            format!("{}_bytes_per_s_per_thread", codec.name()),
+            Json::Num(gbs(fused_1) * 1e9),
+        );
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("host_kernels".to_string()));
+    doc.insert("elems".to_string(), Json::Num(elems as f64));
+    doc.insert("rows".to_string(), Json::Arr(rows));
+    doc.insert("calibration".to_string(), Json::Obj(calib));
+    let path = "BENCH_host_kernels.json";
+    match std::fs::write(path, Json::Obj(doc).to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+    println!("(target: fused+pool at 8 threads >= 4x scalar for the low-bit codecs;");
+    println!(" feed the calibration block back into costmodel::HostKernels::calibrated)");
+}
+
 fn main() {
     let filter = std::env::args().nth(1).unwrap_or_default();
     let hw = Hardware::a100_pcie4();
@@ -443,6 +569,9 @@ fn main() {
     }
     if run("disk_tier") {
         table_disk_tier(&hw);
+    }
+    if run("host_kernels") {
+        table_host_kernels(&hw);
     }
     println!("\n(Table 3 is regenerated by `cargo run --release --example accuracy_parity`");
     println!(" and asserted bit-exactly by `cargo test --test parity`.)");

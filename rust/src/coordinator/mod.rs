@@ -8,7 +8,9 @@ use crate::data::SyntheticCorpus;
 use crate::precision::Codec;
 use crate::runtime::Runtime;
 use crate::telemetry::Series;
-use crate::zo::{MezoEngine, RunMode, StepStats, Tiering, Zo2Engine, Zo2Options, ZoConfig};
+use crate::zo::{
+    MezoEngine, RunMode, StepStats, Tiering, UpdateSite, Zo2Engine, Zo2Options, ZoConfig,
+};
 
 /// Which engine backs the trainer.
 pub enum Engine {
@@ -64,6 +66,11 @@ pub struct TrainConfig {
     pub dram_budget_bytes: Option<u64>,
     /// Staging-window slots for spilled buckets.
     pub dram_slots: usize,
+    /// Where the deferred block update runs (device §5.4, or fused on the
+    /// host compute pool).
+    pub update_site: UpdateSite,
+    /// Host compute pool threads (0 = machine parallelism).
+    pub host_threads: usize,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -85,6 +92,8 @@ impl Default for TrainConfig {
             tiering: Tiering::TwoTier,
             dram_budget_bytes: None,
             dram_slots: 4,
+            update_site: UpdateSite::Device,
+            host_threads: 0,
         }
     }
 }
@@ -139,6 +148,8 @@ pub fn build_engine(cfg: &TrainConfig) -> Result<Engine> {
                     tiering: cfg.tiering,
                     dram_slots: cfg.dram_slots,
                     dram_resident_blocks,
+                    update_site: cfg.update_site,
+                    host_threads: cfg.host_threads,
                     ..Zo2Options::default()
                 },
             )?)

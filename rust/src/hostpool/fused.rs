@@ -1,0 +1,227 @@
+//! Fused, pooled chunk kernels over encoded host buckets.
+//!
+//! The unfused host path of a deferred CPU-side update is three full passes
+//! over the bucket — decode the wire bytes to an fp32 scratch, update the
+//! scratch, encode it back — which costs 3× the memory traffic and a
+//! bucket-sized fp32 intermediate.  The kernels here do all three steps in
+//! a single pass per cache-blocked chunk: each element is decoded, updated
+//! and re-encoded while it is hot in registers, so the low-bit master copy
+//! is updated **without ever expanding to fp32 in memory** (the
+//! quantized-ZO argument, arXiv 2505.13430).
+//!
+//! Every kernel is elementwise over the fixed chunk grid of
+//! [`super::CHUNK_ELEMS`], which is what makes the pooled results
+//! bit-identical to the scalar reference at any thread count — see the
+//! determinism contract in the module docs of [`super`] and DESIGN.md.
+
+use crate::precision::{bf16_to_f32, f32_to_bf16, f32_to_fp8_e4m3, Codec};
+use crate::rng::{GaussianRng, RngState};
+
+use super::{HostPool, SlicePtr, CHUNK_ELEMS};
+
+/// RNG state replaying the draw for elements `start..` of a bucket whose
+/// draw starts at `state`.  Valid only for even `start` (one counter tick
+/// yields a Box–Muller pair), which the chunk grid guarantees.
+#[inline]
+pub(crate) fn offset_state(state: RngState, start: usize) -> RngState {
+    debug_assert_eq!(start % 2, 0, "chunk starts must be pair-aligned");
+    RngState { counter: state.counter + (start / 2) as u64, ..state }
+}
+
+/// Fill `z` with the replayed Gaussian draw for elements
+/// `start..start + z.len()` — bit-identical to the corresponding range of a
+/// contiguous whole-bucket fill.
+#[inline]
+pub(crate) fn fill_z_chunk(state: RngState, start: usize, z: &mut [f32]) {
+    GaussianRng::from_state(offset_state(state, start)).fill_gaussian(z);
+}
+
+/// Map `f(i, w) → w′` over every element of one encoded chunk, decoding and
+/// re-encoding in place.  The codec dispatch happens once per chunk, so the
+/// inner loops stay branch-free (fp16 through the precision tables).
+#[inline]
+pub(crate) fn map_wire_chunk(
+    codec: Codec,
+    bytes: &mut [u8],
+    len: usize,
+    mut f: impl FnMut(usize, f32) -> f32,
+) {
+    debug_assert_eq!(bytes.len(), len * codec.bytes_per_el());
+    match codec {
+        Codec::F32 => {
+            for (i, c) in bytes.chunks_exact_mut(4).enumerate().take(len) {
+                let w = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                c.copy_from_slice(&f(i, w).to_le_bytes());
+            }
+        }
+        Codec::Bf16 => {
+            for (i, c) in bytes.chunks_exact_mut(2).enumerate().take(len) {
+                let w = bf16_to_f32(u16::from_le_bytes([c[0], c[1]]));
+                c.copy_from_slice(&f32_to_bf16(f(i, w)).to_le_bytes());
+            }
+        }
+        Codec::Fp16 => {
+            for (i, c) in bytes.chunks_exact_mut(2).enumerate().take(len) {
+                let w = crate::precision::fp16_to_f32_lut(u16::from_le_bytes([c[0], c[1]]));
+                c.copy_from_slice(&crate::precision::f32_to_fp16_tab(f(i, w)).to_le_bytes());
+            }
+        }
+        Codec::Fp8E4M3 => {
+            for (i, b) in bytes.iter_mut().enumerate().take(len) {
+                let w = crate::precision::fp8_e4m3_to_f32_lut(*b);
+                *b = f32_to_fp8_e4m3(f(i, w));
+            }
+        }
+    }
+}
+
+/// Pooled whole-bucket decode — bit-identical to [`Codec::decode_into`] at
+/// any thread count (disjoint chunks, same per-element conversion).
+pub fn decode_pooled(codec: Codec, src: &[u8], out: &mut [f32], pool: &HostPool) {
+    let n = out.len();
+    assert_eq!(src.len(), n * codec.bytes_per_el(), "payload size mismatch");
+    let bpe = codec.bytes_per_el();
+    let outp = SlicePtr::new(out);
+    pool.for_chunks(n, |_, start, len| {
+        // Safety: chunk ranges are disjoint by construction.
+        let dst = unsafe { std::slice::from_raw_parts_mut(outp.at(start), len) };
+        codec.decode_chunk(&src[start * bpe..(start + len) * bpe], dst);
+    });
+}
+
+/// Pooled whole-bucket encode into an exactly-sized wire buffer —
+/// bit-identical to [`Codec::encode_into`]'s payload at any thread count.
+pub fn encode_pooled(codec: Codec, src: &[f32], out: &mut [u8], pool: &HostPool) {
+    let n = src.len();
+    assert_eq!(out.len(), n * codec.bytes_per_el(), "payload size mismatch");
+    let bpe = codec.bytes_per_el();
+    let outp = SlicePtr::new(out);
+    pool.for_chunks(n, |_, start, len| {
+        // Safety: chunk byte ranges are disjoint by construction.
+        let dst = unsafe { std::slice::from_raw_parts_mut(outp.at(start * bpe), len * bpe) };
+        codec.encode_chunk(&src[start..start + len], dst);
+    });
+}
+
+/// Fused ZO-SGD on an encoded bucket: one pass of
+/// `w ← w − (lr·g)·z` in the wire domain, `z` replayed per chunk from
+/// `state`.  Bit-identical to the three-pass composition
+/// decode → [`crate::zo::cpu_zo_sgd_update`] → encode, at any thread count.
+pub fn fused_zo_sgd(
+    codec: Codec,
+    wire: &mut [u8],
+    numel: usize,
+    state: RngState,
+    lr: f32,
+    g: f32,
+    pool: &HostPool,
+) {
+    assert_eq!(wire.len(), numel * codec.bytes_per_el(), "payload size mismatch");
+    let scale = lr * g;
+    let bpe = codec.bytes_per_el();
+    let wp = SlicePtr::new(wire);
+    pool.for_chunks(numel, |_, start, len| {
+        // Safety: chunk byte ranges are disjoint by construction.
+        let bytes = unsafe { std::slice::from_raw_parts_mut(wp.at(start * bpe), len * bpe) };
+        let mut z = [0.0f32; CHUNK_ELEMS];
+        let z = &mut z[..len];
+        fill_z_chunk(state, start, z);
+        // Same op order as the scalar reference: mul, then sub.
+        map_wire_chunk(codec, bytes, len, |i, w| w - scale * z[i]);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut xs = vec![0.0f32; n];
+        GaussianRng::new(seed, 0).fill_gaussian(&mut xs);
+        for x in xs.iter_mut() {
+            *x *= 0.02; // parameter-scale values, representable in fp8
+        }
+        xs
+    }
+
+    #[test]
+    fn chunked_z_equals_contiguous_fill() {
+        let state = RngState { seed: 3, stream: 9, counter: 40 };
+        let n = 2 * CHUNK_ELEMS + 1001; // odd tail in the last chunk
+        let mut whole = vec![0.0f32; n];
+        GaussianRng::from_state(state).fill_gaussian(&mut whole);
+        let mut start = 0;
+        while start < n {
+            let len = CHUNK_ELEMS.min(n - start);
+            let mut z = vec![0.0f32; len];
+            fill_z_chunk(state, start, &mut z);
+            assert_eq!(z, &whole[start..start + len], "chunk at {start}");
+            start += len;
+        }
+    }
+
+    #[test]
+    fn pooled_codec_roundtrip_matches_scalar() {
+        let xs = data(CHUNK_ELEMS + 777, 1);
+        let pool = HostPool::new(4);
+        for codec in [Codec::F32, Codec::Bf16, Codec::Fp16, Codec::Fp8E4M3] {
+            let scalar = codec.encode(&xs);
+            let mut pooled = vec![0u8; scalar.len()];
+            encode_pooled(codec, &xs, &mut pooled, &pool);
+            assert_eq!(pooled, scalar, "{codec:?} encode");
+            let mut back_scalar = vec![0.0f32; xs.len()];
+            codec.decode_into(&scalar, &mut back_scalar);
+            let mut back_pooled = vec![0.0f32; xs.len()];
+            decode_pooled(codec, &pooled, &mut back_pooled, &pool);
+            let same = back_scalar
+                .iter()
+                .zip(&back_pooled)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{codec:?} decode");
+        }
+    }
+
+    #[test]
+    fn fused_sgd_equals_unfused_composition() {
+        let state = RngState { seed: 11, stream: 2, counter: 7 };
+        let pool = HostPool::new(4);
+        for codec in [Codec::F32, Codec::Bf16, Codec::Fp16, Codec::Fp8E4M3] {
+            for n in [5usize, CHUNK_ELEMS, CHUNK_ELEMS + 333] {
+                let xs = data(n, 42);
+                // Reference: decode the encoded bucket, update in fp32,
+                // encode back (the three-pass path the fusion replaces).
+                let wire0 = codec.encode(&xs);
+                let mut ref_f32 = codec.decode(&wire0, n);
+                let mut z = vec![0.0f32; n];
+                GaussianRng::from_state(state).fill_gaussian(&mut z);
+                let scale = 1e-2f32 * 0.75;
+                for (w, zi) in ref_f32.iter_mut().zip(&z) {
+                    *w -= scale * zi;
+                }
+                let want = codec.encode(&ref_f32);
+                // Fused single pass.
+                let mut got = wire0.clone();
+                fused_zo_sgd(codec, &mut got, n, state, 1e-2, 0.75, &pool);
+                assert_eq!(got, want, "{codec:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sgd_is_thread_count_invariant() {
+        let state = RngState { seed: 5, stream: 0, counter: 0 };
+        let xs = data(3 * CHUNK_ELEMS + 91, 7);
+        for codec in [Codec::Bf16, Codec::Fp8E4M3] {
+            let wire0 = codec.encode(&xs);
+            let mut outs = Vec::new();
+            for threads in [1usize, 2, 8] {
+                let pool = HostPool::new(threads);
+                let mut w = wire0.clone();
+                fused_zo_sgd(codec, &mut w, xs.len(), state, 3e-3, -1.2, &pool);
+                outs.push(w);
+            }
+            assert_eq!(outs[0], outs[1], "{codec:?} 1 vs 2 threads");
+            assert_eq!(outs[0], outs[2], "{codec:?} 1 vs 8 threads");
+        }
+    }
+}

@@ -1,0 +1,357 @@
+//! Persistent host compute pool for chunked bucket kernels.
+//!
+//! ZO2's CPU-offload design (paper §5.4–5.5) puts codec conversion and the
+//! host-side optimizer arithmetic on the critical path of every offloaded
+//! block.  At paper scale those are loops over 10¹¹ elements, so the
+//! constant factor of the host kernels is a first-order term in step time
+//! (the FZOO observation: ZO wall-clock is won or lost per-step).  This
+//! module provides the execution substrate those kernels run on:
+//!
+//! * [`HostPool`] — a worker pool **spawned once per engine** (no
+//!   per-bucket thread spawn, no external deps) that executes
+//!   cache-blocked chunk jobs.  The submitting thread participates, so a
+//!   1-thread pool is exactly the serial loop.
+//! * [`fused`] — chunk kernels over encoded host buckets, including the
+//!   fused decode→ZO-update→encode pass that updates a low-bit master copy
+//!   without ever materialising a full-bucket fp32 intermediate.
+//!
+//! # Determinism contract
+//!
+//! Work is split into fixed-size chunks of [`CHUNK_ELEMS`] elements
+//! regardless of thread count.  Every kernel in [`fused`] is elementwise
+//! and writes disjoint chunk ranges, and per-chunk RNG draws are replayed
+//! from counter offsets (`counter + start/2`, valid because chunk starts
+//! are even — one Box–Muller counter tick yields two values).  Results are
+//! therefore **bit-identical for any thread count**, and identical to the
+//! unchunked scalar reference.  See DESIGN.md for why the chunk size is
+//! part of the numerics contract.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+pub mod fused;
+
+/// Elements per chunk.  Must stay **even** (Gaussian replay draws pairs per
+/// counter tick; an odd chunk start would shear the pair alignment) and is
+/// fixed independently of thread count so that chunk boundaries — and hence
+/// every per-chunk RNG replay — never depend on the execution schedule.
+/// 16 Ki f32 = 64 KiB per chunk: comfortably cache-blocked.
+pub const CHUNK_ELEMS: usize = 16 * 1024;
+
+/// One published chunk job: a borrowed closure plus claim/finish counters.
+struct Job {
+    f: RawFn,
+    n_chunks: usize,
+    /// Next unclaimed chunk index (may run past `n_chunks`).
+    next: AtomicUsize,
+    /// Finished chunk count; the job is complete when it reaches `n_chunks`.
+    done: AtomicUsize,
+    /// Set when any chunk's kernel panicked.  The panic is caught so the
+    /// job still completes (the lifetime-erased borrow in `f` must outlive
+    /// every worker access, and a dead worker must not strand the
+    /// submitter's done-wait), then re-raised on the submitting thread.
+    poisoned: AtomicBool,
+}
+
+/// Type-erased pointer to the submitter's chunk closure (the scoped-pool
+/// trick).  A raw pointer rather than a reference so that a worker briefly
+/// holding a completed job's `Arc` retains no reference-typed dangle —
+/// only [`HostPool::drain`] ever dereferences it.
+///
+/// Safety: [`HostPool::run`] does not return until `done == n_chunks`, so
+/// the pointee outlives every dereference.
+struct RawFn(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for RawFn {}
+unsafe impl Sync for RawFn {}
+
+struct Slot {
+    /// Bumped when a new job is published; workers remember the last
+    /// generation they drained so a finished job is never re-entered.
+    generation: u64,
+    job: Option<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// Persistent worker pool.  `threads` counts *participants*: the submitter
+/// always helps drain its own job, so a pool of `t` threads spawns `t − 1`
+/// workers and `HostPool::new(1)` runs everything inline.
+///
+/// Jobs from concurrent submitters are serialised (one job in flight at a
+/// time); each job already spans every worker, so serialisation conserves
+/// total throughput for the memory-bound kernels this pool exists for.
+/// Worker threads must never submit jobs themselves (the submitter lock is
+/// not re-entrant).
+pub struct HostPool {
+    shared: Arc<Shared>,
+    /// Serialises submitters.
+    turn: Mutex<()>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl HostPool {
+    /// `threads = 0` selects the machine's available parallelism.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot { generation: 0, job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || Self::worker_loop(&shared))
+            })
+            .collect();
+        Self { shared, turn: Mutex::new(()), workers, threads }
+    }
+
+    /// Total participating threads (workers + the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn worker_loop(shared: &Shared) {
+        let mut seen = 0u64;
+        loop {
+            let job: Arc<Job> = {
+                let mut slot = shared.slot.lock().unwrap();
+                loop {
+                    if slot.shutdown {
+                        return;
+                    }
+                    if slot.generation != seen {
+                        if let Some(j) = &slot.job {
+                            seen = slot.generation;
+                            break j.clone();
+                        }
+                    }
+                    slot = shared.work_cv.wait(slot).unwrap();
+                }
+            };
+            Self::drain(&job);
+            // The last chunk may have been ours: wake a waiting submitter.
+            // Lock/unlock pairs the notify with the submitter's predicate
+            // check (standard condvar discipline).
+            drop(shared.slot.lock().unwrap());
+            shared.done_cv.notify_all();
+        }
+    }
+
+    /// Claim and run chunks until the job is exhausted.  Panics in a chunk
+    /// kernel are caught and recorded: every claimed chunk is accounted in
+    /// `done` no matter what, so the submitter's completion wait always
+    /// terminates and the erased closure borrow is never outlived.
+    fn drain(job: &Job) {
+        // Safety: see `RawFn` — `run` blocks until every chunk retired.
+        let f = unsafe { &*job.f.0 };
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.n_chunks {
+                return;
+            }
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err() {
+                job.poisoned.store(true, Ordering::Release);
+            }
+            job.done.fetch_add(1, Ordering::Release);
+        }
+    }
+
+    /// Run `f(chunk_index)` for every chunk in `0..n_chunks`, in parallel
+    /// across the pool.  Blocks until every chunk has finished.  Chunks must
+    /// touch disjoint data; the chunk→range mapping is the caller's.
+    pub fn run<F: Fn(usize) + Sync>(&self, n_chunks: usize, f: F) {
+        if n_chunks == 0 {
+            return;
+        }
+        if self.workers.is_empty() || n_chunks == 1 {
+            for i in 0..n_chunks {
+                f(i);
+            }
+            return;
+        }
+        let _turn = self.turn.lock().unwrap();
+        let f_obj: &(dyn Fn(usize) + Sync) = &f;
+        // Safety: see `RawFn` — this function blocks until every chunk has
+        // finished, so the erased pointee outlives all worker dereferences.
+        // (Transmute first: a raw trait-object pointer's elided lifetime
+        // bound defaults to 'static, which a plain cast cannot satisfy.)
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f_obj) };
+        let job = Arc::new(Job {
+            f: RawFn(f_static as *const (dyn Fn(usize) + Sync)),
+            n_chunks,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+        });
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.generation += 1;
+            slot.job = Some(job.clone());
+        }
+        self.shared.work_cv.notify_all();
+        // The submitter participates instead of idling.
+        Self::drain(&job);
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            while job.done.load(Ordering::Acquire) < n_chunks {
+                slot = self.shared.done_cv.wait(slot).unwrap();
+            }
+            slot.job = None;
+        }
+        // Re-raise a caught kernel panic only after every chunk retired and
+        // all locks are released (the closure borrow is safe to drop now).
+        if job.poisoned.load(Ordering::Acquire) {
+            panic!("host pool chunk kernel panicked");
+        }
+    }
+
+    /// Run `f(chunk_index, start_elem, chunk_len)` over `len` elements split
+    /// into [`CHUNK_ELEMS`]-sized chunks (the fixed, schedule-independent
+    /// blocking every fused kernel uses).
+    pub fn for_chunks<F: Fn(usize, usize, usize) + Sync>(&self, len: usize, f: F) {
+        let n_chunks = len.div_ceil(CHUNK_ELEMS);
+        self.run(n_chunks, |c| {
+            let start = c * CHUNK_ELEMS;
+            let clen = CHUNK_ELEMS.min(len - start);
+            f(c, start, clen);
+        });
+    }
+}
+
+impl Drop for HostPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Shareable raw base pointer of a mutable slice, so pool chunks can write
+/// disjoint ranges.  Callers must guarantee range disjointness; every use
+/// in this crate derives ranges from the fixed chunk grid, which is
+/// disjoint by construction.
+pub(crate) struct SlicePtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SlicePtr<T> {}
+unsafe impl<T: Send> Sync for SlicePtr<T> {}
+
+impl<T> SlicePtr<T> {
+    pub(crate) fn new(s: &mut [T]) -> Self {
+        Self(s.as_mut_ptr())
+    }
+
+    /// Pointer to element `i`.  Safety: `i` must be within the original
+    /// slice and the caller must only form non-overlapping subslices.
+    pub(crate) unsafe fn at(&self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = HostPool::new(4);
+        for n in [0usize, 1, 2, 7, 64, 1000] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.run(n, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "n = {n}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_is_serial() {
+        let pool = HostPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicU64::new(0);
+        pool.run(100, |i| {
+            sum.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn for_chunks_covers_the_range_without_overlap() {
+        let pool = HostPool::new(3);
+        for len in [1usize, CHUNK_ELEMS - 1, CHUNK_ELEMS, CHUNK_ELEMS + 1, 3 * CHUNK_ELEMS + 17] {
+            let covered = AtomicU64::new(0);
+            let chunks = AtomicU64::new(0);
+            pool.for_chunks(len, |c, start, clen| {
+                assert_eq!(start, c * CHUNK_ELEMS);
+                assert!(start + clen <= len);
+                assert!(clen > 0);
+                covered.fetch_add(clen as u64, Ordering::SeqCst);
+                chunks.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(covered.load(Ordering::SeqCst), len as u64, "len = {len}");
+            assert_eq!(chunks.load(Ordering::SeqCst), len.div_ceil(CHUNK_ELEMS) as u64);
+        }
+    }
+
+    #[test]
+    fn back_to_back_jobs_and_concurrent_submitters() {
+        let pool = std::sync::Arc::new(HostPool::new(4));
+        // Many sequential jobs reuse the same workers without respawn.
+        for round in 0..50 {
+            let count = AtomicU64::new(0);
+            pool.run(17, |_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(count.load(Ordering::SeqCst), 17, "round {round}");
+        }
+        // Two submitters race; jobs serialise but both complete fully.
+        let p2 = pool.clone();
+        let t = std::thread::spawn(move || {
+            for _ in 0..20 {
+                let c = AtomicU64::new(0);
+                p2.run(33, |_| {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+                assert_eq!(c.load(Ordering::SeqCst), 33);
+            }
+        });
+        for _ in 0..20 {
+            let c = AtomicU64::new(0);
+            pool.run(29, |_| {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(c.load(Ordering::SeqCst), 29);
+        }
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn auto_thread_count_is_positive() {
+        let pool = HostPool::new(0);
+        assert!(pool.threads() >= 1);
+        let c = AtomicU64::new(0);
+        pool.run(8, |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 8);
+    }
+}

@@ -20,8 +20,13 @@
 //!   in two-tier mode, five (± DiskRead/DiskWrite) in three-tier mode, its
 //!   naive global-sync counterpart (ablation), and a discrete-event
 //!   simulator sharing one dependency-rule core.
-//! * [`precision`] — bf16 / fp16 / fp8(e4m3) transfer codecs (AMP, §5.5);
-//!   the disk tier stores spilled buckets in the same wire format.
+//! * [`precision`] — bf16 / fp16 / fp8(e4m3) transfer codecs (AMP, §5.5)
+//!   with table-driven hot paths and chunk-range entry points; the disk
+//!   tier stores spilled buckets in the same wire format.
+//! * [`hostpool`] — the persistent host compute pool: cache-blocked chunk
+//!   kernels over encoded buckets, including fused
+//!   decode→ZO-update→encode passes that never materialise a full-bucket
+//!   fp32 intermediate; bit-identical at any thread count.
 //! * [`zo`] — ZO-SGD math, the MeZO baseline engine (Algorithm 1) and the
 //!   ZO2 engine (Algorithms 2 + 3, deferred updates §5.4) with
 //!   [`sched::Tiering`] selecting two- or three-tier parameter placement
@@ -40,6 +45,7 @@ pub mod clock;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod hostpool;
 pub mod memory;
 pub mod model;
 pub mod precision;

@@ -19,7 +19,7 @@ use zo2::runtime::Runtime;
 use zo2::sched::{build_plan, simulate, Policy, Tiering};
 use zo2::util::cli::Args;
 use zo2::util::fmt_mb;
-use zo2::zo::{RunMode, ZoConfig};
+use zo2::zo::{RunMode, UpdateSite, ZoConfig};
 
 /// Flags that never take a value (so `zo2 run --timeline cfg.json` keeps
 /// `cfg.json` positional — see `util::cli`).
@@ -38,7 +38,8 @@ fn main() -> Result<()> {
                  \x20      [--steps N] [--lr F] [--eps F] [--seed N] [--wire fp32|bf16|fp16|fp8]\n\
                  \x20      [--mode seq|overlap] [--model OPT-13B] [--compute fp32|tf32|fp16]\n\
                  \x20      [--tiering two|three] [--dram-budget GB] [--dram-slots N]\n\
-                 \x20      [--nvme-gbps F] [--nvme-write-gbps F]"
+                 \x20      [--nvme-gbps F] [--nvme-write-gbps F] [--disk-batch N]\n\
+                 \x20      [--update-site device|cpu] [--host-threads N]"
             );
             Ok(())
         }
@@ -89,6 +90,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         tiering,
         dram_budget_bytes,
         dram_slots: args.get_usize("dram-slots", 4),
+        update_site: match args.get_or("update-site", "device").as_str() {
+            "device" | "gpu" => UpdateSite::Device,
+            "cpu" | "host" => UpdateSite::Cpu,
+            s => bail!("unknown update site `{s}` (expected device|cpu)"),
+        },
+        host_threads: args.get_usize("host-threads", 0),
     };
     let report = train(&cfg, true)?;
     println!(
@@ -135,6 +142,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         reusable_mem: !args.has("no-reusable-mem"),
         efficient_update: !args.has("no-efficient-update"),
         slots: args.get_usize("slots", 3),
+        disk_batch: args.get_usize("disk-batch", 1).max(1),
         ..Policy::default()
     };
     if tiering == Tiering::ThreeTier {

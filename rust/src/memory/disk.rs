@@ -149,6 +149,39 @@ impl DiskPool {
         Ok(buf)
     }
 
+    /// Read a bucket and decode it to fp32 through the host compute pool
+    /// (parity checks, eval paths).  The disk stores wire bytes verbatim;
+    /// this is the read + pooled-decode composition in one call.
+    pub fn read_decoded(
+        &self,
+        b: &DiskBucket,
+        pool: &crate::hostpool::HostPool,
+    ) -> Result<Vec<f32>> {
+        let bytes = self.read(b)?;
+        let mut out = vec![0.0f32; b.numel];
+        crate::hostpool::fused::decode_pooled(b.codec, &bytes, &mut out, pool);
+        Ok(out)
+    }
+
+    /// Encode fp32 data through the host compute pool and write it back to
+    /// the bucket (checkpoint-restore style writes).
+    pub fn write_encoded(
+        &self,
+        b: &DiskBucket,
+        data: &[f32],
+        pool: &crate::hostpool::HostPool,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            data.len() == b.numel,
+            "bucket rewrite {} elems vs {}",
+            data.len(),
+            b.numel
+        );
+        let mut bytes = vec![0u8; b.len];
+        crate::hostpool::fused::encode_pooled(b.codec, data, &mut bytes, pool);
+        self.write(b, &bytes)
+    }
+
     /// Overwrite a bucket in place (write-back of an updated block).  The
     /// wire codec is fixed-width, so the encoded length never changes.
     pub fn write(&self, b: &DiskBucket, bytes: &[u8]) -> Result<()> {
@@ -309,6 +342,23 @@ mod tests {
         assert_eq!(ws.bytes, 192);
         assert_eq!(rs.ops, 2);
         assert!(ws.modeled_s > 0.0 && rs.modeled_s > 0.0);
+    }
+
+    #[test]
+    fn pooled_read_write_roundtrip() {
+        let (r, w) = models();
+        let pool_file = DiskPool::in_temp(u64::MAX, r, w).unwrap();
+        let pool = crate::hostpool::HostPool::new(4);
+        let data: Vec<f32> = (0..5000).map(|i| (i as f32) * 0.01 - 25.0).collect();
+        for codec in [Codec::F32, Codec::Fp16] {
+            let hb = HostBucket::from_f32(&data, codec);
+            let entry = pool_file.append(codec, data.len(), hb.wire()).unwrap();
+            let dec = pool_file.read_decoded(&entry, &pool).unwrap();
+            assert_eq!(dec, hb.to_f32(), "{codec:?} pooled decode");
+            // Write the decoded values back; bytes on disk must be stable.
+            pool_file.write_encoded(&entry, &dec, &pool).unwrap();
+            assert_eq!(pool_file.read(&entry).unwrap(), hb.wire(), "{codec:?} stable rewrite");
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::hostpool::HostPool;
 use crate::precision::Codec;
 
 /// A host-side parameter bucket: the master copy of one module's parameters
@@ -94,8 +95,58 @@ impl HostBucket {
         self.codec.encode_into(src, &mut self.bytes);
     }
 
+    /// Pooled decode across the host compute pool — bit-identical to
+    /// [`Self::decode_into`] at any thread count.
+    pub fn decode_into_pooled(&self, out: &mut [f32], pool: &HostPool) {
+        assert_eq!(out.len(), self.numel);
+        crate::hostpool::fused::decode_pooled(self.codec, &self.bytes, out, pool);
+    }
+
+    /// Pooled encode — byte-identical to [`Self::encode_from`] at any
+    /// thread count, with the same capacity shrink policy.
+    pub fn encode_from_pooled(&mut self, src: &[f32], pool: &HostPool) {
+        assert_eq!(src.len(), self.numel);
+        let need = self.numel * self.codec.bytes_per_el();
+        if self.bytes.len() != need {
+            // Size change only (never on the steady offload path): one
+            // zero-fill pass before the pooled encode overwrites it.
+            self.bytes.clear();
+            self.bytes.resize(need, 0);
+        }
+        crate::hostpool::fused::encode_pooled(self.codec, src, &mut self.bytes, pool);
+        crate::util::shrink_excess(&mut self.bytes, need);
+    }
+
+    /// Apply a deferred ZO-SGD update *in the wire domain*: one fused
+    /// decode→update→encode pass per chunk over the host pool, never
+    /// materialising the bucket in fp32 (the CPU update site's hot path).
+    pub fn fused_sgd_update(
+        &mut self,
+        state: crate::rng::RngState,
+        lr: f32,
+        g: f32,
+        pool: &HostPool,
+    ) {
+        crate::hostpool::fused::fused_zo_sgd(
+            self.codec,
+            &mut self.bytes,
+            self.numel,
+            state,
+            lr,
+            g,
+            pool,
+        );
+    }
+
     pub fn to_f32(&self) -> Vec<f32> {
         self.codec.decode(&self.bytes, self.numel)
+    }
+
+    /// Pooled [`Self::to_f32`].
+    pub fn to_f32_pooled(&self, pool: &HostPool) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.numel];
+        self.decode_into_pooled(&mut out, pool);
+        out
     }
 }
 

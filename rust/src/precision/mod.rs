@@ -9,6 +9,16 @@
 //! fp8 follows the e4m3 variant used by NVIDIA/OCP: 1 sign, 4 exponent
 //! (bias 7), 3 mantissa bits; no infinities; 0x7F/0xFF are NaN; max finite
 //! magnitude 448.
+//!
+//! The hot paths are **table-driven**: fp16 decodes through a 65536-entry
+//! LUT and encodes through per-exponent-class base/shift/round tables, fp8
+//! decodes through a 256-entry LUT — killing the per-element subnormal
+//! branches of the bit-twiddled reference conversions (which stay as the
+//! specification and are asserted bit-equal).  [`Codec::encode_chunk`] /
+//! [`Codec::decode_chunk`] are the slice-range entry points the
+//! [`crate::hostpool`] kernels fan out over.
+
+use std::sync::OnceLock;
 
 /// Transfer/storage format of a host-side bucket.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,40 +57,44 @@ impl Codec {
         }
     }
 
-    /// Encode f32 slice into `out` (resized to exactly the payload).
-    pub fn encode_into(self, src: &[f32], out: &mut Vec<u8>) {
-        out.clear();
-        out.reserve(src.len() * self.bytes_per_el());
+    /// Encode one slice range into an exactly-sized wire buffer.  This is
+    /// the chunk entry point the host pool fans out over; ranges encoded
+    /// piecewise are byte-identical to a single whole-slice encode.
+    pub fn encode_chunk(self, src: &[f32], out: &mut [u8]) {
+        assert_eq!(out.len(), src.len() * self.bytes_per_el(), "payload size mismatch");
         match self {
             Codec::F32 => {
                 // Identity format: single memcpy (hot offload path).
-                let bytes = unsafe {
-                    std::slice::from_raw_parts(src.as_ptr() as *const u8, src.len() * 4)
-                };
-                out.extend_from_slice(bytes);
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        src.as_ptr() as *const u8,
+                        out.as_mut_ptr(),
+                        out.len(),
+                    );
+                }
             }
             Codec::Bf16 => {
-                for &x in src {
-                    out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+                for (c, &x) in out.chunks_exact_mut(2).zip(src) {
+                    c.copy_from_slice(&f32_to_bf16(x).to_le_bytes());
                 }
             }
             Codec::Fp16 => {
-                for &x in src {
-                    out.extend_from_slice(&f32_to_fp16(x).to_le_bytes());
+                for (c, &x) in out.chunks_exact_mut(2).zip(src) {
+                    c.copy_from_slice(&f32_to_fp16_tab(x).to_le_bytes());
                 }
             }
             Codec::Fp8E4M3 => {
-                for &x in src {
-                    out.push(f32_to_fp8_e4m3(x));
+                for (b, &x) in out.iter_mut().zip(src) {
+                    *b = f32_to_fp8_e4m3(x);
                 }
             }
         }
     }
 
-    /// Decode into an f32 buffer (must be pre-sized to the element count).
-    pub fn decode_into(self, src: &[u8], out: &mut [f32]) {
-        let n = out.len();
-        assert_eq!(src.len(), n * self.bytes_per_el(), "payload size mismatch");
+    /// Decode one wire range into an exactly-sized f32 buffer (chunk entry
+    /// point; piecewise decodes are bit-identical to a whole-slice decode).
+    pub fn decode_chunk(self, src: &[u8], out: &mut [f32]) {
+        assert_eq!(src.len(), out.len() * self.bytes_per_el(), "payload size mismatch");
         match self {
             Codec::F32 => {
                 // Identity format: single memcpy (hot upload path).
@@ -93,21 +107,47 @@ impl Codec {
                 }
             }
             Codec::Bf16 => {
-                for (i, c) in src.chunks_exact(2).enumerate() {
-                    out[i] = bf16_to_f32(u16::from_le_bytes(c.try_into().unwrap()));
+                for (o, c) in out.iter_mut().zip(src.chunks_exact(2)) {
+                    *o = bf16_to_f32(u16::from_le_bytes([c[0], c[1]]));
                 }
             }
             Codec::Fp16 => {
-                for (i, c) in src.chunks_exact(2).enumerate() {
-                    out[i] = fp16_to_f32(u16::from_le_bytes(c.try_into().unwrap()));
+                let lut = fp16_lut();
+                for (o, c) in out.iter_mut().zip(src.chunks_exact(2)) {
+                    *o = lut[u16::from_le_bytes([c[0], c[1]]) as usize];
                 }
             }
             Codec::Fp8E4M3 => {
-                for (i, &b) in src.iter().enumerate() {
-                    out[i] = fp8_e4m3_to_f32(b);
+                let lut = fp8_lut();
+                for (o, &b) in out.iter_mut().zip(src) {
+                    *o = lut[b as usize];
                 }
             }
         }
+    }
+
+    /// Encode f32 slice into `out` (resized to exactly the payload).
+    ///
+    /// Shrink policy: a buffer reused across bucket sizes must not pin its
+    /// high-water mark forever, so capacity beyond 2× the payload is
+    /// released (the "cap at the largest live bucket" rule — steady reuse
+    /// at one size never reallocates, a size drop frees the excess).
+    pub fn encode_into(self, src: &[f32], out: &mut Vec<u8>) {
+        let need = src.len() * self.bytes_per_el();
+        if out.len() != need {
+            // Size changed: one zero-fill pass.  The steady state (same
+            // bucket size every step) skips this and pays exactly one
+            // write pass — the encode itself.
+            out.clear();
+            out.resize(need, 0);
+        }
+        self.encode_chunk(src, out);
+        crate::util::shrink_excess(out, need);
+    }
+
+    /// Decode into an f32 buffer (must be pre-sized to the element count).
+    pub fn decode_into(self, src: &[u8], out: &mut [f32]) {
+        self.decode_chunk(src, out);
     }
 
     pub fn encode(self, src: &[f32]) -> Vec<u8> {
@@ -207,6 +247,113 @@ pub fn fp16_to_f32(h: u16) -> f32 {
     f32::from_bits(bits)
 }
 
+// --- fp16 tables ---------------------------------------------------------------
+
+/// 65536-entry fp16 → f32 table (256 KiB, built once): replaces the
+/// subnormal branch + `leading_zeros` of [`fp16_to_f32`] with one load.
+fn fp16_lut() -> &'static [f32; 65536] {
+    static LUT: OnceLock<Box<[f32; 65536]>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = vec![0.0f32; 65536].into_boxed_slice();
+        for h in 0..=0xFFFFu16 {
+            t[h as usize] = fp16_to_f32(h);
+        }
+        t.try_into().expect("65536-entry table")
+    })
+}
+
+/// Table-driven fp16 decode — bit-identical to [`fp16_to_f32`] by
+/// construction (the table is built from it).
+#[inline]
+pub fn fp16_to_f32_lut(h: u16) -> f32 {
+    fp16_lut()[h as usize]
+}
+
+/// Per-(sign, exponent)-class constants for the table-driven fp16 encode:
+/// `out = base[cls] + (full >> shift[cls]) + rne(full & mask[cls])` where
+/// `cls = f32_bits >> 23` (9 bits) and `full = mantissa | imp[cls]`.
+struct F16Enc {
+    base: [u16; 512],
+    shift: [u8; 512],
+    mask: [u32; 512],
+    /// RNE tie point of the dropped bits; `u32::MAX` marks classes that
+    /// never round (underflow-to-zero, overflow-to-inf), keeping the
+    /// rounding arithmetic branch-free.
+    half: [u32; 512],
+    imp: [u32; 512],
+}
+
+fn f16_enc() -> &'static F16Enc {
+    static TAB: OnceLock<Box<F16Enc>> = OnceLock::new();
+    TAB.get_or_init(|| {
+        let mut t = Box::new(F16Enc {
+            base: [0; 512],
+            shift: [0; 512],
+            mask: [0; 512],
+            half: [0; 512],
+            imp: [0; 512],
+        });
+        for cls in 0..512usize {
+            let sign = ((cls >> 8) as u16) << 15;
+            let exp8 = (cls & 0xFF) as i32;
+            let unbiased = exp8 - 127;
+            if unbiased > 15 {
+                // Overflow (and the inf/NaN class, which the encoder
+                // branches around): clamp to signed infinity, no rounding.
+                t.base[cls] = sign | 0x7C00;
+                t.shift[cls] = 31;
+                t.mask[cls] = 0;
+                t.half[cls] = u32::MAX;
+                t.imp[cls] = 0;
+            } else if unbiased >= -14 {
+                // Normal f16 target: rebias, keep the top 10 mantissa bits.
+                t.base[cls] = sign | (((unbiased + 15) as u16) << 10);
+                t.shift[cls] = 13;
+                t.mask[cls] = 0x1FFF;
+                t.half[cls] = 0x1000;
+                t.imp[cls] = 0;
+            } else if unbiased >= -25 {
+                // Subnormal f16 target: shift the full significand
+                // (implicit bit included) right by 14..=24.
+                let shift = (-unbiased - 1) as u8;
+                t.base[cls] = sign;
+                t.shift[cls] = shift;
+                t.mask[cls] = (1u32 << shift) - 1;
+                t.half[cls] = 1u32 << (shift - 1);
+                t.imp[cls] = 0x0080_0000;
+            } else {
+                // Underflow: signed zero, no rounding.
+                t.base[cls] = sign;
+                t.shift[cls] = 31;
+                t.mask[cls] = 0;
+                t.half[cls] = u32::MAX;
+                t.imp[cls] = 0;
+            }
+        }
+        t
+    })
+}
+
+/// Table-driven f32 → fp16 with round-to-nearest-even — bit-identical to
+/// [`f32_to_fp16`] (asserted exhaustively in tests) but branch-free on the
+/// hot path: one class lookup + shift + branchless rounding.  The only
+/// branch is the inf/NaN class, never taken for parameter data.
+#[inline]
+pub fn f32_to_fp16_tab(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if (bits >> 23) & 0xFF == 0xFF {
+        return f32_to_fp16(x); // inf/NaN: rare, keep the reference path
+    }
+    let t = f16_enc();
+    let cls = (bits >> 23) as usize;
+    let full = (bits & 0x007F_FFFF) | t.imp[cls];
+    let out = t.base[cls].wrapping_add((full >> t.shift[cls]) as u16);
+    let rem = full & t.mask[cls];
+    let half = t.half[cls];
+    let inc = u16::from(rem > half) | (u16::from(rem == half) & (out & 1));
+    out.wrapping_add(inc)
+}
+
 // --- fp8 e4m3 ------------------------------------------------------------------
 
 /// Encode with round-to-nearest-even, clamping to ±448 (no inf in e4m3).
@@ -275,6 +422,26 @@ pub fn fp8_e4m3_to_f32(b: u8) -> f32 {
         return sign * man * 2f32.powi(-9); // subnormal: m * 2^-6 * 2^-3
     }
     sign * (1.0 + man / 8.0) * 2f32.powi(exp - 7)
+}
+
+/// 256-entry fp8 → f32 table (1 KiB, built once from the reference
+/// conversion): the whole decode becomes one load.
+fn fp8_lut() -> &'static [f32; 256] {
+    static LUT: OnceLock<[f32; 256]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for (b, slot) in t.iter_mut().enumerate() {
+            *slot = fp8_e4m3_to_f32(b as u8);
+        }
+        t
+    })
+}
+
+/// Table-driven fp8 decode — bit-identical to [`fp8_e4m3_to_f32`] by
+/// construction.
+#[inline]
+pub fn fp8_e4m3_to_f32_lut(b: u8) -> f32 {
+    fp8_lut()[b as usize]
 }
 
 #[cfg(test)]
@@ -417,5 +584,130 @@ mod tests {
         // 1 + 3*2^-11 is halfway between nextafter(1) and next-next; ties to
         // even -> mantissa 2.
         assert_eq!(f32_to_fp16(1.0 + 3.0 * 2f32.powi(-11)), 0x3C02);
+    }
+
+    #[test]
+    fn fp16_decode_lut_matches_reference_on_every_code() {
+        for h in 0..=0xFFFFu16 {
+            let a = fp16_to_f32(h);
+            let b = fp16_to_f32_lut(h);
+            assert_eq!(a.to_bits(), b.to_bits(), "code {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn fp8_decode_lut_matches_reference_on_every_code() {
+        for b in 0..=0xFFu8 {
+            let x = fp8_e4m3_to_f32(b);
+            let y = fp8_e4m3_to_f32_lut(b);
+            assert_eq!(x.to_bits(), y.to_bits(), "code {b:#04x}");
+        }
+    }
+
+    #[test]
+    fn fp16_table_encode_matches_reference() {
+        // Every (sign, exponent) class x structured mantissas: zeros, ones,
+        // the RNE tie patterns around both the 13-bit (normal) and variable
+        // (subnormal) drop widths, and the extremes.
+        let mans: Vec<u32> = {
+            let mut m = vec![0u32, 1, 0x7F_FFFF, 0x40_0000, 0x3F_FFFF];
+            for shift in 13..=24u32 {
+                let half = 1u32 << (shift - 1);
+                for d in [half.wrapping_sub(1), half, half + 1] {
+                    m.push(d & 0x7F_FFFF);
+                }
+                // Tie with odd/even truncated result.
+                m.push((half | (1 << shift)) & 0x7F_FFFF);
+            }
+            m
+        };
+        for cls in 0..512u32 {
+            for &man in &mans {
+                let bits = (cls << 23) | man;
+                let x = f32::from_bits(bits);
+                assert_eq!(
+                    f32_to_fp16(x),
+                    f32_to_fp16_tab(x),
+                    "bits {bits:#010x} (cls {cls}, man {man:#08x})"
+                );
+            }
+        }
+        // All f16-exact values roundtrip through the table encoder too.
+        for h in 0..=0xFFFFu16 {
+            if (h >> 10) & 0x1F == 0x1F {
+                continue; // inf/NaN handled by the reference branch
+            }
+            assert_eq!(f32_to_fp16_tab(fp16_to_f32(h)), h, "code {h:#06x}");
+        }
+        // And a broad random sweep over raw bit patterns.
+        let mut r = crate::rng::GaussianRng::new(77, 0);
+        for _ in 0..2_000_000 {
+            let bits = (r.next_below(u32::MAX as u64 + 1)) as u32;
+            let x = f32::from_bits(bits);
+            if x.is_nan() {
+                // NaN payloads funnel through the same reference branch.
+                assert_eq!(f32_to_fp16(x), f32_to_fp16_tab(x));
+                continue;
+            }
+            assert_eq!(f32_to_fp16(x), f32_to_fp16_tab(x), "bits {bits:#010x}");
+        }
+    }
+
+    #[test]
+    fn chunked_encode_decode_equals_whole_slice() {
+        let mut r = crate::rng::GaussianRng::new(4, 2);
+        let mut xs = vec![0.0f32; 10_001];
+        r.fill_gaussian(&mut xs);
+        for x in xs.iter_mut() {
+            *x *= 0.02;
+        }
+        for codec in [Codec::F32, Codec::Bf16, Codec::Fp16, Codec::Fp8E4M3] {
+            let whole = codec.encode(&xs);
+            let bpe = codec.bytes_per_el();
+            // Piecewise encode with uneven splits.
+            let mut piecewise = vec![0u8; whole.len()];
+            let mut start = 0usize;
+            for len in [1usize, 999, 4096, 2000, 2905] {
+                codec.encode_chunk(
+                    &xs[start..start + len],
+                    &mut piecewise[start * bpe..(start + len) * bpe],
+                );
+                start += len;
+            }
+            assert_eq!(start, xs.len());
+            assert_eq!(piecewise, whole, "{codec:?} encode");
+            // Piecewise decode.
+            let mut whole_dec = vec![0.0f32; xs.len()];
+            codec.decode_into(&whole, &mut whole_dec);
+            let mut piece_dec = vec![0.0f32; xs.len()];
+            let mut start = 0usize;
+            for len in [4097usize, 1, 2903, 3000] {
+                codec.decode_chunk(
+                    &whole[start * bpe..(start + len) * bpe],
+                    &mut piece_dec[start..start + len],
+                );
+                start += len;
+            }
+            assert_eq!(start, xs.len());
+            let same =
+                whole_dec.iter().zip(&piece_dec).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{codec:?} decode");
+        }
+    }
+
+    #[test]
+    fn encode_into_releases_oversized_capacity() {
+        let big = vec![1.0f32; 1 << 16];
+        let small = vec![1.0f32; 64];
+        let mut buf = Vec::new();
+        Codec::Bf16.encode_into(&big, &mut buf);
+        assert!(buf.capacity() >= big.len() * 2);
+        Codec::Bf16.encode_into(&small, &mut buf);
+        assert_eq!(buf.len(), 128);
+        assert!(
+            buf.capacity() <= big.len() * 2 / 4,
+            "capacity {} must shrink after the bucket size drops",
+            buf.capacity()
+        );
     }
 }

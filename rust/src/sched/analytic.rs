@@ -61,30 +61,61 @@ fn stream_name(s: Stream) -> &'static str {
 
 /// Run `tasks` (from [`super::build_plan`]) under `costs`, returning the
 /// schedule and a timeline trace (paper Fig. 4).
+///
+/// Upload/offload durations include the provider's host fused-kernel terms
+/// (`host_decode_s` / `host_encode_s`) — in the real engine the codec runs
+/// on host cores inside those stream threads.  With `policy.disk_batch > 1`
+/// back-to-back queued disk reads coalesce io_uring-style: the first read
+/// of a batch pays the full submission latency, follow-ups that were
+/// already queued when it finished pay bandwidth only.
 pub fn simulate(tasks: &[Task], costs: &dyn CostProvider, policy: Policy) -> (Schedule, Timeline) {
     let mut start = vec![0.0f64; tasks.len()];
     let mut end = vec![0.0f64; tasks.len()];
     let mut stream_free: HashMap<Stream, f64> = HashMap::new();
     let mut busy: HashMap<&'static str, f64> = HashMap::new();
     let mut timeline = Timeline::new();
+    // Disk-read batching state: length of the current batch, and whether
+    // the previous task on the read stream was itself a read (batches never
+    // span interleaved foreign tasks, which only occur in naive mode).
+    let mut read_batch_len = 0usize;
+    let mut last_was_read: HashMap<Stream, bool> = HashMap::new();
 
     for t in tasks {
-        let dur = match t.kind {
-            TaskKind::Upload => {
-                let base = costs.upload_s();
-                if policy.reusable_mem { base } else { base + costs.malloc_s() }
-            }
-            TaskKind::Compute => costs.compute_s(t.module),
-            TaskKind::Offload => costs.offload_s(),
-            TaskKind::Update => costs.update_s(),
-            TaskKind::DiskRead => costs.disk_read_s(),
-            TaskKind::DiskWrite => costs.disk_write_s(),
-        };
-        let mut t0: f64 = *stream_free.get(&t.stream).unwrap_or(&0.0);
+        let stream_prev: f64 = *stream_free.get(&t.stream).unwrap_or(&0.0);
+        let mut t0 = stream_prev;
         for &d in &t.deps {
             t0 = t0.max(end[d]);
         }
         t0 += t.extra_latency;
+        let dur = match t.kind {
+            TaskKind::Upload => {
+                let base = costs.upload_s() + costs.host_decode_s();
+                if policy.reusable_mem { base } else { base + costs.malloc_s() }
+            }
+            TaskKind::Compute => costs.compute_s(t.module),
+            TaskKind::Offload => costs.offload_s() + costs.host_encode_s(),
+            TaskKind::Update => costs.update_s(),
+            TaskKind::DiskRead => {
+                // A read joins the running batch iff it was already queued
+                // when the stream freed up (no idle gap), the previous task
+                // on this stream was a read, and the batch has room.
+                let queued = t0 <= stream_prev + 1e-12;
+                let coalesce = policy.disk_batch > 1
+                    && queued
+                    && last_was_read.get(&t.stream).copied().unwrap_or(false)
+                    && read_batch_len > 0
+                    && read_batch_len < policy.disk_batch;
+                if coalesce {
+                    read_batch_len += 1;
+                    costs.disk_read_bw_s()
+                } else {
+                    read_batch_len = 1;
+                    costs.disk_read_s()
+                }
+            }
+            TaskKind::DiskWrite => costs.disk_write_s(),
+        };
+        last_was_read.insert(t.stream, t.kind == TaskKind::DiskRead);
         let t1 = t0 + dur;
         start[t.id] = t0;
         end[t.id] = t1;
@@ -218,6 +249,11 @@ mod tests {
         fn disk_read_s(&self) -> f64 {
             self.read
         }
+        fn disk_read_bw_s(&self) -> f64 {
+            // Latency-heavy model: half the read cost is submission latency
+            // that an io_uring batch amortises.
+            self.read * 0.5
+        }
         fn disk_write_s(&self) -> f64 {
             self.write
         }
@@ -267,6 +303,82 @@ mod tests {
         assert_eq!(sched.bottleneck(), "disk-bound");
         // Lower bound: the read stream alone needs n*steps serial reads.
         assert!(sched.makespan >= 2.0 * n as f64 * 4.0 - 1e-9);
+    }
+
+    #[test]
+    fn batched_disk_reads_amortise_latency() {
+        // Disk-bound pipeline: queued reads pile up behind each other, so
+        // batching them must strictly shrink the makespan, monotonically in
+        // the batch depth, and `disk_batch = 1` must reproduce the
+        // unbatched schedule exactly.
+        let costs = DiskCosts {
+            inner: FixedCosts { up: 0.2, off: 0.2, comp: 0.5 },
+            read: 4.0,
+            write: 1.0,
+        };
+        let n = 8;
+        let base = crate::sched::Policy::three_tier(n, 4);
+        let plan = build_plan(n, 2, base);
+        let (unbatched, _) = simulate(&plan, &costs, base);
+
+        let one = Policy { disk_batch: 1, ..base };
+        let (same, _) = simulate(&build_plan(n, 2, one), &costs, one);
+        assert_eq!(unbatched.makespan, same.makespan, "batch=1 is the identity");
+
+        let mut last = unbatched.makespan;
+        for batch in [2usize, 4, 8] {
+            let p = Policy { disk_batch: batch, ..base };
+            let (s, _) = simulate(&build_plan(n, 2, p), &costs, p);
+            assert!(
+                s.makespan < last + 1e-12,
+                "batch {batch}: {} must not exceed {last}",
+                s.makespan
+            );
+            last = s.makespan;
+        }
+        // With depth-4 batches at most 1 in 4 reads pays latency: the read
+        // stream's busy time must drop accordingly.
+        let p4 = Policy { disk_batch: 4, ..base };
+        let (s4, _) = simulate(&build_plan(n, 2, p4), &costs, p4);
+        assert!(
+            s4.busy_of("disk_read") < unbatched.busy_of("disk_read") - 1e-9,
+            "batching must shed read-stream busy time"
+        );
+    }
+
+    #[test]
+    fn host_kernel_terms_extend_upload_and_offload() {
+        struct HostHeavy(FixedCosts);
+        impl CostProvider for HostHeavy {
+            fn upload_s(&self) -> f64 {
+                self.0.up
+            }
+            fn offload_s(&self) -> f64 {
+                self.0.off
+            }
+            fn compute_s(&self, m: Module) -> f64 {
+                self.0.compute_s(m)
+            }
+            fn update_s(&self) -> f64 {
+                self.0.update_s()
+            }
+            fn host_decode_s(&self) -> f64 {
+                4.0
+            }
+            fn host_encode_s(&self) -> f64 {
+                4.0
+            }
+        }
+        let plain = FixedCosts { up: 1.0, off: 1.0, comp: 3.0 };
+        let heavy = HostHeavy(FixedCosts { up: 1.0, off: 1.0, comp: 3.0 });
+        let p = Policy::default();
+        let plan = build_plan(6, 2, p);
+        let (s0, _) = simulate(&plan, &plain, p);
+        let (s1, _) = simulate(&plan, &heavy, p);
+        assert!(s1.makespan > s0.makespan, "host kernel time must show up");
+        // Slow host kernels turn a compute-bound pipeline transfer-bound.
+        assert_eq!(s0.bottleneck(), "compute-bound");
+        assert_eq!(s1.bottleneck(), "pcie-bound");
     }
 
     #[test]

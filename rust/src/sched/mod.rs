@@ -121,6 +121,10 @@ pub struct Policy {
     /// Number of trailing blocks spilled to the disk tier (three-tier;
     /// 0 = everything fits in DDR and the plan degenerates to two-tier).
     pub spilled: usize,
+    /// io_uring-style disk-read batching: up to this many back-to-back
+    /// queued reads share one submission-latency charge (1 = off).  Only
+    /// the latency coalesces — bandwidth is still paid per read.
+    pub disk_batch: usize,
 }
 
 impl Default for Policy {
@@ -133,6 +137,7 @@ impl Default for Policy {
             tiering: Tiering::TwoTier,
             dram_slots: 4,
             spilled: 0,
+            disk_batch: 1,
         }
     }
 }
@@ -359,10 +364,27 @@ pub trait CostProvider {
     fn malloc_s(&self) -> f64 {
         300e-6
     }
+    /// Host fused-kernel decode per upload (the real engine decodes wire
+    /// bytes on host cores in the upload thread).  Providers that do not
+    /// model host kernels keep the zero default.
+    fn host_decode_s(&self) -> f64 {
+        0.0
+    }
+    /// Host fused-kernel encode per offload.
+    fn host_encode_s(&self) -> f64 {
+        0.0
+    }
     /// NVMe read of one spilled block bucket (three-tier only; two-tier
     /// providers keep the zero default).
     fn disk_read_s(&self) -> f64 {
         0.0
+    }
+    /// Bandwidth-only cost of a read that joins an io_uring-style batch
+    /// (its submission latency was charged by the batch's first read).
+    /// Defaults to the full read cost, i.e. batching gains nothing unless
+    /// the provider separates latency from bandwidth.
+    fn disk_read_bw_s(&self) -> f64 {
+        self.disk_read_s()
     }
     /// NVMe write-back of one spilled block bucket.
     fn disk_write_s(&self) -> f64 {

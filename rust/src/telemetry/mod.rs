@@ -1,6 +1,49 @@
-//! Telemetry: timeline traces (paper Fig. 4), memory reports, throughput.
+//! Telemetry: timeline traces (paper Fig. 4), memory reports, throughput,
+//! and the host-scratch gauge (DRAM bytes held by reusable scratch buffers).
 
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A current/peak byte gauge (atomic, process-wide).
+#[derive(Debug)]
+pub struct Gauge {
+    cur: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self { cur: AtomicU64::new(0), peak: AtomicU64::new(0) }
+    }
+
+    pub fn add(&self, bytes: u64) {
+        let now = self.cur.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    pub fn sub(&self, bytes: u64) {
+        self.cur.fetch_sub(bytes, Ordering::SeqCst);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.cur.load(Ordering::SeqCst)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Host DRAM held by reusable scratch buffers (z-replay scratch etc.) —
+/// the accounting half of the scratch shrink policy: scratch is invisible
+/// to the tier budgets, so it gets its own gauge instead.
+pub static HOST_SCRATCH: Gauge = Gauge::new();
 
 /// One scheduled interval on a stream.
 #[derive(Debug, Clone)]
@@ -137,6 +180,19 @@ mod tests {
         assert!(g.contains('#'));
         let csv = t.to_csv();
         assert!(csv.lines().count() == 4);
+    }
+
+    #[test]
+    fn gauge_tracks_current_and_peak() {
+        let g = Gauge::new();
+        g.add(100);
+        g.add(50);
+        assert_eq!(g.current(), 150);
+        g.sub(120);
+        assert_eq!(g.current(), 30);
+        assert_eq!(g.peak(), 150);
+        g.add(10);
+        assert_eq!(g.peak(), 150, "peak unchanged below the high-water mark");
     }
 
     #[test]

@@ -5,6 +5,15 @@ pub mod cli;
 pub mod json;
 pub mod stats;
 
+/// Release `Vec` capacity beyond 2× the live need — the scratch shrink
+/// policy (DESIGN.md): steady reuse at one size never reallocates, a size
+/// drop frees the excess instead of pinning the high-water mark.
+pub fn shrink_excess<T>(v: &mut Vec<T>, need: usize) {
+    if v.capacity() > need.saturating_mul(2) {
+        v.shrink_to(need);
+    }
+}
+
 /// Human-readable byte count (MiB with paper-style "MB" label).
 pub fn fmt_mb(bytes: u64) -> String {
     format!("{:.0}", bytes as f64 / (1024.0 * 1024.0))

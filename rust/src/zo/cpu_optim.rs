@@ -12,10 +12,20 @@
 //! 2. **Update-site ablation** (DESIGN.md §7): ZO2 updates on the GPU fused
 //!    with the dual forward (§5.4).  The alternative — update on the CPU
 //!    while the bucket is host-resident — costs zero extra transfers but
-//!    puts elementwise work on the slow side.  `CpuZoSgd` implements it
-//!    bit-compatibly with the device path (same mul/mul/sub rounding as the
-//!    barriered kernel) so the two sites can be compared for *throughput*
-//!    without a numerics confound.
+//!    puts elementwise work on the slow side.  `Zo2Options::update_site`
+//!    selects it in the real engine; the kernels here implement it
+//!    bit-compatibly with the device path's op order (mul, then sub).
+//!
+//! Three implementations of the same math, all bit-identical to each other:
+//!
+//! * the scalar reference functions ([`cpu_zo_sgd_update`],
+//!   [`cpu_zo_adamw_update`]) — single-threaded, z through a [`ZScratch`];
+//! * the pooled variants (`*_pooled`) — deterministic fixed-size chunking
+//!   over the [`crate::hostpool::HostPool`], z replayed per chunk from
+//!   counter offsets, so the result is independent of thread count;
+//! * the fused wire-domain variants ([`fused_zo_sgd`](crate::hostpool::fused::fused_zo_sgd)
+//!   and [`fused_zo_adamw`]) — decode→update→encode in one pass per chunk,
+//!   never materialising a bucket-sized fp32 intermediate.
 //!
 //! z replay note: the device path draws z from threefry keys; replaying that
 //! exact draw on the host (threefry + erfinv) is not practical, so CPU
@@ -26,22 +36,110 @@
 //! trajectory.  DESIGN.md records this as the one place the two sites
 //! differ.
 
+use crate::hostpool::fused::{fill_z_chunk, map_wire_chunk};
+use crate::hostpool::{HostPool, SlicePtr, CHUNK_ELEMS};
+use crate::precision::Codec;
 use crate::rng::RngState;
+use crate::telemetry::HOST_SCRATCH;
 use crate::zo::fill_z;
 
-/// Elementwise ZO-SGD on a host-resident fp32 bucket:
-/// `θ ← θ − η·g·z`, z replayed from `state`.
-pub fn cpu_zo_sgd_update(bucket: &mut [f32], state: RngState, lr: f32, g: f32, z_scratch: &mut Vec<f32>) {
-    if z_scratch.len() < bucket.len() {
-        z_scratch.resize(bucket.len(), 0.0);
+/// Reusable z-replay scratch with a shrink policy and telemetry-accounted
+/// bytes (the fix for the grow-only scratch Vecs): capacity is capped at
+/// the largest *live* bucket.  The cap auto-raises to the largest request
+/// seen — so a workload alternating bucket sizes never thrashes between
+/// grow and shrink — and [`Self::set_cap`] lowers it when the owner knows
+/// the big buckets are gone, releasing the excess instead of pinning the
+/// high-water mark forever.
+#[derive(Debug, Default)]
+pub struct ZScratch {
+    buf: Vec<f32>,
+    /// Largest bucket (elements) assumed still live: the running max of
+    /// requests, lowered explicitly via [`Self::set_cap`].  Capacity beyond
+    /// `2 × max(cap_elems, request)` is released after each fill.
+    cap_elems: usize,
+}
+
+impl ZScratch {
+    pub fn new() -> Self {
+        Self::default()
     }
-    let z = &mut z_scratch[..bucket.len()];
-    fill_z(state, z);
+
+    /// Declare the largest bucket still live.  Lowers the retention cap
+    /// (it auto-raises again as larger requests arrive), so call this when
+    /// the big buckets this scratch served are gone.
+    pub fn set_cap(&mut self, elems: usize) {
+        self.cap_elems = elems;
+    }
+
+    /// Bytes currently held (mirrored into [`HOST_SCRATCH`]).
+    pub fn bytes(&self) -> u64 {
+        (self.buf.capacity() * 4) as u64
+    }
+
+    /// Fill and return the replayed z for `n` elements.
+    pub fn z_for(&mut self, state: RngState, n: usize) -> &[f32] {
+        let before = self.bytes();
+        if self.buf.len() < n {
+            self.buf.resize(n, 0.0);
+        }
+        self.cap_elems = self.cap_elems.max(n);
+        let keep = self.cap_elems;
+        if self.buf.capacity() > keep.saturating_mul(2) {
+            self.buf.truncate(keep.max(n));
+            self.buf.shrink_to(keep.max(n));
+        }
+        let after = self.bytes();
+        if after > before {
+            HOST_SCRATCH.add(after - before);
+        } else {
+            HOST_SCRATCH.sub(before - after);
+        }
+        let z = &mut self.buf[..n];
+        fill_z(state, z);
+        z
+    }
+}
+
+impl Drop for ZScratch {
+    fn drop(&mut self) {
+        HOST_SCRATCH.sub(self.bytes());
+    }
+}
+
+/// Elementwise ZO-SGD on a host-resident fp32 bucket:
+/// `θ ← θ − η·g·z`, z replayed from `state`.  Scalar reference.
+pub fn cpu_zo_sgd_update(bucket: &mut [f32], state: RngState, lr: f32, g: f32, z: &mut ZScratch) {
+    let z = z.z_for(state, bucket.len());
     let scale = lr * g;
     for (w, &zi) in bucket.iter_mut().zip(z.iter()) {
         // Same op order as the barriered device kernel: mul, then sub.
         *w -= scale * zi;
     }
+}
+
+/// Pooled ZO-SGD: deterministic fixed-size chunks over the host pool, z
+/// replayed per chunk.  Bit-identical to [`cpu_zo_sgd_update`] at any
+/// thread count; needs no scratch at all.
+pub fn cpu_zo_sgd_update_pooled(
+    pool: &HostPool,
+    bucket: &mut [f32],
+    state: RngState,
+    lr: f32,
+    g: f32,
+) {
+    let scale = lr * g;
+    let n = bucket.len();
+    let bp = SlicePtr::new(bucket);
+    pool.for_chunks(n, |_, start, len| {
+        // Safety: chunk ranges are disjoint by construction.
+        let w = unsafe { std::slice::from_raw_parts_mut(bp.at(start), len) };
+        let mut z = [0.0f32; CHUNK_ELEMS];
+        let z = &mut z[..len];
+        fill_z_chunk(state, start, z);
+        for (wi, &zi) in w.iter_mut().zip(z.iter()) {
+            *wi -= scale * zi;
+        }
+    });
 }
 
 /// Adam moments for one bucket (CPU DRAM resident).
@@ -79,34 +177,113 @@ impl Default for AdamHp {
     }
 }
 
+/// The per-element ZO-AdamW step: returns the updated weight, mutating the
+/// moment cells in place.  One body shared by the scalar, pooled and fused
+/// variants — sharing it *is* the bit-identity argument.
+#[inline]
+fn adamw_el(w: f32, m: &mut f32, v: &mut f32, gi: f32, hp: AdamHp, b1t: f32, b2t: f32) -> f32 {
+    *m = hp.beta1 * *m + (1.0 - hp.beta1) * gi;
+    *v = hp.beta2 * *v + (1.0 - hp.beta2) * gi * gi;
+    let mhat = *m / b1t;
+    let vhat = *v / b2t;
+    w - hp.lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * w)
+}
+
 /// One ZO-AdamW step on a host bucket: gradient estimate `gi = g·z_i`
 /// (never materialised as a whole — consumed streaming), moments updated in
-/// place, decoupled weight decay.
+/// place, decoupled weight decay.  Scalar reference.
 pub fn cpu_zo_adamw_update(
     bucket: &mut [f32],
     st: &mut AdamState,
     state: RngState,
     hp: AdamHp,
     g: f32,
-    z_scratch: &mut Vec<f32>,
+    z: &mut ZScratch,
 ) {
     assert_eq!(st.m.len(), bucket.len());
-    if z_scratch.len() < bucket.len() {
-        z_scratch.resize(bucket.len(), 0.0);
-    }
-    let z = &mut z_scratch[..bucket.len()];
-    fill_z(state, z);
+    let z = z.z_for(state, bucket.len());
     st.t += 1;
     let b1t = 1.0 - hp.beta1.powi(st.t as i32);
     let b2t = 1.0 - hp.beta2.powi(st.t as i32);
     for i in 0..bucket.len() {
-        let gi = g * z[i];
-        st.m[i] = hp.beta1 * st.m[i] + (1.0 - hp.beta1) * gi;
-        st.v[i] = hp.beta2 * st.v[i] + (1.0 - hp.beta2) * gi * gi;
-        let mhat = st.m[i] / b1t;
-        let vhat = st.v[i] / b2t;
-        bucket[i] -= hp.lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * bucket[i]);
+        bucket[i] = adamw_el(bucket[i], &mut st.m[i], &mut st.v[i], g * z[i], hp, b1t, b2t);
     }
+}
+
+/// Pooled ZO-AdamW over fp32 buckets — bit-identical to
+/// [`cpu_zo_adamw_update`] at any thread count.
+pub fn cpu_zo_adamw_update_pooled(
+    pool: &HostPool,
+    bucket: &mut [f32],
+    st: &mut AdamState,
+    state: RngState,
+    hp: AdamHp,
+    g: f32,
+) {
+    assert_eq!(st.m.len(), bucket.len());
+    st.t += 1;
+    let b1t = 1.0 - hp.beta1.powi(st.t as i32);
+    let b2t = 1.0 - hp.beta2.powi(st.t as i32);
+    let n = bucket.len();
+    let bp = SlicePtr::new(bucket);
+    let mp = SlicePtr::new(&mut st.m);
+    let vp = SlicePtr::new(&mut st.v);
+    pool.for_chunks(n, |_, start, len| {
+        // Safety: chunk ranges are disjoint by construction.
+        let (w, m, v) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(bp.at(start), len),
+                std::slice::from_raw_parts_mut(mp.at(start), len),
+                std::slice::from_raw_parts_mut(vp.at(start), len),
+            )
+        };
+        let mut z = [0.0f32; CHUNK_ELEMS];
+        let z = &mut z[..len];
+        fill_z_chunk(state, start, z);
+        for i in 0..len {
+            w[i] = adamw_el(w[i], &mut m[i], &mut v[i], g * z[i], hp, b1t, b2t);
+        }
+    });
+}
+
+/// Fused ZO-AdamW on an *encoded* bucket: decode→moment-update→encode in a
+/// single pass per chunk, keeping the low-bit master copy low-bit the whole
+/// way (the quantized-ZO motivation) while the fp32 moments stay in DRAM.
+/// Bit-identical to decode → [`cpu_zo_adamw_update`] → encode.
+pub fn fused_zo_adamw(
+    pool: &HostPool,
+    codec: Codec,
+    wire: &mut [u8],
+    st: &mut AdamState,
+    state: RngState,
+    hp: AdamHp,
+    g: f32,
+) {
+    let n = st.m.len();
+    assert_eq!(wire.len(), n * codec.bytes_per_el(), "payload size mismatch");
+    st.t += 1;
+    let b1t = 1.0 - hp.beta1.powi(st.t as i32);
+    let b2t = 1.0 - hp.beta2.powi(st.t as i32);
+    let bpe = codec.bytes_per_el();
+    let wp = SlicePtr::new(wire);
+    let mp = SlicePtr::new(&mut st.m);
+    let vp = SlicePtr::new(&mut st.v);
+    pool.for_chunks(n, |_, start, len| {
+        // Safety: chunk ranges are disjoint by construction.
+        let (bytes, m, v) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(wp.at(start * bpe), len * bpe),
+                std::slice::from_raw_parts_mut(mp.at(start), len),
+                std::slice::from_raw_parts_mut(vp.at(start), len),
+            )
+        };
+        let mut z = [0.0f32; CHUNK_ELEMS];
+        let z = &mut z[..len];
+        fill_z_chunk(state, start, z);
+        map_wire_chunk(codec, bytes, len, |i, w| {
+            adamw_el(w, &mut m[i], &mut v[i], g * z[i], hp, b1t, b2t)
+        });
+    });
 }
 
 #[cfg(test)]
@@ -122,7 +299,7 @@ mod tests {
     fn sgd_update_matches_manual() {
         let mut b = vec![1.0f32, -2.0, 0.5, 3.0];
         let mut want = b.clone();
-        let mut z = Vec::new();
+        let mut z = ZScratch::new();
         cpu_zo_sgd_update(&mut b, state(0), 0.1, 2.0, &mut z);
         let mut zv = vec![0.0; 4];
         fill_z(state(0), &mut zv);
@@ -136,9 +313,78 @@ mod tests {
     fn sgd_zero_g_is_noop() {
         let mut b = vec![1.0f32; 100];
         let orig = b.clone();
-        let mut z = Vec::new();
+        let mut z = ZScratch::new();
         cpu_zo_sgd_update(&mut b, state(3), 1e-3, 0.0, &mut z);
         assert_eq!(b, orig);
+    }
+
+    #[test]
+    fn pooled_sgd_is_bit_identical_to_scalar_at_any_thread_count() {
+        let n = 3 * CHUNK_ELEMS + 451;
+        let mut reference = vec![0.0f32; n];
+        fill_z(state(99), &mut reference); // arbitrary deterministic weights
+        let mut z = ZScratch::new();
+        let mut scalar = reference.clone();
+        cpu_zo_sgd_update(&mut scalar, state(4), 2e-3, 1.7, &mut z);
+        for threads in [1usize, 2, 8] {
+            let pool = HostPool::new(threads);
+            let mut pooled = reference.clone();
+            cpu_zo_sgd_update_pooled(&pool, &mut pooled, state(4), 2e-3, 1.7);
+            let same = scalar.iter().zip(&pooled).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn pooled_adamw_is_bit_identical_to_scalar() {
+        let n = CHUNK_ELEMS + 333;
+        let mut reference = vec![0.0f32; n];
+        fill_z(state(50), &mut reference);
+        let hp = AdamHp { lr: 1e-3, weight_decay: 0.01, ..Default::default() };
+        let mut scalar = reference.clone();
+        let mut st_s = AdamState::new(n);
+        let mut z = ZScratch::new();
+        for step in 0..3u64 {
+            cpu_zo_adamw_update(&mut scalar, &mut st_s, state(step), hp, 0.8, &mut z);
+        }
+        let pool = HostPool::new(8);
+        let mut pooled = reference.clone();
+        let mut st_p = AdamState::new(n);
+        for step in 0..3u64 {
+            cpu_zo_adamw_update_pooled(&pool, &mut pooled, &mut st_p, state(step), hp, 0.8);
+        }
+        assert_eq!(st_s.t, st_p.t);
+        assert!(scalar.iter().zip(&pooled).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(st_s.m.iter().zip(&st_p.m).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(st_s.v.iter().zip(&st_p.v).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn fused_adamw_matches_unfused_composition() {
+        let n = CHUNK_ELEMS + 77;
+        let mut xs = vec![0.0f32; n];
+        fill_z(state(60), &mut xs);
+        for x in xs.iter_mut() {
+            *x *= 0.02;
+        }
+        let hp = AdamHp { lr: 1e-3, ..Default::default() };
+        let pool = HostPool::new(4);
+        for codec in [Codec::F32, Codec::Bf16, Codec::Fp16, Codec::Fp8E4M3] {
+            let wire0 = codec.encode(&xs);
+            // Reference: decode, scalar AdamW on fp32, encode.
+            let mut dec = codec.decode(&wire0, n);
+            let mut st_ref = AdamState::new(n);
+            let mut z = ZScratch::new();
+            cpu_zo_adamw_update(&mut dec, &mut st_ref, state(8), hp, 1.1, &mut z);
+            let want = codec.encode(&dec);
+            // Fused single pass in the wire domain.
+            let mut got = wire0.clone();
+            let mut st_fused = AdamState::new(n);
+            fused_zo_adamw(&pool, codec, &mut got, &mut st_fused, state(8), hp, 1.1);
+            assert_eq!(got, want, "{codec:?}");
+            assert!(st_ref.m.iter().zip(&st_fused.m).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(st_ref.v.iter().zip(&st_fused.v).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
     }
 
     #[test]
@@ -148,7 +394,7 @@ mod tests {
         let mut b = vec![0.0f32; 1000];
         let mut st = AdamState::new(1000);
         let hp = AdamHp { lr: 1e-2, ..Default::default() };
-        let mut z = Vec::new();
+        let mut z = ZScratch::new();
         cpu_zo_adamw_update(&mut b, &mut st, state(0), hp, 1.5, &mut z);
         let mut zv = vec![0.0; 1000];
         fill_z(state(0), &mut zv);
@@ -166,7 +412,7 @@ mod tests {
         let mut b = vec![0.5f32; 64];
         let mut st = AdamState::new(64);
         let hp = AdamHp { lr: 1e-3, ..Default::default() };
-        let mut z = Vec::new();
+        let mut z = ZScratch::new();
         let before = b.clone();
         for _ in 0..50 {
             cpu_zo_adamw_update(&mut b, &mut st, state(5), hp, 2.0, &mut z);
@@ -187,7 +433,7 @@ mod tests {
         let mut b = vec![1.0f32; 32];
         let mut st = AdamState::new(32);
         let hp = AdamHp { lr: 1e-2, weight_decay: 0.1, ..Default::default() };
-        let mut z = Vec::new();
+        let mut z = ZScratch::new();
         cpu_zo_adamw_update(&mut b, &mut st, state(9), hp, 0.0, &mut z);
         // g = 0: pure decay, θ ← θ(1 − lr·wd)
         for w in &b {
@@ -201,13 +447,42 @@ mod tests {
     }
 
     #[test]
+    fn zscratch_shrinks_to_cap_and_accounts_bytes() {
+        // NOTE: HOST_SCRATCH is process-global and other tests run
+        // concurrently, so only monotonic (peak) properties are asserted on
+        // the gauge; the shrink policy itself is asserted on the local
+        // instance.
+        let mut z = ZScratch::new();
+        let _ = z.z_for(state(0), 100_000);
+        assert!(z.bytes() >= 400_000);
+        assert!(HOST_SCRATCH.peak() >= z.bytes(), "gauge must have seen the allocation");
+        // Without a cap update the capacity is retained (alternating sizes
+        // must not thrash)…
+        let _ = z.z_for(state(1), 10);
+        assert!(z.bytes() >= 400_000, "high-water mark retained while the big bucket lives");
+        // …and declaring the big bucket dead releases the excess.
+        z.set_cap(1000);
+        let _ = z.z_for(state(1), 10);
+        assert!(
+            z.bytes() <= 2 * 4 * 1000,
+            "scratch {} bytes must shrink to ~cap after the big bucket dies",
+            z.bytes()
+        );
+        // The fill itself stays correct across grow/shrink cycles.
+        let got = z.z_for(state(2), 64).to_vec();
+        let mut want = vec![0.0f32; 64];
+        fill_z(state(2), &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
     fn deferred_equals_immediate() {
         // The §5.4 reordering argument at the CPU site: applying update j
         // right after step j (MeZO order) or deferring it to just before
         // step j+1's use (ZO2 order) yields bit-identical parameters,
         // because updates are independent per bucket and replay the same z.
         let mut immediate = vec![0.3f32; 500];
-        let mut z = Vec::new();
+        let mut z = ZScratch::new();
         for j in 0..5u64 {
             cpu_zo_sgd_update(&mut immediate, state(j), 1e-3, 0.5 + j as f32, &mut z);
         }

@@ -22,10 +22,13 @@ pub mod mezo;
 pub mod param_store;
 pub mod zo2;
 
-pub use cpu_optim::{cpu_zo_adamw_update, cpu_zo_sgd_update, AdamHp, AdamState};
+pub use cpu_optim::{
+    cpu_zo_adamw_update, cpu_zo_adamw_update_pooled, cpu_zo_sgd_update, cpu_zo_sgd_update_pooled,
+    fused_zo_adamw, AdamHp, AdamState, ZScratch,
+};
 pub use mezo::MezoEngine;
 pub use param_store::ParamStore;
-pub use zo2::{RunMode, Zo2Engine, Zo2Options};
+pub use zo2::{RunMode, UpdateSite, Zo2Engine, Zo2Options};
 
 pub use crate::sched::Tiering;
 

@@ -23,6 +23,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::hostpool::HostPool;
 use crate::memory::{
     DevicePool, DiskBucket, DiskPool, DramWindow, HostBucket, TransferEngine, TransferModel,
 };
@@ -38,6 +39,20 @@ use crate::zo::{key_of, module_states, ParamStore, StepStats, ZoConfig};
 pub enum RunMode {
     Sequential,
     Overlapped,
+}
+
+/// Where the deferred block update executes (the update-site ablation,
+/// DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateSite {
+    /// Paper §5.4: fused into the device dual-forward executable.
+    Device,
+    /// Host side: a fused decode→update→encode pass over the host compute
+    /// pool while the bucket is DDR-resident — zero extra transfers, the
+    /// elementwise work moves off the device.  Deterministic and
+    /// self-consistent, but its own trajectory (host RNG draw instead of
+    /// the device threefry draw; see `cpu_optim` module docs).
+    Cpu,
 }
 
 /// Engine options (the Table 4 / Table 5 switches + the disk tier).
@@ -66,6 +81,13 @@ pub struct Zo2Options {
     /// Blocks whose master copy stays in DRAM under `ThreeTier`
     /// (`usize::MAX` = all resident, i.e. an empty disk tier).
     pub dram_resident_blocks: usize,
+    /// Where the deferred update runs: fused on the device (§5.4) or as a
+    /// fused wire-domain pass on the host pool (update-site ablation).
+    pub update_site: UpdateSite,
+    /// Host compute pool participants for codec/update kernels
+    /// (0 = machine parallelism).  Never changes numerics: host kernel
+    /// results are bit-identical at any thread count.
+    pub host_threads: usize,
 }
 
 impl Default for Zo2Options {
@@ -80,6 +102,8 @@ impl Default for Zo2Options {
             tiering: Tiering::TwoTier,
             dram_slots: 4,
             dram_resident_blocks: usize::MAX,
+            update_site: UpdateSite::Device,
+            host_threads: 0,
         }
     }
 }
@@ -88,6 +112,15 @@ impl Default for Zo2Options {
 struct Pending {
     g: f32,
     states: Vec<RngState>,
+}
+
+/// Deferred-update work routed to the host (CPU update site): applied as a
+/// fused wire-domain pass right before each block's upload.
+#[derive(Clone, Copy)]
+struct HostUpdate {
+    apply: bool,
+    lr: f32,
+    g: f32,
 }
 
 /// The engine's disk tier: a pool file holding spilled buckets, one entry
@@ -113,6 +146,9 @@ pub struct Zo2Engine {
     pub transfers: Mutex<TransferEngine>,
     pub transfer_model: TransferModel,
     disk: Option<DiskTier>,
+    /// Host compute pool for codec and CPU-site update kernels — spawned
+    /// once here, shared by every pipeline thread for the engine's life.
+    pub hostpool: Arc<HostPool>,
     /// Timeline of the most recent step (real Fig. 4 data).
     pub last_timeline: Timeline,
 }
@@ -159,6 +195,7 @@ impl Zo2Engine {
             transfers: Mutex::new(TransferEngine::new()),
             transfer_model: TransferModel::pcie4(),
             disk,
+            hostpool: Arc::new(HostPool::new(opts.host_threads)),
             last_timeline: Timeline::new(),
         })
     }
@@ -229,12 +266,11 @@ impl Zo2Engine {
         for i in 0..self.params.blocks.len() {
             if let Some(tier) = &self.disk {
                 if let Some(entry) = &tier.entries[i] {
-                    let bytes = tier.pool.read(entry)?;
-                    out.extend(entry.codec().decode(&bytes, entry.numel()));
+                    out.extend(tier.pool.read_decoded(entry, &self.hostpool)?);
                     continue;
                 }
             }
-            out.extend(self.params.blocks[i].to_f32());
+            out.extend(self.params.blocks[i].to_f32_pooled(&self.hostpool));
         }
         out.extend(self.params.head.iter());
         Ok(out)
@@ -274,15 +310,22 @@ impl Zo2Engine {
             self.manager.record_module_state(st);
         }
         // lrs: previous iteration's states + projected gradient (Alg. 2 l.4-9).
-        let (g_prev, prev_states) = match self.pending.take() {
+        let (g_prev, prev_states, had_pending) = match self.pending.take() {
             Some(p) => {
                 let _ = self.manager.pop_last_states();
-                (p.g, p.states)
+                (p.g, p.states, true)
             }
-            None => (0.0, states.clone()), // g=0 → update is an exact no-op
+            None => (0.0, states.clone(), false), // g=0 → update is an exact no-op
         };
 
         let (lr, eps, gl) = self.scalars(g_prev);
+        // CPU update site: the deferred block update runs on the host pool
+        // (fused, wire-domain) right before each upload, so the device
+        // executable gets g = 0 — an exact no-op — for blocks.  Embedding
+        // and head are device-resident and keep the device-site update.
+        let cpu_site = self.opts.update_site == UpdateSite::Cpu;
+        let host_update = HostUpdate { apply: cpu_site && had_pending, lr: self.cfg.lr, g: g_prev };
+        let gl_blocks = if cpu_site { lit_scalar(0.0) } else { gl.clone() };
         let ids_lit = lit_i32(ids, &[b, t])?;
 
         // --- embedding (device-resident) ----------------------------------
@@ -325,6 +368,16 @@ impl Zo2Engine {
                             end: wall0.elapsed().as_secs_f64(),
                         });
                     }
+                    // CPU update site: apply the deferred update as one
+                    // fused wire-domain pass while the bucket is staged.
+                    if host_update.apply {
+                        bucket.fused_sgd_update(
+                            prev_states[1 + i],
+                            host_update.lr,
+                            host_update.g,
+                            &self.hostpool,
+                        );
+                    }
                     let n = bucket.numel();
                     // Upload: decode host bucket into a device slot.
                     let tu = wall0.elapsed().as_secs_f64();
@@ -332,7 +385,7 @@ impl Zo2Engine {
                         self.device.alloc((n * 4) as u64)?;
                     }
                     let mut slot = vec![0.0f32; n];
-                    bucket.decode_into(&mut slot);
+                    bucket.decode_into_pooled(&mut slot, &self.hostpool);
                     let wire = bucket.wire_bytes() as u64;
                     self.transfers.lock().unwrap().record_h2d(wire, &self.transfer_model);
                     timeline.push(TraceEvent {
@@ -349,7 +402,7 @@ impl Zo2Engine {
                         &[
                             lit_f32(&slot, &[n as i64])?,
                             lit_key(key_of(prev_states[1 + i]))?,
-                            gl.clone(),
+                            gl_blocks.clone(),
                             lr.clone(),
                             lit_key(key_of(states[1 + i]))?,
                             eps.clone(),
@@ -370,7 +423,7 @@ impl Zo2Engine {
 
                     // Offload: encode updated bucket back to the host tier.
                     let to = wall0.elapsed().as_secs_f64();
-                    bucket.encode_from(&updated);
+                    bucket.encode_from_pooled(&updated, &self.hostpool);
                     self.transfers.lock().unwrap().record_d2h(wire, &self.transfer_model);
                     if !self.opts.reusable_mem {
                         self.device.free((n * 4) as u64);
@@ -398,11 +451,13 @@ impl Zo2Engine {
             RunMode::Overlapped => {
                 let (h2, m2) = if self.disk.is_some() {
                     self.run_blocks_overlapped_disk(
-                        &mut timeline, wall0, &prev_states, &states, hp, hm, &gl, &lr, &eps,
+                        &mut timeline, wall0, &prev_states, &states, hp, hm, &gl_blocks, &lr,
+                        &eps, host_update,
                     )?
                 } else {
                     self.run_blocks_overlapped(
-                        &mut timeline, wall0, &prev_states, &states, hp, hm, &gl, &lr, &eps,
+                        &mut timeline, wall0, &prev_states, &states, hp, hm, &gl_blocks, &lr,
+                        &eps, host_update,
                     )?
                 };
                 hp = h2;
@@ -458,6 +513,7 @@ impl Zo2Engine {
         gl: &xla::Literal,
         lr: &xla::Literal,
         eps: &xla::Literal,
+        host_update: HostUpdate,
     ) -> Result<(xla::Literal, xla::Literal)> {
         let n_blocks = self.params.n_blocks();
         let slots = self.opts.slots.max(1);
@@ -493,7 +549,9 @@ impl Zo2Engine {
 
         let trans = &self.transfers;
         let tmodel = self.transfer_model;
+        let hostpool = &self.hostpool;
         let prev_states = prev_states.to_vec();
+        let prev_states_up = prev_states.clone();
         let cur_states = states.to_vec();
         let events: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
 
@@ -502,11 +560,21 @@ impl Zo2Engine {
             s.spawn({
                 let events = &events;
                 move || {
-                    for (idx, bucket) in buckets.into_iter().enumerate() {
+                    for (idx, mut bucket) in buckets.into_iter().enumerate() {
                         let t_start = wall0.elapsed().as_secs_f64();
+                        // CPU update site: the deferred update runs here as
+                        // one fused wire-domain pass, off the compute path.
+                        if host_update.apply {
+                            bucket.fused_sgd_update(
+                                prev_states_up[1 + idx],
+                                host_update.lr,
+                                host_update.g,
+                                hostpool,
+                            );
+                        }
                         let n = bucket.numel();
                         let mut slot = vec![0.0f32; n];
-                        bucket.decode_into(&mut slot);
+                        bucket.decode_into_pooled(&mut slot, hostpool);
                         trans.lock().unwrap().record_h2d(wire_bytes[idx], &tmodel);
                         let t_end = wall0.elapsed().as_secs_f64();
                         events.lock().unwrap().push(TraceEvent {
@@ -529,7 +597,7 @@ impl Zo2Engine {
                     let mut done = Vec::new();
                     while let Ok(mut job) = rx_off.recv() {
                         let t_start = wall0.elapsed().as_secs_f64().max(job.t_ready);
-                        job.bucket.encode_from(&job.updated);
+                        job.bucket.encode_from_pooled(&job.updated, hostpool);
                         trans.lock().unwrap().record_d2h(wire_bytes[job.idx], &tmodel);
                         events.lock().unwrap().push(TraceEvent {
                             stream: "offload",
@@ -616,6 +684,7 @@ impl Zo2Engine {
         gl: &xla::Literal,
         lr: &xla::Literal,
         eps: &xla::Literal,
+        host_update: HostUpdate,
     ) -> Result<(xla::Literal, xla::Literal)> {
         let n_blocks = self.params.blocks.len();
         let slots = self.opts.slots.max(1);
@@ -666,7 +735,9 @@ impl Zo2Engine {
 
         let trans = &self.transfers;
         let tmodel = self.transfer_model;
+        let hostpool = &self.hostpool;
         let prev_states = prev_states.to_vec();
+        let prev_states_up = prev_states.clone();
         let cur_states = states.to_vec();
         let events: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
         // First NVMe failure in either disk thread; surfaced as the step's
@@ -719,11 +790,22 @@ impl Zo2Engine {
             s.spawn({
                 let events = &events;
                 move || {
-                    while let Ok((idx, bucket)) = rx_feed.recv() {
+                    while let Ok((idx, mut bucket)) = rx_feed.recv() {
                         let t_start = wall0.elapsed().as_secs_f64();
+                        // CPU update site: fused wire-domain deferred update
+                        // (uniform for resident and freshly-read spilled
+                        // buckets; the updated bytes flow on to write-back).
+                        if host_update.apply {
+                            bucket.fused_sgd_update(
+                                prev_states_up[1 + idx],
+                                host_update.lr,
+                                host_update.g,
+                                hostpool,
+                            );
+                        }
                         let n = bucket.numel();
                         let mut slot = vec![0.0f32; n];
-                        bucket.decode_into(&mut slot);
+                        bucket.decode_into_pooled(&mut slot, hostpool);
                         trans.lock().unwrap().record_h2d(wire_bytes[idx], &tmodel);
                         let t_end = wall0.elapsed().as_secs_f64();
                         events.lock().unwrap().push(TraceEvent {
@@ -745,7 +827,7 @@ impl Zo2Engine {
                 move || {
                     while let Ok(mut job) = rx_off.recv() {
                         let t_start = wall0.elapsed().as_secs_f64().max(job.t_ready);
-                        job.bucket.encode_from(&job.updated);
+                        job.bucket.encode_from_pooled(&job.updated, hostpool);
                         trans.lock().unwrap().record_d2h(wire_bytes[job.idx], &tmodel);
                         events.lock().unwrap().push(TraceEvent {
                             stream: "offload",
@@ -871,7 +953,9 @@ impl Zo2Engine {
     }
 
     /// Non-efficient-update ablation: standalone update round (Fig. 5a) —
-    /// every block crosses the interconnect a second time.
+    /// on the device site every block crosses the interconnect a second
+    /// time; on the CPU site the block updates run in place on the host
+    /// pool (fused wire-domain passes, zero extra transfers).
     fn apply_update_round(&mut self, g: f32, states: &[RngState]) -> Result<()> {
         let lr = lit_scalar(self.cfg.lr);
         let gl = lit_scalar(g);
@@ -888,25 +972,33 @@ impl Zo2Engine {
         )?;
         self.params.embed = lit_to_f32(&out[0])?;
 
-        for i in 0..self.params.n_blocks() {
-            let mut bucket = self.stage_block(i)?;
-            let n = bucket.numel();
-            let decoded = bucket.to_f32();
-            let wire = bucket.wire_bytes() as u64;
-            self.transfers.lock().unwrap().record_h2d(wire, &self.transfer_model);
-            let out = self.rt.run(
-                "update_block",
-                &[
-                    lit_f32(&decoded, &[n as i64])?,
-                    lit_key(key_of(states[1 + i]))?,
-                    lr.clone(),
-                    gl.clone(),
-                ],
-            )?;
-            let updated = lit_to_f32(&out[0])?;
-            bucket.encode_from(&updated);
-            self.transfers.lock().unwrap().record_d2h(wire, &self.transfer_model);
-            self.unstage_block(i, bucket, true)?;
+        if self.opts.update_site == UpdateSite::Cpu {
+            for i in 0..self.params.n_blocks() {
+                let mut bucket = self.stage_block(i)?;
+                bucket.fused_sgd_update(states[1 + i], self.cfg.lr, g, &self.hostpool);
+                self.unstage_block(i, bucket, true)?;
+            }
+        } else {
+            for i in 0..self.params.n_blocks() {
+                let mut bucket = self.stage_block(i)?;
+                let n = bucket.numel();
+                let decoded = bucket.to_f32_pooled(&self.hostpool);
+                let wire = bucket.wire_bytes() as u64;
+                self.transfers.lock().unwrap().record_h2d(wire, &self.transfer_model);
+                let out = self.rt.run(
+                    "update_block",
+                    &[
+                        lit_f32(&decoded, &[n as i64])?,
+                        lit_key(key_of(states[1 + i]))?,
+                        lr.clone(),
+                        gl.clone(),
+                    ],
+                )?;
+                let updated = lit_to_f32(&out[0])?;
+                bucket.encode_from_pooled(&updated, &self.hostpool);
+                self.transfers.lock().unwrap().record_d2h(wire, &self.transfer_model);
+                self.unstage_block(i, bucket, true)?;
+            }
         }
 
         let n_head = self.params.head.len();
@@ -962,9 +1054,9 @@ impl Zo2Engine {
         let mut h = out.into_iter().next().unwrap();
         for i in 0..self.params.n_blocks() {
             let bucket = self.stage_block(i)?;
-            let out = self
-                .rt
-                .run("block_fwd", &[lit_f32(&bucket.to_f32(), &[bucket.numel() as i64])?, h])?;
+            let decoded = bucket.to_f32_pooled(&self.hostpool);
+            let out =
+                self.rt.run("block_fwd", &[lit_f32(&decoded, &[bucket.numel() as i64])?, h])?;
             h = out.into_iter().next().unwrap();
             // Eval never mutates parameters: return the bucket clean.
             self.unstage_block(i, bucket, false)?;

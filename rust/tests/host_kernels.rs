@@ -1,0 +1,235 @@
+//! Host-kernel acceptance tests.
+//!
+//! Always-on half: randomized property sweeps that the fused
+//! decode→update→encode kernels are bit-identical to the unfused reference
+//! composition for all four codecs, and that every pooled kernel returns
+//! identical bytes for 1, 2 and 8 worker threads (the determinism
+//! contract: fixed chunk grid + per-chunk counter-offset RNG replay).
+//!
+//! Real-execution half (needs `make artifacts`): the engine's CPU update
+//! site is deterministic across run modes, tiering and host thread counts,
+//! and its flush round moves zero bytes over the interconnect.
+
+use zo2::hostpool::{fused, HostPool, CHUNK_ELEMS};
+use zo2::precision::Codec;
+use zo2::rng::{GaussianRng, RngState};
+use zo2::runtime::Runtime;
+use zo2::zo::{
+    cpu_zo_adamw_update, cpu_zo_sgd_update, AdamHp, AdamState, RunMode, Tiering, UpdateSite,
+    ZScratch, Zo2Engine, Zo2Options, ZoConfig,
+};
+
+macro_rules! require_artifacts {
+    () => {
+        if !zo2::artifacts_available("tiny") {
+            eprintln!(
+                "SKIP {}: no PJRT artifacts for config `tiny` (run `make artifacts` \
+                 or set $ZO2_ARTIFACTS)",
+                module_path!()
+            );
+            return;
+        }
+    };
+}
+
+const CODECS: [Codec; 4] = [Codec::F32, Codec::Bf16, Codec::Fp16, Codec::Fp8E4M3];
+
+fn params(n: usize, seed: u64) -> Vec<f32> {
+    let mut xs = vec![0.0f32; n];
+    GaussianRng::new(seed, 0).fill_gaussian(&mut xs);
+    for x in xs.iter_mut() {
+        *x *= 0.02; // parameter-scale, representable in fp8's range
+    }
+    xs
+}
+
+#[test]
+fn fused_sgd_matches_reference_composition_randomized() {
+    let mut case_rng = GaussianRng::new(404, 0);
+    let pool = HostPool::new(4);
+    for case in 0..12u64 {
+        let n = 1 + case_rng.next_below((3 * CHUNK_ELEMS) as u64) as usize;
+        let state = RngState {
+            seed: case_rng.next_below(1 << 20),
+            stream: case_rng.next_below(64),
+            counter: case_rng.next_below(1 << 30),
+        };
+        let lr = 10f32.powi(-(2 + (case % 4) as i32));
+        let g = (case_rng.next_uniform() as f32 - 0.5) * 4.0;
+        let xs = params(n, 1000 + case);
+        for codec in CODECS {
+            let wire0 = codec.encode(&xs);
+            // Reference: the three-pass composition through fp32.
+            let mut dec = codec.decode(&wire0, n);
+            let mut zs = ZScratch::new();
+            cpu_zo_sgd_update(&mut dec, state, lr, g, &mut zs);
+            let want = codec.encode(&dec);
+            // Fused one-pass, pooled.
+            let mut got = wire0.clone();
+            fused::fused_zo_sgd(codec, &mut got, n, state, lr, g, &pool);
+            assert_eq!(got, want, "case {case} {codec:?} n={n}");
+        }
+    }
+}
+
+#[test]
+fn every_pooled_kernel_is_identical_across_1_2_8_threads() {
+    let n = 2 * CHUNK_ELEMS + 1234;
+    let xs = params(n, 9);
+    let state = RngState { seed: 3, stream: 5, counter: 11 };
+    let hp = AdamHp { lr: 2e-3, weight_decay: 0.02, ..Default::default() };
+    for codec in CODECS {
+        let wire0 = codec.encode(&xs);
+        let mut sgd_outs: Vec<Vec<u8>> = Vec::new();
+        let mut adamw_outs: Vec<(Vec<u8>, Vec<f32>, Vec<f32>)> = Vec::new();
+        let mut enc_outs: Vec<Vec<u8>> = Vec::new();
+        let mut dec_outs: Vec<Vec<u32>> = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let pool = HostPool::new(threads);
+            // fused SGD
+            let mut w = wire0.clone();
+            fused::fused_zo_sgd(codec, &mut w, n, state, 1e-3, 0.9, &pool);
+            sgd_outs.push(w);
+            // fused AdamW
+            let mut w = wire0.clone();
+            let mut st = AdamState::new(n);
+            zo2::zo::fused_zo_adamw(&pool, codec, &mut w, &mut st, state, hp, 1.3);
+            adamw_outs.push((w, st.m, st.v));
+            // pooled encode / decode
+            let mut enc = vec![0u8; wire0.len()];
+            fused::encode_pooled(codec, &xs, &mut enc, &pool);
+            enc_outs.push(enc);
+            let mut dec = vec![0.0f32; n];
+            fused::decode_pooled(codec, &wire0, &mut dec, &pool);
+            dec_outs.push(dec.iter().map(|x| x.to_bits()).collect());
+        }
+        for i in 1..3 {
+            assert_eq!(sgd_outs[0], sgd_outs[i], "{codec:?} sgd threads[{i}]");
+            assert_eq!(adamw_outs[0].0, adamw_outs[i].0, "{codec:?} adamw wire threads[{i}]");
+            let m_same = adamw_outs[0]
+                .1
+                .iter()
+                .zip(&adamw_outs[i].1)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            let v_same = adamw_outs[0]
+                .2
+                .iter()
+                .zip(&adamw_outs[i].2)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(m_same && v_same, "{codec:?} adamw moments threads[{i}]");
+            assert_eq!(enc_outs[0], enc_outs[i], "{codec:?} encode threads[{i}]");
+            assert_eq!(dec_outs[0], dec_outs[i], "{codec:?} decode threads[{i}]");
+        }
+    }
+}
+
+#[test]
+fn fused_adamw_composition_over_multiple_steps() {
+    // Moments accumulate across steps; the fused wire-domain path must
+    // track the decode→scalar-AdamW→encode composition step for step.
+    let n = CHUNK_ELEMS + 55;
+    let xs = params(n, 21);
+    let hp = AdamHp { lr: 1e-3, ..Default::default() };
+    let pool = HostPool::new(8);
+    for codec in [Codec::Bf16, Codec::Fp16] {
+        let mut ref_wire = codec.encode(&xs);
+        let mut st_ref = AdamState::new(n);
+        let mut fused_wire = ref_wire.clone();
+        let mut st_fused = AdamState::new(n);
+        let mut zs = ZScratch::new();
+        for step in 0..4u64 {
+            let state = RngState { seed: 2, stream: step, counter: 0 };
+            let mut dec = codec.decode(&ref_wire, n);
+            cpu_zo_adamw_update(&mut dec, &mut st_ref, state, hp, 0.6, &mut zs);
+            ref_wire = codec.encode(&dec);
+            zo2::zo::fused_zo_adamw(&pool, codec, &mut fused_wire, &mut st_fused, state, hp, 0.6);
+            assert_eq!(fused_wire, ref_wire, "{codec:?} step {step}");
+        }
+        assert_eq!(st_ref.t, st_fused.t);
+    }
+}
+
+// --- real-execution half -------------------------------------------------------
+
+const STEPS: usize = 4;
+
+fn run_engine(opts: Zo2Options) -> (Vec<(f32, f32)>, Vec<f32>) {
+    let rt = Runtime::load_config("tiny").unwrap();
+    let m = rt.manifest();
+    let mut corpus = zo2::data::SyntheticCorpus::new(m.config.vocab, 13);
+    let data: Vec<Vec<i32>> =
+        (0..STEPS).map(|_| corpus.sample(m.config.batch, m.config.seq_len).ids).collect();
+    let mut e = Zo2Engine::new(rt, ZoConfig { lr: 1e-3, eps: 1e-3, seed: 33 }, opts).unwrap();
+    let mut losses = Vec::new();
+    for ids in &data {
+        let s = e.train_step(ids).unwrap();
+        losses.push((s.loss_plus, s.loss_minus));
+    }
+    e.flush_updates().unwrap();
+    (losses, e.flat_params().unwrap())
+}
+
+fn assert_runs_equal(a: &(Vec<(f32, f32)>, Vec<f32>), b: &(Vec<(f32, f32)>, Vec<f32>), what: &str) {
+    for (i, (x, y)) in a.0.iter().zip(&b.0).enumerate() {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{what}: step {i} loss+");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{what}: step {i} loss-");
+    }
+    assert_eq!(a.1.len(), b.1.len(), "{what}: param count");
+    let diffs = a.1.iter().zip(&b.1).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+    assert_eq!(diffs, 0, "{what}: {diffs} params differ bitwise");
+}
+
+#[test]
+fn cpu_update_site_is_deterministic_across_modes_tiers_and_threads() {
+    require_artifacts!();
+    let base = Zo2Options { update_site: UpdateSite::Cpu, ..Zo2Options::default() };
+    let reference = run_engine(Zo2Options { host_threads: 1, ..base });
+    // Thread counts never change the trajectory.
+    for host_threads in [2usize, 8] {
+        let got = run_engine(Zo2Options { host_threads, ..base });
+        assert_runs_equal(&reference, &got, &format!("{host_threads} host threads"));
+    }
+    // Sequential and overlapped schedules agree.
+    let seq = run_engine(Zo2Options { run_mode: RunMode::Sequential, ..base });
+    assert_runs_equal(&reference, &seq, "sequential vs overlapped");
+    // The disk tier does not change the math at the CPU site either.
+    let spilled = run_engine(Zo2Options {
+        tiering: Tiering::ThreeTier,
+        dram_resident_blocks: 0,
+        dram_slots: 2,
+        ..base
+    });
+    assert_runs_equal(&reference, &spilled, "three-tier");
+    // And the CPU site is a *different* deterministic trajectory than the
+    // device site (host RNG draw; documented in cpu_optim).
+    let device = run_engine(Zo2Options::default());
+    let any_diff = reference.1.iter().zip(&device.1).any(|(x, y)| x.to_bits() != y.to_bits());
+    assert!(any_diff, "CPU site must be its own trajectory, not the device one");
+}
+
+#[test]
+fn cpu_update_site_flush_moves_no_bytes() {
+    require_artifacts!();
+    let rt = Runtime::load_config("tiny").unwrap();
+    let m = rt.manifest();
+    let n_blocks = m.config.n_layers as u64;
+    let wire = (m.block.size * 4) as u64;
+    let mut corpus = zo2::data::SyntheticCorpus::new(m.config.vocab, 13);
+    let ids = corpus.sample(m.config.batch, m.config.seq_len).ids;
+    let mut e = Zo2Engine::new(
+        rt,
+        ZoConfig::default(),
+        Zo2Options { update_site: UpdateSite::Cpu, ..Zo2Options::default() },
+    )
+    .unwrap();
+    let steps = 3u64;
+    for _ in 0..steps {
+        e.train_step(&ids).unwrap();
+    }
+    let before = e.transfers.lock().unwrap().total_bytes();
+    assert_eq!(before, steps * n_blocks * wire * 2, "one h2d+d2h per block per step");
+    // Flushing the pending update runs entirely on the host pool.
+    e.flush_updates().unwrap();
+    let after = e.transfers.lock().unwrap().total_bytes();
+    assert_eq!(after, before, "CPU-site flush must not touch the interconnect");
+}

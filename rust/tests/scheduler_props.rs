@@ -67,6 +67,7 @@ fn rand_case(rng: &mut GaussianRng) -> (usize, usize, RandCosts, Policy) {
         tiering: if three { Tiering::ThreeTier } else { Tiering::TwoTier },
         spilled: if three { rng.next_below(1 + n_blocks as u64) as usize } else { 0 },
         dram_slots: 1 + rng.next_below(4) as usize,
+        disk_batch: 1 + rng.next_below(4) as usize,
     };
     (n_blocks, steps, costs, policy)
 }
