@@ -16,7 +16,7 @@ use zo2::costmodel::{
 };
 use zo2::model::opt_by_name;
 use zo2::precision::Codec;
-use zo2::sched::{build_plan, simulate, Policy};
+use zo2::sched::{build_plan, simulate, Policy, SpillPlacement};
 use zo2::util::fmt_mb;
 
 const SIM_STEPS: usize = 3;
@@ -58,7 +58,7 @@ fn main() {
     );
     for gb in [16u64, 32, 64, 96, 128, 192, 256, 384, 512] {
         let budget = MemoryBudget { hbm: 18 << 30, dram: gb << 30, nvme: 2 << 40 };
-        let plan = plan_three_tier(&wl, &budget, 3, 4, 2, &hw);
+        let plan = plan_three_tier(&wl, &budget, 3, 4, 2, &hw, SpillPlacement::Trailing);
         let policy = plan.policy();
         let (s, _) = simulate(&build_plan(shape.n_layers, SIM_STEPS, policy), &costs, policy);
         let tps = tokens / s.steady_step_s;

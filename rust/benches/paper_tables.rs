@@ -14,14 +14,15 @@ use std::collections::BTreeMap;
 
 use zo2::baselines::{comm_ops_per_block, first_order_comm_per_step, zo2_comm_per_step};
 use zo2::costmodel::{
-    gpu_memory_bytes, mezo_step_s, plan_three_tier, two_tier_dram_bytes, ComputeMode, Hardware,
-    MemoryBudget, SimCost, Strategy, Workload,
+    gpu_memory_bytes, mezo_step_s, plan_three_tier, two_tier_dram_bytes, Cluster, ClusterCost,
+    ComputeMode, Hardware, Interconnect, MemoryBudget, SimCost, Strategy, Workload,
 };
 use zo2::hostpool::{fused, HostPool};
 use zo2::model::{opt_by_name, opt_family, ModelShape};
 use zo2::precision::Codec;
 use zo2::rng::{GaussianRng, RngState};
-use zo2::sched::{build_plan, simulate, Policy};
+use zo2::sched::{build_plan, simulate, Policy, SpillPlacement};
+use zo2::shard::{build_sharded_plan, ShardLayout, ShardSpec};
 use zo2::util::fmt_mb;
 use zo2::util::json::Json;
 use zo2::util::stats::bench;
@@ -59,7 +60,7 @@ fn fig1_memory(hw: &Hardware) {
         let cell = |s: Strategy| {
             let b = gpu_memory_bytes(s, &w, 4, hw);
             if b > hw.hbm_capacity {
-                format!("X")
+                "X".to_string()
             } else {
                 fmt_mb(b)
             }
@@ -374,7 +375,7 @@ fn table_disk_tier(hw: &Hardware) {
     let mut rows: Vec<Json> = Vec::new();
     for gb in [16u64, 32, 64, 128, 256, 512] {
         let budget = MemoryBudget { hbm: 18 << 30, dram: gb << 30, nvme: 2 << 40 };
-        let plan = plan_three_tier(&w, &budget, 3, 4, 2, hw);
+        let plan = plan_three_tier(&w, &budget, 3, 4, 2, hw, SpillPlacement::Trailing);
         let policy = plan.policy();
         let (s, _) = simulate(&build_plan(shape.n_layers, SIM_STEPS, policy), &costs, policy);
         let tps = tokens / s.steady_step_s;
@@ -409,6 +410,20 @@ fn table_disk_tier(hw: &Hardware) {
     match std::fs::write(path, Json::Obj(doc).to_string_pretty()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => println!("could not write {path}: {e}"),
+    }
+
+    // Spill placement ablation at the 64 GB point: interleaving the spilled
+    // blocks through the step vs the trailing burst.
+    let budget = MemoryBudget { hbm: 18 << 30, dram: 64 << 30, nvme: 2 << 40 };
+    for placement in [SpillPlacement::Trailing, SpillPlacement::Interleaved] {
+        let plan = plan_three_tier(&w, &budget, 3, 4, 2, hw, placement);
+        let policy = plan.policy();
+        let (s, _) = simulate(&build_plan(shape.n_layers, SIM_STEPS, policy), &costs, policy);
+        println!(
+            "  64 GB, {placement:?}: {:.1} tokens/s ({})",
+            tokens / s.steady_step_s,
+            s.bottleneck()
+        );
     }
 }
 
@@ -534,6 +549,102 @@ fn table_host_kernels(_hw: &Hardware) {
     println!(" feed the calibration block back into costmodel::HostKernels::calibrated)");
 }
 
+/// Simulated multi-GPU sharding: step time + scaling efficiency vs device
+/// count for both strategies, written to `BENCH_multi_gpu.json`.
+///
+/// * data-parallel (weak scaling): each device runs a full replica on its
+///   own batch shard; throughput = N·B·T / step; efficiency =
+///   tps(N) / (N · tps(1)).  ZO's per-step comm is one seed broadcast + one
+///   scalar all-reduce, so efficiency should stay ≈ 1.
+/// * pipeline (model-parallel): blocks partitioned contiguously; per-device
+///   PCIe traffic divides by N; speedup = tps(N) / tps(1), meaningful in
+///   the comm-bound fp16-wire regime.
+fn table_multi_gpu(hw: &Hardware) {
+    println!("\n=== Multi-GPU: step time + scaling efficiency (fp16 wire/compute, NVLink) ===");
+    println!(
+        "{:<10} {:>2} | {:>10} {:>10} {:>6} {:>14} | {:>10} {:>8} {:>14}",
+        "model", "N", "dp step", "dp tok/s", "eff", "dp bneck", "pipe step", "speedup", "pipe bneck"
+    );
+    let tokens = 2048.0;
+    let mut rows: Vec<Json> = Vec::new();
+    for name in ["OPT-13B", "OPT-30B", "OPT-175B"] {
+        let shape = opt_by_name(name).unwrap();
+        let w = wl(&shape, 1, 2048, Codec::Fp16, ComputeMode::Fp16);
+        let policy = Policy::default();
+        let mut dp_tps1 = 0.0f64;
+        let mut pipe_tps1 = 0.0f64;
+        for n in [1usize, 2, 4, 8] {
+            let cluster = Cluster::homogeneous(hw.clone(), n, Interconnect::nvlink());
+            let costs = ClusterCost::new(&cluster, &w);
+
+            let dp_plan = build_sharded_plan(
+                shape.n_layers,
+                SIM_STEPS,
+                policy,
+                &ShardSpec::data_parallel(n),
+            );
+            let (dp, _) = simulate(&dp_plan, &costs, policy);
+            let dp_tps = n as f64 * tokens / dp.steady_step_s;
+            if n == 1 {
+                dp_tps1 = dp_tps;
+            }
+            let eff = dp_tps / (n as f64 * dp_tps1);
+
+            let pipe_plan = build_sharded_plan(
+                shape.n_layers,
+                SIM_STEPS,
+                policy,
+                &ShardSpec::pipeline(n, ShardLayout::Contiguous),
+            );
+            let (pipe, _) = simulate(&pipe_plan, &costs, policy);
+            let pipe_tps = tokens / pipe.steady_step_s;
+            if n == 1 {
+                pipe_tps1 = pipe_tps;
+            }
+
+            println!(
+                "{:<10} {:>2} | {:>9.3}s {:>10.0} {:>6.2} {:>14} | {:>9.3}s {:>7.2}x {:>14}",
+                name,
+                n,
+                dp.steady_step_s,
+                dp_tps,
+                eff,
+                dp.bottleneck(),
+                pipe.steady_step_s,
+                pipe_tps / pipe_tps1,
+                pipe.bottleneck()
+            );
+            let mut row = BTreeMap::new();
+            row.insert("model".to_string(), Json::Str(name.to_string()));
+            row.insert("devices".to_string(), Json::Num(n as f64));
+            row.insert("dp_step_s".to_string(), Json::Num(dp.steady_step_s));
+            row.insert("dp_tokens_per_s".to_string(), Json::Num(dp_tps));
+            row.insert("dp_scaling_efficiency".to_string(), Json::Num(eff));
+            row.insert("dp_bottleneck".to_string(), Json::Str(dp.bottleneck().to_string()));
+            row.insert("pipeline_step_s".to_string(), Json::Num(pipe.steady_step_s));
+            row.insert("pipeline_tokens_per_s".to_string(), Json::Num(pipe_tps));
+            row.insert("pipeline_speedup".to_string(), Json::Num(pipe_tps / pipe_tps1));
+            row.insert(
+                "pipeline_bottleneck".to_string(),
+                Json::Str(pipe.bottleneck().to_string()),
+            );
+            rows.push(Json::Obj(row));
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("multi_gpu".to_string()));
+    doc.insert("wire".to_string(), Json::Str("fp16".to_string()));
+    doc.insert("link".to_string(), Json::Str("NVLink".to_string()));
+    doc.insert("rows".to_string(), Json::Arr(rows));
+    let path = "BENCH_multi_gpu.json";
+    match std::fs::write(path, Json::Obj(doc).to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+    println!("(dp: weak scaling, efficiency ~1 expected — ZO ships one scalar per step;");
+    println!(" pipeline: wins only where PCIe is the constraint, layout matters)");
+}
+
 fn main() {
     let filter = std::env::args().nth(1).unwrap_or_default();
     let hw = Hardware::a100_pcie4();
@@ -572,6 +683,9 @@ fn main() {
     }
     if run("host_kernels") {
         table_host_kernels(&hw);
+    }
+    if run("multi_gpu") {
+        table_multi_gpu(&hw);
     }
     println!("\n(Table 3 is regenerated by `cargo run --release --example accuracy_parity`");
     println!(" and asserted bit-exactly by `cargo test --test parity`.)");

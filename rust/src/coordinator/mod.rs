@@ -7,22 +7,37 @@ use anyhow::Result;
 use crate::data::SyntheticCorpus;
 use crate::precision::Codec;
 use crate::runtime::Runtime;
+use crate::sched::SpillPlacement;
 use crate::telemetry::Series;
 use crate::zo::{
-    MezoEngine, RunMode, StepStats, Tiering, UpdateSite, Zo2Engine, Zo2Options, ZoConfig,
+    DpSimShard, MezoEngine, RunMode, StepStats, Tiering, UpdateSite, Zo2Engine, Zo2Options,
+    ZoConfig,
 };
 
 /// Which engine backs the trainer.
 pub enum Engine {
     Mezo(MezoEngine),
     Zo2(Zo2Engine),
+    /// Seed-synchronous data-parallel ZO2: K in-process worker replicas
+    /// over K batch shards per step (`TrainConfig::dp_workers > 1`).
+    DpSim(DpSimShard<Zo2Engine>),
 }
 
 impl Engine {
+    /// Token ids consumed per `train_step` call, in engine batches: the DP
+    /// sim-shard engine eats one batch per shard.
+    pub fn batches_per_step(&self) -> usize {
+        match self {
+            Engine::DpSim(e) => e.n_shards(),
+            _ => 1,
+        }
+    }
+
     pub fn train_step(&mut self, ids: &[i32]) -> Result<StepStats> {
         match self {
             Engine::Mezo(e) => e.train_step(ids),
             Engine::Zo2(e) => e.train_step(ids),
+            Engine::DpSim(e) => e.train_step(ids),
         }
     }
 
@@ -30,6 +45,8 @@ impl Engine {
         match self {
             Engine::Mezo(e) => e.eval(ids),
             Engine::Zo2(e) => e.eval(ids),
+            // Replicas are identical after each all-reduce: worker 0 evals.
+            Engine::DpSim(e) => e.workers_mut()[0].eval(ids),
         }
     }
 
@@ -37,6 +54,12 @@ impl Engine {
         match self {
             Engine::Mezo(_) => Ok(()), // MeZO updates in-step
             Engine::Zo2(e) => e.flush_updates(),
+            Engine::DpSim(e) => {
+                for w in e.workers_mut() {
+                    w.flush_updates()?;
+                }
+                Ok(())
+            }
         }
     }
 
@@ -44,6 +67,7 @@ impl Engine {
         match self {
             Engine::Mezo(e) => e.runtime(),
             Engine::Zo2(e) => e.runtime(),
+            Engine::DpSim(e) => e.workers()[0].runtime(),
         }
     }
 }
@@ -66,11 +90,20 @@ pub struct TrainConfig {
     pub dram_budget_bytes: Option<u64>,
     /// Staging-window slots for spilled buckets.
     pub dram_slots: usize,
+    /// Which blocks spill under three-tier (trailing vs interleaved).
+    pub spill_placement: SpillPlacement,
     /// Where the deferred block update runs (device §5.4, or fused on the
     /// host compute pool).
     pub update_site: UpdateSite,
     /// Host compute pool threads (0 = machine parallelism).
     pub host_threads: usize,
+    /// Seed-synchronous DP sim-shard workers (1 = plain single-engine run).
+    pub dp_workers: usize,
+    /// DP microbatch shards per step (0 = one per worker).  The shard count
+    /// is part of the trajectory's identity; the worker count is pure
+    /// parallelisation — holding `dp_shards` fixed while varying
+    /// `dp_workers` reproduces the same trajectory bit-for-bit.
+    pub dp_shards: usize,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -92,8 +125,11 @@ impl Default for TrainConfig {
             tiering: Tiering::TwoTier,
             dram_budget_bytes: None,
             dram_slots: 4,
+            spill_placement: SpillPlacement::Trailing,
             update_site: UpdateSite::Device,
             host_threads: 0,
+            dp_workers: 1,
+            dp_shards: 0,
         }
     }
 }
@@ -111,48 +147,63 @@ pub struct TrainReport {
     pub spilled_blocks: usize,
 }
 
+/// [`Zo2Options`] realising `cfg` for one engine (or DP worker replica).
+fn zo2_options(cfg: &TrainConfig, rt: &Runtime) -> Zo2Options {
+    // Convert the DRAM byte budget into a resident-block count via the
+    // same placement rule the analytic planner uses.
+    let dram_resident_blocks = match (cfg.tiering, cfg.dram_budget_bytes) {
+        (Tiering::ThreeTier, Some(budget)) => {
+            let n = rt.manifest().config.n_layers;
+            let wire = (rt.manifest().block.size * cfg.wire.bytes_per_el()) as u64;
+            let resident =
+                crate::costmodel::resident_blocks_for_budget(n, wire, budget, cfg.dram_slots);
+            if resident >= n {
+                usize::MAX
+            } else {
+                resident
+            }
+        }
+        _ => usize::MAX,
+    };
+    Zo2Options {
+        wire: cfg.wire,
+        run_mode: cfg.run_mode,
+        tiering: cfg.tiering,
+        dram_slots: cfg.dram_slots,
+        dram_resident_blocks,
+        spill_placement: cfg.spill_placement,
+        update_site: cfg.update_site,
+        host_threads: cfg.host_threads,
+        ..Zo2Options::default()
+    }
+}
+
 /// Build an engine for `cfg`, loading the AOT artifacts.
 pub fn build_engine(cfg: &TrainConfig) -> Result<Engine> {
     let rt = Runtime::load_config(&cfg.config_name)?;
     rt.manifest().validate()?;
     rt.compile_all()?;
     Ok(match cfg.engine {
-        EngineKind::Mezo => Engine::Mezo(MezoEngine::new(rt, cfg.zo)?),
+        EngineKind::Mezo => {
+            Engine::Mezo(MezoEngine::with_host_threads(rt, cfg.zo, cfg.host_threads)?)
+        }
+        EngineKind::Zo2 if cfg.dp_workers > 1 || cfg.dp_shards > 1 => {
+            // K seed-synchronous worker replicas over S microbatch shards
+            // (one engine batch each; S defaults to K).  The first replica
+            // reuses the runtime already loaded; the rest load their own.
+            let shards = if cfg.dp_shards == 0 { cfg.dp_workers } else { cfg.dp_shards };
+            let opts = zo2_options(cfg, &rt);
+            let mut workers = vec![Zo2Engine::new(rt, cfg.zo, opts)?];
+            for _ in 1..cfg.dp_workers {
+                let rt = Runtime::load_config(&cfg.config_name)?;
+                rt.compile_all()?;
+                workers.push(Zo2Engine::new(rt, cfg.zo, opts)?);
+            }
+            Engine::DpSim(DpSimShard::new(workers, shards)?)
+        }
         EngineKind::Zo2 => {
-            // Convert the DRAM byte budget into a resident-block count via
-            // the same placement rule the analytic planner uses.
-            let dram_resident_blocks = match (cfg.tiering, cfg.dram_budget_bytes) {
-                (Tiering::ThreeTier, Some(budget)) => {
-                    let n = rt.manifest().config.n_layers;
-                    let wire = (rt.manifest().block.size * cfg.wire.bytes_per_el()) as u64;
-                    let resident = crate::costmodel::resident_blocks_for_budget(
-                        n,
-                        wire,
-                        budget,
-                        cfg.dram_slots,
-                    );
-                    if resident >= n {
-                        usize::MAX
-                    } else {
-                        resident
-                    }
-                }
-                _ => usize::MAX,
-            };
-            Engine::Zo2(Zo2Engine::new(
-                rt,
-                cfg.zo,
-                Zo2Options {
-                    wire: cfg.wire,
-                    run_mode: cfg.run_mode,
-                    tiering: cfg.tiering,
-                    dram_slots: cfg.dram_slots,
-                    dram_resident_blocks,
-                    update_site: cfg.update_site,
-                    host_threads: cfg.host_threads,
-                    ..Zo2Options::default()
-                },
-            )?)
+            let opts = zo2_options(cfg, &rt);
+            Engine::Zo2(Zo2Engine::new(rt, cfg.zo, opts)?)
         }
     })
 }
@@ -170,10 +221,15 @@ pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
     let mut losses = Series::new("loss");
     let mut tokens = 0usize;
     let t0 = std::time::Instant::now();
+    let shards = engine.batches_per_step();
     for step in 0..cfg.steps {
-        let batch = corpus.sample(b, t);
-        let stats = engine.train_step(&batch.ids)?;
-        tokens += b * t;
+        // One engine batch per DP shard (a plain engine samples one).
+        let mut ids = Vec::with_capacity(shards * b * t);
+        for _ in 0..shards {
+            ids.extend(corpus.sample(b, t).ids);
+        }
+        let stats = engine.train_step(&ids)?;
+        tokens += shards * b * t;
         losses.push(step as f64, stats.loss() as f64);
         if verbose && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
             println!(
@@ -198,6 +254,18 @@ pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
             e.disk_stats().map_or(0, |(r, w)| r.bytes + w.bytes),
             e.spilled_blocks(),
         ),
+        Engine::DpSim(dp) => {
+            // Per-device peak; traffic summed across the worker replicas.
+            let peak = dp.workers().iter().map(|e| e.device.peak()).max().unwrap_or(0);
+            let transfer =
+                dp.workers().iter().map(|e| e.transfers.lock().unwrap().total_bytes()).sum();
+            let disk = dp
+                .workers()
+                .iter()
+                .map(|e| e.disk_stats().map_or(0, |(r, w)| r.bytes + w.bytes))
+                .sum();
+            (peak, transfer, disk, dp.workers()[0].spilled_blocks())
+        }
         Engine::Mezo(e) => (e.device.peak(), 0, 0, 0),
     };
 

@@ -16,10 +16,16 @@
 //!   pools, communication buckets, the reusable block buffer (§5.3), the
 //!   transfer engine, and the disk tier ([`memory::disk`]) — file-backed
 //!   NVMe buckets below DDR with an accounted DRAM staging window.
-//! * [`sched`] — the dynamic scheduler (§5.2, Algorithm 3): three streams
-//!   in two-tier mode, five (± DiskRead/DiskWrite) in three-tier mode, its
-//!   naive global-sync counterpart (ablation), and a discrete-event
-//!   simulator sharing one dependency-rule core.
+//! * [`sched`] — the dynamic scheduler (§5.2, Algorithm 3) with
+//!   device-indexed streams ([`sched::StreamId`]): three streams per device
+//!   in two-tier mode, five (± DiskRead/DiskWrite) in three-tier mode, an
+//!   Interconnect stream for device-to-device traffic, the naive
+//!   global-sync counterpart (ablation), and a discrete-event simulator
+//!   sharing one dependency-rule core.
+//! * [`shard`] — simulated multi-GPU sharding on top of the device-indexed
+//!   scheduler: block-contiguous / block-cyclic pipeline partitions and
+//!   seed-synchronous data-parallel ZO (one seed broadcast + one scalar
+//!   all-reduce per step).
 //! * [`precision`] — bf16 / fp16 / fp8(e4m3) transfer codecs (AMP, §5.5)
 //!   with table-driven hot paths and chunk-range entry points; the disk
 //!   tier stores spilled buckets in the same wire format.
@@ -52,6 +58,7 @@ pub mod precision;
 pub mod rng;
 pub mod runtime;
 pub mod sched;
+pub mod shard;
 pub mod telemetry;
 pub mod util;
 pub mod zo;

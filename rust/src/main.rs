@@ -10,13 +10,14 @@ use anyhow::{bail, Result};
 
 use zo2::coordinator::{train, EngineKind, TrainConfig};
 use zo2::costmodel::{
-    gpu_memory_bytes, plan_three_tier, two_tier_dram_bytes, ComputeMode, Hardware, MemoryBudget,
-    SimCost, Strategy, Workload,
+    gpu_memory_bytes, plan_three_tier, two_tier_dram_bytes, Cluster, ClusterCost, ComputeMode,
+    Hardware, Interconnect, MemoryBudget, SimCost, Strategy, Workload,
 };
 use zo2::model::{opt_by_name, opt_family};
 use zo2::precision::Codec;
 use zo2::runtime::Runtime;
-use zo2::sched::{build_plan, simulate, Policy, Tiering};
+use zo2::sched::{build_plan, simulate, Policy, SpillPlacement, Tiering};
+use zo2::shard::{build_sharded_plan, blocks_per_device, ShardLayout, ShardSpec, ShardStrategy};
 use zo2::util::cli::Args;
 use zo2::util::fmt_mb;
 use zo2::zo::{RunMode, UpdateSite, ZoConfig};
@@ -39,7 +40,10 @@ fn main() -> Result<()> {
                  \x20      [--mode seq|overlap] [--model OPT-13B] [--compute fp32|tf32|fp16]\n\
                  \x20      [--tiering two|three] [--dram-budget GB] [--dram-slots N]\n\
                  \x20      [--nvme-gbps F] [--nvme-write-gbps F] [--disk-batch N]\n\
-                 \x20      [--update-site device|cpu] [--host-threads N]"
+                 \x20      [--spill-placement trailing|interleaved]\n\
+                 \x20      [--update-site device|cpu] [--host-threads N] [--dp-workers K] [--dp-shards S]\n\
+                 \x20      [--devices N] [--shard dp|pipeline] [--layout contiguous|cyclic]\n\
+                 \x20      [--link nvlink|pcie] [--link-gbps F]"
             );
             Ok(())
         }
@@ -51,6 +55,14 @@ fn parse_tiering(args: &Args) -> Result<Tiering> {
         "two" | "2" => Ok(Tiering::TwoTier),
         "three" | "3" => Ok(Tiering::ThreeTier),
         t => bail!("unknown tiering `{t}` (expected two|three)"),
+    }
+}
+
+fn parse_spill_placement(args: &Args) -> Result<SpillPlacement> {
+    match args.get_or("spill-placement", "trailing").as_str() {
+        "trailing" | "tail" => Ok(SpillPlacement::Trailing),
+        "interleaved" | "interleave" => Ok(SpillPlacement::Interleaved),
+        p => bail!("unknown spill placement `{p}` (expected trailing|interleaved)"),
     }
 }
 
@@ -90,12 +102,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         tiering,
         dram_budget_bytes,
         dram_slots: args.get_usize("dram-slots", 4),
+        spill_placement: parse_spill_placement(args)?,
         update_site: match args.get_or("update-site", "device").as_str() {
             "device" | "gpu" => UpdateSite::Device,
             "cpu" | "host" => UpdateSite::Cpu,
             s => bail!("unknown update site `{s}` (expected device|cpu)"),
         },
         host_threads: args.get_usize("host-threads", 0),
+        dp_workers: args.get_usize("dp-workers", 1).max(1),
+        dp_shards: args.get_usize("dp-shards", 0),
     };
     let report = train(&cfg, true)?;
     println!(
@@ -137,12 +152,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let param_bytes = wire.bytes_per_el().min(4);
     let tiering = parse_tiering(args)?;
     let dram_slots = args.get_usize("dram-slots", 4);
+    let spill_placement = parse_spill_placement(args)?;
     let mut policy = Policy {
         overlap: args.get_or("mode", "overlap") != "seq",
         reusable_mem: !args.has("no-reusable-mem"),
         efficient_update: !args.has("no-efficient-update"),
         slots: args.get_usize("slots", 3),
         disk_batch: args.get_usize("disk-batch", 1).max(1),
+        spill_placement,
         ..Policy::default()
     };
     if tiering == Tiering::ThreeTier {
@@ -151,7 +168,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             dram: (args.get_f64("dram-budget", 64.0) * (1u64 << 30) as f64) as u64,
             nvme: 2 << 40,
         };
-        let plan = plan_three_tier(&wl, &budget, policy.slots, dram_slots, param_bytes, &hw);
+        let plan = plan_three_tier(
+            &wl,
+            &budget,
+            policy.slots,
+            dram_slots,
+            param_bytes,
+            &hw,
+            spill_placement,
+        );
         policy.tiering = Tiering::ThreeTier;
         policy.spilled = plan.spilled_blocks;
         policy.dram_slots = plan.dram_slots.max(1);
@@ -167,6 +192,92 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
     }
     let steps = args.get_usize("sim-steps", 4);
+    let devices = args.get_usize("devices", 1).max(1);
+
+    if devices > 1 {
+        // Multi-GPU simulation: per-device streams + an interconnect.
+        let strategy = match args.get_or("shard", "dp").as_str() {
+            "dp" | "data-parallel" => ShardStrategy::DataParallel,
+            "pipeline" | "pp" => ShardStrategy::Pipeline,
+            s => bail!("unknown shard strategy `{s}` (expected dp|pipeline)"),
+        };
+        // Three-tier pricing across devices: DP replicas each hold the full
+        // model against their own host's `--dram-budget`, so the
+        // single-replica spill plan applies per device as-is.  Pipeline
+        // sharding would need a per-partition plan (each host holds only
+        // its own blocks) — refuse rather than report wrong spill numbers.
+        if tiering == Tiering::ThreeTier && strategy == ShardStrategy::Pipeline {
+            bail!(
+                "--tiering three with --shard pipeline is not modeled yet: the spill \
+                 plan is computed for a full single-host copy, not per block \
+                 partition (use --shard dp, whose replicas each hold the full \
+                 model against their own host's --dram-budget)"
+            );
+        }
+        let layout = match args.get_or("layout", "contiguous").as_str() {
+            "contiguous" | "block" => ShardLayout::Contiguous,
+            "cyclic" | "roundrobin" => ShardLayout::Cyclic,
+            l => bail!("unknown layout `{l}` (expected contiguous|cyclic)"),
+        };
+        let link = match args.get_or("link", "nvlink").as_str() {
+            "nvlink" => Interconnect::nvlink(),
+            "pcie" | "pcie-p2p" => Interconnect::pcie_p2p(),
+            l => bail!("unknown link `{l}` (expected nvlink|pcie)"),
+        };
+        let link = match args.get("link-gbps") {
+            Some(s) => match s.parse::<f64>() {
+                Ok(gbps) if gbps > 0.0 => link.with_gbps(gbps),
+                _ => bail!("bad --link-gbps `{s}`"),
+            },
+            None => link,
+        };
+        let spec = ShardSpec { devices, layout, strategy };
+        let cluster = Cluster::homogeneous(hw, devices, link);
+        let costs = ClusterCost::new(&cluster, &wl);
+        let plan = build_sharded_plan(wl.shape.n_layers, steps, policy, &spec);
+        let (sched, timeline) = simulate(&plan, &costs, policy);
+        // DP runs one batch shard per device (weak scaling); pipeline runs
+        // the single stream across devices.
+        let tokens_per_step = match strategy {
+            ShardStrategy::DataParallel => (devices * wl.batch * wl.seq) as f64,
+            ShardStrategy::Pipeline => (wl.batch * wl.seq) as f64,
+        };
+        println!(
+            "{name} x{devices} {} ({}): step {:.3}s  ->  {:.0} tokens/s  \
+             (makespan {:.3}s over {steps} steps, {}, link {})",
+            match strategy {
+                ShardStrategy::DataParallel => "dp",
+                ShardStrategy::Pipeline => "pipeline",
+            },
+            match layout {
+                ShardLayout::Contiguous => "contiguous",
+                ShardLayout::Cyclic => "cyclic",
+            },
+            sched.steady_step_s,
+            tokens_per_step / sched.steady_step_s,
+            sched.makespan,
+            sched.bottleneck(),
+            cluster.link.name,
+        );
+        let per_dev = blocks_per_device(layout, wl.shape.n_layers, devices);
+        for d in sched.devices() {
+            let owned = match strategy {
+                ShardStrategy::Pipeline => per_dev[d.0].len(),
+                ShardStrategy::DataParallel => wl.shape.n_layers,
+            };
+            println!(
+                "  device {}: {} blocks, {}",
+                d.0,
+                owned,
+                sched.bottleneck_of(d)
+            );
+        }
+        if args.has("timeline") {
+            println!("{}", timeline.to_ascii_gantt(100));
+        }
+        return Ok(());
+    }
+
     let costs = SimCost::new(&hw, &wl);
     let plan = build_plan(wl.shape.n_layers, steps, policy);
     let (sched, timeline) = simulate(&plan, &costs, policy);

@@ -172,6 +172,14 @@ impl RngStateManager {
         self.rsb.back()
     }
 
+    /// Drop the newest record.  Used by the DP sim-shard engine mode when a
+    /// step is *replayed* on another microbatch shard: the replay's
+    /// `begin_iter` pushed a duplicate of the step's record, which would
+    /// otherwise accumulate one stale entry per extra shard.
+    pub fn discard_current(&mut self) -> Option<IterStates> {
+        self.rsb.pop_back()
+    }
+
     pub fn buffered(&self) -> usize {
         self.rsb.len()
     }

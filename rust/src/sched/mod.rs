@@ -1,5 +1,5 @@
 //! The ZO2 dynamic scheduler (paper §5.2, Algorithm 3), extended with a
-//! disk tier.
+//! disk tier and device-indexed streams.
 //!
 //! Two-tier mode mirrors the paper's three CUDA streams — Upload, Compute,
 //! Offload — with two dependency rules:
@@ -24,6 +24,18 @@
 //!  4. disk read-after-write: R of block *i* at step *j+1* waits for W of
 //!     block *i* at step *j* (the bucket on disk is the updated one).
 //!
+//! # Device-indexed streams
+//!
+//! A stream's identity is [`StreamId`] — a `(device, kind)` pair — so the
+//! same dependency rules describe one GPU (every stream on [`DeviceId`] 0;
+//! the paper's setting) or N simulated GPUs, each with its own
+//! Upload/Compute/Offload(/DiskRead/DiskWrite) streams plus an
+//! [`StreamKind::Interconnect`] stream for device-to-device traffic.  The
+//! multi-device plans (pipeline-sharded and seed-synchronous data-parallel
+//! ZO) are built by [`crate::shard`]; `N = 1` is the degenerate case of the
+//! same builder, not a special code path, and produces byte-identical plans
+//! to the original single-device scheduler.
+//!
 //! The same task DAG drives two executions:
 //!  * [`analytic`]: a deterministic discrete-event schedule on virtual time
 //!    using a [`CostProvider`] — this is how paper-scale (OPT-30B…175B)
@@ -44,19 +56,93 @@ pub mod analytic;
 
 pub use analytic::{simulate, Schedule};
 
-/// Which stream a task runs on (the paper's three CUDA streams, plus the
-/// two disk queues of the three-tier extension).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Stream {
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::sync::OnceLock;
+
+/// A simulated accelerator in the cluster (device 0 in single-GPU runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub usize);
+
+/// What a stream *does* (the paper's three CUDA streams, the two disk
+/// queues of the three-tier extension, and the device-to-device link).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum StreamKind {
     Upload,
     Compute,
     Offload,
     DiskRead,
     DiskWrite,
+    /// Device-to-device traffic: pipeline activation handoffs, the DP seed
+    /// broadcast and the DP projected-gradient all-reduce.
+    Interconnect,
 }
 
-pub const ALL_STREAMS: [Stream; 5] =
-    [Stream::Upload, Stream::Compute, Stream::Offload, Stream::DiskRead, Stream::DiskWrite];
+pub const STREAM_KINDS: [StreamKind; 6] = [
+    StreamKind::Upload,
+    StreamKind::Compute,
+    StreamKind::Offload,
+    StreamKind::DiskRead,
+    StreamKind::DiskWrite,
+    StreamKind::Interconnect,
+];
+
+impl StreamKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StreamKind::Upload => "upload",
+            StreamKind::Compute => "compute",
+            StreamKind::Offload => "offload",
+            StreamKind::DiskRead => "disk_read",
+            StreamKind::DiskWrite => "disk_write",
+            StreamKind::Interconnect => "interconnect",
+        }
+    }
+
+    pub(crate) fn index(self) -> usize {
+        match self {
+            StreamKind::Upload => 0,
+            StreamKind::Compute => 1,
+            StreamKind::Offload => 2,
+            StreamKind::DiskRead => 3,
+            StreamKind::DiskWrite => 4,
+            StreamKind::Interconnect => 5,
+        }
+    }
+}
+
+/// Device-indexed stream identity.  Everything that used to be keyed by the
+/// old five-variant `Stream` enum is keyed by this pair now; single-device
+/// schedules put every task on device 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamId {
+    pub device: DeviceId,
+    pub kind: StreamKind,
+}
+
+impl StreamId {
+    pub fn new(device: usize, kind: StreamKind) -> Self {
+        Self { device: DeviceId(device), kind }
+    }
+
+    /// Display name.  Device 0 keeps the historical bare names ("upload",
+    /// "compute", …) so single-GPU timelines, busy maps and gantt charts
+    /// are unchanged by the device-indexed refactor; other devices prefix
+    /// the device ("d1.upload").
+    pub fn name(&self) -> &'static str {
+        if self.device.0 == 0 {
+            return self.kind.name();
+        }
+        static NAMES: OnceLock<Mutex<BTreeMap<(usize, usize), &'static str>>> = OnceLock::new();
+        let cache = NAMES.get_or_init(|| Mutex::new(BTreeMap::new()));
+        let mut cache = cache.lock().unwrap();
+        *cache
+            .entry((self.device.0, self.kind.index()))
+            .or_insert_with(|| {
+                Box::leak(format!("d{}.{}", self.device.0, self.kind.name()).into_boxed_str())
+            })
+    }
+}
 
 /// Module position in the forward order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -81,6 +167,31 @@ pub enum TaskKind {
     DiskRead,
     /// Write an updated spilled bucket DDR→NVMe (three-tier write-back).
     DiskWrite,
+    /// Activation handoff between consecutive blocks on different devices
+    /// (pipeline sharding; the dual-path hidden state crosses the link).
+    ActivationXfer,
+    /// Per-step perturbation-seed broadcast (seed-synchronous DP: the only
+    /// data workers must agree on before perturbing — 8 bytes).
+    SeedBcast,
+    /// Projected-gradient exchange: the scalar all-reduce of DP ZO, or the
+    /// head-to-all g broadcast of the pipeline schedule.
+    GradReduce,
+}
+
+impl TaskKind {
+    /// Which stream kind this task occupies in an overlapped schedule.
+    pub fn stream_kind(self) -> StreamKind {
+        match self {
+            TaskKind::Upload => StreamKind::Upload,
+            TaskKind::Compute | TaskKind::Update => StreamKind::Compute,
+            TaskKind::Offload => StreamKind::Offload,
+            TaskKind::DiskRead => StreamKind::DiskRead,
+            TaskKind::DiskWrite => StreamKind::DiskWrite,
+            TaskKind::ActivationXfer | TaskKind::SeedBcast | TaskKind::GradReduce => {
+                StreamKind::Interconnect
+            }
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -89,12 +200,19 @@ pub struct Task {
     pub step: usize,
     pub module: Module,
     pub kind: TaskKind,
-    pub stream: Stream,
+    pub stream: StreamId,
     /// Indices of tasks that must complete first (beyond stream FIFO).
     pub deps: Vec<usize>,
     /// Extra fixed latency charged at task start (cudaMalloc in the
     /// no-reusable-memory ablation).
     pub extra_latency: f64,
+}
+
+impl Task {
+    /// The device this task runs on (or, for link tasks, originates from).
+    pub fn device(&self) -> DeviceId {
+        self.stream.device
+    }
 }
 
 /// Where block master copies live.
@@ -105,6 +223,38 @@ pub enum Tiering {
     /// Disk tier below DDR: buckets beyond the DRAM budget spill to NVMe
     /// and stream through the DRAM staging window.
     ThreeTier,
+}
+
+/// Which blocks spill to the disk tier (three-tier mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillPlacement {
+    /// The last `spilled` blocks spill (the original policy): disk traffic
+    /// arrives in one burst at the tail of every step.
+    Trailing,
+    /// Spills spread evenly across the block order: disk reads interleave
+    /// with DDR-resident uploads, smoothing the NVMe queues over the step.
+    Interleaved,
+}
+
+/// Whether block `i` of `n_blocks` lives on the disk tier when `spilled`
+/// blocks spill under `placement`.  Shared by the analytic planner, the DAG
+/// builder and the real engine, so all three agree on the spill set.
+pub fn is_spilled_block(
+    i: usize,
+    n_blocks: usize,
+    spilled: usize,
+    placement: SpillPlacement,
+) -> bool {
+    let spilled = spilled.min(n_blocks);
+    if spilled == 0 || n_blocks == 0 {
+        return false;
+    }
+    match placement {
+        SpillPlacement::Trailing => i >= n_blocks - spilled,
+        // Even spread: exactly `spilled` indices, ~n/spilled apart (the
+        // classic Bresenham selection).
+        SpillPlacement::Interleaved => (i + 1) * spilled / n_blocks > i * spilled / n_blocks,
+    }
 }
 
 /// Scheduler policy / ablation switches (Table 4 + the disk tier).
@@ -118,9 +268,11 @@ pub struct Policy {
     pub tiering: Tiering,
     /// DRAM staging-window slots = disk prefetch look-ahead (three-tier).
     pub dram_slots: usize,
-    /// Number of trailing blocks spilled to the disk tier (three-tier;
-    /// 0 = everything fits in DDR and the plan degenerates to two-tier).
+    /// Number of blocks spilled to the disk tier (three-tier; 0 = everything
+    /// fits in DDR and the plan degenerates to two-tier).
     pub spilled: usize,
+    /// Which blocks spill (trailing burst vs interleaved).
+    pub spill_placement: SpillPlacement,
     /// io_uring-style disk-read batching: up to this many back-to-back
     /// queued reads share one submission-latency charge (1 = off).  Only
     /// the latency coalesces — bandwidth is still paid per read.
@@ -137,6 +289,7 @@ impl Default for Policy {
             tiering: Tiering::TwoTier,
             dram_slots: 4,
             spilled: 0,
+            spill_placement: SpillPlacement::Trailing,
             disk_batch: 1,
         }
     }
@@ -154,198 +307,16 @@ impl Policy {
 }
 
 /// Build the task DAG for `steps` training steps over `n_blocks` offloaded
-/// transformer blocks (embedding and LM head stay GPU-resident, §5.2).
-/// In three-tier mode the last `policy.spilled` blocks additionally stream
-/// through the disk tier (R before U, W after O).
+/// transformer blocks (embedding and LM head stay GPU-resident, §5.2) on a
+/// single device.  In three-tier mode `policy.spilled` blocks additionally
+/// stream through the disk tier (R before U, W after O).
+///
+/// This is the `N = 1` case of [`crate::shard::build_sharded_plan`] — the
+/// device-indexed builder degenerates to the paper's single-GPU five-stream
+/// schedule, byte-for-byte (asserted against a frozen copy of the
+/// pre-refactor builder in `tests/sched_golden_v1.rs`).
 pub fn build_plan(n_blocks: usize, steps: usize, policy: Policy) -> Vec<Task> {
-    let mut tasks: Vec<Task> = Vec::new();
-    // Per-stream last task id, for FIFO chaining.
-    let mut last_on: [Option<usize>; 5] = [None; 5];
-    // id of O(Wᵢ) per in-flight slot ring.
-    let mut offload_ring: Vec<Option<usize>> = vec![None; policy.slots.max(1)];
-    let mut ring_pos = 0usize;
-    // id of W(Wᵢ) per DRAM staging-window slot ring (three-tier).
-    let mut dram_ring: Vec<Option<usize>> = vec![None; policy.dram_slots.max(1)];
-    let mut dram_pos = 0usize;
-    // id of the last DiskWrite per block (read-after-write across steps).
-    let mut last_write: Vec<Option<usize>> = vec![None; n_blocks];
-    // id of the last task overall (for naive global sync).
-    let mut prev_any: Option<usize> = None;
-    // id of the previous *compute* task (cudaMalloc sync in the
-    // no-reusable-memory ablation).
-    let mut prev_compute: Option<usize> = None;
-
-    let spilled = match policy.tiering {
-        Tiering::TwoTier => 0,
-        Tiering::ThreeTier => policy.spilled.min(n_blocks),
-    };
-    let on_disk = |i: usize| i >= n_blocks - spilled;
-
-    let stream_idx = |s: Stream| match s {
-        Stream::Upload => 0,
-        Stream::Compute => 1,
-        Stream::Offload => 2,
-        Stream::DiskRead => 3,
-        Stream::DiskWrite => 4,
-    };
-
-    let push = |tasks: &mut Vec<Task>,
-                    last_on: &mut [Option<usize>; 5],
-                    prev_any: &mut Option<usize>,
-                    prev_compute: &mut Option<usize>,
-                    step: usize,
-                    module: Module,
-                    kind: TaskKind,
-                    mut deps: Vec<usize>,
-                    extra_latency: f64| {
-        let stream = if policy.overlap {
-            match kind {
-                TaskKind::Upload => Stream::Upload,
-                TaskKind::Compute | TaskKind::Update => Stream::Compute,
-                TaskKind::Offload => Stream::Offload,
-                TaskKind::DiskRead => Stream::DiskRead,
-                TaskKind::DiskWrite => Stream::DiskWrite,
-            }
-        } else {
-            Stream::Compute // naive: one stream serialises everything
-        };
-        let id = tasks.len();
-        // Stream FIFO.
-        if let Some(p) = last_on[stream_idx(stream)] {
-            deps.push(p);
-        }
-        // Naive global sync: depend on *every* previous task (equivalent to
-        // depending on the last one since the single stream is FIFO anyway).
-        if !policy.overlap {
-            if let Some(p) = *prev_any {
-                deps.push(p);
-            }
-        }
-        deps.sort_unstable();
-        deps.dedup();
-        tasks.push(Task { id, step, module, kind, stream, deps, extra_latency });
-        last_on[stream_idx(stream)] = Some(id);
-        *prev_any = Some(id);
-        if matches!(kind, TaskKind::Compute | TaskKind::Update) {
-            *prev_compute = Some(id);
-        }
-        id
-    };
-
-    let malloc_sync = !policy.reusable_mem;
-
-    for step in 0..steps {
-        // C(Embedding) — resident, no upload.
-        let c_embed = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                           step, Module::Embed, TaskKind::Compute, vec![], 0.0);
-        let mut prev_c = c_embed;
-
-        // Upload of block 0 may overlap the embedding compute (§5.2).
-        for i in 0..n_blocks {
-            let mut deps = Vec::new();
-            // Three-tier: R(Wᵢ) stages the spilled bucket into the DRAM
-            // window before the upload can push it over PCIe.
-            if on_disk(i) {
-                let mut rdeps = Vec::new();
-                // DRAM-window rule: R needs a free staging slot, freed by
-                // the W that ran `dram_slots` spills earlier.
-                if let Some(w) = dram_ring[dram_pos] {
-                    rdeps.push(w);
-                }
-                // Read-after-write: the on-disk bucket is the one the
-                // previous step's W wrote back.
-                if let Some(w) = last_write[i] {
-                    rdeps.push(w);
-                }
-                let r = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                             step, Module::Block(i), TaskKind::DiskRead, rdeps, 0.0);
-                deps.push(r);
-            }
-            // Slot reuse: U waits for the offload that frees this slot.
-            if let Some(o) = offload_ring[ring_pos] {
-                deps.push(o);
-            }
-            if malloc_sync {
-                // cudaMalloc synchronises with the device: the upload cannot
-                // overlap in-flight compute.
-                if let Some(c) = prev_compute {
-                    deps.push(c);
-                }
-            }
-            let extra = 0.0; // malloc latency charged via CostProvider::malloc_s
-            let u = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                         step, Module::Block(i), TaskKind::Upload, deps, extra);
-
-            // C(Wᵢ) ← U(Wᵢ) (+ FIFO after previous compute).
-            let c = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                         step, Module::Block(i), TaskKind::Compute, vec![u, prev_c], 0.0);
-            prev_c = c;
-
-            // O(Wᵢ) ← C(Wᵢ) (+ FIFO after previous offload).
-            let o = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                         step, Module::Block(i), TaskKind::Offload, vec![c], 0.0);
-            offload_ring[ring_pos] = Some(o);
-            ring_pos = (ring_pos + 1) % offload_ring.len();
-
-            // W(Wᵢ) ← O(Wᵢ): write the updated bucket back to NVMe and free
-            // its DRAM staging slot.
-            if on_disk(i) {
-                let w = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                             step, Module::Block(i), TaskKind::DiskWrite, vec![o], 0.0);
-                dram_ring[dram_pos] = Some(w);
-                dram_pos = (dram_pos + 1) % dram_ring.len();
-                last_write[i] = Some(w);
-            }
-        }
-
-        // C(LMHead) — resident.
-        let _c_head = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                           step, Module::Head, TaskKind::Compute, vec![prev_c], 0.0);
-
-        if !policy.efficient_update {
-            // Fig. 5a: a second upload→update→offload round per block, after
-            // the step's projected gradient is known (i.e. after the head).
-            for i in 0..n_blocks {
-                let mut deps = Vec::new();
-                if on_disk(i) {
-                    let mut rdeps = Vec::new();
-                    if let Some(w) = dram_ring[dram_pos] {
-                        rdeps.push(w);
-                    }
-                    if let Some(w) = last_write[i] {
-                        rdeps.push(w);
-                    }
-                    let r = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                                 step, Module::Block(i), TaskKind::DiskRead, rdeps, 0.0);
-                    deps.push(r);
-                }
-                if let Some(o) = offload_ring[ring_pos] {
-                    deps.push(o);
-                }
-                if malloc_sync {
-                    if let Some(c) = prev_compute {
-                        deps.push(c);
-                    }
-                }
-                let u = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                             step, Module::Block(i), TaskKind::Upload, deps, 0.0);
-                let c = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                             step, Module::Block(i), TaskKind::Update, vec![u], 0.0);
-                let o = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                             step, Module::Block(i), TaskKind::Offload, vec![c], 0.0);
-                offload_ring[ring_pos] = Some(o);
-                ring_pos = (ring_pos + 1) % offload_ring.len();
-                if on_disk(i) {
-                    let w = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
-                                 step, Module::Block(i), TaskKind::DiskWrite, vec![o], 0.0);
-                    dram_ring[dram_pos] = Some(w);
-                    dram_pos = (dram_pos + 1) % dram_ring.len();
-                    last_write[i] = Some(w);
-                }
-            }
-        }
-    }
-    tasks
+    crate::shard::build_sharded_plan(n_blocks, steps, policy, &crate::shard::ShardSpec::single())
 }
 
 /// Task durations, supplied either by the analytic cost model
@@ -390,6 +361,21 @@ pub trait CostProvider {
     fn disk_write_s(&self) -> f64 {
         0.0
     }
+    /// Device-to-device activation handoff (pipeline sharding): the
+    /// dual-path hidden state of one module boundary crossing the link.
+    /// Single-device providers keep the zero default.
+    fn link_activation_s(&self) -> f64 {
+        0.0
+    }
+    /// Per-step perturbation-seed broadcast (seed-synchronous DP).
+    fn link_seed_s(&self) -> f64 {
+        0.0
+    }
+    /// Projected-gradient exchange: scalar all-reduce (DP) or the head's g
+    /// broadcast (pipeline).
+    fn link_grad_s(&self) -> f64 {
+        0.0
+    }
 }
 
 #[cfg(test)]
@@ -405,6 +391,8 @@ mod tests {
         let offloads = p.iter().filter(|t| t.kind == TaskKind::Offload).count();
         assert_eq!(uploads, 4);
         assert_eq!(offloads, 4);
+        // Single-device plans put every task on device 0.
+        assert!(p.iter().all(|t| t.device() == DeviceId(0)));
     }
 
     #[test]
@@ -439,7 +427,7 @@ mod tests {
     #[test]
     fn naive_plan_is_single_stream() {
         let p = build_plan(4, 2, Policy::naive());
-        assert!(p.iter().all(|t| t.stream == Stream::Compute));
+        assert!(p.iter().all(|t| t.stream == StreamId::new(0, StreamKind::Compute)));
     }
 
     #[test]
@@ -511,5 +499,53 @@ mod tests {
         let w0 = p.iter().find(|t| t.kind == TaskKind::DiskWrite && t.module == Module::Block(0)).unwrap();
         let r1 = p.iter().find(|t| t.kind == TaskKind::DiskRead && t.module == Module::Block(1)).unwrap();
         assert!(r1.deps.contains(&w0.id), "DRAM window of 1 must serialise spills");
+    }
+
+    #[test]
+    fn interleaved_placement_spreads_the_spill_set() {
+        // 6 blocks, 2 spilled: trailing = {4,5}, interleaved = {2,5}.
+        let spilled =
+            |pl| (0..6).filter(|&i| is_spilled_block(i, 6, 2, pl)).collect::<Vec<_>>();
+        assert_eq!(spilled(SpillPlacement::Trailing), vec![4, 5]);
+        assert_eq!(spilled(SpillPlacement::Interleaved), vec![2, 5]);
+        // Every (n, spilled) pair places exactly `spilled` blocks.
+        for n in 1..12usize {
+            for s in 0..=n {
+                for pl in [SpillPlacement::Trailing, SpillPlacement::Interleaved] {
+                    let count = (0..n).filter(|&i| is_spilled_block(i, n, s, pl)).count();
+                    assert_eq!(count, s, "n={n} spilled={s} {pl:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_plan_moves_disk_tasks_off_the_tail() {
+        let policy = Policy {
+            spill_placement: SpillPlacement::Interleaved,
+            ..Policy::three_tier(2, 4)
+        };
+        let p = build_plan(6, 1, policy);
+        let reads: Vec<usize> = p
+            .iter()
+            .filter(|t| t.kind == TaskKind::DiskRead)
+            .map(|t| match t.module {
+                Module::Block(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(reads, vec![2, 5]);
+    }
+
+    #[test]
+    fn stream_names_are_stable() {
+        assert_eq!(StreamId::new(0, StreamKind::Upload).name(), "upload");
+        assert_eq!(StreamId::new(0, StreamKind::Interconnect).name(), "interconnect");
+        assert_eq!(StreamId::new(1, StreamKind::Upload).name(), "d1.upload");
+        assert_eq!(StreamId::new(3, StreamKind::DiskWrite).name(), "d3.disk_write");
+        // Interned: repeated lookups return the same pointer.
+        let a = StreamId::new(2, StreamKind::Compute).name();
+        let b = StreamId::new(2, StreamKind::Compute).name();
+        assert!(std::ptr::eq(a, b));
     }
 }

@@ -1,0 +1,649 @@
+//! Multi-device sharding of the ZO2 schedule (simulated multi-GPU).
+//!
+//! ZO2 targets one constrained GPU, but its stream DAG generalises directly
+//! to N devices, and ZO's gradient is uniquely cheap to data-parallelise:
+//! workers only need to agree on the perturbation seed and exchange one
+//! projected-gradient scalar per step (the ZO benchmark survey's point
+//! about ZO's communication advantage over first-order DP).  This module
+//! partitions transformer blocks across simulated devices and builds
+//! device-indexed task DAGs for two execution strategies:
+//!
+//! * **Pipeline sharding** ([`ShardStrategy::Pipeline`]): blocks are
+//!   partitioned across devices ([`ShardLayout::Contiguous`] ranges or
+//!   [`ShardLayout::Cyclic`] round-robin); the dual-path hidden state flows
+//!   device-to-device over [`StreamKind::Interconnect`], and each device's
+//!   CPU↔GPU traffic covers only its own blocks — the PCIe load divides
+//!   across the hosts' lanes.  The per-device slot rings let device 0 start
+//!   step *j+1* while later devices finish step *j* (cross-step
+//!   pipelining); the projected gradient of step *j* is broadcast from the
+//!   head device before any device's step *j+1* compute applies its
+//!   deferred update.
+//! * **Seed-synchronous data parallelism** ([`ShardStrategy::DataParallel`]):
+//!   each device runs the *full* single-device ZO2 pipeline on its own
+//!   batch shard.  Per-step communication is exactly one seed broadcast
+//!   plus one scalar all-reduce on the interconnect stream — uploads for
+//!   the next step may prefetch before the all-reduce lands, only the first
+//!   *compute* of the next step waits for it (the deferred update needs ḡ).
+//!
+//! `N = 1` is the degenerate case of the same builder — both strategies
+//! emit no interconnect tasks and collapse to the paper's single-GPU
+//! schedule, byte-for-byte (this is what [`crate::sched::build_plan`]
+//! calls; asserted against a frozen pre-refactor copy in
+//! `tests/sched_golden_v1.rs`).
+
+use crate::sched::{
+    is_spilled_block, DeviceId, Module, Policy, StreamId, StreamKind, Task, TaskKind, Tiering,
+};
+
+/// How blocks map to devices under pipeline sharding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardLayout {
+    /// Balanced contiguous ranges: device d owns blocks
+    /// `[d·n/N, (d+1)·n/N)`; activations cross the link N−1 times per step.
+    Contiguous,
+    /// Round-robin: block i on device i mod N; activations cross the link
+    /// at (almost) every block boundary — the layout ablation that shows
+    /// placement matters.
+    Cyclic,
+}
+
+/// Execution strategy across devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Model-parallel: blocks partitioned, activations pipelined.
+    Pipeline,
+    /// Seed-synchronous data-parallel: full model per device, batch
+    /// sharded, one seed broadcast + one scalar all-reduce per step.
+    DataParallel,
+}
+
+/// A sharding configuration: how many devices, which layout, and which
+/// execution strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub devices: usize,
+    pub layout: ShardLayout,
+    pub strategy: ShardStrategy,
+}
+
+impl ShardSpec {
+    /// The single-device degenerate case (what [`crate::sched::build_plan`]
+    /// uses): layout and strategy are irrelevant at N = 1.
+    pub fn single() -> Self {
+        Self { devices: 1, layout: ShardLayout::Contiguous, strategy: ShardStrategy::Pipeline }
+    }
+
+    pub fn pipeline(devices: usize, layout: ShardLayout) -> Self {
+        Self { devices: devices.max(1), layout, strategy: ShardStrategy::Pipeline }
+    }
+
+    pub fn data_parallel(devices: usize) -> Self {
+        Self {
+            devices: devices.max(1),
+            layout: ShardLayout::Contiguous,
+            strategy: ShardStrategy::DataParallel,
+        }
+    }
+}
+
+/// Owning device of block `i` under `layout` (0 when `devices <= 1`).
+pub fn block_owner(layout: ShardLayout, n_blocks: usize, devices: usize, i: usize) -> usize {
+    let devices = devices.max(1);
+    match layout {
+        ShardLayout::Contiguous => i * devices / n_blocks.max(1),
+        ShardLayout::Cyclic => i % devices,
+    }
+}
+
+/// Blocks owned by each device (index = device), for reporting and memory
+/// accounting.
+pub fn blocks_per_device(layout: ShardLayout, n_blocks: usize, devices: usize) -> Vec<Vec<usize>> {
+    let devices = devices.max(1);
+    let mut per: Vec<Vec<usize>> = vec![Vec::new(); devices];
+    for i in 0..n_blocks {
+        per[block_owner(layout, n_blocks, devices, i)].push(i);
+    }
+    per
+}
+
+/// Per-device scheduler lane: the stream cursors and resource rings of one
+/// device (its reusable-buffer slot ring and DRAM staging window).
+struct Lane {
+    device: DeviceId,
+    /// Last task id per stream kind, for FIFO chaining.
+    last_on: [Option<usize>; 6],
+    /// id of O(Wᵢ) per in-flight reusable-buffer slot.
+    offload_ring: Vec<Option<usize>>,
+    ring_pos: usize,
+    /// id of W(Wᵢ) per DRAM staging-window slot (three-tier).
+    dram_ring: Vec<Option<usize>>,
+    dram_pos: usize,
+    /// id of the previous *compute* task on this device (cudaMalloc sync
+    /// in the no-reusable-memory ablation).
+    prev_compute: Option<usize>,
+    /// id of this device's last task (naive per-device global sync).
+    prev_any: Option<usize>,
+}
+
+impl Lane {
+    fn new(device: usize, policy: &Policy) -> Self {
+        Self {
+            device: DeviceId(device),
+            last_on: [None; 6],
+            offload_ring: vec![None; policy.slots.max(1)],
+            ring_pos: 0,
+            dram_ring: vec![None; policy.dram_slots.max(1)],
+            dram_pos: 0,
+            prev_compute: None,
+            prev_any: None,
+        }
+    }
+}
+
+/// Accumulates the task list, applying the dependency rules shared by all
+/// strategies: per-stream FIFO, naive per-device global sync, backward-only
+/// deps.
+struct PlanBuilder {
+    tasks: Vec<Task>,
+    policy: Policy,
+}
+
+impl PlanBuilder {
+    fn new(policy: Policy) -> Self {
+        Self { tasks: Vec::new(), policy }
+    }
+
+    fn push(
+        &mut self,
+        lane: &mut Lane,
+        step: usize,
+        module: Module,
+        kind: TaskKind,
+        mut deps: Vec<usize>,
+        extra_latency: f64,
+    ) -> usize {
+        let stream_kind = if self.policy.overlap {
+            kind.stream_kind()
+        } else {
+            StreamKind::Compute // naive: one stream per device serialises everything
+        };
+        let stream = StreamId { device: lane.device, kind: stream_kind };
+        let id = self.tasks.len();
+        // Stream FIFO.
+        if let Some(p) = lane.last_on[stream_kind.index()] {
+            deps.push(p);
+        }
+        // Naive global sync, per device: a device syncs after each of *its*
+        // tasks (on one device this is every task — the original ablation —
+        // while sibling devices of a sharded plan stay independent hardware;
+        // cross-device ordering still comes from the explicit link deps).
+        if !self.policy.overlap {
+            if let Some(p) = lane.prev_any {
+                deps.push(p);
+            }
+        }
+        deps.sort_unstable();
+        deps.dedup();
+        self.tasks.push(Task { id, step, module, kind, stream, deps, extra_latency });
+        lane.last_on[stream_kind.index()] = Some(id);
+        lane.prev_any = Some(id);
+        if matches!(kind, TaskKind::Compute | TaskKind::Update) {
+            lane.prev_compute = Some(id);
+        }
+        id
+    }
+
+    /// Emit one block's round — [R] U C(kind `compute_kind`) O [W] — on
+    /// `lane`, wiring the slot-ring / DRAM-window / read-after-write rules.
+    /// `compute_extra_deps` are added to the compute task (activation
+    /// handoff, gradient broadcast); returns the compute task's id.
+    #[allow(clippy::too_many_arguments)]
+    fn push_block_round(
+        &mut self,
+        lane: &mut Lane,
+        step: usize,
+        block: usize,
+        on_disk: bool,
+        last_write: &mut Option<usize>,
+        compute_kind: TaskKind,
+        compute_extra_deps: &[usize],
+    ) -> usize {
+        let module = Module::Block(block);
+        let mut deps = Vec::new();
+        // Three-tier: R(Wᵢ) stages the spilled bucket into the DRAM window
+        // before the upload can push it over PCIe.
+        if on_disk {
+            let mut rdeps = Vec::new();
+            // DRAM-window rule: R needs a free staging slot, freed by the W
+            // that ran `dram_slots` spills earlier.
+            if let Some(w) = lane.dram_ring[lane.dram_pos] {
+                rdeps.push(w);
+            }
+            // Read-after-write: the on-disk bucket is the one the previous
+            // step's W wrote back.
+            if let Some(w) = *last_write {
+                rdeps.push(w);
+            }
+            let r = self.push(lane, step, module, TaskKind::DiskRead, rdeps, 0.0);
+            deps.push(r);
+        }
+        // Slot reuse: U waits for the offload that frees this slot.
+        if let Some(o) = lane.offload_ring[lane.ring_pos] {
+            deps.push(o);
+        }
+        if !self.policy.reusable_mem {
+            // cudaMalloc synchronises with the device: the upload cannot
+            // overlap in-flight compute.
+            if let Some(c) = lane.prev_compute {
+                deps.push(c);
+            }
+        }
+        let u = self.push(lane, step, module, TaskKind::Upload, deps, 0.0);
+
+        let mut cdeps = vec![u];
+        cdeps.extend_from_slice(compute_extra_deps);
+        let c = self.push(lane, step, module, compute_kind, cdeps, 0.0);
+
+        let o = self.push(lane, step, module, TaskKind::Offload, vec![c], 0.0);
+        lane.offload_ring[lane.ring_pos] = Some(o);
+        lane.ring_pos = (lane.ring_pos + 1) % lane.offload_ring.len();
+
+        // W(Wᵢ) ← O(Wᵢ): write the updated bucket back to NVMe and free its
+        // DRAM staging slot.
+        if on_disk {
+            let w = self.push(lane, step, module, TaskKind::DiskWrite, vec![o], 0.0);
+            lane.dram_ring[lane.dram_pos] = Some(w);
+            lane.dram_pos = (lane.dram_pos + 1) % lane.dram_ring.len();
+            *last_write = Some(w);
+        }
+        c
+    }
+}
+
+/// Build the device-indexed task DAG for `spec` over `steps` training steps
+/// of `n_blocks` offloaded transformer blocks.  With `spec.devices == 1`
+/// both strategies reduce to the single-GPU schedule of
+/// [`crate::sched::build_plan`].
+pub fn build_sharded_plan(
+    n_blocks: usize,
+    steps: usize,
+    policy: Policy,
+    spec: &ShardSpec,
+) -> Vec<Task> {
+    match spec.strategy {
+        ShardStrategy::Pipeline => {
+            pipeline_plan(n_blocks, steps, policy, spec.devices.max(1), spec.layout)
+        }
+        ShardStrategy::DataParallel => dp_plan(n_blocks, steps, policy, spec.devices.max(1)),
+    }
+}
+
+fn spilled_count(policy: &Policy, n_blocks: usize) -> usize {
+    match policy.tiering {
+        Tiering::TwoTier => 0,
+        Tiering::ThreeTier => policy.spilled.min(n_blocks),
+    }
+}
+
+/// Pipeline-sharded plan: blocks partitioned by `layout`, embedding on the
+/// first device, LM head on the last block's owner, activations crossing
+/// the interconnect at every ownership change.
+fn pipeline_plan(
+    n_blocks: usize,
+    steps: usize,
+    policy: Policy,
+    devices: usize,
+    layout: ShardLayout,
+) -> Vec<Task> {
+    let mut b = PlanBuilder::new(policy);
+    let mut lanes: Vec<Lane> = (0..devices).map(|d| Lane::new(d, &policy)).collect();
+    let mut last_write: Vec<Option<usize>> = vec![None; n_blocks];
+    let spilled = spilled_count(&policy, n_blocks);
+    let on_disk = |i: usize| is_spilled_block(i, n_blocks, spilled, policy.spill_placement);
+    let owner = |i: usize| block_owner(layout, n_blocks, devices, i);
+    let head_dev = if n_blocks == 0 { 0 } else { owner(n_blocks - 1) };
+    // Projected-gradient broadcast of the previous step (devices > 1 only):
+    // a device's first compute of step j+1 applies the deferred update, so
+    // it must wait for g_j to arrive from the head device.
+    let mut grad_bcast: Option<usize> = None;
+
+    for step in 0..steps {
+        // C(Embedding) — resident on the first device, no upload.
+        let mut edeps = Vec::new();
+        if let Some(g) = grad_bcast {
+            edeps.push(g);
+        }
+        let c_embed = b.push(&mut lanes[0], step, Module::Embed, TaskKind::Compute, edeps, 0.0);
+        let mut prev_c = c_embed;
+        let mut prev_dev = 0usize;
+        // Which devices already gated their first compute on the broadcast.
+        let mut gated = vec![false; devices];
+        gated[0] = true;
+
+        // Upload of block 0 may overlap the embedding compute (§5.2).
+        for i in 0..n_blocks {
+            let d = owner(i);
+            // Activation handoff when the previous module ran elsewhere:
+            // the dual-path hidden state crosses the link, charged on the
+            // sender's interconnect stream.
+            let act = if d != prev_dev {
+                b.push(
+                    &mut lanes[prev_dev],
+                    step,
+                    Module::Block(i),
+                    TaskKind::ActivationXfer,
+                    vec![prev_c],
+                    0.0,
+                )
+            } else {
+                prev_c
+            };
+            let mut extra = vec![act];
+            if !gated[d] {
+                if let Some(g) = grad_bcast {
+                    extra.push(g);
+                }
+                gated[d] = true;
+            }
+            let c = b.push_block_round(
+                &mut lanes[d],
+                step,
+                i,
+                on_disk(i),
+                &mut last_write[i],
+                TaskKind::Compute,
+                &extra,
+            );
+            prev_c = c;
+            prev_dev = d;
+        }
+
+        // C(LMHead) — resident on the last block's device (= prev_dev after
+        // the loop, so the head never needs an activation hop of its own).
+        let c_head = b.push(
+            &mut lanes[head_dev],
+            step,
+            Module::Head,
+            TaskKind::Compute,
+            vec![prev_c],
+            0.0,
+        );
+
+        // g of this step, announced to every device (needed both by the
+        // next step's deferred updates and by the non-efficient-update
+        // ablation's standalone round below).
+        if devices > 1 {
+            grad_bcast = Some(b.push(
+                &mut lanes[head_dev],
+                step,
+                Module::Head,
+                TaskKind::GradReduce,
+                vec![c_head],
+                0.0,
+            ));
+        }
+
+        if !policy.efficient_update {
+            // Fig. 5a: a second upload→update→offload round per block, after
+            // the step's projected gradient is known (i.e. after the head).
+            let g_dep = grad_bcast;
+            let mut upd_gated = vec![false; devices];
+            upd_gated[head_dev] = true; // head device's FIFO already orders it
+            for i in 0..n_blocks {
+                let d = owner(i);
+                let mut extra = Vec::new();
+                if !upd_gated[d] {
+                    if let Some(g) = g_dep {
+                        extra.push(g);
+                    }
+                    upd_gated[d] = true;
+                }
+                b.push_block_round(
+                    &mut lanes[d],
+                    step,
+                    i,
+                    on_disk(i),
+                    &mut last_write[i],
+                    TaskKind::Update,
+                    &extra,
+                );
+            }
+        }
+    }
+    b.tasks
+}
+
+/// Seed-synchronous data-parallel plan: every device runs the full
+/// single-device schedule on its batch shard; per step the link carries one
+/// seed broadcast (before any perturbation) and one scalar all-reduce
+/// (after every device's head).
+fn dp_plan(n_blocks: usize, steps: usize, policy: Policy, devices: usize) -> Vec<Task> {
+    if devices <= 1 {
+        return pipeline_plan(n_blocks, steps, policy, 1, ShardLayout::Contiguous);
+    }
+    let mut b = PlanBuilder::new(policy);
+    let mut lanes: Vec<Lane> = (0..devices).map(|d| Lane::new(d, &policy)).collect();
+    // Each device owns a full replica: per-device read-after-write chains.
+    let mut last_write: Vec<Vec<Option<usize>>> = vec![vec![None; n_blocks]; devices];
+    let spilled = spilled_count(&policy, n_blocks);
+    let on_disk = |i: usize| is_spilled_block(i, n_blocks, spilled, policy.spill_placement);
+    let mut grad_reduce: Option<usize> = None;
+
+    for step in 0..steps {
+        // Seed broadcast on the link: workers agree on the step's
+        // perturbation seed before anything perturbs (8 bytes).
+        let mut sdeps = Vec::new();
+        if let Some(g) = grad_reduce {
+            sdeps.push(g);
+        }
+        let seed = b.push(&mut lanes[0], step, Module::Embed, TaskKind::SeedBcast, sdeps, 0.0);
+
+        let mut heads = Vec::with_capacity(devices);
+        for d in 0..devices {
+            let mut edeps = vec![seed];
+            // The deferred update fused into this step's computes needs the
+            // all-reduced ḡ of the previous step.
+            if let Some(g) = grad_reduce {
+                edeps.push(g);
+            }
+            let c_embed = b.push(&mut lanes[d], step, Module::Embed, TaskKind::Compute, edeps, 0.0);
+            let mut prev_c = c_embed;
+            for i in 0..n_blocks {
+                let c = b.push_block_round(
+                    &mut lanes[d],
+                    step,
+                    i,
+                    on_disk(i),
+                    &mut last_write[d][i],
+                    TaskKind::Compute,
+                    &[prev_c],
+                );
+                prev_c = c;
+            }
+            let c_head =
+                b.push(&mut lanes[d], step, Module::Head, TaskKind::Compute, vec![prev_c], 0.0);
+            heads.push(c_head);
+        }
+
+        // One scalar all-reduce joins every worker's projected gradient.
+        grad_reduce = Some(b.push(
+            &mut lanes[0],
+            step,
+            Module::Head,
+            TaskKind::GradReduce,
+            heads,
+            0.0,
+        ));
+
+        if !policy.efficient_update {
+            // Fig. 5a ablation, DP form: every replica applies the
+            // all-reduced g in a standalone round.
+            let g_dep = [grad_reduce.unwrap()];
+            for d in 0..devices {
+                let mut first = true;
+                for i in 0..n_blocks {
+                    let extra: &[usize] = if first { &g_dep } else { &[] };
+                    b.push_block_round(
+                        &mut lanes[d],
+                        step,
+                        i,
+                        on_disk(i),
+                        &mut last_write[d][i],
+                        TaskKind::Update,
+                        extra,
+                    );
+                    first = false;
+                }
+            }
+        }
+    }
+    b.tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::build_plan;
+
+    fn plans_equal(a: &[Task], b: &[Task]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.step == y.step
+                    && x.module == y.module
+                    && x.kind == y.kind
+                    && x.stream == y.stream
+                    && x.deps == y.deps
+            })
+    }
+
+    #[test]
+    fn single_device_strategies_coincide_with_build_plan() {
+        for policy in [
+            Policy::default(),
+            Policy::naive(),
+            Policy::three_tier(3, 2),
+            Policy { efficient_update: false, ..Policy::default() },
+        ] {
+            let base = build_plan(6, 2, policy);
+            for spec in [
+                ShardSpec::single(),
+                ShardSpec::pipeline(1, ShardLayout::Cyclic),
+                ShardSpec::data_parallel(1),
+            ] {
+                let p = build_sharded_plan(6, 2, policy, &spec);
+                assert!(plans_equal(&base, &p), "{spec:?} under {policy:?} diverged at N=1");
+            }
+        }
+    }
+
+    #[test]
+    fn contiguous_layout_is_balanced_and_monotone() {
+        for (n, dev) in [(12usize, 4usize), (13, 4), (5, 2), (7, 3), (8, 8)] {
+            let per = blocks_per_device(ShardLayout::Contiguous, n, dev);
+            assert_eq!(per.iter().map(|v| v.len()).sum::<usize>(), n);
+            let (min, max) = (
+                per.iter().map(|v| v.len()).min().unwrap(),
+                per.iter().map(|v| v.len()).max().unwrap(),
+            );
+            assert!(max - min <= 1, "n={n} dev={dev}: {per:?}");
+            // Ownership is non-decreasing along the block order.
+            let owners: Vec<usize> =
+                (0..n).map(|i| block_owner(ShardLayout::Contiguous, n, dev, i)).collect();
+            assert!(owners.windows(2).all(|w| w[0] <= w[1]), "{owners:?}");
+        }
+    }
+
+    #[test]
+    fn pipeline_plan_divides_uploads_and_hops_activations() {
+        let n = 8;
+        let devices = 4;
+        let plan = build_sharded_plan(
+            n,
+            1,
+            Policy::default(),
+            &ShardSpec::pipeline(devices, ShardLayout::Contiguous),
+        );
+        // Every block's upload runs on its owner's upload stream.
+        for t in plan.iter().filter(|t| t.kind == TaskKind::Upload) {
+            let i = match t.module {
+                Module::Block(i) => i,
+                _ => unreachable!(),
+            };
+            assert_eq!(
+                t.stream,
+                StreamId::new(
+                    block_owner(ShardLayout::Contiguous, n, devices, i),
+                    StreamKind::Upload
+                )
+            );
+        }
+        // Contiguous layout: exactly devices-1 activation hops per step,
+        // plus the per-step gradient broadcast.
+        let hops = plan.iter().filter(|t| t.kind == TaskKind::ActivationXfer).count();
+        assert_eq!(hops, devices - 1);
+        assert_eq!(plan.iter().filter(|t| t.kind == TaskKind::GradReduce).count(), 1);
+        // Cyclic layout bounces at every boundary.
+        let cyc = build_sharded_plan(
+            n,
+            1,
+            Policy::default(),
+            &ShardSpec::pipeline(devices, ShardLayout::Cyclic),
+        );
+        let cyc_hops = cyc.iter().filter(|t| t.kind == TaskKind::ActivationXfer).count();
+        assert_eq!(cyc_hops, n - 1, "cyclic: a hop at every block boundary after block 0");
+    }
+
+    #[test]
+    fn dp_plan_has_exactly_seed_and_reduce_per_step() {
+        let n = 6;
+        let steps = 3;
+        let devices = 4;
+        let plan =
+            build_sharded_plan(n, steps, Policy::default(), &ShardSpec::data_parallel(devices));
+        assert_eq!(plan.iter().filter(|t| t.kind == TaskKind::SeedBcast).count(), steps);
+        assert_eq!(plan.iter().filter(|t| t.kind == TaskKind::GradReduce).count(), steps);
+        assert_eq!(plan.iter().filter(|t| t.kind == TaskKind::ActivationXfer).count(), 0);
+        // Every device runs the full model every step.
+        for d in 0..devices {
+            let uploads = plan
+                .iter()
+                .filter(|t| {
+                    t.kind == TaskKind::Upload && t.stream == StreamId::new(d, StreamKind::Upload)
+                })
+                .count();
+            assert_eq!(uploads, n * steps, "device {d}");
+        }
+        // The all-reduce depends on every device's head.
+        let reduce = plan.iter().find(|t| t.kind == TaskKind::GradReduce).unwrap();
+        let head_deps = reduce
+            .deps
+            .iter()
+            .filter(|&&d| plan[d].kind == TaskKind::Compute && plan[d].module == Module::Head)
+            .count();
+        assert_eq!(head_deps, devices);
+    }
+
+    #[test]
+    fn deps_always_point_backwards() {
+        for spec in [
+            ShardSpec::pipeline(2, ShardLayout::Contiguous),
+            ShardSpec::pipeline(4, ShardLayout::Cyclic),
+            ShardSpec::data_parallel(2),
+            ShardSpec::data_parallel(4),
+        ] {
+            for policy in [
+                Policy::default(),
+                Policy::naive(),
+                Policy::three_tier(4, 2),
+                Policy { efficient_update: false, ..Policy::default() },
+            ] {
+                let plan = build_sharded_plan(7, 2, policy, &spec);
+                for t in &plan {
+                    for &d in &t.deps {
+                        assert!(d < t.id, "{spec:?}: dep {} of task {} not backward", d, t.id);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Deterministic in-process data-parallel ZO ("DP sim-shard").
+//!
+//! Seed-synchronous DP ZO (the sharding strategy the analytic simulator
+//! prices in [`crate::shard`]) has a communication contract of exactly two
+//! items per step: the perturbation **seed** (all workers draw the same z)
+//! and the **projected-gradient scalar** (all-reduced across workers).
+//! This module makes the "no accuracy loss" half of that contract testable
+//! *without any real hardware*: [`DpSimShard`] runs K logical workers
+//! in-process over a fixed set of S microbatch shards and reduces their
+//! per-shard gradients in canonical shard order.
+//!
+//! # The invariant
+//!
+//! The trajectory is a function of the shard set S, **never** of the worker
+//! count K.  Worker k evaluates shards `{k, k+K, k+2K, …}`; since every
+//! worker replica applies the same all-reduced updates and draws the same
+//! per-step z (in-process, workers share the base seed and replay their
+//! per-step streams by counter offset), each per-shard loss pair is
+//! bit-identical no matter which worker computes it, and the reduction
+//! `ḡ = (Σₛ gₛ)/S` runs in fixed shard order with fixed f32 arithmetic.
+//! K = 4 therefore reproduces the K = 1 ("single worker evaluates every
+//! shard") loss trajectory bit-for-bit — asserted by the property tests in
+//! `tests/scheduler_props.rs` on a host-only worker and by
+//! `tests/dp_shard.rs` on real [`crate::zo::Zo2Engine`] replicas
+//! (artifact-gated).
+
+use anyhow::Result;
+
+use crate::zo::{StepStats, Zo2Engine};
+
+/// A logical DP worker: owns a full model replica and can evaluate one ZO
+/// step's dual losses on a list of microbatch shards.
+pub trait DpWorker {
+    /// Run this step's dual forward on each shard (applying the previous
+    /// step's deferred update, whose gradient was delivered by
+    /// [`Self::set_allreduced_g`], before the first shard).  Returns one
+    /// `(ℓ₊, ℓ₋)` pair per shard, in the given order.
+    fn dp_dual_losses(&mut self, shards: &[&[i32]]) -> Result<Vec<(f32, f32)>>;
+
+    /// Deliver the all-reduced projected gradient for the step just
+    /// evaluated.
+    fn set_allreduced_g(&mut self, g: f32);
+
+    /// Perturbation scale ε (for recomputing per-shard gradients).
+    fn eps(&self) -> f32;
+}
+
+impl DpWorker for Zo2Engine {
+    fn dp_dual_losses(&mut self, shards: &[&[i32]]) -> Result<Vec<(f32, f32)>> {
+        Zo2Engine::dp_dual_losses(self, shards)
+    }
+
+    fn set_allreduced_g(&mut self, g: f32) {
+        Zo2Engine::set_allreduced_g(self, g)
+    }
+
+    fn eps(&self) -> f32 {
+        self.zo_eps()
+    }
+}
+
+/// K logical seed-synchronous DP workers over S microbatch shards.
+pub struct DpSimShard<W> {
+    workers: Vec<W>,
+    shards: usize,
+    step: u64,
+}
+
+impl<W: DpWorker> DpSimShard<W> {
+    /// `workers` must all be replicas initialised from the same seed; the
+    /// shard count is fixed for the run (it is part of the trajectory's
+    /// identity — the worker count is not) and must divide evenly across
+    /// the workers.
+    pub fn new(workers: Vec<W>, shards: usize) -> Result<Self> {
+        anyhow::ensure!(!workers.is_empty(), "need at least one DP worker");
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+        anyhow::ensure!(
+            shards % workers.len() == 0,
+            "{shards} shards do not divide across {} workers",
+            workers.len()
+        );
+        Ok(Self { workers, shards, step: 0 })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn workers(&self) -> &[W] {
+        &self.workers
+    }
+
+    pub fn workers_mut(&mut self) -> &mut [W] {
+        &mut self.workers
+    }
+
+    /// One DP ZO step over a global batch of `ids`, which must split into
+    /// `n_shards()` equal shards (each shaped like one engine batch).
+    ///
+    /// Worker k evaluates shards `{k, k+K, …}` in ascending order; the
+    /// all-reduce recomputes every shard's `gₛ = (ℓ₊ − ℓ₋)/2ε` and averages
+    /// in canonical shard order, then broadcasts ḡ to every worker's parked
+    /// deferred update.  The reported loss is the shard-mean of the dual
+    /// losses.
+    pub fn train_step(&mut self, ids: &[i32]) -> Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        let s = self.shards;
+        anyhow::ensure!(
+            !ids.is_empty() && ids.len() % s == 0,
+            "batch of {} ids does not split into {s} shards",
+            ids.len()
+        );
+        let shard_len = ids.len() / s;
+        let shards: Vec<&[i32]> = ids.chunks(shard_len).collect();
+        let k = self.workers.len();
+
+        let mut per_shard: Vec<(f32, f32)> = vec![(0.0, 0.0); s];
+        for (w, worker) in self.workers.iter_mut().enumerate() {
+            let mine: Vec<&[i32]> = (w..s).step_by(k).map(|i| shards[i]).collect();
+            let losses = worker.dp_dual_losses(&mine)?;
+            anyhow::ensure!(losses.len() == mine.len(), "worker {w} shard count mismatch");
+            for (j, l) in losses.into_iter().enumerate() {
+                per_shard[w + j * k] = l;
+            }
+        }
+
+        // Canonical all-reduce: fixed shard order, plain f32 accumulation —
+        // the reduction is identical for every worker count.
+        let eps = self.workers[0].eps();
+        let mut g_sum = 0.0f32;
+        let mut lp_sum = 0.0f32;
+        let mut lm_sum = 0.0f32;
+        for &(lp, lm) in &per_shard {
+            g_sum += (lp - lm) / (2.0 * eps);
+            lp_sum += lp;
+            lm_sum += lm;
+        }
+        let g = g_sum / s as f32;
+        for worker in &mut self.workers {
+            worker.set_allreduced_g(g);
+        }
+
+        self.step += 1;
+        Ok(StepStats {
+            step: self.step - 1,
+            loss_plus: lp_sum / s as f32,
+            loss_minus: lm_sum / s as f32,
+            g,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}

@@ -6,9 +6,18 @@
 //! states** — the z vectors are never stored or shipped (MeZO's memory
 //! trick, §3): only the 8-byte key derived from the managed state reaches
 //! the device, which regenerates `z` locally.
+//!
+//! The baseline's host-side bucket staging (decode before each executable
+//! call, encode after each update) runs through the same [`HostPool`]
+//! chunk kernels as the ZO2 engine, so baseline-vs-ZO2 comparisons charge
+//! the same host-kernel cost on both sides (pooled fp32 staging is a
+//! chunked copy — bit-identical to the scalar path at any thread count).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::hostpool::HostPool;
 use crate::memory::DevicePool;
 use crate::precision::Codec;
 use crate::rng::RngStateManager;
@@ -22,10 +31,20 @@ pub struct MezoEngine {
     manager: RngStateManager,
     step: u64,
     pub device: std::sync::Arc<DevicePool>,
+    /// Host compute pool for bucket staging (shared cost basis with ZO2).
+    pub hostpool: Arc<HostPool>,
 }
 
 impl MezoEngine {
     pub fn new(rt: Runtime, cfg: ZoConfig) -> Result<Self> {
+        // A 1-thread pool is exactly the serial staging path; callers that
+        // want parallel host staging use `with_host_threads`.
+        Self::with_host_threads(rt, cfg, 1)
+    }
+
+    /// Like [`Self::new`], with `host_threads` pool participants
+    /// (0 = machine parallelism) for the bucket staging kernels.
+    pub fn with_host_threads(rt: Runtime, cfg: ZoConfig, host_threads: usize) -> Result<Self> {
         let params = ParamStore::init(rt.manifest(), cfg.seed, Codec::F32);
         let device = DevicePool::unlimited();
         // MeZO keeps every parameter resident on the device.
@@ -38,6 +57,7 @@ impl MezoEngine {
             manager: RngStateManager::new(cfg.seed),
             step: 0,
             device,
+            hostpool: Arc::new(HostPool::new(host_threads)),
         })
     }
 
@@ -97,7 +117,7 @@ impl MezoEngine {
             let outs = self.rt.run(
                 "block_step",
                 &[
-                    lit_f32(&self.params.blocks[i].to_f32(), &[n as i64])?,
+                    lit_f32(&self.params.blocks[i].to_f32_pooled(&self.hostpool), &[n as i64])?,
                     k.clone(),
                     zero.clone(),
                     lr.clone(),
@@ -161,14 +181,14 @@ impl MezoEngine {
             let out = self.rt.run(
                 "update_block",
                 &[
-                    lit_f32(&self.params.blocks[i].to_f32(), &[n as i64])?,
+                    lit_f32(&self.params.blocks[i].to_f32_pooled(&self.hostpool), &[n as i64])?,
                     lit_key(key_of(states[1 + i]))?,
                     lr.clone(),
                     gl.clone(),
                 ],
             )?;
             let updated = lit_to_f32(&out[0])?;
-            self.params.blocks[i].encode_from(&updated);
+            self.params.blocks[i].encode_from_pooled(&updated, &self.hostpool);
         }
 
         let n_head = self.params.head.len();
@@ -196,9 +216,10 @@ impl MezoEngine {
         )?;
         let mut h = out.into_iter().next().unwrap();
         for blk in &self.params.blocks {
-            let out = self
-                .rt
-                .run("block_fwd", &[lit_f32(&blk.to_f32(), &[blk.numel() as i64])?, h])?;
+            let out = self.rt.run(
+                "block_fwd",
+                &[lit_f32(&blk.to_f32_pooled(&self.hostpool), &[blk.numel() as i64])?, h],
+            )?;
             h = out.into_iter().next().unwrap();
         }
         let out = self.rt.run(

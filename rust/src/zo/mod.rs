@@ -12,12 +12,18 @@
 //!   executable that runs step `j`'s dual forward (§5.4) — one
 //!   upload+offload cycle per block per step.  `run_mode` selects the naive
 //!   sequential schedule or the overlapped three-stream schedule (§5.2).
+//! * [`DpSimShard`] — deterministic in-process data-parallel ZO: K logical
+//!   workers over a fixed shard set, seed-synchronous perturbations, one
+//!   scalar all-reduce per step in canonical shard order — the trajectory
+//!   is bit-identical for any K (the "no accuracy loss" contract of the
+//!   simulated multi-GPU DP strategy, testable without hardware).
 //!
 //! Both engines drive the *same* AOT executables with the *same*
 //! counter-RNG discipline, which is what makes ZO2 bit-identical to MeZO
 //! (verified by `tests/parity.rs`).
 
 pub mod cpu_optim;
+pub mod dp_shard;
 pub mod mezo;
 pub mod param_store;
 pub mod zo2;
@@ -26,6 +32,7 @@ pub use cpu_optim::{
     cpu_zo_adamw_update, cpu_zo_adamw_update_pooled, cpu_zo_sgd_update, cpu_zo_sgd_update_pooled,
     fused_zo_adamw, AdamHp, AdamState, ZScratch,
 };
+pub use dp_shard::{DpSimShard, DpWorker};
 pub use mezo::MezoEngine;
 pub use param_store::ParamStore;
 pub use zo2::{RunMode, UpdateSite, Zo2Engine, Zo2Options};

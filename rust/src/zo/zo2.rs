@@ -31,7 +31,7 @@ use crate::memory::transfer::TransferStats;
 use crate::precision::Codec;
 use crate::rng::{RngState, RngStateManager};
 use crate::runtime::{lit_f32, lit_i32, lit_key, lit_scalar, lit_to_f32, lit_to_scalar, Runtime};
-use crate::sched::Tiering;
+use crate::sched::{SpillPlacement, Tiering};
 use crate::telemetry::{Timeline, TraceEvent};
 use crate::zo::{key_of, module_states, ParamStore, StepStats, ZoConfig};
 
@@ -81,6 +81,10 @@ pub struct Zo2Options {
     /// Blocks whose master copy stays in DRAM under `ThreeTier`
     /// (`usize::MAX` = all resident, i.e. an empty disk tier).
     pub dram_resident_blocks: usize,
+    /// Which blocks spill under `ThreeTier` (trailing burst vs interleaved
+    /// through the block order).  Placement never changes the math — only
+    /// which buckets live on the pool file.
+    pub spill_placement: SpillPlacement,
     /// Where the deferred update runs: fused on the device (§5.4) or as a
     /// fused wire-domain pass on the host pool (update-site ablation).
     pub update_site: UpdateSite,
@@ -102,6 +106,7 @@ impl Default for Zo2Options {
             tiering: Tiering::TwoTier,
             dram_slots: 4,
             dram_resident_blocks: usize::MAX,
+            spill_placement: SpillPlacement::Trailing,
             update_site: UpdateSite::Device,
             host_threads: 0,
         }
@@ -164,15 +169,22 @@ impl Zo2Engine {
         }
         // Disk tier: spill every block beyond the DRAM-resident budget to a
         // file-backed pool, leaving shape-only placeholders in the store.
+        // The spill *set* comes from the same placement rule the analytic
+        // planner uses (`sched::is_spilled_block`), so `--spill-placement`
+        // means the same thing in the simulator and the real engine.
         let n_blocks = params.blocks.len();
         let resident = opts.dram_resident_blocks.min(n_blocks);
         let disk = if opts.tiering == Tiering::ThreeTier && resident < n_blocks {
-            let wire = params.blocks[resident].wire_bytes() as u64;
+            let spilled = n_blocks - resident;
+            let wire = params.blocks[0].wire_bytes() as u64;
             let pool =
                 DiskPool::in_temp(u64::MAX, TransferModel::nvme_read(), TransferModel::nvme_write())?;
             let window = DramWindow::new(opts.dram_slots.max(1), wire);
             let mut entries: Vec<Option<DiskBucket>> = (0..n_blocks).map(|_| None).collect();
-            for i in resident..n_blocks {
+            for i in 0..n_blocks {
+                if !crate::sched::is_spilled_block(i, n_blocks, spilled, opts.spill_placement) {
+                    continue;
+                }
                 let numel = params.blocks[i].numel();
                 let codec = params.blocks[i].codec();
                 let bucket =
@@ -310,6 +322,15 @@ impl Zo2Engine {
             self.manager.record_module_state(st);
         }
         // lrs: previous iteration's states + projected gradient (Alg. 2 l.4-9).
+        // A NaN pending gradient is the DP sim-shard sentinel: the caller
+        // ran `dp_dual_losses` but never delivered the all-reduced scalar.
+        if let Some(p) = &self.pending {
+            anyhow::ensure!(
+                !p.g.is_nan(),
+                "pending update has no gradient: a DP sim-shard step must call \
+                 set_allreduced_g before the next step"
+            );
+        }
         let (g_prev, prev_states, had_pending) = match self.pending.take() {
             Some(p) => {
                 let _ = self.manager.pop_last_states();
@@ -1018,10 +1039,76 @@ impl Zo2Engine {
     /// Apply any pending deferred update (the paper's final
     /// `model.opt.zo_update(model)` — Fig. 6b).  Idempotent.
     pub fn flush_updates(&mut self) -> Result<()> {
+        if let Some(p) = &self.pending {
+            anyhow::ensure!(
+                !p.g.is_nan(),
+                "pending update has no gradient: a DP sim-shard step must call \
+                 set_allreduced_g before flushing"
+            );
+        }
         if let Some(p) = self.pending.take() {
             self.apply_update_round_no_transfer_double_count(p.g, &p.states)?;
         }
         Ok(())
+    }
+
+    /// One seed-synchronous DP worker step over this worker's microbatch
+    /// shards (≥ 1): applies the previous step's deferred update — whose
+    /// gradient must already be the all-reduced ḡ, delivered via
+    /// [`Self::set_allreduced_g`] — fused into the first shard's dual
+    /// forward, then replays the *same* ZO step (same perturbation stream,
+    /// exact no-op update) on each further shard.  Returns the per-shard
+    /// `(ℓ₊, ℓ₋)` pairs in shard order; the step's own deferred update is
+    /// left parked with a NaN sentinel until the all-reduce lands.
+    ///
+    /// Because every shard's forward sees identical post-update parameters
+    /// and an identical perturbation direction, the per-shard losses do not
+    /// depend on *which* worker evaluates a shard — the invariant
+    /// [`crate::zo::DpSimShard`] builds on.
+    pub fn dp_dual_losses(&mut self, shards: &[&[i32]]) -> Result<Vec<(f32, f32)>> {
+        anyhow::ensure!(!shards.is_empty(), "a DP worker needs at least one shard");
+        anyhow::ensure!(
+            self.opts.efficient_update,
+            "DP sim-shard requires the deferred update (efficient_update = true): the \
+             non-deferred ablation applies each step's local g before the all-reduce"
+        );
+        let step0 = self.step;
+        let mut out = Vec::with_capacity(shards.len());
+        for (k, ids) in shards.iter().enumerate() {
+            if k > 0 {
+                // Replay the same ZO step on the next shard: the deferred
+                // update was already applied by the first shard's pass, so
+                // this pass must see no pending work (g = 0 is an exact
+                // no-op) and the same step index (same z).
+                self.step = step0;
+                self.pending = None;
+            }
+            let st = self.train_step(ids)?;
+            if k > 0 {
+                // Drop the duplicate rsb record the replayed begin_iter
+                // pushed (bookkeeping only; states replay via `pending`).
+                let _ = self.manager.discard_current();
+            }
+            out.push((st.loss_plus, st.loss_minus));
+        }
+        if let Some(p) = self.pending.as_mut() {
+            p.g = f32::NAN; // parked until the all-reduce delivers ḡ
+        }
+        Ok(out)
+    }
+
+    /// Deliver the all-reduced projected gradient for the step parked by
+    /// [`Self::dp_dual_losses`].
+    pub fn set_allreduced_g(&mut self, g: f32) {
+        if let Some(p) = self.pending.as_mut() {
+            p.g = g;
+        }
+    }
+
+    /// Optimizer epsilon (the DP driver recomputes per-shard projected
+    /// gradients from the shard losses with the same ε).
+    pub fn zo_eps(&self) -> f32 {
+        self.cfg.eps
     }
 
     /// Flush helper: same math as `apply_update_round`, but its transfers are

@@ -1,0 +1,119 @@
+//! DP sim-shard acceptance on the real engine (needs `make artifacts`).
+//!
+//! K seed-synchronous `Zo2Engine` replicas over a fixed shard set must
+//! reproduce the single-worker trajectory bit-for-bit: same per-step dual
+//! losses, same final parameters.  This is the engine half of the
+//! "no accuracy loss" contract for simulated multi-GPU DP; the host-only
+//! property (no artifacts needed) lives in `tests/scheduler_props.rs`.
+
+use zo2::runtime::Runtime;
+use zo2::zo::{DpSimShard, RunMode, Zo2Engine, Zo2Options, ZoConfig};
+
+macro_rules! require_artifacts {
+    () => {
+        if !zo2::artifacts_available("tiny") {
+            eprintln!(
+                "SKIP {}: no PJRT artifacts for config `tiny` (run `make artifacts` \
+                 or set $ZO2_ARTIFACTS)",
+                module_path!()
+            );
+            return;
+        }
+    };
+}
+
+const STEPS: usize = 4;
+const SHARDS: usize = 2;
+
+fn cfg() -> ZoConfig {
+    ZoConfig { lr: 1e-3, eps: 1e-3, seed: 2027 }
+}
+
+fn engine(run_mode: RunMode) -> Zo2Engine {
+    let rt = Runtime::load_config("tiny").unwrap();
+    Zo2Engine::new(rt, cfg(), Zo2Options { run_mode, ..Zo2Options::default() }).unwrap()
+}
+
+/// Run STEPS DP steps with `workers` replicas over SHARDS shards; returns
+/// (per-step dual losses, final flat params).
+fn dp_trajectory(workers: usize, run_mode: RunMode) -> (Vec<(f32, f32)>, Vec<f32>) {
+    let ws: Vec<Zo2Engine> = (0..workers).map(|_| engine(run_mode)).collect();
+    let (b, t) = {
+        let m = ws[0].runtime().manifest();
+        (m.config.batch, m.config.seq_len)
+    };
+    let vocab = ws[0].runtime().manifest().config.vocab;
+    let mut dp = DpSimShard::new(ws, SHARDS).unwrap();
+    let mut corpus = zo2::data::SyntheticCorpus::new(vocab, 555);
+    let mut losses = Vec::new();
+    for _ in 0..STEPS {
+        let mut ids = Vec::with_capacity(SHARDS * b * t);
+        for _ in 0..SHARDS {
+            ids.extend(corpus.sample(b, t).ids);
+        }
+        let st = dp.train_step(&ids).unwrap();
+        losses.push((st.loss_plus, st.loss_minus));
+    }
+    for w in dp.workers_mut() {
+        w.flush_updates().unwrap();
+    }
+    let params = dp.workers()[0].flat_params().unwrap();
+    (losses, params)
+}
+
+#[test]
+fn dp_two_workers_reproduce_single_worker_bitwise() {
+    require_artifacts!();
+    for run_mode in [RunMode::Sequential, RunMode::Overlapped] {
+        let (l1, p1) = dp_trajectory(1, run_mode);
+        let (l2, p2) = dp_trajectory(2, run_mode);
+        for (i, (a, b)) in l1.iter().zip(&l2).enumerate() {
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "{run_mode:?} step {i} loss+");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "{run_mode:?} step {i} loss-");
+        }
+        let diffs = p1.iter().zip(&p2).filter(|(a, b)| a.to_bits() != b.to_bits()).count();
+        assert_eq!(diffs, 0, "{run_mode:?}: {diffs}/{} params differ", p1.len());
+    }
+}
+
+#[test]
+fn dp_worker_replicas_stay_in_lockstep() {
+    require_artifacts!();
+    let ws: Vec<Zo2Engine> = (0..2).map(|_| engine(RunMode::Sequential)).collect();
+    let (b, t, vocab) = {
+        let m = ws[0].runtime().manifest();
+        (m.config.batch, m.config.seq_len, m.config.vocab)
+    };
+    let mut dp = DpSimShard::new(ws, 2).unwrap();
+    let mut corpus = zo2::data::SyntheticCorpus::new(vocab, 7);
+    for _ in 0..3 {
+        let mut ids = Vec::new();
+        for _ in 0..2 {
+            ids.extend(corpus.sample(b, t).ids);
+        }
+        dp.train_step(&ids).unwrap();
+    }
+    for w in dp.workers_mut() {
+        w.flush_updates().unwrap();
+    }
+    let p0 = dp.workers()[0].flat_params().unwrap();
+    let p1 = dp.workers()[1].flat_params().unwrap();
+    let diffs = p0.iter().zip(&p1).filter(|(a, b)| a.to_bits() != b.to_bits()).count();
+    assert_eq!(diffs, 0, "replicas diverged: {diffs}/{} params", p0.len());
+}
+
+#[test]
+fn missing_allreduce_is_a_loud_error() {
+    require_artifacts!();
+    let mut e = engine(RunMode::Sequential);
+    let m = e.runtime().manifest();
+    let (b, t, vocab) = (m.config.batch, m.config.seq_len, m.config.vocab);
+    let mut corpus = zo2::data::SyntheticCorpus::new(vocab, 9);
+    let ids = corpus.sample(b, t).ids;
+    e.dp_dual_losses(&[&ids]).unwrap();
+    // No set_allreduced_g: the parked NaN must refuse to train or flush.
+    let err = e.train_step(&ids).unwrap_err().to_string();
+    assert!(err.contains("set_allreduced_g"), "unexpected error: {err}");
+    let err = e.flush_updates().unwrap_err().to_string();
+    assert!(err.contains("set_allreduced_g"), "unexpected error: {err}");
+}

@@ -1,0 +1,515 @@
+//! Golden compatibility: the device-indexed scheduler must be a pure
+//! re-indexing of the original single-device 5-stream scheduler.
+//!
+//! `reference_v1` below is a **frozen copy** of the pre-refactor
+//! `build_plan` + `simulate` (the hard-coded `Stream` enum, stream-name
+//! busy map and global disk-batch state), kept verbatim as the golden
+//! oracle.  Every test drives both implementations over the same inputs
+//! and demands *exact* equality: identical task sequences (kind, module,
+//! step, deps, stream↔(device 0, kind) mapping) and bitwise-identical
+//! schedules (start/end times, makespan, steady-state step time, per-stream
+//! busy seconds, bottleneck diagnosis).  `N = 1` is the degenerate case of
+//! the sharded builder — not a special case — and this is the proof.
+
+use zo2::costmodel::{ComputeMode, Hardware, SimCost, Workload};
+use zo2::model::opt_by_name;
+use zo2::precision::Codec;
+use zo2::rng::GaussianRng;
+use zo2::sched::{
+    build_plan, simulate, CostProvider, DeviceId, Module, Policy, StreamKind, TaskKind, Tiering,
+};
+
+/// Frozen pre-refactor scheduler (PR 2 state).  Do not edit — it is the
+/// golden oracle for the device-indexed refactor.
+mod reference_v1 {
+    use std::collections::HashMap;
+    use zo2::sched::{CostProvider, Module, Policy, Tiering};
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+    pub enum Stream {
+        Upload,
+        Compute,
+        Offload,
+        DiskRead,
+        DiskWrite,
+    }
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum TaskKind {
+        Upload,
+        Compute,
+        Offload,
+        Update,
+        DiskRead,
+        DiskWrite,
+    }
+
+    #[derive(Debug, Clone)]
+    pub struct Task {
+        pub id: usize,
+        pub step: usize,
+        pub module: Module,
+        pub kind: TaskKind,
+        pub stream: Stream,
+        pub deps: Vec<usize>,
+        pub extra_latency: f64,
+    }
+
+    pub struct Schedule {
+        pub start: Vec<f64>,
+        pub end: Vec<f64>,
+        pub makespan: f64,
+        pub steady_step_s: f64,
+        pub busy: HashMap<&'static str, f64>,
+    }
+
+    impl Schedule {
+        pub fn busy_of(&self, stream: &str) -> f64 {
+            self.busy.get(stream).copied().unwrap_or(0.0)
+        }
+
+        pub fn bottleneck(&self) -> &'static str {
+            let compute = self.busy_of("compute");
+            let pcie = self.busy_of("upload").max(self.busy_of("offload"));
+            let disk = self.busy_of("disk_read").max(self.busy_of("disk_write"));
+            if disk >= pcie && disk >= compute {
+                "disk-bound"
+            } else if pcie >= compute {
+                "pcie-bound"
+            } else {
+                "compute-bound"
+            }
+        }
+    }
+
+    pub fn build_plan(n_blocks: usize, steps: usize, policy: Policy) -> Vec<Task> {
+        let mut tasks: Vec<Task> = Vec::new();
+        let mut last_on: [Option<usize>; 5] = [None; 5];
+        let mut offload_ring: Vec<Option<usize>> = vec![None; policy.slots.max(1)];
+        let mut ring_pos = 0usize;
+        let mut dram_ring: Vec<Option<usize>> = vec![None; policy.dram_slots.max(1)];
+        let mut dram_pos = 0usize;
+        let mut last_write: Vec<Option<usize>> = vec![None; n_blocks];
+        let mut prev_any: Option<usize> = None;
+        let mut prev_compute: Option<usize> = None;
+
+        let spilled = match policy.tiering {
+            Tiering::TwoTier => 0,
+            Tiering::ThreeTier => policy.spilled.min(n_blocks),
+        };
+        let on_disk = |i: usize| i >= n_blocks - spilled;
+
+        let stream_idx = |s: Stream| match s {
+            Stream::Upload => 0,
+            Stream::Compute => 1,
+            Stream::Offload => 2,
+            Stream::DiskRead => 3,
+            Stream::DiskWrite => 4,
+        };
+
+        let push = |tasks: &mut Vec<Task>,
+                        last_on: &mut [Option<usize>; 5],
+                        prev_any: &mut Option<usize>,
+                        prev_compute: &mut Option<usize>,
+                        step: usize,
+                        module: Module,
+                        kind: TaskKind,
+                        mut deps: Vec<usize>,
+                        extra_latency: f64| {
+            let stream = if policy.overlap {
+                match kind {
+                    TaskKind::Upload => Stream::Upload,
+                    TaskKind::Compute | TaskKind::Update => Stream::Compute,
+                    TaskKind::Offload => Stream::Offload,
+                    TaskKind::DiskRead => Stream::DiskRead,
+                    TaskKind::DiskWrite => Stream::DiskWrite,
+                }
+            } else {
+                Stream::Compute
+            };
+            let id = tasks.len();
+            if let Some(p) = last_on[stream_idx(stream)] {
+                deps.push(p);
+            }
+            if !policy.overlap {
+                if let Some(p) = *prev_any {
+                    deps.push(p);
+                }
+            }
+            deps.sort_unstable();
+            deps.dedup();
+            tasks.push(Task { id, step, module, kind, stream, deps, extra_latency });
+            last_on[stream_idx(stream)] = Some(id);
+            *prev_any = Some(id);
+            if matches!(kind, TaskKind::Compute | TaskKind::Update) {
+                *prev_compute = Some(id);
+            }
+            id
+        };
+
+        let malloc_sync = !policy.reusable_mem;
+
+        for step in 0..steps {
+            let c_embed = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                               step, Module::Embed, TaskKind::Compute, vec![], 0.0);
+            let mut prev_c = c_embed;
+
+            for i in 0..n_blocks {
+                let mut deps = Vec::new();
+                if on_disk(i) {
+                    let mut rdeps = Vec::new();
+                    if let Some(w) = dram_ring[dram_pos] {
+                        rdeps.push(w);
+                    }
+                    if let Some(w) = last_write[i] {
+                        rdeps.push(w);
+                    }
+                    let r = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                                 step, Module::Block(i), TaskKind::DiskRead, rdeps, 0.0);
+                    deps.push(r);
+                }
+                if let Some(o) = offload_ring[ring_pos] {
+                    deps.push(o);
+                }
+                if malloc_sync {
+                    if let Some(c) = prev_compute {
+                        deps.push(c);
+                    }
+                }
+                let extra = 0.0;
+                let u = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                             step, Module::Block(i), TaskKind::Upload, deps, extra);
+
+                let c = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                             step, Module::Block(i), TaskKind::Compute, vec![u, prev_c], 0.0);
+                prev_c = c;
+
+                let o = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                             step, Module::Block(i), TaskKind::Offload, vec![c], 0.0);
+                offload_ring[ring_pos] = Some(o);
+                ring_pos = (ring_pos + 1) % offload_ring.len();
+
+                if on_disk(i) {
+                    let w = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                                 step, Module::Block(i), TaskKind::DiskWrite, vec![o], 0.0);
+                    dram_ring[dram_pos] = Some(w);
+                    dram_pos = (dram_pos + 1) % dram_ring.len();
+                    last_write[i] = Some(w);
+                }
+            }
+
+            let _c_head = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                               step, Module::Head, TaskKind::Compute, vec![prev_c], 0.0);
+
+            if !policy.efficient_update {
+                for i in 0..n_blocks {
+                    let mut deps = Vec::new();
+                    if on_disk(i) {
+                        let mut rdeps = Vec::new();
+                        if let Some(w) = dram_ring[dram_pos] {
+                            rdeps.push(w);
+                        }
+                        if let Some(w) = last_write[i] {
+                            rdeps.push(w);
+                        }
+                        let r = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                                     step, Module::Block(i), TaskKind::DiskRead, rdeps, 0.0);
+                        deps.push(r);
+                    }
+                    if let Some(o) = offload_ring[ring_pos] {
+                        deps.push(o);
+                    }
+                    if malloc_sync {
+                        if let Some(c) = prev_compute {
+                            deps.push(c);
+                        }
+                    }
+                    let u = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                                 step, Module::Block(i), TaskKind::Upload, deps, 0.0);
+                    let c = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                                 step, Module::Block(i), TaskKind::Update, vec![u], 0.0);
+                    let o = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                                 step, Module::Block(i), TaskKind::Offload, vec![c], 0.0);
+                    offload_ring[ring_pos] = Some(o);
+                    ring_pos = (ring_pos + 1) % offload_ring.len();
+                    if on_disk(i) {
+                        let w = push(&mut tasks, &mut last_on, &mut prev_any, &mut prev_compute,
+                                     step, Module::Block(i), TaskKind::DiskWrite, vec![o], 0.0);
+                        dram_ring[dram_pos] = Some(w);
+                        dram_pos = (dram_pos + 1) % dram_ring.len();
+                        last_write[i] = Some(w);
+                    }
+                }
+            }
+        }
+        tasks
+    }
+
+    fn stream_name(s: Stream) -> &'static str {
+        match s {
+            Stream::Upload => "upload",
+            Stream::Compute => "compute",
+            Stream::Offload => "offload",
+            Stream::DiskRead => "disk_read",
+            Stream::DiskWrite => "disk_write",
+        }
+    }
+
+    pub fn simulate(tasks: &[Task], costs: &dyn CostProvider, policy: Policy) -> Schedule {
+        let mut start = vec![0.0f64; tasks.len()];
+        let mut end = vec![0.0f64; tasks.len()];
+        let mut stream_free: HashMap<Stream, f64> = HashMap::new();
+        let mut busy: HashMap<&'static str, f64> = HashMap::new();
+        let mut read_batch_len = 0usize;
+        let mut last_was_read: HashMap<Stream, bool> = HashMap::new();
+
+        for t in tasks {
+            let stream_prev: f64 = *stream_free.get(&t.stream).unwrap_or(&0.0);
+            let mut t0 = stream_prev;
+            for &d in &t.deps {
+                t0 = t0.max(end[d]);
+            }
+            t0 += t.extra_latency;
+            let dur = match t.kind {
+                TaskKind::Upload => {
+                    let base = costs.upload_s() + costs.host_decode_s();
+                    if policy.reusable_mem { base } else { base + costs.malloc_s() }
+                }
+                TaskKind::Compute => costs.compute_s(t.module),
+                TaskKind::Offload => costs.offload_s() + costs.host_encode_s(),
+                TaskKind::Update => costs.update_s(),
+                TaskKind::DiskRead => {
+                    let queued = t0 <= stream_prev + 1e-12;
+                    let coalesce = policy.disk_batch > 1
+                        && queued
+                        && last_was_read.get(&t.stream).copied().unwrap_or(false)
+                        && read_batch_len > 0
+                        && read_batch_len < policy.disk_batch;
+                    if coalesce {
+                        read_batch_len += 1;
+                        costs.disk_read_bw_s()
+                    } else {
+                        read_batch_len = 1;
+                        costs.disk_read_s()
+                    }
+                }
+                TaskKind::DiskWrite => costs.disk_write_s(),
+            };
+            last_was_read.insert(t.stream, t.kind == TaskKind::DiskRead);
+            let t1 = t0 + dur;
+            start[t.id] = t0;
+            end[t.id] = t1;
+            stream_free.insert(t.stream, t1);
+            *busy.entry(stream_name(t.stream)).or_default() += dur;
+        }
+
+        let makespan = end.iter().copied().fold(0.0, f64::max);
+        let n_steps = tasks.iter().map(|t| t.step).max().map(|s| s + 1).unwrap_or(0);
+        let steady_step_s = if n_steps >= 2 {
+            let mut step_end = vec![0.0f64; n_steps];
+            for t in tasks {
+                step_end[t.step] = step_end[t.step].max(end[t.id]);
+            }
+            (step_end[n_steps - 1] - step_end[0]) / (n_steps - 1) as f64
+        } else {
+            makespan
+        };
+
+        Schedule { start, end, makespan, steady_step_s, busy }
+    }
+}
+
+/// Map a refactored task kind back onto the v1 enum (link kinds never
+/// appear in single-device plans — asserted by the caller).
+fn v1_kind(kind: TaskKind) -> reference_v1::TaskKind {
+    match kind {
+        TaskKind::Upload => reference_v1::TaskKind::Upload,
+        TaskKind::Compute => reference_v1::TaskKind::Compute,
+        TaskKind::Offload => reference_v1::TaskKind::Offload,
+        TaskKind::Update => reference_v1::TaskKind::Update,
+        TaskKind::DiskRead => reference_v1::TaskKind::DiskRead,
+        TaskKind::DiskWrite => reference_v1::TaskKind::DiskWrite,
+        k => panic!("link task {k:?} in a single-device plan"),
+    }
+}
+
+fn v1_stream_kind(s: reference_v1::Stream) -> StreamKind {
+    match s {
+        reference_v1::Stream::Upload => StreamKind::Upload,
+        reference_v1::Stream::Compute => StreamKind::Compute,
+        reference_v1::Stream::Offload => StreamKind::Offload,
+        reference_v1::Stream::DiskRead => StreamKind::DiskRead,
+        reference_v1::Stream::DiskWrite => StreamKind::DiskWrite,
+    }
+}
+
+fn assert_plans_identical(new: &[zo2::sched::Task], old: &[reference_v1::Task], what: &str) {
+    assert_eq!(new.len(), old.len(), "{what}: task count");
+    for (n, o) in new.iter().zip(old) {
+        assert_eq!(n.id, o.id, "{what}: id");
+        assert_eq!(n.step, o.step, "{what}: task {} step", n.id);
+        assert_eq!(n.module, o.module, "{what}: task {} module", n.id);
+        assert_eq!(v1_kind(n.kind), o.kind, "{what}: task {} kind", n.id);
+        assert_eq!(n.device(), DeviceId(0), "{what}: task {} off device 0", n.id);
+        assert_eq!(
+            n.stream.kind,
+            v1_stream_kind(o.stream),
+            "{what}: task {} stream",
+            n.id
+        );
+        assert_eq!(n.deps, o.deps, "{what}: task {} deps", n.id);
+        assert!(
+            n.extra_latency == o.extra_latency,
+            "{what}: task {} extra latency",
+            n.id
+        );
+    }
+}
+
+fn assert_schedules_identical(
+    new: &zo2::sched::Schedule,
+    old: &reference_v1::Schedule,
+    what: &str,
+) {
+    // Bitwise: the refactor may not perturb a single f64.
+    for (i, (a, b)) in new.start.iter().zip(&old.start).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "{what}: start[{i}] {a} vs {b}");
+    }
+    for (i, (a, b)) in new.end.iter().zip(&old.end).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "{what}: end[{i}] {a} vs {b}");
+    }
+    assert!(new.makespan.to_bits() == old.makespan.to_bits(), "{what}: makespan");
+    assert!(
+        new.steady_step_s.to_bits() == old.steady_step_s.to_bits(),
+        "{what}: steady step"
+    );
+    for name in ["upload", "compute", "offload", "disk_read", "disk_write"] {
+        assert!(
+            new.busy_of(name).to_bits() == old.busy_of(name).to_bits(),
+            "{what}: busy[{name}] {} vs {}",
+            new.busy_of(name),
+            old.busy_of(name)
+        );
+    }
+    assert_eq!(new.bottleneck(), old.bottleneck(), "{what}: bottleneck");
+}
+
+struct RandCosts {
+    up: f64,
+    off: f64,
+    comp: f64,
+    upd: f64,
+    read: f64,
+    write: f64,
+    host: f64,
+}
+
+impl CostProvider for RandCosts {
+    fn upload_s(&self) -> f64 {
+        self.up
+    }
+    fn offload_s(&self) -> f64 {
+        self.off
+    }
+    fn compute_s(&self, m: Module) -> f64 {
+        self.comp * if m == Module::Embed { 0.3 } else { 1.0 }
+    }
+    fn update_s(&self) -> f64 {
+        self.upd
+    }
+    fn host_decode_s(&self) -> f64 {
+        self.host
+    }
+    fn host_encode_s(&self) -> f64 {
+        self.host
+    }
+    fn disk_read_s(&self) -> f64 {
+        self.read
+    }
+    fn disk_read_bw_s(&self) -> f64 {
+        self.read * 0.6
+    }
+    fn disk_write_s(&self) -> f64 {
+        self.write
+    }
+}
+
+fn rand_case(rng: &mut GaussianRng) -> (usize, usize, RandCosts, Policy) {
+    let n_blocks = 1 + rng.next_below(12) as usize;
+    let steps = 1 + rng.next_below(4) as usize;
+    let costs = RandCosts {
+        up: 0.01 + rng.next_uniform() * 2.0,
+        off: 0.01 + rng.next_uniform() * 2.0,
+        comp: 0.01 + rng.next_uniform() * 4.0,
+        upd: 0.01 + rng.next_uniform() * 0.5,
+        read: 0.01 + rng.next_uniform() * 3.0,
+        write: 0.01 + rng.next_uniform() * 3.0,
+        host: rng.next_uniform() * 0.5,
+    };
+    let three = rng.next_below(2) == 0;
+    // spill_placement stays Trailing: that IS the pre-refactor semantics
+    // (interleaved placement is new behaviour with no v1 counterpart).
+    let policy = Policy {
+        overlap: rng.next_below(4) != 0,
+        reusable_mem: rng.next_below(2) == 0,
+        efficient_update: rng.next_below(2) == 0,
+        slots: 1 + rng.next_below(4) as usize,
+        tiering: if three { Tiering::ThreeTier } else { Tiering::TwoTier },
+        spilled: if three { rng.next_below(1 + n_blocks as u64) as usize } else { 0 },
+        dram_slots: 1 + rng.next_below(4) as usize,
+        disk_batch: 1 + rng.next_below(4) as usize,
+        ..Policy::default()
+    };
+    (n_blocks, steps, costs, policy)
+}
+
+#[test]
+fn refactored_plan_is_byte_identical_to_v1_across_random_cases() {
+    let mut rng = GaussianRng::new(0x60_1D, 0);
+    for case in 0..200 {
+        let (n, steps, costs, policy) = rand_case(&mut rng);
+        let new_plan = build_plan(n, steps, policy);
+        let old_plan = reference_v1::build_plan(n, steps, policy);
+        assert_plans_identical(&new_plan, &old_plan, &format!("case {case} ({policy:?})"));
+
+        let (new_sched, _) = simulate(&new_plan, &costs, policy);
+        let old_sched = reference_v1::simulate(&old_plan, &costs, policy);
+        assert_schedules_identical(&new_sched, &old_sched, &format!("case {case}"));
+    }
+}
+
+#[test]
+fn paper_scale_cost_breakdown_matches_v1() {
+    // The acceptance check behind `simulate --devices 1`: same schedule,
+    // same cost breakdown, same bottleneck diagnosis as before the
+    // refactor, on the real calibrated cost model at paper scale.
+    let hw = Hardware::a100_pcie4();
+    let cases = [
+        ("OPT-13B", Codec::F32, ComputeMode::Fp32, Policy::default()),
+        ("OPT-13B", Codec::Fp16, ComputeMode::Fp16, Policy::default()),
+        ("OPT-13B", Codec::F32, ComputeMode::Fp32, Policy::naive()),
+        ("OPT-175B", Codec::Fp16, ComputeMode::Fp16, Policy::three_tier(70, 4)),
+        (
+            "OPT-175B",
+            Codec::Fp16,
+            ComputeMode::Fp16,
+            Policy { disk_batch: 4, ..Policy::three_tier(70, 4) },
+        ),
+    ];
+    for (name, wire, compute, policy) in cases {
+        let wl = Workload {
+            shape: opt_by_name(name).unwrap(),
+            batch: 1,
+            seq: 2048,
+            wire,
+            compute,
+        };
+        let costs = SimCost::new(&hw, &wl);
+        let new_plan = build_plan(wl.shape.n_layers, 4, policy);
+        let old_plan = reference_v1::build_plan(wl.shape.n_layers, 4, policy);
+        assert_plans_identical(&new_plan, &old_plan, name);
+        let (new_sched, _) = simulate(&new_plan, &costs, policy);
+        let old_sched = reference_v1::simulate(&old_plan, &costs, policy);
+        assert_schedules_identical(&new_sched, &old_sched, name);
+    }
+}

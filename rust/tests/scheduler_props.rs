@@ -4,17 +4,27 @@
 //! Invariants checked across random (n_blocks, steps, durations, policies),
 //! including three-tier policies with random spill counts and DRAM windows:
 //!  1. dependency safety: no task starts before any dependency ends;
-//!  2. stream exclusivity: tasks on one stream never overlap (all five);
+//!  2. stream exclusivity: tasks on one stream never overlap (all kinds);
 //!  3. overlap dominance: the dynamic schedule is never slower than naive;
 //!  4. critical-path lower bounds hold;
 //!  5. slot safety: at most `slots` blocks in flight at any instant;
 //!  6. chain safety: spilled blocks run R(Wᵢ)→U(Wᵢ)→C(Wᵢ)→O(Wᵢ)→W(Wᵢ);
-//!  7. window safety: at most `dram_slots` spilled buckets staged at once.
+//!  7. window safety: at most `dram_slots` spilled buckets staged at once;
+//!
+//! plus the device-indexed refactor's invariants:
+//!  8. N = 1 sharded plans are identical to `build_plan` (the frozen
+//!     pre-refactor comparison lives in `tests/sched_golden_v1.rs`);
+//!  9. per-device stream FIFO and cross-device dependency ordering hold
+//!     for N ∈ {2, 4}, both strategies, both layouts;
+//! 10. the DP sim-shard trajectory is bit-identical for any worker count.
 
 use zo2::rng::GaussianRng;
 use zo2::sched::{
-    build_plan, simulate, CostProvider, Module, Policy, Stream, TaskKind, Tiering, ALL_STREAMS,
+    build_plan, simulate, CostProvider, DeviceId, Module, Policy, SpillPlacement, StreamId,
+    StreamKind, Task, TaskKind, Tiering, STREAM_KINDS,
 };
+use zo2::shard::{block_owner, build_sharded_plan, ShardLayout, ShardSpec};
+use zo2::zo::{DpSimShard, DpWorker};
 
 struct RandCosts {
     up: f64,
@@ -23,6 +33,9 @@ struct RandCosts {
     upd: f64,
     read: f64,
     write: f64,
+    act: f64,
+    seed: f64,
+    grad: f64,
 }
 
 impl CostProvider for RandCosts {
@@ -44,6 +57,15 @@ impl CostProvider for RandCosts {
     fn disk_write_s(&self) -> f64 {
         self.write
     }
+    fn link_activation_s(&self) -> f64 {
+        self.act
+    }
+    fn link_seed_s(&self) -> f64 {
+        self.seed
+    }
+    fn link_grad_s(&self) -> f64 {
+        self.grad
+    }
 }
 
 fn rand_case(rng: &mut GaussianRng) -> (usize, usize, RandCosts, Policy) {
@@ -56,6 +78,9 @@ fn rand_case(rng: &mut GaussianRng) -> (usize, usize, RandCosts, Policy) {
         upd: 0.01 + rng.next_uniform() * 0.5,
         read: 0.01 + rng.next_uniform() * 3.0,
         write: 0.01 + rng.next_uniform() * 3.0,
+        act: rng.next_uniform() * 0.5,
+        seed: rng.next_uniform() * 0.1,
+        grad: rng.next_uniform() * 0.2,
     };
     // Half the cases are three-tier with a random spill count and window.
     let three = rng.next_below(2) == 0;
@@ -66,10 +91,34 @@ fn rand_case(rng: &mut GaussianRng) -> (usize, usize, RandCosts, Policy) {
         slots: 1 + rng.next_below(4) as usize,
         tiering: if three { Tiering::ThreeTier } else { Tiering::TwoTier },
         spilled: if three { rng.next_below(1 + n_blocks as u64) as usize } else { 0 },
+        spill_placement: if rng.next_below(2) == 0 {
+            SpillPlacement::Trailing
+        } else {
+            SpillPlacement::Interleaved
+        },
         dram_slots: 1 + rng.next_below(4) as usize,
         disk_batch: 1 + rng.next_below(4) as usize,
     };
     (n_blocks, steps, costs, policy)
+}
+
+fn rand_spec(rng: &mut GaussianRng) -> ShardSpec {
+    let devices = [2usize, 4][rng.next_below(2) as usize];
+    let layout =
+        [ShardLayout::Contiguous, ShardLayout::Cyclic][rng.next_below(2) as usize];
+    if rng.next_below(2) == 0 {
+        ShardSpec::pipeline(devices, layout)
+    } else {
+        ShardSpec::data_parallel(devices)
+    }
+}
+
+/// All streams a plan actually uses.
+fn streams_of(plan: &[Task]) -> Vec<StreamId> {
+    let mut ss: Vec<StreamId> = plan.iter().map(|t| t.stream).collect();
+    ss.sort_unstable();
+    ss.dedup();
+    ss
 }
 
 #[test]
@@ -90,7 +139,8 @@ fn dependencies_and_stream_exclusivity_hold() {
                 );
             }
         }
-        for s in ALL_STREAMS {
+        for k in STREAM_KINDS {
+            let s = StreamId::new(0, k);
             let mut ivals: Vec<(f64, f64)> = plan
                 .iter()
                 .filter(|t| t.stream == s)
@@ -132,7 +182,7 @@ fn critical_path_lower_bounds() {
         // Compute stream total is a lower bound (it is one FIFO processor).
         let compute_total: f64 = plan
             .iter()
-            .filter(|t| t.stream == Stream::Compute)
+            .filter(|t| t.stream.kind == StreamKind::Compute)
             .map(|t| match t.kind {
                 TaskKind::Compute => costs.compute_s(t.module),
                 TaskKind::Update => costs.update_s(),
@@ -140,6 +190,9 @@ fn critical_path_lower_bounds() {
                 TaskKind::Offload => costs.offload_s(),
                 TaskKind::DiskRead => costs.disk_read_s(),
                 TaskKind::DiskWrite => costs.disk_write_s(),
+                TaskKind::ActivationXfer => costs.link_activation_s(),
+                TaskKind::SeedBcast => costs.link_seed_s(),
+                TaskKind::GradReduce => costs.link_grad_s(),
             })
             .sum();
         assert!(sched.makespan >= compute_total - 1e-9);
@@ -253,7 +306,7 @@ fn per_stream_fifo_is_structural() {
         let (n, steps, costs, policy) = rand_case(&mut rng);
         let plan = build_plan(n, steps, policy);
         let (sched, _) = simulate(&plan, &costs, policy);
-        for s in ALL_STREAMS {
+        for s in streams_of(&plan) {
             let ids: Vec<usize> =
                 plan.iter().filter(|t| t.stream == s).map(|t| t.id).collect();
             for w in ids.windows(2) {
@@ -302,12 +355,330 @@ fn dram_window_never_exceeds_slot_count() {
 
 #[test]
 fn efficient_update_halves_interconnect_busy_time() {
-    let costs = RandCosts { up: 1.0, off: 1.0, comp: 0.5, upd: 0.05, read: 0.2, write: 0.2 };
+    let costs = RandCosts {
+        up: 1.0,
+        off: 1.0,
+        comp: 0.5,
+        upd: 0.05,
+        read: 0.2,
+        write: 0.2,
+        act: 0.0,
+        seed: 0.0,
+        grad: 0.0,
+    };
     let base = Policy::default();
     let noeff = Policy { efficient_update: false, ..base };
     let (s1, _) = simulate(&build_plan(8, 2, base), &costs, base);
     let (s2, _) = simulate(&build_plan(8, 2, noeff), &costs, noeff);
-    let b1 = s1.busy.get("upload").unwrap() + s1.busy.get("offload").unwrap();
-    let b2 = s2.busy.get("upload").unwrap() + s2.busy.get("offload").unwrap();
+    let b1 = s1.busy_of("upload") + s1.busy_of("offload");
+    let b2 = s2.busy_of("upload") + s2.busy_of("offload");
     assert!((b2 / b1 - 2.0).abs() < 0.2, "transfer busy should ~double: {b1} -> {b2}");
+}
+
+// --- device-indexed / sharded invariants (rules 8-10) -----------------------
+
+#[test]
+fn single_device_sharded_plans_match_build_plan() {
+    // Rule 8 (the frozen v1 comparison is in tests/sched_golden_v1.rs;
+    // this closes the loop N=1 sharded == build_plan for random policies).
+    let mut rng = GaussianRng::new(31, 7);
+    for case in 0..40 {
+        let (n, steps, _costs, policy) = rand_case(&mut rng);
+        let base = build_plan(n, steps, policy);
+        for spec in [
+            ShardSpec::single(),
+            ShardSpec::pipeline(1, ShardLayout::Cyclic),
+            ShardSpec::data_parallel(1),
+        ] {
+            let p = build_sharded_plan(n, steps, policy, &spec);
+            assert_eq!(base.len(), p.len(), "case {case} {spec:?}");
+            for (a, b) in base.iter().zip(&p) {
+                assert_eq!(a.kind, b.kind, "case {case} {spec:?}");
+                assert_eq!(a.stream, b.stream, "case {case} {spec:?}");
+                assert_eq!(a.deps, b.deps, "case {case} {spec:?}");
+                assert_eq!(a.module, b.module, "case {case} {spec:?}");
+                assert_eq!(a.step, b.step, "case {case} {spec:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_plans_keep_per_device_fifo_and_backward_deps() {
+    // Rule 9a: on every device-indexed stream of an N ∈ {2,4} plan, issue
+    // order is schedule order, and every dependency points backward.
+    let mut rng = GaussianRng::new(53, 8);
+    for case in 0..60 {
+        let (n, steps, costs, policy) = rand_case(&mut rng);
+        let spec = rand_spec(&mut rng);
+        let plan = build_sharded_plan(n, steps, policy, &spec);
+        let (sched, _) = simulate(&plan, &costs, policy);
+        for t in &plan {
+            for &d in &t.deps {
+                assert!(d < t.id, "case {case} {spec:?}: dep {} of {} forward", d, t.id);
+                assert!(
+                    sched.start[t.id] >= sched.end[d] - 1e-12,
+                    "case {case} {spec:?}: task {} starts before dep {}",
+                    t.id,
+                    d
+                );
+            }
+        }
+        for s in streams_of(&plan) {
+            let ids: Vec<usize> = plan.iter().filter(|t| t.stream == s).map(|t| t.id).collect();
+            for w in ids.windows(2) {
+                assert!(
+                    sched.start[w[1]] >= sched.end[w[0]] - 1e-12,
+                    "case {case} {spec:?}: stream {s:?} FIFO violated"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_cross_device_ordering_holds() {
+    // Rule 9b, pipeline: block computes run in block order even across
+    // devices (the activation chain), every ownership change crosses the
+    // link, and each block's U/C/O sit on its owner's streams.
+    let mut rng = GaussianRng::new(67, 9);
+    for case in 0..40 {
+        let (n, steps, costs, policy) = rand_case(&mut rng);
+        let devices = [2usize, 4][rng.next_below(2) as usize];
+        let layout = [ShardLayout::Contiguous, ShardLayout::Cyclic][rng.next_below(2) as usize];
+        let spec = ShardSpec::pipeline(devices, layout);
+        let plan = build_sharded_plan(n, steps, policy, &spec);
+        let (sched, _) = simulate(&plan, &costs, policy);
+
+        for t in plan.iter().filter(|t| {
+            matches!(t.kind, TaskKind::Upload | TaskKind::Compute | TaskKind::Offload)
+        }) {
+            if let Module::Block(i) = t.module {
+                assert_eq!(
+                    t.device(),
+                    DeviceId(block_owner(layout, n, devices, i)),
+                    "case {case}: block {i} {:?} on wrong device",
+                    t.kind
+                );
+            }
+        }
+        // Compute of block i never starts before compute of block i-1 ends
+        // (within a step) — the activation dependency crosses devices.
+        for step in 0..steps {
+            let c_of = |i: usize| {
+                plan.iter().find(|t| {
+                    t.kind == TaskKind::Compute && t.module == Module::Block(i) && t.step == step
+                })
+            };
+            for i in 1..n {
+                let (a, b) = (c_of(i - 1).unwrap(), c_of(i).unwrap());
+                assert!(
+                    sched.start[b.id] >= sched.end[a.id] - 1e-12,
+                    "case {case}: C(W{i}) before C(W{}) ended",
+                    i - 1
+                );
+                if block_owner(layout, n, devices, i) != block_owner(layout, n, devices, i - 1) {
+                    let hop = plan.iter().find(|t| {
+                        t.kind == TaskKind::ActivationXfer
+                            && t.module == Module::Block(i)
+                            && t.step == step
+                    });
+                    let hop = hop.unwrap_or_else(|| {
+                        panic!("case {case}: no activation hop into block {i}")
+                    });
+                    assert_eq!(
+                        hop.device(),
+                        DeviceId(block_owner(layout, n, devices, i - 1)),
+                        "case {case}: hop charged to the wrong sender"
+                    );
+                    assert!(b.deps.contains(&hop.id), "case {case}: C(W{i}) missing hop dep");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dp_cross_device_ordering_holds() {
+    // Rule 9b, data-parallel: the seed broadcast precedes every compute of
+    // its step; the all-reduce follows every device's head; and no compute
+    // of step j+1 starts before step j's all-reduce lands.
+    let mut rng = GaussianRng::new(71, 10);
+    for case in 0..40 {
+        let (n, steps, costs, mut policy) = rand_case(&mut rng);
+        // The DP engine contract requires the deferred update.
+        policy.efficient_update = true;
+        let devices = [2usize, 4][rng.next_below(2) as usize];
+        let plan = build_sharded_plan(n, steps, policy, &ShardSpec::data_parallel(devices));
+        let (sched, _) = simulate(&plan, &costs, policy);
+
+        for step in 0..steps {
+            let seed = plan
+                .iter()
+                .find(|t| t.kind == TaskKind::SeedBcast && t.step == step)
+                .unwrap();
+            let reduce = plan
+                .iter()
+                .find(|t| t.kind == TaskKind::GradReduce && t.step == step)
+                .unwrap();
+            let computes: Vec<&Task> = plan
+                .iter()
+                .filter(|t| t.kind == TaskKind::Compute && t.step == step)
+                .collect();
+            assert_eq!(
+                computes.iter().filter(|t| t.module == Module::Head).count(),
+                devices,
+                "case {case}: every device runs its head"
+            );
+            for c in &computes {
+                assert!(
+                    sched.start[c.id] >= sched.end[seed.id] - 1e-12,
+                    "case {case} step {step}: compute before seed broadcast"
+                );
+                assert!(
+                    sched.start[reduce.id] + 1e-12
+                        >= if c.module == Module::Head { sched.end[c.id] } else { 0.0 },
+                    "case {case} step {step}: all-reduce before head"
+                );
+            }
+            if step + 1 < steps {
+                for c in plan
+                    .iter()
+                    .filter(|t| t.kind == TaskKind::Compute && t.step == step + 1)
+                {
+                    assert!(
+                        sched.start[c.id] >= sched.end[reduce.id] - 1e-12,
+                        "case {case}: step {} compute before step {step} all-reduce",
+                        step + 1
+                    );
+                }
+            }
+        }
+    }
+}
+
+// --- DP sim-shard bit-identity (rule 10) ------------------------------------
+
+/// Host-only seed-synchronous ZO worker over a quadratic surrogate loss —
+/// the same DpWorker contract the real engine implements, with no PJRT
+/// dependency, so the K-invariance property runs everywhere.
+struct ToyZoWorker {
+    params: Vec<f32>,
+    seed: u64,
+    step: u64,
+    eps: f32,
+    lr: f32,
+    /// (step, g); g is NaN until the all-reduce delivers it.
+    pending: Option<(u64, f32)>,
+}
+
+impl ToyZoWorker {
+    fn new(seed: u64, dim: usize) -> Self {
+        let mut params = vec![0.0f32; dim];
+        GaussianRng::new(seed, u64::MAX).fill_gaussian(&mut params);
+        Self { params, seed, step: 0, eps: 1e-3, lr: 1e-2, pending: None }
+    }
+
+    fn z(&self, step: u64) -> Vec<f32> {
+        let mut z = vec![0.0f32; self.params.len()];
+        GaussianRng::new(self.seed, step).fill_gaussian(&mut z);
+        z
+    }
+
+    /// Deterministic per-shard loss: squared distance to a target derived
+    /// from the shard's tokens.
+    fn loss(params: &[f32], shard: &[i32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (j, &p) in params.iter().enumerate() {
+            let tok = shard[j % shard.len()];
+            let target = ((tok as f32) * 0.01).sin();
+            let d = p - target;
+            acc += d * d;
+        }
+        acc / params.len() as f32
+    }
+}
+
+impl DpWorker for ToyZoWorker {
+    fn dp_dual_losses(&mut self, shards: &[&[i32]]) -> anyhow::Result<Vec<(f32, f32)>> {
+        // Deferred update with the all-reduced gradient of the last step.
+        if let Some((step, g)) = self.pending.take() {
+            anyhow::ensure!(!g.is_nan(), "toy worker missing all-reduced g");
+            let z = self.z(step);
+            for (p, zi) in self.params.iter_mut().zip(&z) {
+                *p -= self.lr * g * zi;
+            }
+        }
+        let z = self.z(self.step);
+        let mut out = Vec::with_capacity(shards.len());
+        for ids in shards {
+            let plus: Vec<f32> =
+                self.params.iter().zip(&z).map(|(p, zi)| p + self.eps * zi).collect();
+            let minus: Vec<f32> =
+                self.params.iter().zip(&z).map(|(p, zi)| p - self.eps * zi).collect();
+            out.push((Self::loss(&plus, ids), Self::loss(&minus, ids)));
+        }
+        self.pending = Some((self.step, f32::NAN));
+        self.step += 1;
+        Ok(out)
+    }
+
+    fn set_allreduced_g(&mut self, g: f32) {
+        if let Some(p) = self.pending.as_mut() {
+            p.1 = g;
+        }
+    }
+
+    fn eps(&self) -> f32 {
+        self.eps
+    }
+}
+
+/// Run `steps` DP steps with `workers` workers over `shards` fixed shards;
+/// returns (per-step losses, final params of worker 0).
+fn toy_dp_trajectory(workers: usize, shards: usize, steps: usize) -> (Vec<(f32, f32)>, Vec<f32>) {
+    let ws: Vec<ToyZoWorker> = (0..workers).map(|_| ToyZoWorker::new(90, 64)).collect();
+    let mut dp = DpSimShard::new(ws, shards).unwrap();
+    // Deterministic global batch stream: shards * 8 tokens per step.
+    let mut data_rng = GaussianRng::new(4242, 0);
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        let ids: Vec<i32> =
+            (0..shards * 8).map(|_| data_rng.next_below(50_000) as i32).collect();
+        let st = dp.train_step(&ids).unwrap();
+        losses.push((st.loss_plus, st.loss_minus));
+    }
+    let params = dp.workers()[0].params.clone();
+    (losses, params)
+}
+
+#[test]
+fn dp_sim_shard_trajectory_is_bit_identical_for_any_worker_count() {
+    // Rule 10: with the shard set fixed (S = 4), K ∈ {1, 2, 4} workers
+    // produce bit-identical loss trajectories and final parameters — the
+    // "single-worker run" is K = 1 evaluating every shard itself.
+    let steps = 12;
+    let (l1, p1) = toy_dp_trajectory(1, 4, steps);
+    for k in [2usize, 4] {
+        let (lk, pk) = toy_dp_trajectory(k, 4, steps);
+        for (i, (a, b)) in l1.iter().zip(&lk).enumerate() {
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "K={k} step {i} loss+");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "K={k} step {i} loss-");
+        }
+        let diffs =
+            p1.iter().zip(&pk).filter(|(a, b)| a.to_bits() != b.to_bits()).count();
+        assert_eq!(diffs, 0, "K={k}: {diffs}/{} params differ bitwise", p1.len());
+    }
+    // Sanity: the trajectory actually moves (the test is not vacuous).
+    assert!(l1.first().unwrap().0 != l1.last().unwrap().0);
+}
+
+#[test]
+fn dp_sim_shard_rejects_bad_configurations() {
+    let ws: Vec<ToyZoWorker> = (0..3).map(|_| ToyZoWorker::new(1, 8)).collect();
+    assert!(DpSimShard::new(ws, 4).is_err(), "4 shards on 3 workers");
+    let ws: Vec<ToyZoWorker> = (0..2).map(|_| ToyZoWorker::new(1, 8)).collect();
+    let mut dp = DpSimShard::new(ws, 2).unwrap();
+    assert!(dp.train_step(&[1, 2, 3]).is_err(), "odd batch cannot split into 2 shards");
+    assert!(DpSimShard::<ToyZoWorker>::new(Vec::new(), 2).is_err(), "no workers");
 }

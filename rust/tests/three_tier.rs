@@ -16,7 +16,7 @@ use zo2::costmodel::{
 use zo2::model::opt_by_name;
 use zo2::precision::Codec;
 use zo2::runtime::Runtime;
-use zo2::sched::{build_plan, simulate, Policy, Tiering};
+use zo2::sched::{build_plan, simulate, Policy, SpillPlacement, Tiering};
 use zo2::zo::{RunMode, Zo2Engine, Zo2Options, ZoConfig};
 
 macro_rules! require_artifacts {
@@ -83,6 +83,51 @@ fn three_tier_is_bit_identical_to_two_tier() {
 }
 
 #[test]
+fn interleaved_spill_placement_is_bit_identical_too() {
+    require_artifacts!();
+    let (l2, p2) = run(Zo2Options::default());
+    let (l3, p3) = run(Zo2Options {
+        tiering: Tiering::ThreeTier,
+        dram_resident_blocks: 1,
+        dram_slots: 2,
+        spill_placement: SpillPlacement::Interleaved,
+        ..Zo2Options::default()
+    });
+    assert_bit_equal(&l2, &p2, &l3, &p3, "interleaved spill placement");
+}
+
+#[test]
+fn interleaved_engine_spills_the_planner_spill_set() {
+    require_artifacts!();
+    let rt = Runtime::load_config("tiny").unwrap();
+    let n_blocks = rt.manifest().config.n_layers;
+    if n_blocks < 2 {
+        eprintln!("SKIP: config too small to compare placements");
+        return;
+    }
+    let e = Zo2Engine::new(
+        rt,
+        cfg(),
+        Zo2Options {
+            tiering: Tiering::ThreeTier,
+            dram_resident_blocks: n_blocks - 1,
+            dram_slots: 1,
+            spill_placement: SpillPlacement::Interleaved,
+            ..Zo2Options::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(e.spilled_blocks(), 1);
+    for i in 0..n_blocks {
+        assert_eq!(
+            e.is_spilled(i),
+            zo2::sched::is_spilled_block(i, n_blocks, 1, SpillPlacement::Interleaved),
+            "block {i}"
+        );
+    }
+}
+
+#[test]
 fn three_tier_disk_traffic_and_window_are_accounted() {
     require_artifacts!();
     let rt = Runtime::load_config("tiny").unwrap();
@@ -134,7 +179,7 @@ fn opt175b_fits_64gb_workstation_and_ample_dram_matches_two_tier() {
     // 18 GB HBM / 64 GB DRAM workstation: every tier peak within budget.
     let budget = MemoryBudget::workstation_64gb();
     assert!(two_tier_dram_bytes(&wl) > budget.dram, "two-tier must not fit this box");
-    let plan = plan_three_tier(&wl, &budget, 3, 4, 2, &hw);
+    let plan = plan_three_tier(&wl, &budget, 3, 4, 2, &hw, SpillPlacement::Trailing);
     assert!(plan.spilled_blocks > 0);
     assert!(budget.fits(&plan.peaks), "peaks {:?} vs budget {:?}", plan.peaks, budget);
     let policy = plan.policy();
@@ -150,7 +195,7 @@ fn opt175b_fits_64gb_workstation_and_ample_dram_matches_two_tier() {
     // Ample DRAM (512 GB): nothing spills, schedule degenerates to
     // two-tier, throughput within 25%.
     let ample = MemoryBudget { hbm: budget.hbm, dram: 512 << 30, nvme: budget.nvme };
-    let plan = plan_three_tier(&wl, &ample, 3, 4, 2, &hw);
+    let plan = plan_three_tier(&wl, &ample, 3, 4, 2, &hw, SpillPlacement::Trailing);
     assert_eq!(plan.spilled_blocks, 0, "512 GB holds every fp16 bucket");
     let policy = plan.policy();
     let (sa, _) = simulate(&build_plan(wl.shape.n_layers, sim_steps, policy), &costs, policy);
@@ -174,7 +219,7 @@ fn throughput_recovers_monotonically_with_dram_budget() {
     let mut spills = Vec::new();
     for gb in [16u64, 32, 64, 128, 256] {
         let budget = MemoryBudget { hbm: 18 << 30, dram: gb << 30, nvme: 2 << 40 };
-        let plan = plan_three_tier(&wl, &budget, 3, 4, 2, &hw);
+        let plan = plan_three_tier(&wl, &budget, 3, 4, 2, &hw, SpillPlacement::Trailing);
         let policy = plan.policy();
         let (s, _) = simulate(&build_plan(wl.shape.n_layers, 3, policy), &costs, policy);
         assert!(
