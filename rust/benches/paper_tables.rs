@@ -14,15 +14,16 @@ use std::collections::BTreeMap;
 
 use zo2::baselines::{comm_ops_per_block, first_order_comm_per_step, zo2_comm_per_step};
 use zo2::costmodel::{
-    gpu_memory_bytes, mezo_step_s, plan_three_tier, two_tier_dram_bytes, Cluster, ClusterCost,
-    ComputeMode, Hardware, Interconnect, MemoryBudget, SimCost, Strategy, Workload,
+    gpu_memory_bytes, mezo_step_s, plan_three_tier, plan_three_tier_partitioned,
+    two_tier_dram_bytes, Cluster, ClusterCost, ComputeMode, Hardware, Interconnect, MemoryBudget,
+    SimCost, Strategy, Workload,
 };
 use zo2::hostpool::{fused, HostPool};
 use zo2::model::{opt_by_name, opt_family, ModelShape};
 use zo2::precision::Codec;
 use zo2::rng::{GaussianRng, RngState};
-use zo2::sched::{build_plan, simulate, Policy, SpillPlacement};
-use zo2::shard::{build_sharded_plan, ShardLayout, ShardSpec};
+use zo2::sched::{build_plan, simulate, Policy, SpillPlacement, Tiering};
+use zo2::shard::{build_sharded_plan, build_sharded_plan_spilled, ShardLayout, ShardSpec};
 use zo2::util::fmt_mb;
 use zo2::util::json::Json;
 use zo2::util::stats::bench;
@@ -575,7 +576,7 @@ fn table_multi_gpu(hw: &Hardware) {
         let mut pipe_tps1 = 0.0f64;
         for n in [1usize, 2, 4, 8] {
             let cluster = Cluster::homogeneous(hw.clone(), n, Interconnect::nvlink());
-            let costs = ClusterCost::new(&cluster, &w);
+            let costs = ClusterCost::new(&cluster, &w).expect("homogeneous cluster");
 
             let dp_plan = build_sharded_plan(
                 shape.n_layers,
@@ -631,18 +632,117 @@ fn table_multi_gpu(hw: &Hardware) {
             rows.push(Json::Obj(row));
         }
     }
+
+    // Microbatching sweep: OPT-175B on 4 devices, M ∈ {1,2,4,8}, both
+    // layouts, two-tier and (per-partition) three-tier on 24 GB-DRAM hosts.
+    // `bubble` = 1 − Σ_d compute-busy / (N · makespan): the fraction of
+    // device-time the cluster's compute streams sit idle — microbatching
+    // exists to shrink it, until per-slice launch overhead pushes back.
+    println!(
+        "\n-- pipeline microbatching: OPT-175B x4, M sweep \
+         (three-tier column: 24 GB DRAM per host, per-partition spills) --"
+    );
+    println!(
+        "{:<11} {:>2} | {:>10} {:>7} {:>16} | {:>10} {:>7} {:>14}",
+        "layout", "M", "pipe step", "bubble", "bneck", "pipe3 step", "bubble", "pipe3 bneck"
+    );
+    let shape = opt_by_name("OPT-175B").unwrap();
+    let w = wl(&shape, 1, 2048, Codec::Fp16, ComputeMode::Fp16);
+    let devices = 4usize;
+    let cluster = Cluster::homogeneous(hw.clone(), devices, Interconnect::nvlink());
+    let costs = ClusterCost::new(&cluster, &w).expect("homogeneous cluster");
+    let gb = 1u64 << 30;
+    let budgets =
+        vec![MemoryBudget { hbm: 18 * gb, dram: 24 * gb, nvme: 2 << 40 }; devices];
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for layout in [ShardLayout::Contiguous, ShardLayout::Cyclic] {
+        let plans = plan_three_tier_partitioned(
+            &w,
+            &budgets,
+            layout,
+            3,
+            4,
+            2,
+            hw,
+            SpillPlacement::Trailing,
+        );
+        let spilled: Vec<usize> = plans.iter().map(|p| p.spilled_blocks).collect();
+        let policy3 = Policy {
+            tiering: Tiering::ThreeTier,
+            spilled: spilled.iter().sum(),
+            dram_slots: 4,
+            ..Policy::default()
+        };
+        for m in [1usize, 2, 4, 8] {
+            let spec = ShardSpec::pipeline_microbatched(devices, layout, m);
+            let policy = Policy::default();
+            let plan = build_sharded_plan(shape.n_layers, SIM_STEPS, policy, &spec);
+            let (s2, _) = simulate(&plan, &costs, policy);
+            let bubble2 = 1.0 - s2.busy_of("compute") / (devices as f64 * s2.makespan);
+
+            let plan3 = build_sharded_plan_spilled(
+                shape.n_layers,
+                SIM_STEPS,
+                policy3,
+                &spec,
+                Some(&spilled),
+            );
+            let (s3, _) = simulate(&plan3, &costs, policy3);
+            let bubble3 = 1.0 - s3.busy_of("compute") / (devices as f64 * s3.makespan);
+
+            let lname = match layout {
+                ShardLayout::Contiguous => "contiguous",
+                ShardLayout::Cyclic => "cyclic",
+            };
+            println!(
+                "{:<11} {:>2} | {:>9.3}s {:>6.1}% {:>16} | {:>9.3}s {:>6.1}% {:>14}",
+                lname,
+                m,
+                s2.steady_step_s,
+                100.0 * bubble2,
+                s2.bottleneck(),
+                s3.steady_step_s,
+                100.0 * bubble3,
+                s3.bottleneck()
+            );
+            let mut row = BTreeMap::new();
+            row.insert("model".to_string(), Json::Str("OPT-175B".to_string()));
+            row.insert("devices".to_string(), Json::Num(devices as f64));
+            row.insert("layout".to_string(), Json::Str(lname.to_string()));
+            row.insert("microbatches".to_string(), Json::Num(m as f64));
+            row.insert("pipeline_step_s".to_string(), Json::Num(s2.steady_step_s));
+            row.insert("pipeline_bubble".to_string(), Json::Num(bubble2));
+            row.insert("pipeline_bottleneck".to_string(), Json::Str(s2.bottleneck().to_string()));
+            row.insert("pipeline3_step_s".to_string(), Json::Num(s3.steady_step_s));
+            row.insert("pipeline3_bubble".to_string(), Json::Num(bubble3));
+            row.insert(
+                "pipeline3_bottleneck".to_string(),
+                Json::Str(s3.bottleneck().to_string()),
+            );
+            row.insert(
+                "pipeline3_spilled_per_device".to_string(),
+                Json::Arr(spilled.iter().map(|&s| Json::Num(s as f64)).collect()),
+            );
+            sweep_rows.push(Json::Obj(row));
+        }
+    }
+
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("multi_gpu".to_string()));
     doc.insert("wire".to_string(), Json::Str("fp16".to_string()));
     doc.insert("link".to_string(), Json::Str("NVLink".to_string()));
     doc.insert("rows".to_string(), Json::Arr(rows));
+    doc.insert("microbatch_sweep".to_string(), Json::Arr(sweep_rows));
+    doc.insert("microbatch_sweep_dram_gb_per_host".to_string(), Json::Num(24.0));
     let path = "BENCH_multi_gpu.json";
     match std::fs::write(path, Json::Obj(doc).to_string_pretty()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => println!("could not write {path}: {e}"),
     }
     println!("(dp: weak scaling, efficiency ~1 expected — ZO ships one scalar per step;");
-    println!(" pipeline: wins only where PCIe is the constraint, layout matters)");
+    println!(" pipeline: wins only where PCIe is the constraint, layout matters;");
+    println!(" microbatching shrinks the per-step bubble at M>1 — most on cyclic layouts,");
+    println!(" where every block boundary crosses the link)");
 }
 
 fn main() {

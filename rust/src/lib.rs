@@ -23,9 +23,11 @@
 //!   global-sync counterpart (ablation), and a discrete-event simulator
 //!   sharing one dependency-rule core.
 //! * [`shard`] — simulated multi-GPU sharding on top of the device-indexed
-//!   scheduler: block-contiguous / block-cyclic pipeline partitions and
-//!   seed-synchronous data-parallel ZO (one seed broadcast + one scalar
-//!   all-reduce per step).
+//!   scheduler: block-contiguous / block-cyclic pipeline partitions with
+//!   intra-step microbatching ([`shard::ShardSpec::microbatches`]) and
+//!   per-partition three-tier spill sets, plus seed-synchronous
+//!   data-parallel ZO (one seed broadcast + one scalar all-reduce per
+//!   step).
 //! * [`precision`] — bf16 / fp16 / fp8(e4m3) transfer codecs (AMP, §5.5)
 //!   with table-driven hot paths and chunk-range entry points; the disk
 //!   tier stores spilled buckets in the same wire format.
@@ -42,7 +44,8 @@
 //! * [`costmodel`] — analytic compute/transfer cost model + calibration
 //!   used by the discrete-event simulator for paper-scale (OPT-175B) runs,
 //!   including NVMe bandwidths and the [`costmodel::MemoryBudget`] /
-//!   [`costmodel::plan_three_tier`] tier placement.
+//!   [`costmodel::plan_three_tier`] tier placement (per-pipeline-partition
+//!   variant: [`costmodel::plan_three_tier_partitioned`]).
 //! * [`runtime`] — PJRT client, artifact manifests, executable cache.
 //! * [`coordinator`] — the trainer: data, train/eval loops, metrics.
 

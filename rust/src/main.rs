@@ -10,14 +10,16 @@ use anyhow::{bail, Result};
 
 use zo2::coordinator::{train, EngineKind, TrainConfig};
 use zo2::costmodel::{
-    gpu_memory_bytes, plan_three_tier, two_tier_dram_bytes, Cluster, ClusterCost, ComputeMode,
-    Hardware, Interconnect, MemoryBudget, SimCost, Strategy, Workload,
+    gpu_memory_bytes, plan_three_tier, plan_three_tier_partitioned, two_tier_dram_bytes, Cluster,
+    ClusterCost, ComputeMode, Hardware, Interconnect, MemoryBudget, SimCost, Strategy, Workload,
 };
 use zo2::model::{opt_by_name, opt_family};
 use zo2::precision::Codec;
 use zo2::runtime::Runtime;
 use zo2::sched::{build_plan, simulate, Policy, SpillPlacement, Tiering};
-use zo2::shard::{build_sharded_plan, blocks_per_device, ShardLayout, ShardSpec, ShardStrategy};
+use zo2::shard::{
+    blocks_per_device, build_sharded_plan_spilled, ShardLayout, ShardSpec, ShardStrategy,
+};
 use zo2::util::cli::Args;
 use zo2::util::fmt_mb;
 use zo2::zo::{RunMode, UpdateSite, ZoConfig};
@@ -43,7 +45,7 @@ fn main() -> Result<()> {
                  \x20      [--spill-placement trailing|interleaved]\n\
                  \x20      [--update-site device|cpu] [--host-threads N] [--dp-workers K] [--dp-shards S]\n\
                  \x20      [--devices N] [--shard dp|pipeline] [--layout contiguous|cyclic]\n\
-                 \x20      [--link nvlink|pcie] [--link-gbps F]"
+                 \x20      [--link nvlink|pcie] [--link-gbps F] [--microbatches M]"
             );
             Ok(())
         }
@@ -153,6 +155,26 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let tiering = parse_tiering(args)?;
     let dram_slots = args.get_usize("dram-slots", 4);
     let spill_placement = parse_spill_placement(args)?;
+    let steps = args.get_usize("sim-steps", 4);
+    let devices = args.get_usize("devices", 1).max(1);
+    let microbatches = args.get_usize("microbatches", 1).max(1);
+    let strategy = match args.get_or("shard", "dp").as_str() {
+        "dp" | "data-parallel" => ShardStrategy::DataParallel,
+        "pipeline" | "pp" => ShardStrategy::Pipeline,
+        s => bail!("unknown shard strategy `{s}` (expected dp|pipeline)"),
+    };
+    let layout = match args.get_or("layout", "contiguous").as_str() {
+        "contiguous" | "block" => ShardLayout::Contiguous,
+        "cyclic" | "roundrobin" => ShardLayout::Cyclic,
+        l => bail!("unknown layout `{l}` (expected contiguous|cyclic)"),
+    };
+    if microbatches > 1 && (devices == 1 || strategy != ShardStrategy::Pipeline) {
+        bail!(
+            "--microbatches M splits the step for pipeline sharding: it needs \
+             --devices N --shard pipeline (for DP, batch slicing is the engine's \
+             --dp-shards)"
+        );
+    }
     let mut policy = Policy {
         overlap: args.get_or("mode", "overlap") != "seq",
         reusable_mem: !args.has("no-reusable-mem"),
@@ -162,63 +184,105 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         spill_placement,
         ..Policy::default()
     };
+    let mut per_device_spilled: Option<Vec<usize>> = None;
     if tiering == Tiering::ThreeTier {
         let budget = MemoryBudget {
             hbm: hw.hbm_capacity,
             dram: (args.get_f64("dram-budget", 64.0) * (1u64 << 30) as f64) as u64,
             nvme: 2 << 40,
         };
-        let plan = plan_three_tier(
-            &wl,
-            &budget,
-            policy.slots,
-            dram_slots,
-            param_bytes,
-            &hw,
-            spill_placement,
-        );
-        policy.tiering = Tiering::ThreeTier;
-        policy.spilled = plan.spilled_blocks;
-        policy.dram_slots = plan.dram_slots.max(1);
-        println!(
-            "tiers: {} blocks in DDR + {} on NVMe | peaks: HBM {} MB, DDR {} MB \
-             (two-tier would need {} MB), NVMe {} MB",
-            plan.resident_blocks,
-            plan.spilled_blocks,
-            fmt_mb(plan.peaks.hbm),
-            fmt_mb(plan.peaks.dram),
-            fmt_mb(two_tier_dram_bytes(&wl)),
-            fmt_mb(plan.peaks.nvme),
-        );
+        if devices > 1 && strategy == ShardStrategy::Pipeline {
+            // Per-partition planning: each pipeline host holds only its own
+            // blocks, so its spill set is sized against its own DRAM budget
+            // (`--dram-budget` is per host).
+            let budgets = vec![budget; devices];
+            let plans = plan_three_tier_partitioned(
+                &wl,
+                &budgets,
+                layout,
+                policy.slots,
+                dram_slots,
+                param_bytes,
+                &hw,
+                spill_placement,
+            );
+            policy.tiering = Tiering::ThreeTier;
+            policy.spilled = plans.iter().map(|p| p.spilled_blocks).sum();
+            policy.dram_slots = plans.iter().map(|p| p.dram_slots).max().unwrap_or(1).max(1);
+            println!(
+                "tiers (per partition, {} GB DDR per host; a full copy would need {} MB):",
+                args.get_f64("dram-budget", 64.0),
+                fmt_mb(two_tier_dram_bytes(&wl)),
+            );
+            for (d, plan) in plans.iter().enumerate() {
+                // A budget smaller than the staging window itself is
+                // infeasible — refuse rather than simulate a host that
+                // cannot hold its own prefetch window.
+                anyhow::ensure!(
+                    plan.peaks.dram <= budgets[d].dram,
+                    "device {d}: DDR peak {} MB (incl. the {}-slot staging window) exceeds \
+                     the per-host --dram-budget ({} MB) — lower --dram-slots or raise \
+                     --dram-budget",
+                    fmt_mb(plan.peaks.dram),
+                    plan.dram_slots,
+                    fmt_mb(budgets[d].dram),
+                );
+                // Any other tier overflowing is a different knob — name it.
+                anyhow::ensure!(
+                    budgets[d].fits(&plan.peaks),
+                    "device {d}: tier peaks {:?} do not fit the host budget {:?}",
+                    plan.peaks,
+                    budgets[d],
+                );
+                println!(
+                    "  device {d}: {} blocks in DDR + {} on NVMe | peaks: DDR {} MB, NVMe {} MB",
+                    plan.resident_blocks,
+                    plan.spilled_blocks,
+                    fmt_mb(plan.peaks.dram),
+                    fmt_mb(plan.peaks.nvme),
+                );
+            }
+            per_device_spilled = Some(plans.iter().map(|p| p.spilled_blocks).collect());
+        } else {
+            // Single device, or DP: every host holds a full copy, so the
+            // single-replica spill plan applies per device as-is.
+            let plan = plan_three_tier(
+                &wl,
+                &budget,
+                policy.slots,
+                dram_slots,
+                param_bytes,
+                &hw,
+                spill_placement,
+            );
+            // Same feasibility rule as the per-partition branch: a budget
+            // smaller than the staging window cannot run at all.
+            anyhow::ensure!(
+                plan.peaks.dram <= budget.dram,
+                "DDR peak {} MB (incl. the {}-slot staging window) exceeds --dram-budget \
+                 ({} MB) — lower --dram-slots or raise --dram-budget",
+                fmt_mb(plan.peaks.dram),
+                plan.dram_slots,
+                fmt_mb(budget.dram),
+            );
+            policy.tiering = Tiering::ThreeTier;
+            policy.spilled = plan.spilled_blocks;
+            policy.dram_slots = plan.dram_slots.max(1);
+            println!(
+                "tiers: {} blocks in DDR + {} on NVMe | peaks: HBM {} MB, DDR {} MB \
+                 (two-tier would need {} MB), NVMe {} MB",
+                plan.resident_blocks,
+                plan.spilled_blocks,
+                fmt_mb(plan.peaks.hbm),
+                fmt_mb(plan.peaks.dram),
+                fmt_mb(two_tier_dram_bytes(&wl)),
+                fmt_mb(plan.peaks.nvme),
+            );
+        }
     }
-    let steps = args.get_usize("sim-steps", 4);
-    let devices = args.get_usize("devices", 1).max(1);
 
     if devices > 1 {
         // Multi-GPU simulation: per-device streams + an interconnect.
-        let strategy = match args.get_or("shard", "dp").as_str() {
-            "dp" | "data-parallel" => ShardStrategy::DataParallel,
-            "pipeline" | "pp" => ShardStrategy::Pipeline,
-            s => bail!("unknown shard strategy `{s}` (expected dp|pipeline)"),
-        };
-        // Three-tier pricing across devices: DP replicas each hold the full
-        // model against their own host's `--dram-budget`, so the
-        // single-replica spill plan applies per device as-is.  Pipeline
-        // sharding would need a per-partition plan (each host holds only
-        // its own blocks) — refuse rather than report wrong spill numbers.
-        if tiering == Tiering::ThreeTier && strategy == ShardStrategy::Pipeline {
-            bail!(
-                "--tiering three with --shard pipeline is not modeled yet: the spill \
-                 plan is computed for a full single-host copy, not per block \
-                 partition (use --shard dp, whose replicas each hold the full \
-                 model against their own host's --dram-budget)"
-            );
-        }
-        let layout = match args.get_or("layout", "contiguous").as_str() {
-            "contiguous" | "block" => ShardLayout::Contiguous,
-            "cyclic" | "roundrobin" => ShardLayout::Cyclic,
-            l => bail!("unknown layout `{l}` (expected contiguous|cyclic)"),
-        };
         let link = match args.get_or("link", "nvlink").as_str() {
             "nvlink" => Interconnect::nvlink(),
             "pcie" | "pcie-p2p" => Interconnect::pcie_p2p(),
@@ -231,10 +295,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             },
             None => link,
         };
-        let spec = ShardSpec { devices, layout, strategy };
+        let spec = ShardSpec { devices, layout, strategy, microbatches };
         let cluster = Cluster::homogeneous(hw, devices, link);
-        let costs = ClusterCost::new(&cluster, &wl);
-        let plan = build_sharded_plan(wl.shape.n_layers, steps, policy, &spec);
+        let costs = ClusterCost::new(&cluster, &wl)?;
+        let plan = build_sharded_plan_spilled(
+            wl.shape.n_layers,
+            steps,
+            policy,
+            &spec,
+            per_device_spilled.as_deref(),
+        );
         let (sched, timeline) = simulate(&plan, &costs, policy);
         // DP runs one batch shard per device (weak scaling); pipeline runs
         // the single stream across devices.
@@ -243,7 +313,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             ShardStrategy::Pipeline => (wl.batch * wl.seq) as f64,
         };
         println!(
-            "{name} x{devices} {} ({}): step {:.3}s  ->  {:.0} tokens/s  \
+            "{name} x{devices} {} ({}{}): step {:.3}s  ->  {:.0} tokens/s  \
              (makespan {:.3}s over {steps} steps, {}, link {})",
             match strategy {
                 ShardStrategy::DataParallel => "dp",
@@ -253,6 +323,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 ShardLayout::Contiguous => "contiguous",
                 ShardLayout::Cyclic => "cyclic",
             },
+            if microbatches > 1 { format!(", M={microbatches}") } else { String::new() },
             sched.steady_step_s,
             tokens_per_step / sched.steady_step_s,
             sched.makespan,

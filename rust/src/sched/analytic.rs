@@ -147,7 +147,10 @@ pub fn simulate(tasks: &[Task], costs: &dyn CostProvider, policy: Policy) -> (Sc
                 let base = costs.upload_s() + costs.host_decode_s();
                 if policy.reusable_mem { base } else { base + costs.malloc_s() }
             }
-            TaskKind::Compute => costs.compute_s(t.module),
+            TaskKind::Compute => match t.microbatch {
+                Some(mb) => costs.compute_microbatch_s(t.module, mb.index, mb.of),
+                None => costs.compute_s(t.module),
+            },
             TaskKind::Offload => costs.offload_s() + costs.host_encode_s(),
             TaskKind::Update => costs.update_s(),
             TaskKind::DiskRead => {
@@ -170,7 +173,10 @@ pub fn simulate(tasks: &[Task], costs: &dyn CostProvider, policy: Policy) -> (Sc
                 }
             }
             TaskKind::DiskWrite => costs.disk_write_s(),
-            TaskKind::ActivationXfer => costs.link_activation_s(),
+            TaskKind::ActivationXfer => match t.microbatch {
+                Some(mb) => costs.link_activation_microbatch_s(mb.of),
+                None => costs.link_activation_s(),
+            },
             TaskKind::SeedBcast => costs.link_seed_s(),
             TaskKind::GradReduce => costs.link_grad_s(),
         };

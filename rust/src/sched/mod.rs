@@ -152,6 +152,19 @@ pub enum Module {
     Head,
 }
 
+/// Intra-step pipeline microbatch identity of a compute or activation task:
+/// microbatch `index` of `of` (paper-batch split into `of` slices so
+/// adjacent pipeline devices overlap *within* a step).  Tasks of an
+/// un-microbatched plan (and every upload/offload/disk/collective task —
+/// parameters move once per step regardless of `of`) carry `None`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Microbatch {
+    /// 0-based slice index within the step.
+    pub index: usize,
+    /// Total microbatches per step (`--microbatches M`).
+    pub of: usize,
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskKind {
     /// Upload a block bucket CPU→GPU (includes decompression in AMP mode).
@@ -206,6 +219,10 @@ pub struct Task {
     /// Extra fixed latency charged at task start (cudaMalloc in the
     /// no-reusable-memory ablation).
     pub extra_latency: f64,
+    /// Which intra-step microbatch this compute/activation task covers
+    /// (`None` everywhere in un-microbatched plans, so `M = 1` schedules
+    /// are byte-identical to the pre-microbatching builder).
+    pub microbatch: Option<Microbatch>,
 }
 
 impl Task {
@@ -375,6 +392,23 @@ pub trait CostProvider {
     /// broadcast (pipeline).
     fn link_grad_s(&self) -> f64 {
         0.0
+    }
+    /// Duration of microbatch `index` of `of` of `module`'s dual-forward
+    /// when the step is split by pipeline microbatching.  The default is an
+    /// even split (ideal scaling); providers with per-launch overheads or
+    /// once-per-step terms (the fused deferred update, codec kernels)
+    /// override and typically charge those on `index == 0`.  Never called
+    /// for un-microbatched plans, so `M = 1` schedules cannot be perturbed
+    /// by an override's different floating-point association.
+    fn compute_microbatch_s(&self, module: Module, index: usize, of: usize) -> f64 {
+        let _ = index;
+        self.compute_s(module) / of.max(1) as f64
+    }
+    /// One microbatch's activation handoff when the step carries `of`
+    /// microbatches (pipeline sharding).  Default: an even split of the
+    /// full handoff; link providers override to keep the per-op latency.
+    fn link_activation_microbatch_s(&self, of: usize) -> f64 {
+        self.link_activation_s() / of.max(1) as f64
     }
 }
 

@@ -18,21 +18,44 @@
 //!   pipelining); the projected gradient of step *j* is broadcast from the
 //!   head device before any device's step *j+1* compute applies its
 //!   deferred update.
+//!
+//!   With [`ShardSpec::microbatches`] `M > 1` the step's batch additionally
+//!   splits into M **microbatches** so devices overlap *within* a step:
+//!   each block still moves once per step (one U, one O — the slot ring,
+//!   DRAM window and the PCIe/NVMe load are untouched by M), but its
+//!   compute splits into M per-microbatch slices and every ownership
+//!   change hops M smaller activations, so device *d+1* computes
+//!   microbatch *i* while device *d* is already on microbatch *i+1*.  The
+//!   per-step wire contract is unchanged: still exactly one g broadcast
+//!   per step, after the last microbatch's head.
 //! * **Seed-synchronous data parallelism** ([`ShardStrategy::DataParallel`]):
 //!   each device runs the *full* single-device ZO2 pipeline on its own
 //!   batch shard.  Per-step communication is exactly one seed broadcast
 //!   plus one scalar all-reduce on the interconnect stream — uploads for
 //!   the next step may prefetch before the all-reduce lands, only the first
 //!   *compute* of the next step waits for it (the deferred update needs ḡ).
+//!   (Batch slicing for DP is the engine's `--dp-shards`, not
+//!   `microbatches`, which is a pipeline-only knob.)
 //!
 //! `N = 1` is the degenerate case of the same builder — both strategies
 //! emit no interconnect tasks and collapse to the paper's single-GPU
 //! schedule, byte-for-byte (this is what [`crate::sched::build_plan`]
 //! calls; asserted against a frozen pre-refactor copy in
-//! `tests/sched_golden_v1.rs`).
+//! `tests/sched_golden_v1.rs`).  Likewise `M = 1` is the degenerate case
+//! of the microbatched pipeline builder, asserted byte-identical to a
+//! frozen copy of the pre-microbatching multi-device builder in the same
+//! test file.
+//!
+//! Three-tier spill sets can be **per-partition**
+//! ([`build_sharded_plan_spilled`]): pipeline device *d* spills
+//! `per_device_spilled[d]` of *its own* blocks, positioned by
+//! `policy.spill_placement` within its owned list — sized by
+//! [`crate::costmodel::plan_three_tier_partitioned`] against each host's
+//! own DRAM budget.
 
 use crate::sched::{
-    is_spilled_block, DeviceId, Module, Policy, StreamId, StreamKind, Task, TaskKind, Tiering,
+    is_spilled_block, DeviceId, Microbatch, Module, Policy, StreamId, StreamKind, Task, TaskKind,
+    Tiering,
 };
 
 /// How blocks map to devices under pipeline sharding.
@@ -57,24 +80,50 @@ pub enum ShardStrategy {
     DataParallel,
 }
 
-/// A sharding configuration: how many devices, which layout, and which
-/// execution strategy.
+/// A sharding configuration: how many devices, which layout, which
+/// execution strategy, and (pipeline only) how many intra-step
+/// microbatches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardSpec {
     pub devices: usize,
     pub layout: ShardLayout,
     pub strategy: ShardStrategy,
+    /// Intra-step pipeline microbatches (`M`); 1 = un-microbatched (the
+    /// pre-microbatching schedule, byte-for-byte).  Ignored by
+    /// [`ShardStrategy::DataParallel`].
+    pub microbatches: usize,
 }
 
 impl ShardSpec {
     /// The single-device degenerate case (what [`crate::sched::build_plan`]
     /// uses): layout and strategy are irrelevant at N = 1.
     pub fn single() -> Self {
-        Self { devices: 1, layout: ShardLayout::Contiguous, strategy: ShardStrategy::Pipeline }
+        Self {
+            devices: 1,
+            layout: ShardLayout::Contiguous,
+            strategy: ShardStrategy::Pipeline,
+            microbatches: 1,
+        }
     }
 
     pub fn pipeline(devices: usize, layout: ShardLayout) -> Self {
-        Self { devices: devices.max(1), layout, strategy: ShardStrategy::Pipeline }
+        Self {
+            devices: devices.max(1),
+            layout,
+            strategy: ShardStrategy::Pipeline,
+            microbatches: 1,
+        }
+    }
+
+    /// Pipeline sharding with `microbatches` intra-step slices
+    /// (CLI `--microbatches M`).
+    pub fn pipeline_microbatched(devices: usize, layout: ShardLayout, microbatches: usize) -> Self {
+        Self {
+            devices: devices.max(1),
+            layout,
+            strategy: ShardStrategy::Pipeline,
+            microbatches: microbatches.max(1),
+        }
     }
 
     pub fn data_parallel(devices: usize) -> Self {
@@ -82,6 +131,7 @@ impl ShardSpec {
             devices: devices.max(1),
             layout: ShardLayout::Contiguous,
             strategy: ShardStrategy::DataParallel,
+            microbatches: 1,
         }
     }
 }
@@ -153,6 +203,7 @@ impl PlanBuilder {
         Self { tasks: Vec::new(), policy }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn push(
         &mut self,
         lane: &mut Lane,
@@ -161,6 +212,7 @@ impl PlanBuilder {
         kind: TaskKind,
         mut deps: Vec<usize>,
         extra_latency: f64,
+        microbatch: Option<Microbatch>,
     ) -> usize {
         let stream_kind = if self.policy.overlap {
             kind.stream_kind()
@@ -184,7 +236,7 @@ impl PlanBuilder {
         }
         deps.sort_unstable();
         deps.dedup();
-        self.tasks.push(Task { id, step, module, kind, stream, deps, extra_latency });
+        self.tasks.push(Task { id, step, module, kind, stream, deps, extra_latency, microbatch });
         lane.last_on[stream_kind.index()] = Some(id);
         lane.prev_any = Some(id);
         if matches!(kind, TaskKind::Compute | TaskKind::Update) {
@@ -193,20 +245,16 @@ impl PlanBuilder {
         id
     }
 
-    /// Emit one block's round — [R] U C(kind `compute_kind`) O [W] — on
-    /// `lane`, wiring the slot-ring / DRAM-window / read-after-write rules.
-    /// `compute_extra_deps` are added to the compute task (activation
-    /// handoff, gradient broadcast); returns the compute task's id.
-    #[allow(clippy::too_many_arguments)]
-    fn push_block_round(
+    /// Emit one block round's transfer prologue — [R] U — wiring the
+    /// slot-ring / DRAM-window / read-after-write rules; returns the upload
+    /// task's id (the dependency of the round's first compute).
+    fn begin_block_round(
         &mut self,
         lane: &mut Lane,
         step: usize,
         block: usize,
         on_disk: bool,
         last_write: &mut Option<usize>,
-        compute_kind: TaskKind,
-        compute_extra_deps: &[usize],
     ) -> usize {
         let module = Module::Block(block);
         let mut deps = Vec::new();
@@ -224,7 +272,7 @@ impl PlanBuilder {
             if let Some(w) = *last_write {
                 rdeps.push(w);
             }
-            let r = self.push(lane, step, module, TaskKind::DiskRead, rdeps, 0.0);
+            let r = self.push(lane, step, module, TaskKind::DiskRead, rdeps, 0.0, None);
             deps.push(r);
         }
         // Slot reuse: U waits for the offload that frees this slot.
@@ -238,24 +286,55 @@ impl PlanBuilder {
                 deps.push(c);
             }
         }
-        let u = self.push(lane, step, module, TaskKind::Upload, deps, 0.0);
+        self.push(lane, step, module, TaskKind::Upload, deps, 0.0, None)
+    }
 
-        let mut cdeps = vec![u];
-        cdeps.extend_from_slice(compute_extra_deps);
-        let c = self.push(lane, step, module, compute_kind, cdeps, 0.0);
-
-        let o = self.push(lane, step, module, TaskKind::Offload, vec![c], 0.0);
+    /// Emit one block round's epilogue — O [W] — after the round's last
+    /// compute `last_compute`, advancing the slot ring and DRAM window.
+    fn end_block_round(
+        &mut self,
+        lane: &mut Lane,
+        step: usize,
+        block: usize,
+        on_disk: bool,
+        last_write: &mut Option<usize>,
+        last_compute: usize,
+    ) {
+        let module = Module::Block(block);
+        let o = self.push(lane, step, module, TaskKind::Offload, vec![last_compute], 0.0, None);
         lane.offload_ring[lane.ring_pos] = Some(o);
         lane.ring_pos = (lane.ring_pos + 1) % lane.offload_ring.len();
 
         // W(Wᵢ) ← O(Wᵢ): write the updated bucket back to NVMe and free its
         // DRAM staging slot.
         if on_disk {
-            let w = self.push(lane, step, module, TaskKind::DiskWrite, vec![o], 0.0);
+            let w = self.push(lane, step, module, TaskKind::DiskWrite, vec![o], 0.0, None);
             lane.dram_ring[lane.dram_pos] = Some(w);
             lane.dram_pos = (lane.dram_pos + 1) % lane.dram_ring.len();
             *last_write = Some(w);
         }
+    }
+
+    /// Emit one block's round — [R] U C(kind `compute_kind`) O [W] — on
+    /// `lane`, wiring the slot-ring / DRAM-window / read-after-write rules.
+    /// `compute_extra_deps` are added to the compute task (activation
+    /// handoff, gradient broadcast); returns the compute task's id.
+    #[allow(clippy::too_many_arguments)]
+    fn push_block_round(
+        &mut self,
+        lane: &mut Lane,
+        step: usize,
+        block: usize,
+        on_disk: bool,
+        last_write: &mut Option<usize>,
+        compute_kind: TaskKind,
+        compute_extra_deps: &[usize],
+    ) -> usize {
+        let u = self.begin_block_round(lane, step, block, on_disk, last_write);
+        let mut cdeps = vec![u];
+        cdeps.extend_from_slice(compute_extra_deps);
+        let c = self.push(lane, step, Module::Block(block), compute_kind, cdeps, 0.0, None);
+        self.end_block_round(lane, step, block, on_disk, last_write, c);
         c
     }
 }
@@ -270,10 +349,44 @@ pub fn build_sharded_plan(
     policy: Policy,
     spec: &ShardSpec,
 ) -> Vec<Task> {
+    build_sharded_plan_spilled(n_blocks, steps, policy, spec, None)
+}
+
+/// [`build_sharded_plan`] with an explicit **per-partition** three-tier
+/// spill set: pipeline device `d` spills `per_device_spilled[d]` of its own
+/// blocks, positioned by `policy.spill_placement` *within its owned list*
+/// (the per-device plans come from
+/// [`crate::costmodel::plan_three_tier_partitioned`], which sizes each
+/// partition against its own host's DRAM budget).  `None` keeps the global
+/// `policy.spilled` set.  Data-parallel plans ignore the per-device vector:
+/// every DP replica holds the full model against its own host's budget, so
+/// the global (single-replica) spill plan applies per device as-is.
+pub fn build_sharded_plan_spilled(
+    n_blocks: usize,
+    steps: usize,
+    policy: Policy,
+    spec: &ShardSpec,
+    per_device_spilled: Option<&[usize]>,
+) -> Vec<Task> {
+    if let Some(sp) = per_device_spilled {
+        // A stale or mis-sized vector would silently under-spill the
+        // missing devices and report an optimistic schedule.
+        assert_eq!(
+            sp.len(),
+            spec.devices.max(1),
+            "per_device_spilled must have one entry per device"
+        );
+    }
     match spec.strategy {
-        ShardStrategy::Pipeline => {
-            pipeline_plan(n_blocks, steps, policy, spec.devices.max(1), spec.layout)
-        }
+        ShardStrategy::Pipeline => pipeline_plan(
+            n_blocks,
+            steps,
+            policy,
+            spec.devices.max(1),
+            spec.layout,
+            spec.microbatches.max(1),
+            per_device_spilled,
+        ),
         ShardStrategy::DataParallel => dp_plan(n_blocks, steps, policy, spec.devices.max(1)),
     }
 }
@@ -288,19 +401,62 @@ fn spilled_count(policy: &Policy, n_blocks: usize) -> usize {
 /// Pipeline-sharded plan: blocks partitioned by `layout`, embedding on the
 /// first device, LM head on the last block's owner, activations crossing
 /// the interconnect at every ownership change.
+///
+/// With `microbatches > 1` every compute splits into per-microbatch slices
+/// and every ownership change hops one activation *per microbatch*;
+/// uploads, offloads and the disk chain stay once-per-block-per-step
+/// (weights do not change within a step), so the slot-ring and DRAM-window
+/// resource rules are untouched.  Emission stays block-major — a block's M
+/// compute slices run back-to-back on its owner — which keeps the schedule
+/// memory-true under any slot count: the overlap comes from *boundary*
+/// blocks, whose downstream consumer starts on microbatch i while the
+/// sender computes microbatch i+1.
 fn pipeline_plan(
     n_blocks: usize,
     steps: usize,
     policy: Policy,
     devices: usize,
     layout: ShardLayout,
+    microbatches: usize,
+    per_device_spilled: Option<&[usize]>,
 ) -> Vec<Task> {
+    let m_count = microbatches.max(1);
+    // Microbatch tag: `None` at M = 1 so un-microbatched plans are
+    // byte-identical to the pre-microbatching builder (and the simulator
+    // prices them through the exact same code path).
+    let mb = |m: usize| {
+        if m_count > 1 {
+            Some(Microbatch { index: m, of: m_count })
+        } else {
+            None
+        }
+    };
     let mut b = PlanBuilder::new(policy);
     let mut lanes: Vec<Lane> = (0..devices).map(|d| Lane::new(d, &policy)).collect();
     let mut last_write: Vec<Option<usize>> = vec![None; n_blocks];
-    let spilled = spilled_count(&policy, n_blocks);
-    let on_disk = |i: usize| is_spilled_block(i, n_blocks, spilled, policy.spill_placement);
+    let global_spilled = spilled_count(&policy, n_blocks);
     let owner = |i: usize| block_owner(layout, n_blocks, devices, i);
+    let per_dev_blocks = blocks_per_device(layout, n_blocks, devices);
+    let on_disk = |i: usize| -> bool {
+        match per_device_spilled {
+            None => is_spilled_block(i, n_blocks, global_spilled, policy.spill_placement),
+            Some(sp) => {
+                if policy.tiering != Tiering::ThreeTier {
+                    return false;
+                }
+                // Per-partition spill set: the placement rule applies to
+                // block i's rank within its owner's list, against that
+                // device's own spill count.
+                let d = owner(i);
+                let k = per_dev_blocks[d].len();
+                let rank = match layout {
+                    ShardLayout::Contiguous => i - per_dev_blocks[d][0],
+                    ShardLayout::Cyclic => i / devices,
+                };
+                is_spilled_block(rank, k, sp.get(d).copied().unwrap_or(0), policy.spill_placement)
+            }
+        }
+    };
     let head_dev = if n_blocks == 0 { 0 } else { owner(n_blocks - 1) };
     // Projected-gradient broadcast of the previous step (devices > 1 only):
     // a device's first compute of step j+1 applies the deferred update, so
@@ -308,13 +464,21 @@ fn pipeline_plan(
     let mut grad_bcast: Option<usize> = None;
 
     for step in 0..steps {
-        // C(Embedding) — resident on the first device, no upload.
-        let mut edeps = Vec::new();
-        if let Some(g) = grad_bcast {
-            edeps.push(g);
+        // C(Embedding) — resident on the first device, no upload; one
+        // compute slice per microbatch, the first gated on g (the deferred
+        // update), the rest chained by the compute-stream FIFO.
+        let mut prev_c: Vec<usize> = Vec::with_capacity(m_count);
+        for m in 0..m_count {
+            let mut edeps = Vec::new();
+            if m == 0 {
+                if let Some(g) = grad_bcast {
+                    edeps.push(g);
+                }
+            }
+            let c =
+                b.push(&mut lanes[0], step, Module::Embed, TaskKind::Compute, edeps, 0.0, mb(m));
+            prev_c.push(c);
         }
-        let c_embed = b.push(&mut lanes[0], step, Module::Embed, TaskKind::Compute, edeps, 0.0);
-        let mut prev_c = c_embed;
         let mut prev_dev = 0usize;
         // Which devices already gated their first compute on the broadcast.
         let mut gated = vec![false; devices];
@@ -323,55 +487,94 @@ fn pipeline_plan(
         // Upload of block 0 may overlap the embedding compute (§5.2).
         for i in 0..n_blocks {
             let d = owner(i);
+            let cross = d != prev_dev;
             // Activation handoff when the previous module ran elsewhere:
-            // the dual-path hidden state crosses the link, charged on the
-            // sender's interconnect stream.
-            let act = if d != prev_dev {
+            // the dual-path hidden state crosses the link per microbatch,
+            // charged on the sender's interconnect stream.  The first
+            // microbatch's hop is emitted before the round's R/U so the
+            // M = 1 sequence is the pre-microbatching plan byte-for-byte.
+            let act0 = if cross {
                 b.push(
                     &mut lanes[prev_dev],
                     step,
                     Module::Block(i),
                     TaskKind::ActivationXfer,
-                    vec![prev_c],
+                    vec![prev_c[0]],
                     0.0,
+                    mb(0),
                 )
             } else {
-                prev_c
+                prev_c[0]
             };
-            let mut extra = vec![act];
+            let u = b.begin_block_round(&mut lanes[d], step, i, on_disk(i), &mut last_write[i]);
+            let mut cdeps = vec![u, act0];
             if !gated[d] {
                 if let Some(g) = grad_bcast {
-                    extra.push(g);
+                    cdeps.push(g);
                 }
                 gated[d] = true;
             }
-            let c = b.push_block_round(
+            let mut cs: Vec<usize> = Vec::with_capacity(m_count);
+            cs.push(b.push(
                 &mut lanes[d],
                 step,
-                i,
-                on_disk(i),
-                &mut last_write[i],
+                Module::Block(i),
                 TaskKind::Compute,
-                &extra,
-            );
-            prev_c = c;
+                cdeps,
+                0.0,
+                mb(0),
+            ));
+            for m in 1..m_count {
+                let act = if cross {
+                    b.push(
+                        &mut lanes[prev_dev],
+                        step,
+                        Module::Block(i),
+                        TaskKind::ActivationXfer,
+                        vec![prev_c[m]],
+                        0.0,
+                        mb(m),
+                    )
+                } else {
+                    prev_c[m]
+                };
+                cs.push(b.push(
+                    &mut lanes[d],
+                    step,
+                    Module::Block(i),
+                    TaskKind::Compute,
+                    vec![act],
+                    0.0,
+                    mb(m),
+                ));
+            }
+            let last_c = *cs.last().unwrap();
+            b.end_block_round(&mut lanes[d], step, i, on_disk(i), &mut last_write[i], last_c);
+            prev_c = cs;
             prev_dev = d;
         }
 
         // C(LMHead) — resident on the last block's device (= prev_dev after
-        // the loop, so the head never needs an activation hop of its own).
-        let c_head = b.push(
-            &mut lanes[head_dev],
-            step,
-            Module::Head,
-            TaskKind::Compute,
-            vec![prev_c],
-            0.0,
-        );
+        // the loop, so the head never needs an activation hop of its own);
+        // per-microbatch slices chained by FIFO.
+        let mut c_head = 0usize;
+        for (m, &p) in prev_c.iter().enumerate() {
+            c_head = b.push(
+                &mut lanes[head_dev],
+                step,
+                Module::Head,
+                TaskKind::Compute,
+                vec![p],
+                0.0,
+                mb(m),
+            );
+        }
 
-        // g of this step, announced to every device (needed both by the
-        // next step's deferred updates and by the non-efficient-update
-        // ablation's standalone round below).
+        // g of this step — known only after the *last* microbatch's head —
+        // announced to every device (needed both by the next step's
+        // deferred updates and by the non-efficient-update ablation's
+        // standalone round below).  One broadcast per step regardless of M:
+        // the wire contract stays seed + one scalar.
         if devices > 1 {
             grad_bcast = Some(b.push(
                 &mut lanes[head_dev],
@@ -380,12 +583,14 @@ fn pipeline_plan(
                 TaskKind::GradReduce,
                 vec![c_head],
                 0.0,
+                None,
             ));
         }
 
         if !policy.efficient_update {
             // Fig. 5a: a second upload→update→offload round per block, after
             // the step's projected gradient is known (i.e. after the head).
+            // The update is a per-parameter pass — never microbatched.
             let g_dep = grad_bcast;
             let mut upd_gated = vec![false; devices];
             upd_gated[head_dev] = true; // head device's FIFO already orders it
@@ -419,7 +624,7 @@ fn pipeline_plan(
 /// (after every device's head).
 fn dp_plan(n_blocks: usize, steps: usize, policy: Policy, devices: usize) -> Vec<Task> {
     if devices <= 1 {
-        return pipeline_plan(n_blocks, steps, policy, 1, ShardLayout::Contiguous);
+        return pipeline_plan(n_blocks, steps, policy, 1, ShardLayout::Contiguous, 1, None);
     }
     let mut b = PlanBuilder::new(policy);
     let mut lanes: Vec<Lane> = (0..devices).map(|d| Lane::new(d, &policy)).collect();
@@ -436,7 +641,8 @@ fn dp_plan(n_blocks: usize, steps: usize, policy: Policy, devices: usize) -> Vec
         if let Some(g) = grad_reduce {
             sdeps.push(g);
         }
-        let seed = b.push(&mut lanes[0], step, Module::Embed, TaskKind::SeedBcast, sdeps, 0.0);
+        let seed =
+            b.push(&mut lanes[0], step, Module::Embed, TaskKind::SeedBcast, sdeps, 0.0, None);
 
         let mut heads = Vec::with_capacity(devices);
         for d in 0..devices {
@@ -446,7 +652,8 @@ fn dp_plan(n_blocks: usize, steps: usize, policy: Policy, devices: usize) -> Vec
             if let Some(g) = grad_reduce {
                 edeps.push(g);
             }
-            let c_embed = b.push(&mut lanes[d], step, Module::Embed, TaskKind::Compute, edeps, 0.0);
+            let c_embed =
+                b.push(&mut lanes[d], step, Module::Embed, TaskKind::Compute, edeps, 0.0, None);
             let mut prev_c = c_embed;
             for i in 0..n_blocks {
                 let c = b.push_block_round(
@@ -460,8 +667,15 @@ fn dp_plan(n_blocks: usize, steps: usize, policy: Policy, devices: usize) -> Vec
                 );
                 prev_c = c;
             }
-            let c_head =
-                b.push(&mut lanes[d], step, Module::Head, TaskKind::Compute, vec![prev_c], 0.0);
+            let c_head = b.push(
+                &mut lanes[d],
+                step,
+                Module::Head,
+                TaskKind::Compute,
+                vec![prev_c],
+                0.0,
+                None,
+            );
             heads.push(c_head);
         }
 
@@ -473,6 +687,7 @@ fn dp_plan(n_blocks: usize, steps: usize, policy: Policy, devices: usize) -> Vec
             TaskKind::GradReduce,
             heads,
             0.0,
+            None,
         ));
 
         if !policy.efficient_update {
@@ -513,6 +728,7 @@ mod tests {
                     && x.kind == y.kind
                     && x.stream == y.stream
                     && x.deps == y.deps
+                    && x.microbatch == y.microbatch
             })
     }
 
@@ -594,6 +810,158 @@ mod tests {
     }
 
     #[test]
+    fn microbatched_pipeline_splits_compute_but_not_transfers() {
+        let n = 8;
+        let devices = 4;
+        let steps = 2;
+        let m = 4;
+        let base = build_sharded_plan(
+            n,
+            steps,
+            Policy::default(),
+            &ShardSpec::pipeline(devices, ShardLayout::Contiguous),
+        );
+        let micro = build_sharded_plan(
+            n,
+            steps,
+            Policy::default(),
+            &ShardSpec::pipeline_microbatched(devices, ShardLayout::Contiguous, m),
+        );
+        let count = |p: &[Task], k: TaskKind| p.iter().filter(|t| t.kind == k).count();
+        // Parameters still move once per block per step: the PCIe load (and
+        // the disk chain, were it three-tier) is untouched by M.
+        assert_eq!(count(&micro, TaskKind::Upload), count(&base, TaskKind::Upload));
+        assert_eq!(count(&micro, TaskKind::Offload), count(&base, TaskKind::Offload));
+        // One g broadcast per step regardless of M (the wire contract).
+        assert_eq!(count(&micro, TaskKind::GradReduce), steps);
+        // Compute and activation hops split M ways.
+        assert_eq!(count(&micro, TaskKind::Compute), m * count(&base, TaskKind::Compute));
+        assert_eq!(
+            count(&micro, TaskKind::ActivationXfer),
+            m * count(&base, TaskKind::ActivationXfer)
+        );
+        // Every compute/hop carries its microbatch tag; nothing else does.
+        for t in &micro {
+            match t.kind {
+                TaskKind::Compute | TaskKind::ActivationXfer => {
+                    let mb = t.microbatch.expect("compute/hop must be tagged");
+                    assert_eq!(mb.of, m);
+                    assert!(mb.index < m);
+                }
+                _ => assert!(t.microbatch.is_none(), "{:?} must not be microbatched", t.kind),
+            }
+        }
+        // Each block's M compute slices depend on the same single upload:
+        // slice 0 explicitly, the rest through the owner's compute FIFO.
+        for i in 0..n {
+            let u = micro
+                .iter()
+                .find(|t| t.kind == TaskKind::Upload && t.module == Module::Block(i) && t.step == 0)
+                .unwrap();
+            let c0 = micro
+                .iter()
+                .find(|t| {
+                    t.kind == TaskKind::Compute
+                        && t.module == Module::Block(i)
+                        && t.step == 0
+                        && t.microbatch.unwrap().index == 0
+                })
+                .unwrap();
+            assert!(c0.deps.contains(&u.id), "C(W{i}, m=0) must wait for U(W{i})");
+        }
+    }
+
+    #[test]
+    fn microbatched_hops_connect_same_microbatch_producers() {
+        // Every activation hop's dependency is the previous module's
+        // compute of the *same* microbatch, and the hop sits on the
+        // sender's interconnect stream.
+        let n = 6;
+        let devices = 3;
+        let m = 3;
+        for layout in [ShardLayout::Contiguous, ShardLayout::Cyclic] {
+            let plan = build_sharded_plan(
+                n,
+                2,
+                Policy::default(),
+                &ShardSpec::pipeline_microbatched(devices, layout, m),
+            );
+            for hop in plan.iter().filter(|t| t.kind == TaskKind::ActivationXfer) {
+                let i = match hop.module {
+                    Module::Block(i) => i,
+                    _ => unreachable!("hops are per-block"),
+                };
+                let mbi = hop.microbatch.unwrap().index;
+                let producer = hop
+                    .deps
+                    .iter()
+                    .map(|&d| &plan[d])
+                    .find(|p| p.kind == TaskKind::Compute)
+                    .expect("hop must depend on a compute");
+                let want_module =
+                    if i == 0 { Module::Embed } else { Module::Block(i - 1) };
+                assert_eq!(producer.module, want_module, "hop into block {i}");
+                assert_eq!(producer.step, hop.step);
+                assert_eq!(producer.microbatch.unwrap().index, mbi, "microbatch mismatch");
+                assert_eq!(
+                    hop.stream,
+                    StreamId::new(producer.device().0, StreamKind::Interconnect),
+                    "hop charged to the wrong sender"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_partition_spill_sets_follow_owner_ranks() {
+        // 8 blocks on 2 devices (contiguous: {0..3} and {4..7}); device 0
+        // spills 1 of its 4, device 1 spills 3 of its 4, trailing within
+        // each partition: {3} and {5, 6, 7}.
+        let policy = Policy::three_tier(0, 4); // spilled count comes from the vec
+        let spec = ShardSpec::pipeline(2, ShardLayout::Contiguous);
+        let plan = build_sharded_plan_spilled(8, 1, policy, &spec, Some(&[1, 3]));
+        let reads: Vec<usize> = plan
+            .iter()
+            .filter(|t| t.kind == TaskKind::DiskRead)
+            .map(|t| match t.module {
+                Module::Block(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(reads, vec![3, 5, 6, 7]);
+        // Each read runs on its owner's disk stream.
+        for t in plan.iter().filter(|t| t.kind == TaskKind::DiskRead) {
+            let i = match t.module {
+                Module::Block(i) => i,
+                _ => unreachable!(),
+            };
+            assert_eq!(t.device(), DeviceId(block_owner(ShardLayout::Contiguous, 8, 2, i)));
+        }
+        // Cyclic: device 0 owns {0,2,4,6}, device 1 owns {1,3,5,7};
+        // trailing ranks spill the tail of each owned list.
+        let plan = build_sharded_plan_spilled(
+            8,
+            1,
+            policy,
+            &ShardSpec::pipeline(2, ShardLayout::Cyclic),
+            Some(&[2, 1]),
+        );
+        let mut reads: Vec<usize> = plan
+            .iter()
+            .filter(|t| t.kind == TaskKind::DiskRead)
+            .map(|t| match t.module {
+                Module::Block(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        reads.sort_unstable();
+        assert_eq!(reads, vec![4, 6, 7]);
+        // Two-tier policies ignore the vector entirely.
+        let two = build_sharded_plan_spilled(8, 1, Policy::default(), &spec, Some(&[4, 4]));
+        assert_eq!(two.iter().filter(|t| t.kind == TaskKind::DiskRead).count(), 0);
+    }
+
+    #[test]
     fn dp_plan_has_exactly_seed_and_reduce_per_step() {
         let n = 6;
         let steps = 3;
@@ -628,6 +996,8 @@ mod tests {
         for spec in [
             ShardSpec::pipeline(2, ShardLayout::Contiguous),
             ShardSpec::pipeline(4, ShardLayout::Cyclic),
+            ShardSpec::pipeline_microbatched(2, ShardLayout::Contiguous, 4),
+            ShardSpec::pipeline_microbatched(4, ShardLayout::Cyclic, 3),
             ShardSpec::data_parallel(2),
             ShardSpec::data_parallel(4),
         ] {

@@ -6,14 +6,23 @@
 //! identical bytes for 1, 2 and 8 worker threads (the determinism
 //! contract: fixed chunk grid + per-chunk counter-offset RNG replay).
 //!
+//! Also here: negative-path and round-trip coverage for
+//! `costmodel::HostKernels::from_bench_json`, the calibration loader over
+//! the `BENCH_host_kernels.json` file the bench writes (it landed with
+//! only happy-path tests).
+//!
 //! Real-execution half (needs `make artifacts`): the engine's CPU update
 //! site is deterministic across run modes, tiering and host thread counts,
 //! and its flush round moves zero bytes over the interconnect.
 
+use std::collections::BTreeMap;
+
+use zo2::costmodel::HostKernels;
 use zo2::hostpool::{fused, HostPool, CHUNK_ELEMS};
 use zo2::precision::Codec;
 use zo2::rng::{GaussianRng, RngState};
 use zo2::runtime::Runtime;
+use zo2::util::json::Json;
 use zo2::zo::{
     cpu_zo_adamw_update, cpu_zo_sgd_update, AdamHp, AdamState, RunMode, Tiering, UpdateSite,
     ZScratch, Zo2Engine, Zo2Options, ZoConfig,
@@ -147,6 +156,116 @@ fn fused_adamw_composition_over_multiple_steps() {
         }
         assert_eq!(st_ref.t, st_fused.t);
     }
+}
+
+// --- calibration-loader coverage (costmodel::HostKernels) ----------------------
+
+/// Fresh temp dir per test so parallel test binaries never collide.
+fn loader_tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("zo2_hk_loader_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn bench_json_loader_round_trips_a_bench_shaped_fixture() {
+    // Write a fixture with exactly the shape `table_host_kernels` emits —
+    // a `rows` array plus the `calibration` block — via the same Json
+    // writer, then load it back and check every rate lands bit-for-bit.
+    let dir = loader_tmp_dir("roundtrip");
+    let path = dir.join("BENCH_host_kernels.json");
+    let rates = [
+        (Codec::F32, 11.5e9),
+        (Codec::Bf16, 4.25e9),
+        (Codec::Fp16, 3.75e9),
+        (Codec::Fp8E4M3, 2.5e9),
+    ];
+    let mut calib = BTreeMap::new();
+    for (codec, rate) in rates {
+        calib.insert(format!("{}_bytes_per_s_per_thread", codec.name()), Json::Num(rate));
+    }
+    let mut row = BTreeMap::new();
+    row.insert("codec".to_string(), Json::Str("fp32".to_string()));
+    row.insert("scalar_gbps".to_string(), Json::Num(9.0));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("host_kernels".to_string()));
+    doc.insert("elems".to_string(), Json::Num(65536.0));
+    doc.insert("rows".to_string(), Json::Arr(vec![Json::Obj(row)]));
+    doc.insert("calibration".to_string(), Json::Obj(calib));
+    std::fs::write(&path, Json::Obj(doc).to_string_pretty()).unwrap();
+
+    let hk = HostKernels::from_bench_json(path.to_str().unwrap()).unwrap();
+    assert_eq!(hk.fp32_bytes_per_s.to_bits(), 11.5e9f64.to_bits());
+    assert_eq!(hk.bf16_bytes_per_s.to_bits(), 4.25e9f64.to_bits());
+    assert_eq!(hk.fp16_bytes_per_s.to_bits(), 3.75e9f64.to_bits());
+    assert_eq!(hk.fp8_bytes_per_s.to_bits(), 2.5e9f64.to_bits());
+    // The thread count is a deployment choice, not a calibration output.
+    assert_eq!(hk.threads, HostKernels::calibrated().threads);
+    // The loaded rates drive the cost term: pass_s follows the file.
+    let want = (1_000_000usize * 4) as f64 / (hk.threads as f64 * 3.75e9);
+    assert_eq!(hk.pass_s(Codec::Fp16, 1_000_000).to_bits(), want.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bench_json_loader_rejects_malformed_and_incomplete_files() {
+    let dir = loader_tmp_dir("negative");
+    let path = dir.join("bad.json");
+    let load = |text: &str| {
+        std::fs::write(&path, text).unwrap();
+        HostKernels::from_bench_json(path.to_str().unwrap())
+    };
+
+    // Malformed JSON: truncated, trailing garbage, not-JSON-at-all.
+    assert!(load("{\"calibration\": {").is_err(), "truncated object must fail");
+    assert!(load("{} trailing").is_err(), "trailing characters must fail");
+    assert!(load("not json").is_err(), "non-JSON must fail");
+    // Structurally valid but missing the calibration block entirely.
+    assert!(load("{\"bench\": \"host_kernels\"}").is_err(), "missing calibration");
+    // Calibration present but one codec's key missing.
+    assert!(
+        load(
+            r#"{"calibration": {
+                "fp32_bytes_per_s_per_thread": 1e9,
+                "bf16_bytes_per_s_per_thread": 1e9,
+                "fp16_bytes_per_s_per_thread": 1e9}}"#
+        )
+        .is_err(),
+        "missing fp8 key"
+    );
+    // A rate that is not a number.
+    assert!(
+        load(
+            r#"{"calibration": {
+                "fp32_bytes_per_s_per_thread": "fast",
+                "bf16_bytes_per_s_per_thread": 1e9,
+                "fp16_bytes_per_s_per_thread": 1e9,
+                "fp8_bytes_per_s_per_thread": 1e9}}"#
+        )
+        .is_err(),
+        "non-numeric rate"
+    );
+    // Zero and negative rates would divide-by-zero the cost term: loud error.
+    for bad in ["0", "-3e9"] {
+        assert!(
+            load(&format!(
+                r#"{{"calibration": {{
+                    "fp32_bytes_per_s_per_thread": {bad},
+                    "bf16_bytes_per_s_per_thread": 1e9,
+                    "fp16_bytes_per_s_per_thread": 1e9,
+                    "fp8_bytes_per_s_per_thread": 1e9}}}}"#
+            ))
+            .is_err(),
+            "non-positive rate {bad} must fail"
+        );
+    }
+    // Calibration that is not an object.
+    assert!(load(r#"{"calibration": 42}"#).is_err(), "calibration must be an object");
+    // And a missing file names the path in its error.
+    let missing = dir.join("nope.json");
+    let err = HostKernels::from_bench_json(missing.to_str().unwrap()).unwrap_err().to_string();
+    assert!(err.contains("nope.json"), "error should name the path: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 // --- real-execution half -------------------------------------------------------

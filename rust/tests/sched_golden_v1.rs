@@ -1,5 +1,7 @@
 //! Golden compatibility: the device-indexed scheduler must be a pure
-//! re-indexing of the original single-device 5-stream scheduler.
+//! re-indexing of the original single-device 5-stream scheduler, and the
+//! microbatched pipeline builder a pure generalisation of the PR 3
+//! multi-device builder.
 //!
 //! `reference_v1` below is a **frozen copy** of the pre-refactor
 //! `build_plan` + `simulate` (the hard-coded `Stream` enum, stream-name
@@ -10,6 +12,14 @@
 //! schedules (start/end times, makespan, steady-state step time, per-stream
 //! busy seconds, bottleneck diagnosis).  `N = 1` is the degenerate case of
 //! the sharded builder — not a special case — and this is the proof.
+//!
+//! `reference_pipeline_v2` is the second freeze, taken when intra-step
+//! microbatching landed: a verbatim copy of the PR 3 *multi-device
+//! pipeline* builder and the per-`StreamId` simulator.  The microbatched
+//! builder at `M = 1` must reproduce it bitwise — tasks, deps, times, busy
+//! maps, per-device and cluster bottlenecks — across random policies
+//! (including three-tier spills, both placements, both layouts, 1–4
+//! devices) and the paper-scale cluster cost model.
 
 use zo2::costmodel::{ComputeMode, Hardware, SimCost, Workload};
 use zo2::model::opt_by_name;
@@ -511,5 +521,654 @@ fn paper_scale_cost_breakdown_matches_v1() {
         let (new_sched, _) = simulate(&new_plan, &costs, policy);
         let old_sched = reference_v1::simulate(&old_plan, &costs, policy);
         assert_schedules_identical(&new_sched, &old_sched, name);
+    }
+}
+
+// ===========================================================================
+// Freeze #2: the PR 3 multi-device pipeline builder + per-StreamId simulator,
+// copied verbatim when intra-step microbatching landed.  Do not edit.
+// ===========================================================================
+
+mod reference_pipeline_v2 {
+    use std::collections::HashMap;
+    use zo2::sched::{
+        is_spilled_block, CostProvider, DeviceId, Module, Policy, StreamId, StreamKind, TaskKind,
+        Tiering,
+    };
+    use zo2::shard::{block_owner, ShardLayout};
+
+    #[derive(Debug, Clone)]
+    pub struct RefTask {
+        pub id: usize,
+        pub step: usize,
+        pub module: Module,
+        pub kind: TaskKind,
+        pub stream: StreamId,
+        pub deps: Vec<usize>,
+        pub extra_latency: f64,
+    }
+
+    fn sk_index(k: StreamKind) -> usize {
+        match k {
+            StreamKind::Upload => 0,
+            StreamKind::Compute => 1,
+            StreamKind::Offload => 2,
+            StreamKind::DiskRead => 3,
+            StreamKind::DiskWrite => 4,
+            StreamKind::Interconnect => 5,
+        }
+    }
+
+    struct Lane {
+        device: DeviceId,
+        last_on: [Option<usize>; 6],
+        offload_ring: Vec<Option<usize>>,
+        ring_pos: usize,
+        dram_ring: Vec<Option<usize>>,
+        dram_pos: usize,
+        prev_compute: Option<usize>,
+        prev_any: Option<usize>,
+    }
+
+    impl Lane {
+        fn new(device: usize, policy: &Policy) -> Self {
+            Self {
+                device: DeviceId(device),
+                last_on: [None; 6],
+                offload_ring: vec![None; policy.slots.max(1)],
+                ring_pos: 0,
+                dram_ring: vec![None; policy.dram_slots.max(1)],
+                dram_pos: 0,
+                prev_compute: None,
+                prev_any: None,
+            }
+        }
+    }
+
+    struct PlanBuilder {
+        tasks: Vec<RefTask>,
+        policy: Policy,
+    }
+
+    impl PlanBuilder {
+        fn new(policy: Policy) -> Self {
+            Self { tasks: Vec::new(), policy }
+        }
+
+        fn push(
+            &mut self,
+            lane: &mut Lane,
+            step: usize,
+            module: Module,
+            kind: TaskKind,
+            mut deps: Vec<usize>,
+            extra_latency: f64,
+        ) -> usize {
+            let stream_kind = if self.policy.overlap {
+                kind.stream_kind()
+            } else {
+                StreamKind::Compute
+            };
+            let stream = StreamId { device: lane.device, kind: stream_kind };
+            let id = self.tasks.len();
+            if let Some(p) = lane.last_on[sk_index(stream_kind)] {
+                deps.push(p);
+            }
+            if !self.policy.overlap {
+                if let Some(p) = lane.prev_any {
+                    deps.push(p);
+                }
+            }
+            deps.sort_unstable();
+            deps.dedup();
+            self.tasks.push(RefTask { id, step, module, kind, stream, deps, extra_latency });
+            lane.last_on[sk_index(stream_kind)] = Some(id);
+            lane.prev_any = Some(id);
+            if matches!(kind, TaskKind::Compute | TaskKind::Update) {
+                lane.prev_compute = Some(id);
+            }
+            id
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn push_block_round(
+            &mut self,
+            lane: &mut Lane,
+            step: usize,
+            block: usize,
+            on_disk: bool,
+            last_write: &mut Option<usize>,
+            compute_kind: TaskKind,
+            compute_extra_deps: &[usize],
+        ) -> usize {
+            let module = Module::Block(block);
+            let mut deps = Vec::new();
+            if on_disk {
+                let mut rdeps = Vec::new();
+                if let Some(w) = lane.dram_ring[lane.dram_pos] {
+                    rdeps.push(w);
+                }
+                if let Some(w) = *last_write {
+                    rdeps.push(w);
+                }
+                let r = self.push(lane, step, module, TaskKind::DiskRead, rdeps, 0.0);
+                deps.push(r);
+            }
+            if let Some(o) = lane.offload_ring[lane.ring_pos] {
+                deps.push(o);
+            }
+            if !self.policy.reusable_mem {
+                if let Some(c) = lane.prev_compute {
+                    deps.push(c);
+                }
+            }
+            let u = self.push(lane, step, module, TaskKind::Upload, deps, 0.0);
+
+            let mut cdeps = vec![u];
+            cdeps.extend_from_slice(compute_extra_deps);
+            let c = self.push(lane, step, module, compute_kind, cdeps, 0.0);
+
+            let o = self.push(lane, step, module, TaskKind::Offload, vec![c], 0.0);
+            lane.offload_ring[lane.ring_pos] = Some(o);
+            lane.ring_pos = (lane.ring_pos + 1) % lane.offload_ring.len();
+
+            if on_disk {
+                let w = self.push(lane, step, module, TaskKind::DiskWrite, vec![o], 0.0);
+                lane.dram_ring[lane.dram_pos] = Some(w);
+                lane.dram_pos = (lane.dram_pos + 1) % lane.dram_ring.len();
+                *last_write = Some(w);
+            }
+            c
+        }
+    }
+
+    fn spilled_count(policy: &Policy, n_blocks: usize) -> usize {
+        match policy.tiering {
+            Tiering::TwoTier => 0,
+            Tiering::ThreeTier => policy.spilled.min(n_blocks),
+        }
+    }
+
+    pub fn pipeline_plan(
+        n_blocks: usize,
+        steps: usize,
+        policy: Policy,
+        devices: usize,
+        layout: ShardLayout,
+    ) -> Vec<RefTask> {
+        let mut b = PlanBuilder::new(policy);
+        let mut lanes: Vec<Lane> = (0..devices).map(|d| Lane::new(d, &policy)).collect();
+        let mut last_write: Vec<Option<usize>> = vec![None; n_blocks];
+        let spilled = spilled_count(&policy, n_blocks);
+        let on_disk = |i: usize| is_spilled_block(i, n_blocks, spilled, policy.spill_placement);
+        let owner = |i: usize| block_owner(layout, n_blocks, devices, i);
+        let head_dev = if n_blocks == 0 { 0 } else { owner(n_blocks - 1) };
+        let mut grad_bcast: Option<usize> = None;
+
+        for step in 0..steps {
+            let mut edeps = Vec::new();
+            if let Some(g) = grad_bcast {
+                edeps.push(g);
+            }
+            let c_embed =
+                b.push(&mut lanes[0], step, Module::Embed, TaskKind::Compute, edeps, 0.0);
+            let mut prev_c = c_embed;
+            let mut prev_dev = 0usize;
+            let mut gated = vec![false; devices];
+            gated[0] = true;
+
+            for i in 0..n_blocks {
+                let d = owner(i);
+                let act = if d != prev_dev {
+                    b.push(
+                        &mut lanes[prev_dev],
+                        step,
+                        Module::Block(i),
+                        TaskKind::ActivationXfer,
+                        vec![prev_c],
+                        0.0,
+                    )
+                } else {
+                    prev_c
+                };
+                let mut extra = vec![act];
+                if !gated[d] {
+                    if let Some(g) = grad_bcast {
+                        extra.push(g);
+                    }
+                    gated[d] = true;
+                }
+                let c = b.push_block_round(
+                    &mut lanes[d],
+                    step,
+                    i,
+                    on_disk(i),
+                    &mut last_write[i],
+                    TaskKind::Compute,
+                    &extra,
+                );
+                prev_c = c;
+                prev_dev = d;
+            }
+
+            let c_head = b.push(
+                &mut lanes[head_dev],
+                step,
+                Module::Head,
+                TaskKind::Compute,
+                vec![prev_c],
+                0.0,
+            );
+
+            if devices > 1 {
+                grad_bcast = Some(b.push(
+                    &mut lanes[head_dev],
+                    step,
+                    Module::Head,
+                    TaskKind::GradReduce,
+                    vec![c_head],
+                    0.0,
+                ));
+            }
+
+            if !policy.efficient_update {
+                let g_dep = grad_bcast;
+                let mut upd_gated = vec![false; devices];
+                upd_gated[head_dev] = true;
+                for i in 0..n_blocks {
+                    let d = owner(i);
+                    let mut extra = Vec::new();
+                    if !upd_gated[d] {
+                        if let Some(g) = g_dep {
+                            extra.push(g);
+                        }
+                        upd_gated[d] = true;
+                    }
+                    b.push_block_round(
+                        &mut lanes[d],
+                        step,
+                        i,
+                        on_disk(i),
+                        &mut last_write[i],
+                        TaskKind::Update,
+                        &extra,
+                    );
+                }
+            }
+        }
+        b.tasks
+    }
+
+    pub struct RefSchedule {
+        pub start: Vec<f64>,
+        pub end: Vec<f64>,
+        pub makespan: f64,
+        pub steady_step_s: f64,
+        pub busy: HashMap<StreamId, f64>,
+    }
+
+    fn classify(compute: f64, pcie: f64, disk: f64, ic: f64) -> &'static str {
+        if ic > disk && ic > pcie && ic > compute {
+            "interconnect-bound"
+        } else if disk >= pcie && disk >= compute {
+            "disk-bound"
+        } else if pcie >= compute {
+            "pcie-bound"
+        } else {
+            "compute-bound"
+        }
+    }
+
+    impl RefSchedule {
+        pub fn busy_on(&self, device: DeviceId, kind: StreamKind) -> f64 {
+            self.busy.get(&StreamId { device, kind }).copied().unwrap_or(0.0)
+        }
+
+        pub fn devices(&self) -> Vec<DeviceId> {
+            let mut ds: Vec<DeviceId> = self.busy.keys().map(|id| id.device).collect();
+            ds.sort_unstable();
+            ds.dedup();
+            ds
+        }
+
+        pub fn bottleneck_of(&self, device: DeviceId) -> &'static str {
+            let compute = self.busy_on(device, StreamKind::Compute);
+            let pcie = self
+                .busy_on(device, StreamKind::Upload)
+                .max(self.busy_on(device, StreamKind::Offload));
+            let disk = self
+                .busy_on(device, StreamKind::DiskRead)
+                .max(self.busy_on(device, StreamKind::DiskWrite));
+            let ic = self.busy_on(device, StreamKind::Interconnect);
+            classify(compute, pcie, disk, ic)
+        }
+
+        pub fn bottleneck(&self) -> &'static str {
+            let mut compute = 0.0f64;
+            let mut pcie = 0.0f64;
+            let mut disk = 0.0f64;
+            for d in self.devices() {
+                compute = compute.max(self.busy_on(d, StreamKind::Compute));
+                pcie = pcie.max(
+                    self.busy_on(d, StreamKind::Upload)
+                        .max(self.busy_on(d, StreamKind::Offload)),
+                );
+                disk = disk.max(
+                    self.busy_on(d, StreamKind::DiskRead)
+                        .max(self.busy_on(d, StreamKind::DiskWrite)),
+                );
+            }
+            let ic: f64 = self
+                .busy
+                .iter()
+                .filter(|(id, _)| id.kind == StreamKind::Interconnect)
+                .map(|(_, &s)| s)
+                .sum();
+            classify(compute, pcie, disk, ic)
+        }
+    }
+
+    pub fn simulate(tasks: &[RefTask], costs: &dyn CostProvider, policy: Policy) -> RefSchedule {
+        let mut start = vec![0.0f64; tasks.len()];
+        let mut end = vec![0.0f64; tasks.len()];
+        let mut stream_free: HashMap<StreamId, f64> = HashMap::new();
+        let mut busy: HashMap<StreamId, f64> = HashMap::new();
+        let mut read_batch_len: HashMap<StreamId, usize> = HashMap::new();
+        let mut last_was_read: HashMap<StreamId, bool> = HashMap::new();
+
+        for t in tasks {
+            let stream_prev: f64 = *stream_free.get(&t.stream).unwrap_or(&0.0);
+            let mut t0 = stream_prev;
+            for &d in &t.deps {
+                t0 = t0.max(end[d]);
+            }
+            t0 += t.extra_latency;
+            let dur = match t.kind {
+                TaskKind::Upload => {
+                    let base = costs.upload_s() + costs.host_decode_s();
+                    if policy.reusable_mem {
+                        base
+                    } else {
+                        base + costs.malloc_s()
+                    }
+                }
+                TaskKind::Compute => costs.compute_s(t.module),
+                TaskKind::Offload => costs.offload_s() + costs.host_encode_s(),
+                TaskKind::Update => costs.update_s(),
+                TaskKind::DiskRead => {
+                    let queued = t0 <= stream_prev + 1e-12;
+                    let batch = read_batch_len.entry(t.stream).or_insert(0);
+                    let coalesce = policy.disk_batch > 1
+                        && queued
+                        && last_was_read.get(&t.stream).copied().unwrap_or(false)
+                        && *batch > 0
+                        && *batch < policy.disk_batch;
+                    if coalesce {
+                        *batch += 1;
+                        costs.disk_read_bw_s()
+                    } else {
+                        *batch = 1;
+                        costs.disk_read_s()
+                    }
+                }
+                TaskKind::DiskWrite => costs.disk_write_s(),
+                TaskKind::ActivationXfer => costs.link_activation_s(),
+                TaskKind::SeedBcast => costs.link_seed_s(),
+                TaskKind::GradReduce => costs.link_grad_s(),
+            };
+            last_was_read.insert(t.stream, t.kind == TaskKind::DiskRead);
+            let t1 = t0 + dur;
+            start[t.id] = t0;
+            end[t.id] = t1;
+            stream_free.insert(t.stream, t1);
+            *busy.entry(t.stream).or_default() += dur;
+        }
+
+        let makespan = end.iter().copied().fold(0.0, f64::max);
+        let n_steps = tasks.iter().map(|t| t.step).max().map(|s| s + 1).unwrap_or(0);
+        let steady_step_s = if n_steps >= 2 {
+            let mut step_end = vec![0.0f64; n_steps];
+            for t in tasks {
+                step_end[t.step] = step_end[t.step].max(end[t.id]);
+            }
+            (step_end[n_steps - 1] - step_end[0]) / (n_steps - 1) as f64
+        } else {
+            makespan
+        };
+
+        RefSchedule { start, end, makespan, steady_step_s, busy }
+    }
+}
+
+// --- M = 1 microbatched pipeline vs the v2 freeze ---------------------------
+
+use zo2::costmodel::{Cluster, ClusterCost, Interconnect};
+use zo2::sched::SpillPlacement;
+use zo2::shard::{build_sharded_plan, ShardLayout, ShardSpec};
+
+fn assert_pipeline_plans_identical(
+    new: &[zo2::sched::Task],
+    old: &[reference_pipeline_v2::RefTask],
+    what: &str,
+) {
+    assert_eq!(new.len(), old.len(), "{what}: task count");
+    for (n, o) in new.iter().zip(old) {
+        assert_eq!(n.id, o.id, "{what}: id");
+        assert_eq!(n.step, o.step, "{what}: task {} step", n.id);
+        assert_eq!(n.module, o.module, "{what}: task {} module", n.id);
+        assert_eq!(n.kind, o.kind, "{what}: task {} kind", n.id);
+        assert_eq!(n.stream, o.stream, "{what}: task {} stream", n.id);
+        assert_eq!(n.deps, o.deps, "{what}: task {} deps", n.id);
+        assert!(n.extra_latency == o.extra_latency, "{what}: task {} extra latency", n.id);
+        assert!(
+            n.microbatch.is_none(),
+            "{what}: task {} must be untagged at M = 1",
+            n.id
+        );
+    }
+}
+
+fn assert_pipeline_schedules_identical(
+    new: &zo2::sched::Schedule,
+    old: &reference_pipeline_v2::RefSchedule,
+    devices: usize,
+    what: &str,
+) {
+    for (i, (a, b)) in new.start.iter().zip(&old.start).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "{what}: start[{i}] {a} vs {b}");
+    }
+    for (i, (a, b)) in new.end.iter().zip(&old.end).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "{what}: end[{i}] {a} vs {b}");
+    }
+    assert!(new.makespan.to_bits() == old.makespan.to_bits(), "{what}: makespan");
+    assert!(
+        new.steady_step_s.to_bits() == old.steady_step_s.to_bits(),
+        "{what}: steady step"
+    );
+    assert_eq!(new.busy.len(), old.busy.len(), "{what}: busy stream count");
+    for (id, b) in &old.busy {
+        let a = new.busy.get(id).unwrap_or_else(|| panic!("{what}: busy missing {id:?}"));
+        assert!(a.to_bits() == b.to_bits(), "{what}: busy[{id:?}] {a} vs {b}");
+    }
+    assert_eq!(new.bottleneck(), old.bottleneck(), "{what}: bottleneck");
+    for d in 0..devices {
+        assert_eq!(
+            new.bottleneck_of(DeviceId(d)),
+            old.bottleneck_of(DeviceId(d)),
+            "{what}: bottleneck of device {d}"
+        );
+    }
+}
+
+/// Link-capable random cost provider for the multi-device freeze.
+struct RandLinkCosts {
+    base: RandCosts,
+    act: f64,
+    seed: f64,
+    grad: f64,
+}
+
+impl CostProvider for RandLinkCosts {
+    fn upload_s(&self) -> f64 {
+        self.base.upload_s()
+    }
+    fn offload_s(&self) -> f64 {
+        self.base.offload_s()
+    }
+    fn compute_s(&self, m: Module) -> f64 {
+        self.base.compute_s(m)
+    }
+    fn update_s(&self) -> f64 {
+        self.base.update_s()
+    }
+    fn host_decode_s(&self) -> f64 {
+        self.base.host_decode_s()
+    }
+    fn host_encode_s(&self) -> f64 {
+        self.base.host_encode_s()
+    }
+    fn disk_read_s(&self) -> f64 {
+        self.base.disk_read_s()
+    }
+    fn disk_read_bw_s(&self) -> f64 {
+        self.base.disk_read_bw_s()
+    }
+    fn disk_write_s(&self) -> f64 {
+        self.base.disk_write_s()
+    }
+    fn link_activation_s(&self) -> f64 {
+        self.act
+    }
+    fn link_seed_s(&self) -> f64 {
+        self.seed
+    }
+    fn link_grad_s(&self) -> f64 {
+        self.grad
+    }
+}
+
+/// Random multi-device pipeline case: any policy the PR 3 builder accepted,
+/// including both spill placements (unlike `rand_case`, whose v1 oracle
+/// predates placement).
+fn rand_case_v2(
+    rng: &mut GaussianRng,
+) -> (usize, usize, usize, ShardLayout, RandLinkCosts, Policy) {
+    let n_blocks = 1 + rng.next_below(12) as usize;
+    let steps = 1 + rng.next_below(4) as usize;
+    let devices = 1 + rng.next_below(4) as usize;
+    let layout = [ShardLayout::Contiguous, ShardLayout::Cyclic][rng.next_below(2) as usize];
+    let costs = RandLinkCosts {
+        base: RandCosts {
+            up: 0.01 + rng.next_uniform() * 2.0,
+            off: 0.01 + rng.next_uniform() * 2.0,
+            comp: 0.01 + rng.next_uniform() * 4.0,
+            upd: 0.01 + rng.next_uniform() * 0.5,
+            read: 0.01 + rng.next_uniform() * 3.0,
+            write: 0.01 + rng.next_uniform() * 3.0,
+            host: rng.next_uniform() * 0.5,
+        },
+        act: rng.next_uniform() * 0.5,
+        seed: rng.next_uniform() * 0.1,
+        grad: rng.next_uniform() * 0.2,
+    };
+    let three = rng.next_below(2) == 0;
+    let policy = Policy {
+        overlap: rng.next_below(4) != 0,
+        reusable_mem: rng.next_below(2) == 0,
+        efficient_update: rng.next_below(2) == 0,
+        slots: 1 + rng.next_below(4) as usize,
+        tiering: if three { Tiering::ThreeTier } else { Tiering::TwoTier },
+        spilled: if three { rng.next_below(1 + n_blocks as u64) as usize } else { 0 },
+        spill_placement: if rng.next_below(2) == 0 {
+            SpillPlacement::Trailing
+        } else {
+            SpillPlacement::Interleaved
+        },
+        dram_slots: 1 + rng.next_below(4) as usize,
+        disk_batch: 1 + rng.next_below(4) as usize,
+    };
+    (n_blocks, steps, devices, layout, costs, policy)
+}
+
+#[test]
+fn microbatched_pipeline_at_m1_is_byte_identical_to_v2_across_random_cases() {
+    let mut rng = GaussianRng::new(0x4D31, 0); // "M1"
+    for case in 0..200 {
+        let (n, steps, devices, layout, costs, policy) = rand_case_v2(&mut rng);
+        let spec = ShardSpec::pipeline_microbatched(devices, layout, 1);
+        let new_plan = build_sharded_plan(n, steps, policy, &spec);
+        let old_plan = reference_pipeline_v2::pipeline_plan(n, steps, policy, devices, layout);
+        let what = format!("case {case} (N={devices} {layout:?} {policy:?})");
+        assert_pipeline_plans_identical(&new_plan, &old_plan, &what);
+
+        let (new_sched, _) = simulate(&new_plan, &costs, policy);
+        let old_sched = reference_pipeline_v2::simulate(&old_plan, &costs, policy);
+        assert_pipeline_schedules_identical(&new_sched, &old_sched, devices, &what);
+    }
+}
+
+#[test]
+fn paper_scale_pipeline_m1_matches_v2_on_the_cluster_cost_model() {
+    // The acceptance check behind `simulate --devices N --shard pipeline`:
+    // same schedule, same busy maps, same per-device bottleneck diagnosis
+    // as the PR 3 builder, on the calibrated cluster cost model.
+    let hw = Hardware::a100_pcie4();
+    let cases = [
+        ("OPT-13B", Codec::Fp16, ComputeMode::Fp16, 2usize, Policy::default()),
+        ("OPT-13B", Codec::Fp16, ComputeMode::Fp16, 4, Policy::default()),
+        ("OPT-30B", Codec::F32, ComputeMode::Fp32, 4, Policy::naive()),
+        ("OPT-175B", Codec::Fp16, ComputeMode::Fp16, 8, Policy::three_tier(70, 4)),
+        (
+            "OPT-175B",
+            Codec::Fp16,
+            ComputeMode::Fp16,
+            4,
+            Policy {
+                spill_placement: SpillPlacement::Interleaved,
+                disk_batch: 4,
+                ..Policy::three_tier(70, 4)
+            },
+        ),
+    ];
+    for (name, wire, compute, devices, policy) in cases {
+        let wl = Workload {
+            shape: opt_by_name(name).unwrap(),
+            batch: 1,
+            seq: 2048,
+            wire,
+            compute,
+        };
+        for layout in [ShardLayout::Contiguous, ShardLayout::Cyclic] {
+            let cluster = Cluster::homogeneous(hw.clone(), devices, Interconnect::nvlink());
+            let costs = ClusterCost::new(&cluster, &wl).unwrap();
+            let spec = ShardSpec::pipeline_microbatched(devices, layout, 1);
+            let new_plan = build_sharded_plan(wl.shape.n_layers, 4, policy, &spec);
+            let old_plan = reference_pipeline_v2::pipeline_plan(
+                wl.shape.n_layers,
+                4,
+                policy,
+                devices,
+                layout,
+            );
+            let what = format!("{name} x{devices} {layout:?}");
+            assert_pipeline_plans_identical(&new_plan, &old_plan, &what);
+            let (new_sched, _) = simulate(&new_plan, &costs, policy);
+            let old_sched = reference_pipeline_v2::simulate(&old_plan, &costs, policy);
+            assert_pipeline_schedules_identical(&new_sched, &old_sched, devices, &what);
+        }
+    }
+}
+
+#[test]
+fn m1_spec_equals_plain_pipeline_spec() {
+    // `pipeline_microbatched(d, l, 1)` and `pipeline(d, l)` are the same
+    // spec — there is no separate un-microbatched code path to drift.
+    for devices in [1usize, 2, 4] {
+        for layout in [ShardLayout::Contiguous, ShardLayout::Cyclic] {
+            assert_eq!(
+                ShardSpec::pipeline_microbatched(devices, layout, 1),
+                ShardSpec::pipeline(devices, layout)
+            );
+        }
     }
 }

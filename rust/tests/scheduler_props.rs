@@ -16,14 +16,30 @@
 //!     pre-refactor comparison lives in `tests/sched_golden_v1.rs`);
 //!  9. per-device stream FIFO and cross-device dependency ordering hold
 //!     for N ∈ {2, 4}, both strategies, both layouts;
-//! 10. the DP sim-shard trajectory is bit-identical for any worker count.
+//! 10. the DP sim-shard trajectory is bit-identical for any worker count;
+//!
+//! plus the pipeline-microbatching / per-partition-spill invariants:
+//! 11. microbatched plans keep per-stream FIFO, emit microbatch slices in
+//!     index order, and never schedule an activation hop before its
+//!     same-microbatch producer compute ends;
+//! 12. for compute-bound configurations under an ideal (evenly-split) cost
+//!     provider, step time is monotonically non-increasing in M;
+//! 13. per-partition three-tier spill sets are pairwise disjoint, live on
+//!     their owner's streams, and each partition's plan fits the owning
+//!     host's `MemoryBudget`.
 
+use zo2::costmodel::{plan_three_tier_partitioned, ComputeMode, Hardware, MemoryBudget, Workload};
+use zo2::model::opt_by_name;
+use zo2::precision::Codec;
 use zo2::rng::GaussianRng;
 use zo2::sched::{
     build_plan, simulate, CostProvider, DeviceId, Module, Policy, SpillPlacement, StreamId,
     StreamKind, Task, TaskKind, Tiering, STREAM_KINDS,
 };
-use zo2::shard::{block_owner, build_sharded_plan, ShardLayout, ShardSpec};
+use zo2::shard::{
+    block_owner, blocks_per_device, build_sharded_plan, build_sharded_plan_spilled, ShardLayout,
+    ShardSpec,
+};
 use zo2::zo::{DpSimShard, DpWorker};
 
 struct RandCosts {
@@ -681,4 +697,258 @@ fn dp_sim_shard_rejects_bad_configurations() {
     let mut dp = DpSimShard::new(ws, 2).unwrap();
     assert!(dp.train_step(&[1, 2, 3]).is_err(), "odd batch cannot split into 2 shards");
     assert!(DpSimShard::<ToyZoWorker>::new(Vec::new(), 2).is_err(), "no workers");
+}
+
+// --- pipeline microbatching / per-partition spills (rules 11-13) -------------
+
+#[test]
+fn microbatched_pipeline_keeps_fifo_and_hop_producer_ordering() {
+    // Rule 11: across random policies (incl. three-tier), layouts, N and M,
+    // (a) deps are backward and respected by the schedule, (b) every stream
+    // executes in issue order, (c) each stream's compute slices for one
+    // block appear in microbatch-index order, and (d) no activation hop
+    // starts before its same-microbatch producer compute ends.
+    let mut rng = GaussianRng::new(0x4D42, 11);
+    for case in 0..60 {
+        let (n, steps, costs, policy) = rand_case(&mut rng);
+        let devices = [2usize, 4][rng.next_below(2) as usize];
+        let layout = [ShardLayout::Contiguous, ShardLayout::Cyclic][rng.next_below(2) as usize];
+        let m = [2usize, 3, 4, 8][rng.next_below(4) as usize];
+        let spec = ShardSpec::pipeline_microbatched(devices, layout, m);
+        let plan = build_sharded_plan(n, steps, policy, &spec);
+        let (sched, _) = simulate(&plan, &costs, policy);
+
+        // (a) dependency safety.
+        for t in &plan {
+            for &d in &t.deps {
+                assert!(d < t.id, "case {case}: forward dep {} of {}", d, t.id);
+                assert!(
+                    sched.start[t.id] >= sched.end[d] - 1e-12,
+                    "case {case}: task {} starts before dep {}",
+                    t.id,
+                    d
+                );
+            }
+        }
+        // (b) per-stream FIFO, every stream (incl. interconnect).
+        for s in streams_of(&plan) {
+            let ids: Vec<usize> = plan.iter().filter(|t| t.stream == s).map(|t| t.id).collect();
+            for w in ids.windows(2) {
+                assert!(
+                    sched.start[w[1]] >= sched.end[w[0]] - 1e-12,
+                    "case {case}: stream {s:?} FIFO violated"
+                );
+            }
+        }
+        // (c) per-microbatch index order within each (stream, module).
+        for s in streams_of(&plan) {
+            for i in 0..n {
+                for step in 0..steps {
+                    let idxs: Vec<usize> = plan
+                        .iter()
+                        .filter(|t| {
+                            t.stream == s
+                                && t.module == Module::Block(i)
+                                && t.step == step
+                                && t.kind == TaskKind::Compute
+                        })
+                        .map(|t| t.microbatch.expect("microbatched computes are tagged").index)
+                        .collect();
+                    let mut sorted = idxs.clone();
+                    sorted.sort_unstable();
+                    assert_eq!(idxs, sorted, "case {case}: slices of W{i} out of order");
+                    if !idxs.is_empty() {
+                        assert_eq!(idxs.len(), m, "case {case}: W{i} must have {m} slices");
+                    }
+                }
+            }
+        }
+        // (d) hops follow their same-microbatch producers.
+        for hop in plan.iter().filter(|t| t.kind == TaskKind::ActivationXfer) {
+            let mb = hop.microbatch.expect("hops are per-microbatch");
+            assert_eq!(mb.of, m);
+            let producer = hop
+                .deps
+                .iter()
+                .map(|&d| &plan[d])
+                .find(|p| p.kind == TaskKind::Compute)
+                .expect("hop must depend on a compute");
+            assert_eq!(
+                producer.microbatch.map(|p| p.index),
+                Some(mb.index),
+                "case {case}: hop {} fed by the wrong microbatch",
+                hop.id
+            );
+            assert!(
+                sched.start[hop.id] >= sched.end[producer.id] - 1e-12,
+                "case {case}: hop {} before its producer {} ends",
+                hop.id,
+                producer.id
+            );
+        }
+    }
+}
+
+/// Exactly-dyadic durations: every per-microbatch split (`x / M` for
+/// M ∈ {2,4,8}) and every sum of slices is exact in f64, so the
+/// monotonicity assertion is about the *scheduler*, not rounding.
+struct DyadicCosts;
+
+impl CostProvider for DyadicCosts {
+    fn upload_s(&self) -> f64 {
+        0.125
+    }
+    fn offload_s(&self) -> f64 {
+        0.125
+    }
+    fn compute_s(&self, _m: Module) -> f64 {
+        2.0
+    }
+    fn update_s(&self) -> f64 {
+        0.25
+    }
+    fn link_activation_s(&self) -> f64 {
+        0.03125
+    }
+    fn link_seed_s(&self) -> f64 {
+        0.0
+    }
+    fn link_grad_s(&self) -> f64 {
+        0.0078125
+    }
+}
+
+#[test]
+fn step_time_is_monotone_non_increasing_in_microbatches_when_compute_bound() {
+    // Rule 12: finer microbatching only ever relaxes the schedule under an
+    // ideal evenly-split cost provider (the trait default): each M-slice
+    // group refines the M'-slice group for M' | M, so both makespan and
+    // steady-state step time are non-increasing along 1 -> 2 -> 4 -> 8.
+    for layout in [ShardLayout::Contiguous, ShardLayout::Cyclic] {
+        for devices in [2usize, 4] {
+            let policy = Policy::default();
+            let mut last_makespan = f64::INFINITY;
+            let mut last_step = f64::INFINITY;
+            for m in [1usize, 2, 4, 8] {
+                let spec = ShardSpec::pipeline_microbatched(devices, layout, m);
+                let plan = build_sharded_plan(8, 3, policy, &spec);
+                let (sched, _) = simulate(&plan, &DyadicCosts, policy);
+                assert!(
+                    sched.makespan <= last_makespan + 1e-9,
+                    "{layout:?} N={devices}: M={m} makespan {} > previous {}",
+                    sched.makespan,
+                    last_makespan
+                );
+                assert!(
+                    sched.steady_step_s <= last_step + 1e-9,
+                    "{layout:?} N={devices}: M={m} step {} > previous {}",
+                    sched.steady_step_s,
+                    last_step
+                );
+                last_makespan = sched.makespan;
+                last_step = sched.steady_step_s;
+            }
+        }
+    }
+    // And microbatching strictly helps somewhere: the cyclic 4-device
+    // pipeline at M=8 must beat its M=1 makespan (boundaries at every
+    // block leave a real bubble for M to fill).
+    let policy = Policy::default();
+    let m1 = {
+        let plan =
+            build_sharded_plan(8, 3, policy, &ShardSpec::pipeline(4, ShardLayout::Cyclic));
+        simulate(&plan, &DyadicCosts, policy).0.makespan
+    };
+    let m8 = {
+        let spec = ShardSpec::pipeline_microbatched(4, ShardLayout::Cyclic, 8);
+        let plan = build_sharded_plan(8, 3, policy, &spec);
+        simulate(&plan, &DyadicCosts, policy).0.makespan
+    };
+    assert!(m8 < m1 - 1e-9, "M=8 ({m8}) must strictly beat M=1 ({m1}) on the cyclic pipeline");
+}
+
+#[test]
+fn per_partition_spill_sets_are_disjoint_and_fit_their_hosts() {
+    // Rule 13: plan per-partition spills for mixed host budgets, build the
+    // plan, and check the spill sets never overlap across devices, live on
+    // their owner's disk streams, and match the planner's counts; each
+    // per-device plan fits its own host's budget.
+    let hw = Hardware::a100_pcie4();
+    let w = Workload {
+        shape: opt_by_name("OPT-30B").unwrap(),
+        batch: 1,
+        seq: 2048,
+        wire: Codec::Fp16,
+        compute: ComputeMode::Fp16,
+    };
+    let gb = 1u64 << 30;
+    let budgets = vec![
+        MemoryBudget { hbm: 18 * gb, dram: 8 * gb, nvme: 2 << 40 },
+        MemoryBudget { hbm: 18 * gb, dram: 10 * gb, nvme: 2 << 40 },
+        MemoryBudget { hbm: 18 * gb, dram: 1024 * gb, nvme: 2 << 40 },
+        MemoryBudget { hbm: 18 * gb, dram: 8 * gb, nvme: 2 << 40 },
+    ];
+    let devices = budgets.len();
+    let n = w.shape.n_layers;
+    let steps = 2;
+    for layout in [ShardLayout::Contiguous, ShardLayout::Cyclic] {
+        for placement in [SpillPlacement::Trailing, SpillPlacement::Interleaved] {
+            let plans =
+                plan_three_tier_partitioned(&w, &budgets, layout, 3, 4, 2, &hw, placement);
+            let spilled: Vec<usize> = plans.iter().map(|p| p.spilled_blocks).collect();
+            let per = blocks_per_device(layout, n, devices);
+            for (d, p) in plans.iter().enumerate() {
+                assert_eq!(p.resident_blocks + p.spilled_blocks, per[d].len());
+                assert!(
+                    budgets[d].fits(&p.peaks),
+                    "{layout:?} {placement:?} device {d}: {:?} vs {:?}",
+                    p.peaks,
+                    budgets[d]
+                );
+            }
+            assert!(spilled.iter().sum::<usize>() > 0, "the starved hosts must spill");
+            assert_eq!(spilled[2], 0, "the 1 TB host must not spill");
+
+            let policy = Policy {
+                tiering: Tiering::ThreeTier,
+                spilled: spilled.iter().sum(),
+                dram_slots: 4,
+                spill_placement: placement,
+                ..Policy::default()
+            };
+            let spec = ShardSpec::pipeline(devices, layout);
+            let plan = build_sharded_plan_spilled(n, steps, policy, &spec, Some(&spilled));
+            // Spilled blocks, per reading device, step 0.
+            let mut per_dev_reads: Vec<Vec<usize>> = vec![Vec::new(); devices];
+            for t in plan.iter().filter(|t| t.kind == TaskKind::DiskRead && t.step == 0) {
+                let i = match t.module {
+                    Module::Block(i) => i,
+                    _ => unreachable!("disk reads are per-block"),
+                };
+                per_dev_reads[t.device().0].push(i);
+            }
+            for (d, reads) in per_dev_reads.iter().enumerate() {
+                assert_eq!(
+                    reads.len(),
+                    spilled[d],
+                    "{layout:?} {placement:?} device {d}: spill count mismatch"
+                );
+                // Every spilled block is owned by the device that reads it.
+                for &i in reads {
+                    assert_eq!(
+                        block_owner(layout, n, devices, i),
+                        d,
+                        "{layout:?}: device {d} reads foreign block {i}"
+                    );
+                }
+            }
+            // Pairwise disjoint across devices (ownership partitions the
+            // blocks, so one shared block would be a builder bug).
+            let mut all: Vec<usize> = per_dev_reads.iter().flatten().copied().collect();
+            let total = all.len();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), total, "{layout:?} {placement:?}: overlapping spill sets");
+        }
+    }
 }
