@@ -14,16 +14,19 @@ use std::collections::BTreeMap;
 
 use zo2::baselines::{comm_ops_per_block, first_order_comm_per_step, zo2_comm_per_step};
 use zo2::costmodel::{
-    gpu_memory_bytes, mezo_step_s, plan_three_tier, plan_three_tier_partitioned,
-    two_tier_dram_bytes, Cluster, ClusterCost, ComputeMode, Hardware, Interconnect, MemoryBudget,
-    SimCost, Strategy, Workload,
+    gpu_memory_bytes, mezo_step_s, plan_three_tier, plan_three_tier_owned,
+    plan_three_tier_partitioned, two_tier_dram_bytes, Cluster, ClusterCost, ComputeMode, Hardware,
+    Interconnect, MemoryBudget, SimCost, Strategy, Workload,
 };
 use zo2::hostpool::{fused, HostPool};
 use zo2::model::{opt_by_name, opt_family, ModelShape};
 use zo2::precision::Codec;
 use zo2::rng::{GaussianRng, RngState};
 use zo2::sched::{build_plan, simulate, Policy, SpillPlacement, Tiering};
-use zo2::shard::{build_sharded_plan, build_sharded_plan_spilled, ShardLayout, ShardSpec};
+use zo2::shard::{
+    blocks_per_device_of, bottleneck_weights, build_sharded_plan, build_sharded_plan_tiered,
+    weighted_contiguous_owners, DeviceTier, ShardLayout, ShardSpec,
+};
 use zo2::util::fmt_mb;
 use zo2::util::json::Json;
 use zo2::util::stats::bench;
@@ -667,6 +670,7 @@ fn table_multi_gpu(hw: &Hardware) {
             SpillPlacement::Trailing,
         );
         let spilled: Vec<usize> = plans.iter().map(|p| p.spilled_blocks).collect();
+        let tiers: Vec<DeviceTier> = plans.iter().map(|p| p.device_tier()).collect();
         let policy3 = Policy {
             tiering: Tiering::ThreeTier,
             spilled: spilled.iter().sum(),
@@ -680,12 +684,13 @@ fn table_multi_gpu(hw: &Hardware) {
             let (s2, _) = simulate(&plan, &costs, policy);
             let bubble2 = 1.0 - s2.busy_of("compute") / (devices as f64 * s2.makespan);
 
-            let plan3 = build_sharded_plan_spilled(
+            let plan3 = build_sharded_plan_tiered(
                 shape.n_layers,
                 SIM_STEPS,
                 policy3,
                 &spec,
-                Some(&spilled),
+                Some(&tiers),
+                None,
             );
             let (s3, _) = simulate(&plan3, &costs, policy3);
             let bubble3 = 1.0 - s3.busy_of("compute") / (devices as f64 * s3.makespan);
@@ -727,6 +732,158 @@ fn table_multi_gpu(hw: &Hardware) {
         }
     }
 
+    // Heterogeneous sweep: mixed A100/RTX4090 pipelines.  Quantifies (a)
+    // the slow-host bottleneck — a balanced split is paced by the slowest
+    // host's per-step round time regardless of device order — and (b) the
+    // bottleneck-aware layout hint, which hands the faster hosts more
+    // blocks (`shard::weighted_contiguous_owners` over
+    // `shard::bottleneck_weights`) and claws part of the loss back.
+    println!(
+        "\n-- heterogeneous: OPT-30B x4 pipeline, balanced vs weighted placement \
+         (fp16 wire/compute, NVLink) --"
+    );
+    println!(
+        "{:<11} | {:>10} {:>12} | {:>10} {:>14} {:>7}",
+        "cluster", "balanced", "bneck", "weighted", "blocks/device", "hint"
+    );
+    let shape30 = opt_by_name("OPT-30B").unwrap();
+    let w30 = wl(&shape30, 1, 2048, Codec::Fp16, ComputeMode::Fp16);
+    let a100 = Hardware::a100_pcie4();
+    let g4090 = Hardware::rtx4090_pcie4();
+    let scenarios: Vec<(&str, Vec<Hardware>)> = vec![
+        ("a100x4", vec![a100.clone(); 4]),
+        ("fast-first", vec![a100.clone(), a100.clone(), g4090.clone(), g4090.clone()]),
+        ("slow-first", vec![g4090.clone(), g4090.clone(), a100.clone(), a100.clone()]),
+    ];
+    let het_devices = 4usize;
+    let mut het_rows: Vec<Json> = Vec::new();
+    let mut baseline_step = 0.0f64;
+    for (label, devs) in &scenarios {
+        let cluster = Cluster::heterogeneous(devs.clone(), Interconnect::nvlink());
+        let costs = ClusterCost::new(&cluster, &w30).expect("mixed clusters price");
+        let spec = ShardSpec::pipeline(het_devices, ShardLayout::Contiguous);
+        let policy = Policy::default();
+        let balanced = build_sharded_plan(shape30.n_layers, SIM_STEPS, policy, &spec);
+        let (sb, _) = simulate(&balanced, &costs, policy);
+        let weights = bottleneck_weights(&costs, het_devices);
+        let owners = weighted_contiguous_owners(shape30.n_layers, &weights);
+        let hinted = build_sharded_plan_tiered(
+            shape30.n_layers,
+            SIM_STEPS,
+            policy,
+            &spec,
+            None,
+            Some(&owners),
+        );
+        let (sw, _) = simulate(&hinted, &costs, policy);
+        let counts: Vec<usize> =
+            blocks_per_device_of(&owners, het_devices).iter().map(|v| v.len()).collect();
+        if *label == "a100x4" {
+            baseline_step = sb.steady_step_s;
+        }
+        println!(
+            "{:<11} | {:>9.3}s {:>12} | {:>9.3}s {:>14} {:>6.2}x",
+            label,
+            sb.steady_step_s,
+            sb.bottleneck(),
+            sw.steady_step_s,
+            format!("{counts:?}"),
+            sb.steady_step_s / sw.steady_step_s,
+        );
+        let mut row = BTreeMap::new();
+        row.insert("model".to_string(), Json::Str("OPT-30B".to_string()));
+        row.insert("cluster".to_string(), Json::Str(label.to_string()));
+        row.insert(
+            "devices".to_string(),
+            Json::Arr(devs.iter().map(|h| Json::Str(h.name.clone())).collect()),
+        );
+        row.insert("balanced_step_s".to_string(), Json::Num(sb.steady_step_s));
+        row.insert("balanced_bottleneck".to_string(), Json::Str(sb.bottleneck().to_string()));
+        row.insert(
+            "balanced_vs_homogeneous".to_string(),
+            Json::Num(if baseline_step > 0.0 { sb.steady_step_s / baseline_step } else { 1.0 }),
+        );
+        row.insert("weighted_step_s".to_string(), Json::Num(sw.steady_step_s));
+        row.insert(
+            "weighted_blocks_per_device".to_string(),
+            Json::Arr(counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        row.insert(
+            "layout_hint_speedup".to_string(),
+            Json::Num(sb.steady_step_s / sw.steady_step_s),
+        );
+        het_rows.push(Json::Obj(row));
+    }
+
+    // Per-host DRAM budgets on the mixed cluster: server hosts get 48 GB
+    // (their 12-block partitions stay fully DDR-resident), the consumer
+    // hosts 8 GB (most of their partition spills) — each partition spills
+    // against its *own* budget and stages through its *own* window depth.
+    let mixed = vec![a100.clone(), a100.clone(), g4090.clone(), g4090.clone()];
+    let cluster = Cluster::heterogeneous(mixed.clone(), Interconnect::nvlink());
+    let costs = ClusterCost::new(&cluster, &w30).expect("mixed clusters price");
+    let gbb = 1u64 << 30;
+    let het_budgets: Vec<MemoryBudget> = mixed
+        .iter()
+        .enumerate()
+        .map(|(d, hw)| MemoryBudget {
+            hbm: hw.hbm_capacity,
+            dram: if d < 2 { 48 * gbb } else { 8 * gbb },
+            nvme: 2 << 40,
+        })
+        .collect();
+    let per30 = zo2::shard::blocks_per_device(ShardLayout::Contiguous, shape30.n_layers, 4);
+    let counts30: Vec<usize> = per30.iter().map(|v| v.len()).collect();
+    let hws30: Vec<&Hardware> = mixed.iter().collect();
+    let plans30 = plan_three_tier_owned(
+        &w30,
+        &het_budgets,
+        &counts30,
+        3,
+        4,
+        2,
+        &hws30,
+        SpillPlacement::Trailing,
+    );
+    let tiers30: Vec<DeviceTier> = plans30.iter().map(|p| p.device_tier()).collect();
+    let policy30 = Policy {
+        tiering: Tiering::ThreeTier,
+        spilled: tiers30.iter().map(|t| t.spilled).sum(),
+        ..Policy::default()
+    };
+    let spec30 = ShardSpec::pipeline(4, ShardLayout::Contiguous);
+    let plan30 = build_sharded_plan_tiered(
+        shape30.n_layers,
+        SIM_STEPS,
+        policy30,
+        &spec30,
+        Some(&tiers30),
+        None,
+    );
+    let (s30, _) = simulate(&plan30, &costs, policy30);
+    let spilled30: Vec<usize> = tiers30.iter().map(|t| t.spilled).collect();
+    println!(
+        "  three-tier, per-host budgets [48,48,8,8] GB: step {:.3}s ({}), \
+         spilled per device {:?}",
+        s30.steady_step_s,
+        s30.bottleneck(),
+        spilled30,
+    );
+    let mut row = BTreeMap::new();
+    row.insert("model".to_string(), Json::Str("OPT-30B".to_string()));
+    row.insert("cluster".to_string(), Json::Str("fast-first-three-tier".to_string()));
+    row.insert(
+        "dram_gb_per_host".to_string(),
+        Json::Arr(vec![48.0, 48.0, 8.0, 8.0].into_iter().map(Json::Num).collect()),
+    );
+    row.insert("step_s".to_string(), Json::Num(s30.steady_step_s));
+    row.insert("bottleneck".to_string(), Json::Str(s30.bottleneck().to_string()));
+    row.insert(
+        "spilled_per_device".to_string(),
+        Json::Arr(spilled30.iter().map(|&s| Json::Num(s as f64)).collect()),
+    );
+    het_rows.push(Json::Obj(row));
+
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("multi_gpu".to_string()));
     doc.insert("wire".to_string(), Json::Str("fp16".to_string()));
@@ -734,6 +891,7 @@ fn table_multi_gpu(hw: &Hardware) {
     doc.insert("rows".to_string(), Json::Arr(rows));
     doc.insert("microbatch_sweep".to_string(), Json::Arr(sweep_rows));
     doc.insert("microbatch_sweep_dram_gb_per_host".to_string(), Json::Num(24.0));
+    doc.insert("heterogeneous_sweep".to_string(), Json::Arr(het_rows));
     let path = "BENCH_multi_gpu.json";
     match std::fs::write(path, Json::Obj(doc).to_string_pretty()) {
         Ok(()) => println!("wrote {path}"),

@@ -43,9 +43,13 @@
 //!   models for Figure 1 / §4.1 comparisons.
 //! * [`costmodel`] — analytic compute/transfer cost model + calibration
 //!   used by the discrete-event simulator for paper-scale (OPT-175B) runs,
-//!   including NVMe bandwidths and the [`costmodel::MemoryBudget`] /
+//!   including NVMe bandwidths, the [`costmodel::MemoryBudget`] /
 //!   [`costmodel::plan_three_tier`] tier placement (per-pipeline-partition
-//!   variant: [`costmodel::plan_three_tier_partitioned`]).
+//!   variants: [`costmodel::plan_three_tier_partitioned`] /
+//!   [`costmodel::plan_three_tier_owned`]), and heterogeneous
+//!   [`costmodel::Cluster`]s — mixed per-device [`costmodel::Hardware`]
+//!   and per-device links, priced per device by
+//!   [`costmodel::ClusterCost`].
 //! * [`runtime`] — PJRT client, artifact manifests, executable cache.
 //! * [`coordinator`] — the trainer: data, train/eval loops, metrics.
 

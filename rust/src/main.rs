@@ -5,20 +5,28 @@
 //!   simulate  paper-scale throughput/memory via the discrete-event simulator
 //!   memory    print the Fig. 1 memory table (analytic accounting)
 //!   info      show a config's manifest summary
+//!
+//! Every numeric flag is parsed *checked*: a malformed value (`--devices
+//! foo`, `--lr 1e-4x`) is a hard error naming the flag and token, never a
+//! silent fall-back to the default.  `--device-spec`, `--dram-budget`,
+//! `--link` and `--link-gbps` accept comma lists for heterogeneous
+//! clusters (one entry per device, or a single entry for all).
 
 use anyhow::{bail, Result};
 
 use zo2::coordinator::{train, EngineKind, TrainConfig};
 use zo2::costmodel::{
-    gpu_memory_bytes, plan_three_tier, plan_three_tier_partitioned, two_tier_dram_bytes, Cluster,
-    ClusterCost, ComputeMode, Hardware, Interconnect, MemoryBudget, SimCost, Strategy, Workload,
+    gpu_memory_bytes, plan_three_tier, plan_three_tier_owned, two_tier_dram_bytes, Cluster,
+    ClusterCost, ComputeMode, Hardware, Interconnect, MemoryBudget, SimCost, Strategy, TierPlan,
+    Workload,
 };
 use zo2::model::{opt_by_name, opt_family};
 use zo2::precision::Codec;
 use zo2::runtime::Runtime;
 use zo2::sched::{build_plan, simulate, Policy, SpillPlacement, Tiering};
 use zo2::shard::{
-    blocks_per_device, build_sharded_plan_spilled, ShardLayout, ShardSpec, ShardStrategy,
+    blocks_per_device, blocks_per_device_of, bottleneck_weights, build_sharded_plan_tiered,
+    weighted_contiguous_owners, DeviceTier, ShardLayout, ShardSpec, ShardStrategy,
 };
 use zo2::util::cli::Args;
 use zo2::util::fmt_mb;
@@ -40,12 +48,13 @@ fn main() -> Result<()> {
                 "usage: zo2 <train|simulate|memory|info> [--config tiny] [--engine zo2|mezo]\n\
                  \x20      [--steps N] [--lr F] [--eps F] [--seed N] [--wire fp32|bf16|fp16|fp8]\n\
                  \x20      [--mode seq|overlap] [--model OPT-13B] [--compute fp32|tf32|fp16]\n\
-                 \x20      [--tiering two|three] [--dram-budget GB] [--dram-slots N]\n\
+                 \x20      [--tiering two|three] [--dram-budget GB[,GB,...]] [--dram-slots N]\n\
                  \x20      [--nvme-gbps F] [--nvme-write-gbps F] [--disk-batch N]\n\
                  \x20      [--spill-placement trailing|interleaved]\n\
                  \x20      [--update-site device|cpu] [--host-threads N] [--dp-workers K] [--dp-shards S]\n\
-                 \x20      [--devices N] [--shard dp|pipeline] [--layout contiguous|cyclic]\n\
-                 \x20      [--link nvlink|pcie] [--link-gbps F] [--microbatches M]"
+                 \x20      [--devices N] [--device-spec a100:2,rtx4090:2] [--shard dp|pipeline]\n\
+                 \x20      [--layout contiguous|cyclic|weighted] [--link nvlink|pcie[,...]]\n\
+                 \x20      [--link-gbps F[,F,...]] [--microbatches M]"
             );
             Ok(())
         }
@@ -68,26 +77,163 @@ fn parse_spill_placement(args: &Args) -> Result<SpillPlacement> {
     }
 }
 
+/// Parse `--dram-budget` as GB values in bytes — one per host, or one value
+/// broadcast to all hosts (`--dram-budget 64` / `--dram-budget 64,32,32,64`).
+/// Shared by `train` and `simulate`: the flag is required whenever the
+/// caller reaches this (three-tier mode), and every entry must be a
+/// positive number — no silent defaults, no zero/negative budgets.
+fn parse_dram_budgets(args: &Args, hosts: usize) -> Result<Vec<u64>> {
+    let list = args.get_f64_list_checked("dram-budget")?.ok_or_else(|| {
+        anyhow::anyhow!(
+            "--tiering three requires --dram-budget <GB[,GB,...]> (the DDR budget per host \
+             that decides which blocks spill)"
+        )
+    })?;
+    for &gb in &list {
+        anyhow::ensure!(
+            gb > 0.0 && gb.is_finite(),
+            "bad --dram-budget: {gb} GB (every host budget must be positive)"
+        );
+    }
+    let bytes: Vec<u64> = list.iter().map(|gb| (gb * (1u64 << 30) as f64) as u64).collect();
+    if bytes.len() == 1 {
+        return Ok(vec![bytes[0]; hosts.max(1)]);
+    }
+    anyhow::ensure!(
+        bytes.len() == hosts,
+        "--dram-budget lists {} budgets for {hosts} host(s); give one value or one per host",
+        bytes.len()
+    );
+    Ok(bytes)
+}
+
+/// Parse `--device-spec a100:2,rtx4090:2` into one [`Hardware`] per device
+/// (entries are `preset[:count]`, expanded in order — device 0 first).
+/// Without the flag: `devices_flag` copies of the A100 default.  With both
+/// flags, the expanded list length must agree with `--devices`.
+fn parse_device_specs(args: &Args, devices_flag: Option<usize>) -> Result<Vec<Hardware>> {
+    let Some(raw) = args.get("device-spec") else {
+        return Ok(vec![Hardware::a100_pcie4(); devices_flag.unwrap_or(1).max(1)]);
+    };
+    let mut out = Vec::new();
+    for entry in raw.split(',') {
+        let entry = entry.trim();
+        let (name, count) = match entry.split_once(':') {
+            Some((n, c)) => {
+                let count: usize = c.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "bad --device-spec `{raw}`: count `{c}` in `{entry}` is not an \
+                         unsigned integer"
+                    )
+                })?;
+                (n, count)
+            }
+            None => (entry, 1),
+        };
+        anyhow::ensure!(count > 0, "bad --device-spec `{raw}`: `{entry}` asks for zero devices");
+        let hw = Hardware::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad --device-spec `{raw}`: unknown hardware `{name}` (known presets: {})",
+                Hardware::PRESET_NAMES.join(", ")
+            )
+        })?;
+        out.extend(std::iter::repeat(hw).take(count));
+    }
+    anyhow::ensure!(!out.is_empty(), "--device-spec must name at least one device");
+    if let Some(n) = devices_flag {
+        anyhow::ensure!(
+            out.len() == n,
+            "--device-spec lists {} device(s) but --devices says {n}; drop one flag or make \
+             them agree",
+            out.len()
+        );
+    }
+    Ok(out)
+}
+
+/// Parse `--link` / `--link-gbps` into one [`Interconnect`] per device —
+/// `links[d]` is what device `d` *sends* on.  Single entries broadcast;
+/// lists must have one entry per device.
+fn parse_links(args: &Args, devices: usize) -> Result<Vec<Interconnect>> {
+    let raw = args.get_or("link", "nvlink");
+    let mut base: Vec<Interconnect> = Vec::new();
+    for tok in raw.split(',') {
+        match tok.trim() {
+            "nvlink" => base.push(Interconnect::nvlink()),
+            "pcie" | "pcie-p2p" => base.push(Interconnect::pcie_p2p()),
+            l => bail!("unknown link `{l}` in --link `{raw}` (expected nvlink|pcie)"),
+        }
+    }
+    let mut links = if base.len() == 1 {
+        vec![base[0].clone(); devices]
+    } else {
+        anyhow::ensure!(
+            base.len() == devices,
+            "--link lists {} link(s) for {devices} device(s); give one class or one per device",
+            base.len()
+        );
+        base
+    };
+    if let Some(gbps) = args.get_f64_list_checked("link-gbps")? {
+        for &g in &gbps {
+            anyhow::ensure!(g > 0.0 && g.is_finite(), "bad --link-gbps: {g} (must be positive)");
+        }
+        if gbps.len() == 1 {
+            for l in links.iter_mut() {
+                *l = l.clone().with_gbps(gbps[0]);
+            }
+        } else {
+            anyhow::ensure!(
+                gbps.len() == devices,
+                "--link-gbps lists {} value(s) for {devices} device(s); give one or one per \
+                 device",
+                gbps.len()
+            );
+            for (l, &g) in links.iter_mut().zip(&gbps) {
+                *l = l.clone().with_gbps(g);
+            }
+        }
+    }
+    Ok(links)
+}
+
+/// Refuse a tier plan its host cannot actually hold: a DDR peak (including
+/// the plan's own staging window) above the budget, or any other tier
+/// overflowing.  `who` names the host in the error.
+fn ensure_budget_feasible(plan: &TierPlan, budget: &MemoryBudget, who: &str) -> Result<()> {
+    anyhow::ensure!(
+        plan.peaks.dram <= budget.dram,
+        "{who}: DDR peak {} MB (incl. the {}-slot staging window) exceeds its --dram-budget \
+         ({} MB) — lower --dram-slots or raise this host's budget",
+        fmt_mb(plan.peaks.dram),
+        plan.dram_slots,
+        fmt_mb(budget.dram),
+    );
+    anyhow::ensure!(
+        budget.fits(&plan.peaks),
+        "{who}: tier peaks {:?} do not fit the host budget {:?}",
+        plan.peaks,
+        budget,
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let tiering = parse_tiering(args)?;
-    let dram_budget_bytes = match args.get("dram-budget") {
-        None => None,
-        Some(s) => match s.parse::<f64>() {
-            Ok(gb) if gb > 0.0 => Some((gb * (1u64 << 30) as f64) as u64),
-            _ => bail!("bad --dram-budget `{s}` (gigabytes, e.g. 64)"),
-        },
+    // Three-tier requires an explicit budget; a budget given in two-tier
+    // mode is still validated (never silently ignored or defaulted).
+    let dram_budget_bytes = if tiering == Tiering::ThreeTier || args.has("dram-budget") {
+        Some(parse_dram_budgets(args, 1)?[0])
+    } else {
+        None
     };
-    // Refuse to silently train two-tier when the user asked for three.
-    if tiering == Tiering::ThreeTier && dram_budget_bytes.is_none() {
-        bail!("--tiering three requires --dram-budget <GB> (the DDR budget that decides which blocks spill)");
-    }
     let cfg = TrainConfig {
         config_name: args.get_or("config", "tiny"),
-        steps: args.get_usize("steps", 20),
+        steps: args.get_usize_checked("steps", 20)?,
         zo: ZoConfig {
-            lr: args.get_f64("lr", 1e-4) as f32,
-            eps: args.get_f64("eps", 1e-3) as f32,
-            seed: args.get_usize("seed", 42) as u64,
+            lr: args.get_f64_checked("lr", 1e-4)? as f32,
+            eps: args.get_f64_checked("eps", 1e-3)? as f32,
+            seed: args.get_usize_checked("seed", 42)? as u64,
         },
         engine: match args.get_or("engine", "zo2").as_str() {
             "mezo" => EngineKind::Mezo,
@@ -100,19 +246,19 @@ fn cmd_train(args: &Args) -> Result<()> {
             "overlap" => RunMode::Overlapped,
             m => bail!("unknown mode `{m}`"),
         },
-        log_every: args.get_usize("log-every", 10),
+        log_every: args.get_usize_checked("log-every", 10)?,
         tiering,
         dram_budget_bytes,
-        dram_slots: args.get_usize("dram-slots", 4),
+        dram_slots: args.get_usize_checked("dram-slots", 4)?,
         spill_placement: parse_spill_placement(args)?,
         update_site: match args.get_or("update-site", "device").as_str() {
             "device" | "gpu" => UpdateSite::Device,
             "cpu" | "host" => UpdateSite::Cpu,
             s => bail!("unknown update site `{s}` (expected device|cpu)"),
         },
-        host_threads: args.get_usize("host-threads", 0),
-        dp_workers: args.get_usize("dp-workers", 1).max(1),
-        dp_shards: args.get_usize("dp-shards", 0),
+        host_threads: args.get_usize_checked("host-threads", 0)?,
+        dp_workers: args.get_usize_checked("dp-workers", 1)?.max(1),
+        dp_shards: args.get_usize_checked("dp-shards", 0)?,
     };
     let report = train(&cfg, true)?;
     println!(
@@ -135,14 +281,30 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let name = args.get_or("model", "OPT-13B");
     let shape = opt_by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
-    let read_gbps = args.get_f64("nvme-gbps", 6.8);
-    let write_gbps = args.get_f64("nvme-write-gbps", read_gbps * 0.75);
-    let hw = Hardware::a100_pcie4().with_nvme_gbps(read_gbps, write_gbps);
-    let wire = Codec::parse(&args.get_or("wire", "fp32")).unwrap();
+    let read_gbps = args.get_f64_checked("nvme-gbps", 6.8)?;
+    anyhow::ensure!(read_gbps > 0.0, "bad --nvme-gbps: {read_gbps} (must be positive)");
+    let write_gbps = args.get_f64_checked("nvme-write-gbps", read_gbps * 0.75)?;
+    anyhow::ensure!(write_gbps > 0.0, "bad --nvme-write-gbps: {write_gbps} (must be positive)");
+
+    // Device list: `--devices N` homogeneous A100s, or an explicit
+    // (possibly mixed) `--device-spec` list.
+    let devices_flag = if args.has("devices") {
+        Some(args.get_usize_checked("devices", 1)?.max(1))
+    } else {
+        None
+    };
+    let hw_list: Vec<Hardware> = parse_device_specs(args, devices_flag)?
+        .into_iter()
+        .map(|hw| hw.with_nvme_gbps(read_gbps, write_gbps))
+        .collect();
+    let devices = hw_list.len();
+
+    let wire = Codec::parse(&args.get_or("wire", "fp32"))
+        .ok_or_else(|| anyhow::anyhow!("bad wire"))?;
     let wl = Workload {
         shape,
-        batch: args.get_usize("batch", 1),
-        seq: args.get_usize("seq", 2048),
+        batch: args.get_usize_checked("batch", 1)?,
+        seq: args.get_usize_checked("seq", 2048)?,
         wire,
         compute: match args.get_or("compute", "fp32").as_str() {
             "tf32" => ComputeMode::Tf32,
@@ -153,21 +315,30 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     };
     let param_bytes = wire.bytes_per_el().min(4);
     let tiering = parse_tiering(args)?;
-    let dram_slots = args.get_usize("dram-slots", 4);
+    let dram_slots = args.get_usize_checked("dram-slots", 4)?;
     let spill_placement = parse_spill_placement(args)?;
-    let steps = args.get_usize("sim-steps", 4);
-    let devices = args.get_usize("devices", 1).max(1);
-    let microbatches = args.get_usize("microbatches", 1).max(1);
+    let steps = args.get_usize_checked("sim-steps", 4)?;
+    let microbatches = args.get_usize_checked("microbatches", 1)?.max(1);
     let strategy = match args.get_or("shard", "dp").as_str() {
         "dp" | "data-parallel" => ShardStrategy::DataParallel,
         "pipeline" | "pp" => ShardStrategy::Pipeline,
         s => bail!("unknown shard strategy `{s}` (expected dp|pipeline)"),
     };
-    let layout = match args.get_or("layout", "contiguous").as_str() {
-        "contiguous" | "block" => ShardLayout::Contiguous,
-        "cyclic" | "roundrobin" => ShardLayout::Cyclic,
-        l => bail!("unknown layout `{l}` (expected contiguous|cyclic)"),
+    // `weighted` is the bottleneck-aware placement hint: contiguous, but
+    // with block counts proportional to each device's block-round
+    // throughput (more blocks on the faster hosts of a mixed cluster).
+    let (layout, weighted) = match args.get_or("layout", "contiguous").as_str() {
+        "contiguous" | "block" => (ShardLayout::Contiguous, false),
+        "cyclic" | "roundrobin" => (ShardLayout::Cyclic, false),
+        "weighted" | "hint" => (ShardLayout::Contiguous, true),
+        l => bail!("unknown layout `{l}` (expected contiguous|cyclic|weighted)"),
     };
+    if weighted && (devices == 1 || strategy != ShardStrategy::Pipeline) {
+        bail!(
+            "--layout weighted is a pipeline block-placement hint: it needs --devices N \
+             (or --device-spec) with --shard pipeline"
+        );
+    }
     if microbatches > 1 && (devices == 1 || strategy != ShardStrategy::Pipeline) {
         bail!(
             "--microbatches M splits the step for pipeline sharding: it needs \
@@ -179,131 +350,143 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         overlap: args.get_or("mode", "overlap") != "seq",
         reusable_mem: !args.has("no-reusable-mem"),
         efficient_update: !args.has("no-efficient-update"),
-        slots: args.get_usize("slots", 3),
-        disk_batch: args.get_usize("disk-batch", 1).max(1),
+        slots: args.get_usize_checked("slots", 3)?,
+        disk_batch: args.get_usize_checked("disk-batch", 1)?.max(1),
         spill_placement,
+        dram_slots,
         ..Policy::default()
     };
-    let mut per_device_spilled: Option<Vec<usize>> = None;
-    if tiering == Tiering::ThreeTier {
-        let budget = MemoryBudget {
-            hbm: hw.hbm_capacity,
-            dram: (args.get_f64("dram-budget", 64.0) * (1u64 << 30) as f64) as u64,
-            nvme: 2 << 40,
-        };
-        if devices > 1 && strategy == ShardStrategy::Pipeline {
-            // Per-partition planning: each pipeline host holds only its own
-            // blocks, so its spill set is sized against its own DRAM budget
-            // (`--dram-budget` is per host).
-            let budgets = vec![budget; devices];
-            let plans = plan_three_tier_partitioned(
-                &wl,
-                &budgets,
-                layout,
-                policy.slots,
-                dram_slots,
-                param_bytes,
-                &hw,
-                spill_placement,
-            );
-            policy.tiering = Tiering::ThreeTier;
-            policy.spilled = plans.iter().map(|p| p.spilled_blocks).sum();
-            policy.dram_slots = plans.iter().map(|p| p.dram_slots).max().unwrap_or(1).max(1);
-            println!(
-                "tiers (per partition, {} GB DDR per host; a full copy would need {} MB):",
-                args.get_f64("dram-budget", 64.0),
-                fmt_mb(two_tier_dram_bytes(&wl)),
-            );
-            for (d, plan) in plans.iter().enumerate() {
-                // A budget smaller than the staging window itself is
-                // infeasible — refuse rather than simulate a host that
-                // cannot hold its own prefetch window.
-                anyhow::ensure!(
-                    plan.peaks.dram <= budgets[d].dram,
-                    "device {d}: DDR peak {} MB (incl. the {}-slot staging window) exceeds \
-                     the per-host --dram-budget ({} MB) — lower --dram-slots or raise \
-                     --dram-budget",
-                    fmt_mb(plan.peaks.dram),
-                    plan.dram_slots,
-                    fmt_mb(budgets[d].dram),
-                );
-                // Any other tier overflowing is a different knob — name it.
-                anyhow::ensure!(
-                    budgets[d].fits(&plan.peaks),
-                    "device {d}: tier peaks {:?} do not fit the host budget {:?}",
-                    plan.peaks,
-                    budgets[d],
-                );
-                println!(
-                    "  device {d}: {} blocks in DDR + {} on NVMe | peaks: DDR {} MB, NVMe {} MB",
-                    plan.resident_blocks,
-                    plan.spilled_blocks,
-                    fmt_mb(plan.peaks.dram),
-                    fmt_mb(plan.peaks.nvme),
-                );
-            }
-            per_device_spilled = Some(plans.iter().map(|p| p.spilled_blocks).collect());
-        } else {
-            // Single device, or DP: every host holds a full copy, so the
-            // single-replica spill plan applies per device as-is.
-            let plan = plan_three_tier(
-                &wl,
-                &budget,
-                policy.slots,
-                dram_slots,
-                param_bytes,
-                &hw,
-                spill_placement,
-            );
-            // Same feasibility rule as the per-partition branch: a budget
-            // smaller than the staging window cannot run at all.
-            anyhow::ensure!(
-                plan.peaks.dram <= budget.dram,
-                "DDR peak {} MB (incl. the {}-slot staging window) exceeds --dram-budget \
-                 ({} MB) — lower --dram-slots or raise --dram-budget",
-                fmt_mb(plan.peaks.dram),
-                plan.dram_slots,
-                fmt_mb(budget.dram),
-            );
-            policy.tiering = Tiering::ThreeTier;
-            policy.spilled = plan.spilled_blocks;
-            policy.dram_slots = plan.dram_slots.max(1);
-            println!(
-                "tiers: {} blocks in DDR + {} on NVMe | peaks: HBM {} MB, DDR {} MB \
-                 (two-tier would need {} MB), NVMe {} MB",
-                plan.resident_blocks,
-                plan.spilled_blocks,
-                fmt_mb(plan.peaks.hbm),
-                fmt_mb(plan.peaks.dram),
-                fmt_mb(two_tier_dram_bytes(&wl)),
-                fmt_mb(plan.peaks.nvme),
-            );
-        }
+
+    // Flags outside their active branch are still validated, never silently
+    // dropped: a malformed budget or link list is a hard error in ANY mode
+    // (the checked-parsing contract this CLI promises).
+    if tiering == Tiering::TwoTier && args.has("dram-budget") {
+        parse_dram_budgets(args, devices)?;
+    }
+    if devices == 1 && (args.has("link") || args.has("link-gbps")) {
+        parse_links(args, 1)?;
     }
 
     if devices > 1 {
-        // Multi-GPU simulation: per-device streams + an interconnect.
-        let link = match args.get_or("link", "nvlink").as_str() {
-            "nvlink" => Interconnect::nvlink(),
-            "pcie" | "pcie-p2p" => Interconnect::pcie_p2p(),
-            l => bail!("unknown link `{l}` (expected nvlink|pcie)"),
-        };
-        let link = match args.get("link-gbps") {
-            Some(s) => match s.parse::<f64>() {
-                Ok(gbps) if gbps > 0.0 => link.with_gbps(gbps),
-                _ => bail!("bad --link-gbps `{s}`"),
-            },
-            None => link,
-        };
+        // Multi-GPU simulation: per-device streams, per-device hardware
+        // pricing, and per-device links.
+        let links = parse_links(args, devices)?;
         let spec = ShardSpec { devices, layout, strategy, microbatches };
-        let cluster = Cluster::homogeneous(hw, devices, link);
+        let link_desc = if links.windows(2).all(|w| w[0].name == w[1].name) {
+            links[0].name.clone()
+        } else {
+            "mixed".to_string()
+        };
+        let cluster = Cluster { devices: hw_list.clone(), links };
         let costs = ClusterCost::new(&cluster, &wl)?;
-        let plan = build_sharded_plan_spilled(
+
+        // Block placement: the layout's owner rule, or the weighted hint.
+        let owners: Option<Vec<usize>> = if weighted {
+            let weights = bottleneck_weights(&costs, devices);
+            Some(weighted_contiguous_owners(wl.shape.n_layers, &weights))
+        } else {
+            None
+        };
+        let per_dev = match &owners {
+            Some(o) => blocks_per_device_of(o, devices),
+            None => blocks_per_device(layout, wl.shape.n_layers, devices),
+        };
+
+        let mut tiers: Option<Vec<DeviceTier>> = None;
+        if tiering == Tiering::ThreeTier {
+            let budget_bytes = parse_dram_budgets(args, devices)?;
+            if strategy == ShardStrategy::Pipeline {
+                // Per-partition planning: each pipeline host holds only its
+                // own blocks, so its spill set AND its staging-window depth
+                // are sized against its own DRAM budget.
+                let budgets: Vec<MemoryBudget> = budget_bytes
+                    .iter()
+                    .zip(&hw_list)
+                    .map(|(&dram, hw)| MemoryBudget { hbm: hw.hbm_capacity, dram, nvme: 2 << 40 })
+                    .collect();
+                let counts: Vec<usize> = per_dev.iter().map(|v| v.len()).collect();
+                let hws: Vec<&Hardware> = hw_list.iter().collect();
+                let plans = plan_three_tier_owned(
+                    &wl,
+                    &budgets,
+                    &counts,
+                    policy.slots,
+                    dram_slots,
+                    param_bytes,
+                    &hws,
+                    spill_placement,
+                );
+                policy.tiering = Tiering::ThreeTier;
+                policy.spilled = plans.iter().map(|p| p.spilled_blocks).sum();
+                println!(
+                    "tiers (per partition; a full copy would need {} MB):",
+                    fmt_mb(two_tier_dram_bytes(&wl)),
+                );
+                for (d, plan) in plans.iter().enumerate() {
+                    // A budget smaller than the staging window itself is
+                    // infeasible — refuse, naming the device, rather than
+                    // simulate a host that cannot hold its own window.
+                    ensure_budget_feasible(
+                        plan,
+                        &budgets[d],
+                        &format!("device {d} ({})", hw_list[d].name),
+                    )?;
+                    println!(
+                        "  device {d} ({}, {:.0} GB DDR): {} blocks in DDR + {} on NVMe | \
+                         peaks: DDR {} MB, NVMe {} MB",
+                        hw_list[d].name,
+                        budget_bytes[d] as f64 / (1u64 << 30) as f64,
+                        plan.resident_blocks,
+                        plan.spilled_blocks,
+                        fmt_mb(plan.peaks.dram),
+                        fmt_mb(plan.peaks.nvme),
+                    );
+                }
+                tiers = Some(plans.iter().map(|p| p.device_tier()).collect());
+            } else {
+                // DP: every replica holds a full copy under one shared spill
+                // plan, so genuinely distinct per-host budgets cannot be
+                // honoured on this path yet.
+                anyhow::ensure!(
+                    budget_bytes.windows(2).all(|w| w[0] == w[1]),
+                    "--shard dp runs a full replica per host with one shared spill plan; \
+                     distinct per-host --dram-budget values need --shard pipeline (or give \
+                     every host the same budget)"
+                );
+                let hbm = hw_list.iter().map(|h| h.hbm_capacity).min().unwrap();
+                let budget = MemoryBudget { hbm, dram: budget_bytes[0], nvme: 2 << 40 };
+                let plan = plan_three_tier(
+                    &wl,
+                    &budget,
+                    policy.slots,
+                    dram_slots,
+                    param_bytes,
+                    &hw_list[0],
+                    spill_placement,
+                );
+                ensure_budget_feasible(&plan, &budget, "each DP replica's host")?;
+                policy.tiering = Tiering::ThreeTier;
+                policy.spilled = plan.spilled_blocks;
+                policy.dram_slots = plan.dram_slots.max(1);
+                println!(
+                    "tiers (per DP replica): {} blocks in DDR + {} on NVMe | peaks: DDR {} MB \
+                     (two-tier would need {} MB), NVMe {} MB",
+                    plan.resident_blocks,
+                    plan.spilled_blocks,
+                    fmt_mb(plan.peaks.dram),
+                    fmt_mb(two_tier_dram_bytes(&wl)),
+                    fmt_mb(plan.peaks.nvme),
+                );
+            }
+        }
+
+        let plan = build_sharded_plan_tiered(
             wl.shape.n_layers,
             steps,
             policy,
             &spec,
-            per_device_spilled.as_deref(),
+            tiers.as_deref(),
+            owners.as_deref(),
         );
         let (sched, timeline) = simulate(&plan, &costs, policy);
         // DP runs one batch shard per device (weak scaling); pipeline runs
@@ -319,26 +502,30 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 ShardStrategy::DataParallel => "dp",
                 ShardStrategy::Pipeline => "pipeline",
             },
-            match layout {
-                ShardLayout::Contiguous => "contiguous",
-                ShardLayout::Cyclic => "cyclic",
+            if weighted {
+                "weighted"
+            } else {
+                match layout {
+                    ShardLayout::Contiguous => "contiguous",
+                    ShardLayout::Cyclic => "cyclic",
+                }
             },
             if microbatches > 1 { format!(", M={microbatches}") } else { String::new() },
             sched.steady_step_s,
             tokens_per_step / sched.steady_step_s,
             sched.makespan,
             sched.bottleneck(),
-            cluster.link.name,
+            link_desc,
         );
-        let per_dev = blocks_per_device(layout, wl.shape.n_layers, devices);
         for d in sched.devices() {
             let owned = match strategy {
                 ShardStrategy::Pipeline => per_dev[d.0].len(),
                 ShardStrategy::DataParallel => wl.shape.n_layers,
             };
             println!(
-                "  device {}: {} blocks, {}",
+                "  device {} ({}): {} blocks, {}",
                 d.0,
+                hw_list[d.0].name,
                 owned,
                 sched.bottleneck_of(d)
             );
@@ -349,7 +536,32 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let costs = SimCost::new(&hw, &wl);
+    // Single device (the paper's setting).
+    let hw = &hw_list[0];
+    if tiering == Tiering::ThreeTier {
+        let dram = parse_dram_budgets(args, 1)?[0];
+        let budget = MemoryBudget { hbm: hw.hbm_capacity, dram, nvme: 2 << 40 };
+        let plan =
+            plan_three_tier(&wl, &budget, policy.slots, dram_slots, param_bytes, hw, spill_placement);
+        // Same feasibility rule as the sharded branches: a budget smaller
+        // than the staging window cannot run at all.
+        ensure_budget_feasible(&plan, &budget, "this host")?;
+        policy.tiering = Tiering::ThreeTier;
+        policy.spilled = plan.spilled_blocks;
+        policy.dram_slots = plan.dram_slots.max(1);
+        println!(
+            "tiers: {} blocks in DDR + {} on NVMe | peaks: HBM {} MB, DDR {} MB \
+             (two-tier would need {} MB), NVMe {} MB",
+            plan.resident_blocks,
+            plan.spilled_blocks,
+            fmt_mb(plan.peaks.hbm),
+            fmt_mb(plan.peaks.dram),
+            fmt_mb(two_tier_dram_bytes(&wl)),
+            fmt_mb(plan.peaks.nvme),
+        );
+    }
+
+    let costs = SimCost::new(hw, &wl);
     let plan = build_plan(wl.shape.n_layers, steps, policy);
     let (sched, timeline) = simulate(&plan, &costs, policy);
     let tokens = (wl.batch * wl.seq) as f64;
@@ -368,8 +580,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_memory(args: &Args) -> Result<()> {
     let hw = Hardware::a100_pcie4();
-    let batch = args.get_usize("batch", 1);
-    let seq = args.get_usize("seq", 2048);
+    let batch = args.get_usize_checked("batch", 1)?;
+    let seq = args.get_usize_checked("seq", 2048)?;
     println!("{:<10} {:>12} {:>12} {:>12} {:>12}   (MB, B={batch} T={seq})",
              "model", "AdamW", "SGD", "MeZO", "ZO2");
     for shape in opt_family() {
@@ -409,4 +621,82 @@ fn cmd_info(args: &Args) -> Result<()> {
         println!("  {name:<14} {file}");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse_with_bools(v.iter().map(|x| x.to_string()), BOOL_FLAGS)
+    }
+
+    #[test]
+    fn device_specs_expand_counts_in_order() {
+        let a = args(&["simulate", "--device-spec", "a100:2,rtx4090:2"]);
+        let hws = parse_device_specs(&a, None).unwrap();
+        assert_eq!(hws.len(), 4);
+        assert_eq!(hws[0].name, "A100-80GB-PCIe4");
+        assert_eq!(hws[1].name, "A100-80GB-PCIe4");
+        assert_eq!(hws[2].name, "RTX4090-24GB-PCIe4");
+        assert_eq!(hws[3].name, "RTX4090-24GB-PCIe4");
+        // Count-less entries mean one device; agreement with --devices holds.
+        let a = args(&["simulate", "--device-spec", "h100,a100", "--devices", "2"]);
+        let hws = parse_device_specs(&a, Some(2)).unwrap();
+        assert_eq!(hws[0].name, "H100-80GB-PCIe5");
+        // Disagreement, unknown presets and bad counts are loud errors.
+        let a = args(&["simulate", "--device-spec", "a100:2"]);
+        assert!(parse_device_specs(&a, Some(4)).unwrap_err().to_string().contains("--devices"));
+        let a = args(&["simulate", "--device-spec", "tpu:2"]);
+        let e = parse_device_specs(&a, None).unwrap_err().to_string();
+        assert!(e.contains("tpu") && e.contains("a100"), "{e}");
+        let a = args(&["simulate", "--device-spec", "a100:x"]);
+        assert!(parse_device_specs(&a, None).is_err());
+        let a = args(&["simulate", "--device-spec", "a100:0"]);
+        assert!(parse_device_specs(&a, None).is_err());
+        // No spec: N default devices.
+        assert_eq!(parse_device_specs(&args(&["simulate"]), Some(3)).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn dram_budget_lists_broadcast_and_validate() {
+        let a = args(&["simulate", "--dram-budget", "64"]);
+        assert_eq!(parse_dram_budgets(&a, 4).unwrap(), vec![64u64 << 30; 4]);
+        let a = args(&["simulate", "--dram-budget", "64,32,32,64"]);
+        assert_eq!(
+            parse_dram_budgets(&a, 4).unwrap(),
+            vec![64u64 << 30, 32u64 << 30, 32u64 << 30, 64u64 << 30]
+        );
+        // Missing, malformed, non-positive and mis-sized lists all fail.
+        let e = parse_dram_budgets(&args(&["simulate"]), 1).unwrap_err().to_string();
+        assert!(e.contains("--dram-budget"), "{e}");
+        assert!(parse_dram_budgets(&args(&["simulate", "--dram-budget", "64x"]), 1).is_err());
+        assert!(parse_dram_budgets(&args(&["simulate", "--dram-budget", "0"]), 1).is_err());
+        assert!(parse_dram_budgets(&args(&["simulate", "--dram-budget", "64,-32"]), 2).is_err());
+        let e = parse_dram_budgets(&args(&["simulate", "--dram-budget", "64,32"]), 4)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("2 budgets") && e.contains("4 host(s)"), "{e}");
+    }
+
+    #[test]
+    fn link_lists_broadcast_and_apply_gbps() {
+        let a = args(&["simulate", "--link", "nvlink"]);
+        let links = parse_links(&a, 4).unwrap();
+        assert_eq!(links.len(), 4);
+        assert!(links.iter().all(|l| l.name == "NVLink"));
+        let a = args(&["simulate", "--link", "nvlink,nvlink,pcie,pcie"]);
+        let links = parse_links(&a, 4).unwrap();
+        assert_eq!(links[0].name, "NVLink");
+        assert_eq!(links[3].name, "PCIe-P2P");
+        let a = args(&["simulate", "--link", "nvlink", "--link-gbps", "100,100,12,12"]);
+        let links = parse_links(&a, 4).unwrap();
+        assert!(links[0].bytes_per_s > links[2].bytes_per_s);
+        // Mis-sized and malformed lists are loud.
+        assert!(parse_links(&args(&["simulate", "--link", "nvlink,pcie"]), 4).is_err());
+        assert!(parse_links(&args(&["simulate", "--link-gbps", "1,2,3"]), 4).is_err());
+        assert!(parse_links(&args(&["simulate", "--link-gbps", "fast"]), 2).is_err());
+        assert!(parse_links(&args(&["simulate", "--link-gbps", "-5"]), 2).is_err());
+        assert!(parse_links(&args(&["simulate", "--link", "token-ring"]), 2).is_err());
+    }
 }

@@ -142,17 +142,22 @@ pub fn simulate(tasks: &[Task], costs: &dyn CostProvider, policy: Policy) -> (Sc
             t0 = t0.max(end[d]);
         }
         t0 += t.extra_latency;
+        // Durations go through the device-aware `_on`/`_from` variants: a
+        // heterogeneous provider prices each device from its own hardware
+        // (and each hop from the sender's link); the trait defaults forward
+        // to the device-less methods, so everything else is unchanged.
+        let dev = t.device();
         let dur = match t.kind {
             TaskKind::Upload => {
-                let base = costs.upload_s() + costs.host_decode_s();
-                if policy.reusable_mem { base } else { base + costs.malloc_s() }
+                let base = costs.upload_s_on(dev) + costs.host_decode_s_on(dev);
+                if policy.reusable_mem { base } else { base + costs.malloc_s_on(dev) }
             }
             TaskKind::Compute => match t.microbatch {
-                Some(mb) => costs.compute_microbatch_s(t.module, mb.index, mb.of),
-                None => costs.compute_s(t.module),
+                Some(mb) => costs.compute_microbatch_s_on(dev, t.module, mb.index, mb.of),
+                None => costs.compute_s_on(dev, t.module),
             },
-            TaskKind::Offload => costs.offload_s() + costs.host_encode_s(),
-            TaskKind::Update => costs.update_s(),
+            TaskKind::Offload => costs.offload_s_on(dev) + costs.host_encode_s_on(dev),
+            TaskKind::Update => costs.update_s_on(dev),
             TaskKind::DiskRead => {
                 // A read joins the running batch iff it was already queued
                 // when the stream freed up (no idle gap), the previous task
@@ -166,16 +171,16 @@ pub fn simulate(tasks: &[Task], costs: &dyn CostProvider, policy: Policy) -> (Sc
                     && *batch < policy.disk_batch;
                 if coalesce {
                     *batch += 1;
-                    costs.disk_read_bw_s()
+                    costs.disk_read_bw_s_on(dev)
                 } else {
                     *batch = 1;
-                    costs.disk_read_s()
+                    costs.disk_read_s_on(dev)
                 }
             }
-            TaskKind::DiskWrite => costs.disk_write_s(),
+            TaskKind::DiskWrite => costs.disk_write_s_on(dev),
             TaskKind::ActivationXfer => match t.microbatch {
-                Some(mb) => costs.link_activation_microbatch_s(mb.of),
-                None => costs.link_activation_s(),
+                Some(mb) => costs.link_activation_microbatch_s_from(dev, mb.of),
+                None => costs.link_activation_s_from(dev),
             },
             TaskKind::SeedBcast => costs.link_seed_s(),
             TaskKind::GradReduce => costs.link_grad_s(),

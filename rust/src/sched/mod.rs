@@ -410,6 +410,89 @@ pub trait CostProvider {
     fn link_activation_microbatch_s(&self, of: usize) -> f64 {
         self.link_activation_s() / of.max(1) as f64
     }
+
+    // --- device-aware pricing (heterogeneous clusters) -----------------------
+    //
+    // The simulator routes every task through these, passing the task's
+    // device.  The defaults ignore the device and forward to the device-less
+    // method, so single-device providers and homogeneous clusters are
+    // untouched (bit-identical schedules — golden-frozen); a heterogeneous
+    // provider ([`crate::costmodel::ClusterCost`]) overrides them to price
+    // each device from its own `Hardware`, and link tasks from the sender's
+    // own interconnect.
+
+    /// Upload duration on `device`.
+    fn upload_s_on(&self, device: DeviceId) -> f64 {
+        let _ = device;
+        self.upload_s()
+    }
+    /// Offload duration on `device`.
+    fn offload_s_on(&self, device: DeviceId) -> f64 {
+        let _ = device;
+        self.offload_s()
+    }
+    /// Dual-forward duration of `module` on `device`.
+    fn compute_s_on(&self, device: DeviceId, module: Module) -> f64 {
+        let _ = device;
+        self.compute_s(module)
+    }
+    /// Standalone update duration on `device`.
+    fn update_s_on(&self, device: DeviceId) -> f64 {
+        let _ = device;
+        self.update_s()
+    }
+    /// cudaMalloc latency on `device`.
+    fn malloc_s_on(&self, device: DeviceId) -> f64 {
+        let _ = device;
+        self.malloc_s()
+    }
+    /// Host fused decode on `device`'s host.
+    fn host_decode_s_on(&self, device: DeviceId) -> f64 {
+        let _ = device;
+        self.host_decode_s()
+    }
+    /// Host fused encode on `device`'s host.
+    fn host_encode_s_on(&self, device: DeviceId) -> f64 {
+        let _ = device;
+        self.host_encode_s()
+    }
+    /// NVMe read on `device`'s host.
+    fn disk_read_s_on(&self, device: DeviceId) -> f64 {
+        let _ = device;
+        self.disk_read_s()
+    }
+    /// Bandwidth-only batched NVMe read on `device`'s host.
+    fn disk_read_bw_s_on(&self, device: DeviceId) -> f64 {
+        let _ = device;
+        self.disk_read_bw_s()
+    }
+    /// NVMe write-back on `device`'s host.
+    fn disk_write_s_on(&self, device: DeviceId) -> f64 {
+        let _ = device;
+        self.disk_write_s()
+    }
+    /// One microbatch slice of `module` on `device`.
+    fn compute_microbatch_s_on(
+        &self,
+        device: DeviceId,
+        module: Module,
+        index: usize,
+        of: usize,
+    ) -> f64 {
+        let _ = device;
+        self.compute_microbatch_s(module, index, of)
+    }
+    /// Activation handoff sent by `device` (charged on the sender's
+    /// interconnect stream; heterogeneous clusters price the sender's link).
+    fn link_activation_s_from(&self, device: DeviceId) -> f64 {
+        let _ = device;
+        self.link_activation_s()
+    }
+    /// Microbatched activation handoff sent by `device`.
+    fn link_activation_microbatch_s_from(&self, device: DeviceId, of: usize) -> f64 {
+        let _ = device;
+        self.link_activation_microbatch_s(of)
+    }
 }
 
 #[cfg(test)]

@@ -54,8 +54,8 @@
 //! own DRAM budget.
 
 use crate::sched::{
-    is_spilled_block, DeviceId, Microbatch, Module, Policy, StreamId, StreamKind, Task, TaskKind,
-    Tiering,
+    is_spilled_block, CostProvider, DeviceId, Microbatch, Module, Policy, StreamId, StreamKind,
+    Task, TaskKind, Tiering,
 };
 
 /// How blocks map to devices under pipeline sharding.
@@ -156,6 +156,92 @@ pub fn blocks_per_device(layout: ShardLayout, n_blocks: usize, devices: usize) -
     per
 }
 
+/// Blocks owned by each device under an explicit owner map
+/// (`owners[i]` = owning device of block `i`).
+pub fn blocks_per_device_of(owners: &[usize], devices: usize) -> Vec<Vec<usize>> {
+    let mut per: Vec<Vec<usize>> = vec![Vec::new(); devices.max(1)];
+    for (i, &d) in owners.iter().enumerate() {
+        per[d].push(i);
+    }
+    per
+}
+
+/// Per-device three-tier parameters resolved by the partitioned planner
+/// ([`crate::costmodel::plan_three_tier_partitioned`] /
+/// `plan_three_tier_owned`): how many of the device's *own* blocks spill
+/// and how deep its DRAM staging window is.  Carrying the window depth per
+/// device (instead of collapsing all plans into one `Policy::dram_slots`)
+/// keeps a small-budget host's prefetch look-ahead honest while an ample
+/// sibling keeps the full window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceTier {
+    /// Blocks of this device's partition spilled to its NVMe tier.
+    pub spilled: usize,
+    /// This host's DRAM staging-window depth (0 when nothing spills).
+    pub dram_slots: usize,
+}
+
+/// Bottleneck-aware layout hint: contiguous block counts proportional to
+/// `weights` (largest-remainder apportionment; ties to the lower device).
+/// Use a device's block-round throughput as its weight
+/// ([`bottleneck_weights`]) to put more blocks on faster devices — the
+/// heterogeneous-cluster placement the `multi_gpu` bench quantifies.
+/// Ownership is monotone like [`ShardLayout::Contiguous`], so activation
+/// hops stay at device-count − 1 per step.
+pub fn weighted_contiguous_owners(n_blocks: usize, weights: &[f64]) -> Vec<usize> {
+    let devices = weights.len().max(1);
+    let total: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+    if devices == 1 || total <= 0.0 {
+        return (0..n_blocks)
+            .map(|i| block_owner(ShardLayout::Contiguous, n_blocks, devices, i))
+            .collect();
+    }
+    let shares: Vec<f64> =
+        weights.iter().map(|w| w.max(0.0) / total * n_blocks as f64).collect();
+    let mut counts: Vec<usize> = shares.iter().map(|s| s.floor() as usize).collect();
+    let mut rem = n_blocks - counts.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..devices).collect();
+    order.sort_by(|&a, &b| {
+        let fa = shares[a] - shares[a].floor();
+        let fb = shares[b] - shares[b].floor();
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    for &d in &order {
+        if rem == 0 {
+            break;
+        }
+        counts[d] += 1;
+        rem -= 1;
+    }
+    let mut owners = Vec::with_capacity(n_blocks);
+    for (d, &c) in counts.iter().enumerate() {
+        owners.extend(std::iter::repeat(d).take(c));
+    }
+    owners
+}
+
+/// Per-device weight for [`weighted_contiguous_owners`]: the inverse of the
+/// device's block-round critical time (the slowest of its compute, upload
+/// and offload paths for one block) under `costs`.  On a homogeneous
+/// cluster all weights are equal and the hint reduces to the balanced
+/// contiguous layout.
+pub fn bottleneck_weights(costs: &dyn CostProvider, devices: usize) -> Vec<f64> {
+    (0..devices.max(1))
+        .map(|d| {
+            let dev = DeviceId(d);
+            let round = costs
+                .compute_s_on(dev, Module::Block(0))
+                .max(costs.upload_s_on(dev) + costs.host_decode_s_on(dev))
+                .max(costs.offload_s_on(dev) + costs.host_encode_s_on(dev));
+            if round > 0.0 {
+                1.0 / round
+            } else {
+                1.0
+            }
+        })
+        .collect()
+}
+
 /// Per-device scheduler lane: the stream cursors and resource rings of one
 /// device (its reusable-buffer slot ring and DRAM staging window).
 struct Lane {
@@ -176,13 +262,17 @@ struct Lane {
 }
 
 impl Lane {
-    fn new(device: usize, policy: &Policy) -> Self {
+    /// `dram_slots` is this device's own staging-window depth — the
+    /// per-partition planner hands small-budget hosts a smaller window than
+    /// their siblings (callers without per-device plans pass
+    /// `policy.dram_slots`).
+    fn new(device: usize, policy: &Policy, dram_slots: usize) -> Self {
         Self {
             device: DeviceId(device),
             last_on: [None; 6],
             offload_ring: vec![None; policy.slots.max(1)],
             ring_pos: 0,
-            dram_ring: vec![None; policy.dram_slots.max(1)],
+            dram_ring: vec![None; dram_slots.max(1)],
             dram_pos: 0,
             prev_compute: None,
             prev_any: None,
@@ -358,9 +448,11 @@ pub fn build_sharded_plan(
 /// (the per-device plans come from
 /// [`crate::costmodel::plan_three_tier_partitioned`], which sizes each
 /// partition against its own host's DRAM budget).  `None` keeps the global
-/// `policy.spilled` set.  Data-parallel plans ignore the per-device vector:
-/// every DP replica holds the full model against its own host's budget, so
-/// the global (single-replica) spill plan applies per device as-is.
+/// `policy.spilled` set.  Every device keeps the global `policy.dram_slots`
+/// window — use [`build_sharded_plan_tiered`] to carry per-device window
+/// depths too.  Data-parallel plans ignore the per-device vector: every DP
+/// replica holds the full model against its own host's budget, so the
+/// global (single-replica) spill plan applies per device as-is.
 pub fn build_sharded_plan_spilled(
     n_blocks: usize,
     steps: usize,
@@ -368,26 +460,52 @@ pub fn build_sharded_plan_spilled(
     spec: &ShardSpec,
     per_device_spilled: Option<&[usize]>,
 ) -> Vec<Task> {
-    if let Some(sp) = per_device_spilled {
-        // A stale or mis-sized vector would silently under-spill the
-        // missing devices and report an optimistic schedule.
-        assert_eq!(
-            sp.len(),
-            spec.devices.max(1),
-            "per_device_spilled must have one entry per device"
-        );
+    let tiers: Option<Vec<DeviceTier>> = per_device_spilled.map(|sp| {
+        sp.iter().map(|&s| DeviceTier { spilled: s, dram_slots: policy.dram_slots }).collect()
+    });
+    build_sharded_plan_tiered(n_blocks, steps, policy, spec, tiers.as_deref(), None)
+}
+
+/// The general pipeline entry point behind `build_sharded_plan*`:
+///
+/// * `tiers` — per-device three-tier parameters (spill count **and** DRAM
+///   staging-window depth per host), from the per-partition planner.
+///   `None` keeps the global `policy.spilled` / `policy.dram_slots`.
+/// * `owners` — explicit block→device map overriding `spec.layout`
+///   (the bottleneck-aware layout hint, e.g.
+///   [`weighted_contiguous_owners`]).  `None` keeps the layout's owner rule.
+///
+/// Data-parallel plans ignore both (full replica per device).  Mis-sized
+/// slices panic: a stale vector would silently mis-place blocks or
+/// under-spill a device and report an optimistic schedule.
+pub fn build_sharded_plan_tiered(
+    n_blocks: usize,
+    steps: usize,
+    policy: Policy,
+    spec: &ShardSpec,
+    tiers: Option<&[DeviceTier]>,
+    owners: Option<&[usize]>,
+) -> Vec<Task> {
+    let devices = spec.devices.max(1);
+    if let Some(tv) = tiers {
+        assert_eq!(tv.len(), devices, "tiers must have one entry per device");
+    }
+    if let Some(o) = owners {
+        assert_eq!(o.len(), n_blocks, "owners must name every block's device");
+        assert!(o.iter().all(|&d| d < devices), "owner out of range");
     }
     match spec.strategy {
         ShardStrategy::Pipeline => pipeline_plan(
             n_blocks,
             steps,
             policy,
-            spec.devices.max(1),
+            devices,
             spec.layout,
             spec.microbatches.max(1),
-            per_device_spilled,
+            tiers,
+            owners,
         ),
-        ShardStrategy::DataParallel => dp_plan(n_blocks, steps, policy, spec.devices.max(1)),
+        ShardStrategy::DataParallel => dp_plan(n_blocks, steps, policy, devices),
     }
 }
 
@@ -411,6 +529,7 @@ fn spilled_count(policy: &Policy, n_blocks: usize) -> usize {
 /// memory-true under any slot count: the overlap comes from *boundary*
 /// blocks, whose downstream consumer starts on microbatch i while the
 /// sender computes microbatch i+1.
+#[allow(clippy::too_many_arguments)]
 fn pipeline_plan(
     n_blocks: usize,
     steps: usize,
@@ -418,7 +537,8 @@ fn pipeline_plan(
     devices: usize,
     layout: ShardLayout,
     microbatches: usize,
-    per_device_spilled: Option<&[usize]>,
+    tiers: Option<&[DeviceTier]>,
+    owners: Option<&[usize]>,
 ) -> Vec<Task> {
     let m_count = microbatches.max(1);
     // Microbatch tag: `None` at M = 1 so un-microbatched plans are
@@ -432,15 +552,25 @@ fn pipeline_plan(
         }
     };
     let mut b = PlanBuilder::new(policy);
-    let mut lanes: Vec<Lane> = (0..devices).map(|d| Lane::new(d, &policy)).collect();
+    // Each lane's staging window is its own host's: per-partition plans
+    // size it per device, everything else keeps the global policy depth.
+    let lane_dram = |d: usize| tiers.map_or(policy.dram_slots, |tv| tv[d].dram_slots);
+    let mut lanes: Vec<Lane> =
+        (0..devices).map(|d| Lane::new(d, &policy, lane_dram(d))).collect();
     let mut last_write: Vec<Option<usize>> = vec![None; n_blocks];
     let global_spilled = spilled_count(&policy, n_blocks);
-    let owner = |i: usize| block_owner(layout, n_blocks, devices, i);
-    let per_dev_blocks = blocks_per_device(layout, n_blocks, devices);
+    let owner = |i: usize| match owners {
+        Some(o) => o[i],
+        None => block_owner(layout, n_blocks, devices, i),
+    };
+    let per_dev_blocks = match owners {
+        Some(o) => blocks_per_device_of(o, devices),
+        None => blocks_per_device(layout, n_blocks, devices),
+    };
     let on_disk = |i: usize| -> bool {
-        match per_device_spilled {
+        match tiers {
             None => is_spilled_block(i, n_blocks, global_spilled, policy.spill_placement),
-            Some(sp) => {
+            Some(tv) => {
                 if policy.tiering != Tiering::ThreeTier {
                     return false;
                 }
@@ -448,12 +578,17 @@ fn pipeline_plan(
                 // block i's rank within its owner's list, against that
                 // device's own spill count.
                 let d = owner(i);
-                let k = per_dev_blocks[d].len();
-                let rank = match layout {
-                    ShardLayout::Contiguous => i - per_dev_blocks[d][0],
-                    ShardLayout::Cyclic => i / devices,
-                };
-                is_spilled_block(rank, k, sp.get(d).copied().unwrap_or(0), policy.spill_placement)
+                let list = &per_dev_blocks[d];
+                let rank = list
+                    .iter()
+                    .position(|&j| j == i)
+                    .expect("owner lists cover every block");
+                is_spilled_block(
+                    rank,
+                    list.len(),
+                    tv.get(d).map_or(0, |t| t.spilled),
+                    policy.spill_placement,
+                )
             }
         }
     };
@@ -624,10 +759,11 @@ fn pipeline_plan(
 /// (after every device's head).
 fn dp_plan(n_blocks: usize, steps: usize, policy: Policy, devices: usize) -> Vec<Task> {
     if devices <= 1 {
-        return pipeline_plan(n_blocks, steps, policy, 1, ShardLayout::Contiguous, 1, None);
+        return pipeline_plan(n_blocks, steps, policy, 1, ShardLayout::Contiguous, 1, None, None);
     }
     let mut b = PlanBuilder::new(policy);
-    let mut lanes: Vec<Lane> = (0..devices).map(|d| Lane::new(d, &policy)).collect();
+    let mut lanes: Vec<Lane> =
+        (0..devices).map(|d| Lane::new(d, &policy, policy.dram_slots)).collect();
     // Each device owns a full replica: per-device read-after-write chains.
     let mut last_write: Vec<Vec<Option<usize>>> = vec![vec![None; n_blocks]; devices];
     let spilled = spilled_count(&policy, n_blocks);
@@ -959,6 +1095,116 @@ mod tests {
         // Two-tier policies ignore the vector entirely.
         let two = build_sharded_plan_spilled(8, 1, Policy::default(), &spec, Some(&[4, 4]));
         assert_eq!(two.iter().filter(|t| t.kind == TaskKind::DiskRead).count(), 0);
+    }
+
+    #[test]
+    fn weighted_owners_apportion_by_weight_and_stay_monotone() {
+        // 2:1 weights over 12 blocks → 8 + 4.
+        assert_eq!(
+            weighted_contiguous_owners(12, &[2.0, 1.0]),
+            vec![0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1]
+        );
+        // Equal weights reduce to the balanced contiguous layout.
+        for (n, dev) in [(12usize, 4usize), (13, 4), (7, 3)] {
+            let owners = weighted_contiguous_owners(n, &vec![1.0; dev]);
+            let balanced: Vec<usize> =
+                (0..n).map(|i| block_owner(ShardLayout::Contiguous, n, dev, i)).collect();
+            assert_eq!(owners, balanced, "n={n} dev={dev}");
+        }
+        // Always: every block owned, ownership monotone, counts ∝ weights
+        // within 1 block, degenerate weights fall back to balanced.
+        let owners = weighted_contiguous_owners(10, &[3.0, 1.0, 1.0]);
+        assert_eq!(owners.len(), 10);
+        assert!(owners.windows(2).all(|w| w[0] <= w[1]));
+        let per = blocks_per_device_of(&owners, 3);
+        assert_eq!(per[0].len(), 6);
+        assert_eq!(per[1].len(), 2);
+        assert_eq!(per[2].len(), 2);
+        let zero = weighted_contiguous_owners(8, &[0.0, 0.0]);
+        assert_eq!(blocks_per_device_of(&zero, 2)[0].len(), 4);
+    }
+
+    #[test]
+    fn custom_owner_map_routes_blocks_and_hops() {
+        // 6 blocks, hinted 4/2 split: device 0 owns {0..3}, device 1 {4,5}.
+        let owners = weighted_contiguous_owners(6, &[2.0, 1.0]);
+        assert_eq!(owners, vec![0, 0, 0, 0, 1, 1]);
+        let spec = ShardSpec::pipeline(2, ShardLayout::Contiguous);
+        let plan =
+            build_sharded_plan_tiered(6, 1, Policy::default(), &spec, None, Some(&owners));
+        for t in plan.iter().filter(|t| {
+            matches!(t.kind, TaskKind::Upload | TaskKind::Compute | TaskKind::Offload)
+        }) {
+            if let Module::Block(i) = t.module {
+                assert_eq!(t.device(), DeviceId(owners[i]), "block {i} {:?}", t.kind);
+            }
+        }
+        // Monotone owners: exactly one ownership change → one hop.
+        assert_eq!(plan.iter().filter(|t| t.kind == TaskKind::ActivationXfer).count(), 1);
+        // And the balanced layout (owners = None) is untouched by the new
+        // parameter: identical to the historical builder output.
+        let base = build_sharded_plan(6, 1, Policy::default(), &spec);
+        let via_tiered =
+            build_sharded_plan_tiered(6, 1, Policy::default(), &spec, None, None);
+        assert!(plans_equal(&base, &via_tiered));
+    }
+
+    #[test]
+    fn per_device_tiers_carry_their_own_dram_windows() {
+        // Device 0: 3 spills through a 1-slot window (serialised); device 1:
+        // 3 spills through a 3-slot window.  The windows must not leak into
+        // each other: d0's R(W_next) waits for its own W, d1's do not.
+        let policy = Policy { dram_slots: 4, ..Policy::three_tier(0, 4) };
+        let spec = ShardSpec::pipeline(2, ShardLayout::Contiguous);
+        let tiers = [
+            DeviceTier { spilled: 3, dram_slots: 1 },
+            DeviceTier { spilled: 3, dram_slots: 3 },
+        ];
+        let plan = build_sharded_plan_tiered(6, 1, policy, &spec, Some(&tiers), None);
+        let read = |i: usize| {
+            plan.iter()
+                .find(|t| t.kind == TaskKind::DiskRead && t.module == Module::Block(i))
+                .unwrap_or_else(|| panic!("block {i} must spill"))
+        };
+        let write = |i: usize| {
+            plan.iter()
+                .find(|t| t.kind == TaskKind::DiskWrite && t.module == Module::Block(i))
+                .unwrap_or_else(|| panic!("block {i} must spill"))
+        };
+        // Device 0 owns {0,1,2}, all spilled, window 1: R(W1) ← W(W0).
+        assert!(read(1).deps.contains(&write(0).id), "1-slot window must serialise d0");
+        assert!(read(2).deps.contains(&write(1).id));
+        // Device 1 owns {3,4,5}, all spilled, window 3: no W deps among its
+        // reads (the ring is deep enough for the whole partition).
+        for i in [4usize, 5] {
+            let r = read(i);
+            let w_dep = r
+                .deps
+                .iter()
+                .any(|&d| plan[d].kind == TaskKind::DiskWrite);
+            assert!(!w_dep, "d1's window 3 must not serialise R(W{i})");
+        }
+        // Reads stay on their owner's streams.
+        for i in 0..3 {
+            assert_eq!(read(i).device(), DeviceId(0));
+        }
+        for i in 3..6 {
+            assert_eq!(read(i).device(), DeviceId(1));
+        }
+    }
+
+    #[test]
+    fn spilled_wrapper_matches_tiered_with_uniform_windows() {
+        // `build_sharded_plan_spilled` is now a thin wrapper: same plan as
+        // `build_sharded_plan_tiered` with every device at policy.dram_slots.
+        let policy = Policy::three_tier(0, 2);
+        let spec = ShardSpec::pipeline(2, ShardLayout::Cyclic);
+        let spilled = [2usize, 1];
+        let tiers: Vec<DeviceTier> =
+            spilled.iter().map(|&s| DeviceTier { spilled: s, dram_slots: 2 }).collect();
+        let a = build_sharded_plan_spilled(8, 2, policy, &spec, Some(&spilled));
+        let b = build_sharded_plan_tiered(8, 2, policy, &spec, Some(&tiers), None);
+        assert!(plans_equal(&a, &b));
     }
 
     #[test]

@@ -62,12 +62,58 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Unchecked read: malformed values silently fall back to the default.
+    /// CLI code should prefer [`Self::get_usize_checked`] — a typo like
+    /// `--devices foo` must be an error, not a 1-device run.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Unchecked read: malformed values silently fall back to the default
+    /// (`--lr 1e-4x` trains at the default).  Prefer
+    /// [`Self::get_f64_checked`] in CLI code.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Checked read of a numeric flag: absent → `default`, present but
+    /// malformed → an error naming the flag and the offending token.
+    pub fn get_usize_checked(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                anyhow::anyhow!("bad --{key} `{s}` (expected an unsigned integer)")
+            }),
+        }
+    }
+
+    /// Checked read of a float flag: absent → `default`, present but
+    /// malformed → an error naming the flag and the offending token.
+    pub fn get_f64_checked(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => {
+                s.parse().map_err(|_| anyhow::anyhow!("bad --{key} `{s}` (expected a number)"))
+            }
+        }
+    }
+
+    /// Checked read of a comma-separated float list (`--dram-budget
+    /// 64,32,32,64`).  Absent → `Ok(None)`; any malformed entry → an error
+    /// naming the flag and the offending token.  Empty entries (`64,,32`)
+    /// are malformed too.
+    pub fn get_f64_list_checked(&self, key: &str) -> anyhow::Result<Option<Vec<f64>>> {
+        let Some(raw) = self.get(key) else {
+            return Ok(None);
+        };
+        let mut out = Vec::new();
+        for tok in raw.split(',') {
+            let v: f64 = tok.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad --{key} `{raw}`: entry `{tok}` is not a number")
+            })?;
+            out.push(v);
+        }
+        Ok(Some(out))
     }
 
     /// Boolean flag value: absent → false; present with no value (or
@@ -146,6 +192,45 @@ mod tests {
         assert!(a.get_bool("c"), "case-insensitive");
         assert!(a.get_bool("d"), "flag given with junk value still counts as set");
         assert!(!a.get_bool("absent"));
+    }
+
+    #[test]
+    fn checked_getters_reject_malformed_tokens() {
+        let a = Args::parse(s(&["simulate", "--devices", "foo", "--lr", "1e-4x", "--steps", "7"]));
+        // The unchecked getters silently default — the historical bug.
+        assert_eq!(a.get_usize("devices", 1), 1);
+        assert_eq!(a.get_f64("lr", 1e-4), 1e-4);
+        // The checked getters are loud and name flag + token.
+        let e = a.get_usize_checked("devices", 1).unwrap_err().to_string();
+        assert!(e.contains("--devices") && e.contains("`foo`"), "{e}");
+        let e = a.get_f64_checked("lr", 1e-4).unwrap_err().to_string();
+        assert!(e.contains("--lr") && e.contains("`1e-4x`"), "{e}");
+        // Well-formed and absent flags behave as before.
+        assert_eq!(a.get_usize_checked("steps", 0).unwrap(), 7);
+        assert_eq!(a.get_usize_checked("absent", 9).unwrap(), 9);
+        assert_eq!(a.get_f64_checked("absent", 2.5).unwrap(), 2.5);
+        // usize flags reject negatives and floats.
+        let b = Args::parse(s(&["--devices", "-2", "--slots", "2.5"]));
+        assert!(b.get_usize_checked("devices", 1).is_err());
+        assert!(b.get_usize_checked("slots", 3).is_err());
+    }
+
+    #[test]
+    fn checked_f64_list_parses_and_rejects() {
+        let a = Args::parse(s(&["--dram-budget", "64,32, 32,64"]));
+        assert_eq!(
+            a.get_f64_list_checked("dram-budget").unwrap(),
+            Some(vec![64.0, 32.0, 32.0, 64.0])
+        );
+        let single = Args::parse(s(&["--dram-budget", "24"]));
+        assert_eq!(single.get_f64_list_checked("dram-budget").unwrap(), Some(vec![24.0]));
+        let absent = Args::parse(s(&["run"]));
+        assert_eq!(absent.get_f64_list_checked("dram-budget").unwrap(), None);
+        let bad = Args::parse(s(&["--dram-budget", "64,x,32"]));
+        let e = bad.get_f64_list_checked("dram-budget").unwrap_err().to_string();
+        assert!(e.contains("--dram-budget") && e.contains("`x`"), "{e}");
+        let empty_entry = Args::parse(s(&["--dram-budget", "64,,32"]));
+        assert!(empty_entry.get_f64_list_checked("dram-budget").is_err());
     }
 
     #[test]

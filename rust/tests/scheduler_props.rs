@@ -26,7 +26,14 @@
 //!     provider, step time is monotonically non-increasing in M;
 //! 13. per-partition three-tier spill sets are pairwise disjoint, live on
 //!     their owner's streams, and each partition's plan fits the owning
-//!     host's `MemoryBudget`.
+//!     host's `MemoryBudget`;
+//!
+//! plus the heterogeneous-cluster invariants:
+//! 14. under per-device cost factors, every device's per-step compute work
+//!     lower-bounds the makespan (the slowest device paces the pipeline),
+//!     and slowing any one device never speeds the schedule up;
+//! 15. per-host spill sets respect their *own* budget when budgets differ,
+//!     and raising one host's budget never changes a sibling's plan.
 
 use zo2::costmodel::{plan_three_tier_partitioned, ComputeMode, Hardware, MemoryBudget, Workload};
 use zo2::model::opt_by_name;
@@ -42,6 +49,7 @@ use zo2::shard::{
 };
 use zo2::zo::{DpSimShard, DpWorker};
 
+#[derive(Clone, Copy)]
 struct RandCosts {
     up: f64,
     off: f64,
@@ -865,6 +873,218 @@ fn step_time_is_monotone_non_increasing_in_microbatches_when_compute_bound() {
         simulate(&plan, &DyadicCosts, policy).0.makespan
     };
     assert!(m8 < m1 - 1e-9, "M=8 ({m8}) must strictly beat M=1 ({m1}) on the cyclic pipeline");
+}
+
+// --- heterogeneous clusters (rules 14-15) ------------------------------------
+
+/// Per-device cost factors over a base provider: device `d`'s compute and
+/// transfer times scale by `factor[d]` — heterogeneous pricing without the
+/// paper-scale cost model (the device-less methods price device 0, exactly
+/// like `costmodel::ClusterCost`).
+struct HeteroCosts {
+    base: RandCosts,
+    factor: Vec<f64>,
+}
+
+impl CostProvider for HeteroCosts {
+    fn upload_s(&self) -> f64 {
+        self.base.up * self.factor[0]
+    }
+    fn offload_s(&self) -> f64 {
+        self.base.off * self.factor[0]
+    }
+    fn compute_s(&self, _m: Module) -> f64 {
+        self.base.comp * self.factor[0]
+    }
+    fn update_s(&self) -> f64 {
+        self.base.upd * self.factor[0]
+    }
+    fn disk_read_s(&self) -> f64 {
+        self.base.read * self.factor[0]
+    }
+    fn disk_write_s(&self) -> f64 {
+        self.base.write * self.factor[0]
+    }
+    fn link_activation_s(&self) -> f64 {
+        self.base.act
+    }
+    fn link_seed_s(&self) -> f64 {
+        self.base.seed
+    }
+    fn link_grad_s(&self) -> f64 {
+        self.base.grad
+    }
+    fn upload_s_on(&self, d: DeviceId) -> f64 {
+        self.base.up * self.factor[d.0]
+    }
+    fn offload_s_on(&self, d: DeviceId) -> f64 {
+        self.base.off * self.factor[d.0]
+    }
+    fn compute_s_on(&self, d: DeviceId, _m: Module) -> f64 {
+        self.base.comp * self.factor[d.0]
+    }
+    fn update_s_on(&self, d: DeviceId) -> f64 {
+        self.base.upd * self.factor[d.0]
+    }
+    fn disk_read_s_on(&self, d: DeviceId) -> f64 {
+        self.base.read * self.factor[d.0]
+    }
+    fn disk_write_s_on(&self, d: DeviceId) -> f64 {
+        self.base.write * self.factor[d.0]
+    }
+    fn compute_microbatch_s_on(&self, d: DeviceId, m: Module, _i: usize, of: usize) -> f64 {
+        self.compute_s_on(d, m) / of.max(1) as f64
+    }
+}
+
+#[test]
+fn heterogeneous_pipeline_is_paced_by_the_slowest_device() {
+    // Rule 14: device d's compute stream serially runs its per-step work
+    // `steps` times inside the makespan, so steps × work_d lower-bounds the
+    // makespan for EVERY device — in particular the slowest one.  And
+    // slowing any single device (longer durations, same DAG) never shrinks
+    // any task's end time, so the makespan is monotone in every device's
+    // factor.
+    let mut rng = GaussianRng::new(0x4845, 14);
+    for case in 0..40 {
+        let n = 4 + rng.next_below(9) as usize;
+        let steps = 3;
+        let devices = [2usize, 4][rng.next_below(2) as usize];
+        let layout = [ShardLayout::Contiguous, ShardLayout::Cyclic][rng.next_below(2) as usize];
+        let base = RandCosts {
+            up: 0.01 + rng.next_uniform() * 0.5,
+            off: 0.01 + rng.next_uniform() * 0.5,
+            comp: 0.1 + rng.next_uniform() * 2.0,
+            upd: 0.01 + rng.next_uniform() * 0.2,
+            read: 0.01 + rng.next_uniform() * 0.5,
+            write: 0.01 + rng.next_uniform() * 0.5,
+            act: rng.next_uniform() * 0.1,
+            seed: 0.0,
+            grad: rng.next_uniform() * 0.05,
+        };
+        let factor: Vec<f64> = (0..devices).map(|_| 0.5 + rng.next_uniform() * 3.0).collect();
+        let costs = HeteroCosts { base, factor: factor.clone() };
+        let policy = Policy::default();
+        let spec = ShardSpec::pipeline(devices, layout);
+        let plan = build_sharded_plan(n, steps, policy, &spec);
+        let (sched, _) = simulate(&plan, &costs, policy);
+
+        let per = blocks_per_device(layout, n, devices);
+        let head_dev = block_owner(layout, n, devices, n - 1);
+        for d in 0..devices {
+            let mut work =
+                per[d].len() as f64 * costs.compute_s_on(DeviceId(d), Module::Block(0));
+            if d == 0 {
+                work += costs.compute_s_on(DeviceId(0), Module::Embed);
+            }
+            if d == head_dev {
+                work += costs.compute_s_on(DeviceId(d), Module::Head);
+            }
+            assert!(
+                sched.makespan >= steps as f64 * work - 1e-9,
+                "case {case}: makespan {} below device {d}'s serial compute {}",
+                sched.makespan,
+                steps as f64 * work
+            );
+        }
+
+        // Slow the slowest device further: the schedule may only get worse.
+        let slowest = (0..devices)
+            .max_by(|&a, &b| factor[a].total_cmp(&factor[b]))
+            .unwrap();
+        let mut slower = factor.clone();
+        slower[slowest] *= 2.0;
+        let costs2 = HeteroCosts { base: costs.base, factor: slower };
+        let (sched2, _) = simulate(&plan, &costs2, policy);
+        assert!(
+            sched2.makespan >= sched.makespan - 1e-9,
+            "case {case}: slowing device {slowest} shrank the makespan"
+        );
+    }
+}
+
+#[test]
+fn per_host_budgets_bind_their_own_spill_sets_under_random_budgets() {
+    // Rule 15: with genuinely distinct random per-host budgets, every
+    // partition's plan fits its OWN host, and changing one host's budget
+    // never perturbs a sibling's plan.
+    let hw = Hardware::a100_pcie4();
+    let w = Workload {
+        shape: opt_by_name("OPT-30B").unwrap(),
+        batch: 1,
+        seq: 2048,
+        wire: Codec::Fp16,
+        compute: ComputeMode::Fp16,
+    };
+    let gb = 1u64 << 30;
+    let mut rng = GaussianRng::new(0xB0D6, 15);
+    for case in 0..30 {
+        let devices = 2 + rng.next_below(3) as usize;
+        // Budgets at least one window (4 slots) deep, spread widely enough
+        // that some hosts spill and some do not.
+        let budgets: Vec<MemoryBudget> = (0..devices)
+            .map(|_| MemoryBudget {
+                hbm: 18 * gb,
+                dram: (6 + rng.next_below(40)) * gb,
+                nvme: 2 << 40,
+            })
+            .collect();
+        for layout in [ShardLayout::Contiguous, ShardLayout::Cyclic] {
+            let plans = plan_three_tier_partitioned(
+                &w,
+                &budgets,
+                layout,
+                3,
+                4,
+                2,
+                &hw,
+                SpillPlacement::Trailing,
+            );
+            let per = blocks_per_device(layout, w.shape.n_layers, devices);
+            for (d, p) in plans.iter().enumerate() {
+                assert_eq!(
+                    p.resident_blocks + p.spilled_blocks,
+                    per[d].len(),
+                    "case {case} {layout:?} device {d}"
+                );
+                assert!(
+                    budgets[d].fits(&p.peaks),
+                    "case {case} {layout:?} device {d}: {:?} must fit its own {:?}",
+                    p.peaks,
+                    budgets[d]
+                );
+            }
+            // Raise one host's budget: only that host's plan may change,
+            // and its spill count may only drop.
+            let k = rng.next_below(devices as u64) as usize;
+            let mut raised = budgets.clone();
+            raised[k].dram += 8 * gb;
+            let plans2 = plan_three_tier_partitioned(
+                &w,
+                &raised,
+                layout,
+                3,
+                4,
+                2,
+                &hw,
+                SpillPlacement::Trailing,
+            );
+            for d in 0..devices {
+                if d == k {
+                    assert!(
+                        plans2[d].spilled_blocks <= plans[d].spilled_blocks,
+                        "case {case} {layout:?}: more DRAM must never spill more"
+                    );
+                } else {
+                    assert_eq!(
+                        plans2[d].spilled_blocks, plans[d].spilled_blocks,
+                        "case {case} {layout:?}: host {k}'s budget leaked into host {d}"
+                    );
+                    assert_eq!(plans2[d].dram_slots, plans[d].dram_slots);
+                }
+            }
+        }
+    }
 }
 
 #[test]
