@@ -27,6 +27,7 @@ use zo2::shard::{
     blocks_per_device_of, bottleneck_weights, build_sharded_plan, build_sharded_plan_tiered,
     weighted_contiguous_owners, DeviceTier, ShardLayout, ShardSpec,
 };
+use zo2::telemetry::metrics::MetricsRegistry;
 use zo2::util::fmt_mb;
 use zo2::util::json::Json;
 use zo2::util::stats::bench;
@@ -460,6 +461,10 @@ fn table_host_kernels(_hw: &Hardware) {
 
     let mut rows: Vec<Json> = Vec::new();
     let mut calib = BTreeMap::new();
+    // Local (non-global) registry: the calibration constants are also
+    // emitted as a telemetry snapshot so `HostKernels::from_bench_json`
+    // and external tooling read one schema (`zo2-metrics-v1`).
+    let reg = MetricsRegistry::new();
     for codec in [Codec::F32, Codec::Bf16, Codec::Fp16, Codec::Fp8E4M3] {
         let wire0 = codec.encode(&xs);
 
@@ -537,6 +542,11 @@ fn table_host_kernels(_hw: &Hardware) {
             format!("{}_bytes_per_s_per_thread", codec.name()),
             Json::Num(gbs(fused_1) * 1e9),
         );
+        reg.gauge_set(
+            "host_kernel_bytes_per_s_per_thread",
+            &[("codec", codec.name())],
+            gbs(fused_1) * 1e9,
+        );
     }
 
     let mut doc = BTreeMap::new();
@@ -544,6 +554,7 @@ fn table_host_kernels(_hw: &Hardware) {
     doc.insert("elems".to_string(), Json::Num(elems as f64));
     doc.insert("rows".to_string(), Json::Arr(rows));
     doc.insert("calibration".to_string(), Json::Obj(calib));
+    doc.insert("metrics".to_string(), reg.snapshot_json());
     let path = "BENCH_host_kernels.json";
     match std::fs::write(path, Json::Obj(doc).to_string_pretty()) {
         Ok(()) => println!("wrote {path}"),
@@ -571,6 +582,9 @@ fn table_multi_gpu(hw: &Hardware) {
     );
     let tokens = 2048.0;
     let mut rows: Vec<Json> = Vec::new();
+    // Scaling headline in telemetry-snapshot form (same schema the engine
+    // and simulator CLIs emit with `--metrics-out`).
+    let reg = MetricsRegistry::new();
     for name in ["OPT-13B", "OPT-30B", "OPT-175B"] {
         let shape = opt_by_name(name).unwrap();
         let w = wl(&shape, 1, 2048, Codec::Fp16, ComputeMode::Fp16);
@@ -633,6 +647,17 @@ fn table_multi_gpu(hw: &Hardware) {
                 Json::Str(pipe.bottleneck().to_string()),
             );
             rows.push(Json::Obj(row));
+            let nstr = n.to_string();
+            reg.gauge_set(
+                "sim_steady_step_s",
+                &[("devices", nstr.as_str()), ("model", name), ("strategy", "dp")],
+                dp.steady_step_s,
+            );
+            reg.gauge_set(
+                "sim_steady_step_s",
+                &[("devices", nstr.as_str()), ("model", name), ("strategy", "pipeline")],
+                pipe.steady_step_s,
+            );
         }
     }
 
@@ -892,6 +917,7 @@ fn table_multi_gpu(hw: &Hardware) {
     doc.insert("microbatch_sweep".to_string(), Json::Arr(sweep_rows));
     doc.insert("microbatch_sweep_dram_gb_per_host".to_string(), Json::Num(24.0));
     doc.insert("heterogeneous_sweep".to_string(), Json::Arr(het_rows));
+    doc.insert("metrics".to_string(), reg.snapshot_json());
     let path = "BENCH_multi_gpu.json";
     match std::fs::write(path, Json::Obj(doc).to_string_pretty()) {
         Ok(()) => println!("wrote {path}"),

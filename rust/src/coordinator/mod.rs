@@ -70,6 +70,16 @@ impl Engine {
             Engine::DpSim(e) => e.workers()[0].runtime(),
         }
     }
+
+    /// Measured timeline of the most recent step, if the engine records
+    /// one (DP sim-shard: worker 0's — replicas run the same schedule).
+    pub fn last_timeline(&self) -> Option<&crate::telemetry::Timeline> {
+        match self {
+            Engine::Mezo(_) => None,
+            Engine::Zo2(e) => Some(&e.last_timeline),
+            Engine::DpSim(e) => Some(&e.workers()[0].last_timeline),
+        }
+    }
 }
 
 /// Training configuration for the CLI / examples.
@@ -104,6 +114,13 @@ pub struct TrainConfig {
     /// parallelisation — holding `dp_shards` fixed while varying
     /// `dp_workers` reproduces the same trajectory bit-for-bit.
     pub dp_shards: usize,
+    /// Write the measured run timeline as Chrome trace-event JSON
+    /// (`--trace-out`).  `None` = don't collect per-step timelines.
+    pub trace_out: Option<String>,
+    /// Enable the process-wide metrics sink and write its snapshot here
+    /// (`--metrics-out`).  `None` = sink stays disabled: instrumented
+    /// paths take one branch and allocate nothing.
+    pub metrics_out: Option<String>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -130,6 +147,8 @@ impl Default for TrainConfig {
             host_threads: 0,
             dp_workers: 1,
             dp_shards: 0,
+            trace_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -210,6 +229,13 @@ pub fn build_engine(cfg: &TrainConfig) -> Result<Engine> {
 
 /// Train on the synthetic corpus and report loss curve + throughput.
 pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
+    // Observability is pay-for-what-you-use: the process-wide sink is
+    // switched to exactly what this run asked for (and cleared), so a run
+    // without `--metrics-out` records nothing anywhere.
+    crate::telemetry::metrics::set_enabled(cfg.metrics_out.is_some());
+    if cfg.metrics_out.is_some() {
+        crate::telemetry::metrics::global().reset();
+    }
     let mut engine = build_engine(cfg)?;
     let (b, t) = {
         let m = engine.runtime().manifest();
@@ -220,6 +246,10 @@ pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
 
     let mut losses = Series::new("loss");
     let mut tokens = 0usize;
+    // Whole-run measured timeline: per-step engine timelines concatenated
+    // end-to-end (each step's events are step-relative).
+    let mut run_timeline =
+        cfg.trace_out.as_ref().map(|_| (crate::telemetry::Timeline::new(), 0.0));
     let t0 = std::time::Instant::now();
     let shards = engine.batches_per_step();
     for step in 0..cfg.steps {
@@ -229,6 +259,12 @@ pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
             ids.extend(corpus.sample(b, t).ids);
         }
         let stats = engine.train_step(&ids)?;
+        if let Some((tl, offset)) = run_timeline.as_mut() {
+            if let Some(step_tl) = engine.last_timeline() {
+                tl.extend_offset(step_tl, *offset);
+                *offset += step_tl.makespan();
+            }
+        }
         tokens += shards * b * t;
         losses.push(step as f64, stats.loss() as f64);
         if verbose && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
@@ -268,6 +304,25 @@ pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
         }
         Engine::Mezo(e) => (e.device.peak(), 0, 0, 0),
     };
+
+    if let (Some(path), Some((tl, _))) = (&cfg.trace_out, &run_timeline) {
+        crate::telemetry::trace::write_chrome_trace(path, tl)?;
+        if verbose {
+            println!("wrote trace {path}");
+        }
+    }
+    if let Some(path) = &cfg.metrics_out {
+        use crate::telemetry::metrics;
+        metrics::gauge_set("train_tokens_per_s", &[], tokens as f64 / train_secs);
+        metrics::gauge_set("train_transfer_bytes", &[], transfer_bytes as f64);
+        metrics::gauge_set("train_disk_bytes", &[], disk_bytes as f64);
+        metrics::gauge_set("train_spilled_blocks", &[], spilled_blocks as f64);
+        std::fs::write(path, metrics::global().snapshot_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing metrics {path}: {e}"))?;
+        if verbose {
+            println!("wrote metrics {path}");
+        }
+    }
 
     Ok(TrainReport {
         losses,

@@ -80,6 +80,7 @@ pub(crate) fn map_wire_chunk(
 pub fn decode_pooled(codec: Codec, src: &[u8], out: &mut [f32], pool: &HostPool) {
     let n = out.len();
     assert_eq!(src.len(), n * codec.bytes_per_el(), "payload size mismatch");
+    observe_chunks("decode", codec, n);
     let bpe = codec.bytes_per_el();
     let outp = SlicePtr::new(out);
     pool.for_chunks(n, |_, start, len| {
@@ -94,6 +95,7 @@ pub fn decode_pooled(codec: Codec, src: &[u8], out: &mut [f32], pool: &HostPool)
 pub fn encode_pooled(codec: Codec, src: &[f32], out: &mut [u8], pool: &HostPool) {
     let n = src.len();
     assert_eq!(out.len(), n * codec.bytes_per_el(), "payload size mismatch");
+    observe_chunks("encode", codec, n);
     let bpe = codec.bytes_per_el();
     let outp = SlicePtr::new(out);
     pool.for_chunks(n, |_, start, len| {
@@ -117,6 +119,7 @@ pub fn fused_zo_sgd(
     pool: &HostPool,
 ) {
     assert_eq!(wire.len(), numel * codec.bytes_per_el(), "payload size mismatch");
+    observe_chunks("update", codec, numel);
     let scale = lr * g;
     let bpe = codec.bytes_per_el();
     let wp = SlicePtr::new(wire);
@@ -129,6 +132,21 @@ pub fn fused_zo_sgd(
         // Same op order as the scalar reference: mul, then sub.
         map_wire_chunk(codec, bytes, len, |i, w| w - scale * z[i]);
     });
+}
+
+/// Per-call chunk-batch histogram for the global metrics sink.  Recorded
+/// once per kernel *entry* (never inside `for_chunks`), so the chunk
+/// kernels and their determinism contract are untouched; a disabled sink
+/// costs one branch.
+#[inline]
+fn observe_chunks(op: &'static str, codec: Codec, numel: usize) {
+    if crate::telemetry::metrics::enabled() {
+        crate::telemetry::metrics::observe(
+            "hostpool_chunks_per_call",
+            &[("op", op), ("codec", codec.name())],
+            numel.div_ceil(CHUNK_ELEMS) as f64,
+        );
+    }
 }
 
 #[cfg(test)]

@@ -5,6 +5,13 @@
 //!   simulate  paper-scale throughput/memory via the discrete-event simulator
 //!   memory    print the Fig. 1 memory table (analytic accounting)
 //!   info      show a config's manifest summary
+//!   report    diff a simulated trace against a measured one (drift JSON)
+//!
+//! `train` and `simulate` accept `--trace-out FILE.json` (Chrome
+//! trace-event JSON, openable in chrome://tracing or ui.perfetto.dev) and
+//! `--metrics-out FILE.json` (labeled metrics snapshot).  Without those
+//! flags the instrumentation is fully disabled — no events, no registry
+//! entries, bit-identical trajectories.
 //!
 //! Every numeric flag is parsed *checked*: a malformed value (`--devices
 //! foo`, `--lr 1e-4x`) is a hard error naming the flag and token, never a
@@ -43,9 +50,10 @@ fn main() -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("memory") => cmd_memory(&args),
         Some("info") => cmd_info(&args),
+        Some("report") => cmd_report(&args),
         _ => {
             eprintln!(
-                "usage: zo2 <train|simulate|memory|info> [--config tiny] [--engine zo2|mezo]\n\
+                "usage: zo2 <train|simulate|memory|info|report> [--config tiny] [--engine zo2|mezo]\n\
                  \x20      [--steps N] [--lr F] [--eps F] [--seed N] [--wire fp32|bf16|fp16|fp8]\n\
                  \x20      [--mode seq|overlap] [--model OPT-13B] [--compute fp32|tf32|fp16]\n\
                  \x20      [--tiering two|three] [--dram-budget GB[,GB,...]] [--dram-slots N]\n\
@@ -54,7 +62,9 @@ fn main() -> Result<()> {
                  \x20      [--update-site device|cpu] [--host-threads N] [--dp-workers K] [--dp-shards S]\n\
                  \x20      [--devices N] [--device-spec a100:2,rtx4090:2] [--shard dp|pipeline]\n\
                  \x20      [--layout contiguous|cyclic|weighted] [--link nvlink|pcie[,...]]\n\
-                 \x20      [--link-gbps F[,F,...]] [--microbatches M]"
+                 \x20      [--link-gbps F[,F,...]] [--microbatches M]\n\
+                 \x20      [--trace-out FILE.json] [--metrics-out FILE.json]\n\
+                 \x20  report --sim sim_trace.json --measured run_trace.json [--out drift.json]"
             );
             Ok(())
         }
@@ -259,6 +269,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         host_threads: args.get_usize_checked("host-threads", 0)?,
         dp_workers: args.get_usize_checked("dp-workers", 1)?.max(1),
         dp_shards: args.get_usize_checked("dp-shards", 0)?,
+        trace_out: args.get("trace-out").map(String::from),
+        metrics_out: args.get("metrics-out").map(String::from),
     };
     let report = train(&cfg, true)?;
     println!(
@@ -533,6 +545,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         if args.has("timeline") {
             println!("{}", timeline.to_ascii_gantt(100));
         }
+        write_sim_observability(args, &sched, &timeline)?;
         return Ok(());
     }
 
@@ -574,6 +587,86 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     );
     if args.has("timeline") {
         println!("{}", timeline.to_ascii_gantt(100));
+    }
+    write_sim_observability(args, &sched, &timeline)?;
+    Ok(())
+}
+
+/// Shared `--trace-out` / `--metrics-out` tail of both `simulate` branches:
+/// the plan timeline goes through the same Chrome-trace exporter the engine
+/// uses, and the schedule's busy map becomes a metrics snapshot.
+fn write_sim_observability(
+    args: &Args,
+    sched: &zo2::sched::Schedule,
+    timeline: &zo2::telemetry::Timeline,
+) -> Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        zo2::telemetry::trace::write_chrome_trace(path, timeline)?;
+        println!("wrote trace {path}");
+    }
+    if let Some(path) = args.get("metrics-out") {
+        let reg = zo2::telemetry::metrics::MetricsRegistry::new();
+        let mut streams: Vec<_> = sched.busy.iter().collect();
+        streams.sort_by_key(|(id, _)| **id);
+        for (id, &busy) in streams {
+            let device = id.device.0.to_string();
+            reg.gauge_set(
+                "sim_stream_busy_s",
+                &[("device", device.as_str()), ("stream", id.kind.name())],
+                busy,
+            );
+        }
+        reg.gauge_set("sim_makespan_s", &[], sched.makespan);
+        reg.gauge_set("sim_steady_step_s", &[], sched.steady_step_s);
+        std::fs::write(path, reg.snapshot_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing metrics {path}: {e}"))?;
+        println!("wrote metrics {path}");
+    }
+    Ok(())
+}
+
+/// `zo2 report --sim a.json --measured b.json [--out drift.json]`:
+/// per-stream, per-task-kind and makespan drift between a simulated plan
+/// trace and a measured run trace of the same config.
+fn cmd_report(args: &Args) -> Result<()> {
+    use zo2::telemetry::trace;
+    let sim_path = args
+        .get("sim")
+        .ok_or_else(|| anyhow::anyhow!("report needs --sim SIM_TRACE.json"))?;
+    let measured_path = args
+        .get("measured")
+        .ok_or_else(|| anyhow::anyhow!("report needs --measured RUN_TRACE.json"))?;
+    let sim = trace::load_trace(sim_path)?;
+    let measured = trace::load_trace(measured_path)?;
+    let rep = trace::drift_report(&sim, &measured)?;
+
+    let mk = rep.get("makespan_s")?;
+    print!(
+        "makespan: sim {:.3}s, measured {:.3}s",
+        mk.get("sim")?.as_f64()?,
+        mk.get("measured")?.as_f64()?
+    );
+    match mk.get("ratio")? {
+        zo2::util::json::Json::Num(r) => println!(" ({r:.2}x)"),
+        _ => println!(),
+    }
+    for s in rep.get("streams")?.as_arr()? {
+        println!(
+            "  d{} {:<12} sim {:>9.3}s  measured {:>9.3}s  delta {:+.3}s",
+            s.get("device")?.as_usize()?,
+            s.get("stream")?.as_str()?,
+            s.get("sim_busy_s")?.as_f64()?,
+            s.get("measured_busy_s")?.as_f64()?,
+            s.get("delta_s")?.as_f64()?,
+        );
+    }
+
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, rep.to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing report {out}: {e}"))?;
+        println!("wrote drift report {out}");
+    } else {
+        println!("{}", rep.to_string_pretty());
     }
     Ok(())
 }
@@ -698,5 +791,25 @@ mod tests {
         assert!(parse_links(&args(&["simulate", "--link-gbps", "fast"]), 2).is_err());
         assert!(parse_links(&args(&["simulate", "--link-gbps", "-5"]), 2).is_err());
         assert!(parse_links(&args(&["simulate", "--link", "token-ring"]), 2).is_err());
+    }
+
+    #[test]
+    fn observability_flags_take_values() {
+        // `--trace-out`/`--metrics-out` are value flags: they must consume
+        // the path token, leaving other positionals/flags intact.
+        let a = args(&[
+            "simulate",
+            "--trace-out",
+            "t.json",
+            "--metrics-out",
+            "m.json",
+            "--timeline",
+            "--model",
+            "OPT-13B",
+        ]);
+        assert_eq!(a.get("trace-out"), Some("t.json"));
+        assert_eq!(a.get("metrics-out"), Some("m.json"));
+        assert!(a.has("timeline"));
+        assert_eq!(a.get("model"), Some("OPT-13B"));
     }
 }

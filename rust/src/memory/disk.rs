@@ -133,6 +133,10 @@ impl DiskPool {
         }
         self.write_at(offset, bytes)?;
         self.record(&self.writes, len as u64, &self.write_model);
+        if crate::telemetry::metrics::enabled() {
+            crate::telemetry::metrics::counter_add("disk_write_bytes_total", &[], len as u64);
+            crate::telemetry::metrics::observe("disk_write_batch_bytes", &[], len as f64);
+        }
         Ok(DiskBucket { codec, numel, offset, len })
     }
 
@@ -146,6 +150,10 @@ impl DiskPool {
                 .with_context(|| format!("disk read at {}+{}", b.offset, b.len))?;
         }
         self.record(&self.reads, b.len as u64, &self.read_model);
+        if crate::telemetry::metrics::enabled() {
+            crate::telemetry::metrics::counter_add("disk_read_bytes_total", &[], b.len as u64);
+            crate::telemetry::metrics::observe("disk_read_batch_bytes", &[], b.len as f64);
+        }
         Ok(buf)
     }
 
@@ -193,6 +201,10 @@ impl DiskPool {
         );
         self.write_at(b.offset, bytes)?;
         self.record(&self.writes, b.len as u64, &self.write_model);
+        if crate::telemetry::metrics::enabled() {
+            crate::telemetry::metrics::counter_add("disk_write_bytes_total", &[], b.len as u64);
+            crate::telemetry::metrics::observe("disk_write_batch_bytes", &[], b.len as f64);
+        }
         Ok(())
     }
 

@@ -69,12 +69,20 @@ impl TransferEngine {
         self.h2d.ops += 1;
         self.h2d.bytes += bytes;
         self.h2d.modeled_s += model.time_for(bytes);
+        if crate::telemetry::metrics::enabled() {
+            let labels = [("dir", "h2d")];
+            crate::telemetry::metrics::counter_add("transfer_bytes_total", &labels, bytes);
+        }
     }
 
     pub fn record_d2h(&mut self, bytes: u64, model: &TransferModel) {
         self.d2h.ops += 1;
         self.d2h.bytes += bytes;
         self.d2h.modeled_s += model.time_for(bytes);
+        if crate::telemetry::metrics::enabled() {
+            let labels = [("dir", "d2h")];
+            crate::telemetry::metrics::counter_add("transfer_bytes_total", &labels, bytes);
+        }
     }
 
     pub fn total_bytes(&self) -> u64 {

@@ -193,6 +193,7 @@ pub fn simulate(tasks: &[Task], costs: &dyn CostProvider, policy: Policy) -> (Sc
         *busy.entry(t.stream).or_default() += dur;
         timeline.push(TraceEvent {
             stream: t.stream.name(),
+            cat: t.kind.cat_name(),
             label: format!("{:?} {:?} s{}", t.kind, t.module, t.step),
             start: t0,
             end: t1,

@@ -205,6 +205,24 @@ impl TaskKind {
             }
         }
     }
+
+    /// Canonical short name of the task category.  Both the simulator's
+    /// plan trace and the engine's measured trace tag events with this
+    /// vocabulary (the Chrome-trace `cat` field), and the drift report
+    /// joins the two traces on it.
+    pub fn cat_name(self) -> &'static str {
+        match self {
+            TaskKind::Upload => "upload",
+            TaskKind::Compute => "compute",
+            TaskKind::Offload => "offload",
+            TaskKind::Update => "update",
+            TaskKind::DiskRead => "disk_read",
+            TaskKind::DiskWrite => "disk_write",
+            TaskKind::ActivationXfer => "activation_xfer",
+            TaskKind::SeedBcast => "seed_bcast",
+            TaskKind::GradReduce => "grad_reduce",
+        }
+    }
 }
 
 #[derive(Debug, Clone)]

@@ -1,0 +1,297 @@
+//! Labeled metrics registry with a deterministic JSON snapshot.
+//!
+//! Two usage modes share one type:
+//!
+//! * **Process-wide sink** — [`global()`] behind an [`enabled()`] flag that
+//!   is off by default.  Instrumented hot paths (engine pipelines, host
+//!   kernels, the disk tier) branch on `enabled()` *before* building label
+//!   slices, so with no `--metrics-out` flag the cost is one relaxed atomic
+//!   load and zero allocations — the pay-for-what-you-use contract that
+//!   keeps golden/trajectory tests bit-identical.
+//! * **Local registries** — benches and the simulator build their own
+//!   [`MetricsRegistry`] and embed its [`MetricsRegistry::snapshot_json`]
+//!   in their output files, so `BENCH_*.json` calibration blocks and
+//!   `--metrics-out` dumps speak one schema (`zo2-metrics-v1`).
+//!
+//! Metric identity is `(name, sorted label pairs)`; the snapshot is sorted
+//! by that identity (a `BTreeMap` keyed on the rendered id), so two runs
+//! that record the same values emit byte-identical JSON.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Schema tag written into every snapshot.
+pub const METRICS_SCHEMA: &str = "zo2-metrics-v1";
+
+#[derive(Debug, Clone)]
+enum Value {
+    Counter(u64),
+    /// Last-set value plus the high-water mark across sets.
+    Gauge { value: f64, peak: f64 },
+    Histogram { count: u64, sum: f64, min: f64, max: f64 },
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    value: Value,
+}
+
+/// A set of named, labeled counters/gauges/histograms.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<BTreeMap<String, Entry>>,
+}
+
+/// Rendered identity: `name{k=v,k2=v2}` with label keys sorted.
+fn render_key(name: &str, labels: &[(&str, &str)]) -> (String, Vec<(String, String)>) {
+    let mut sorted: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    sorted.sort();
+    let mut key = String::from(name);
+    key.push('{');
+    for (i, (k, v)) in sorted.iter().enumerate() {
+        if i > 0 {
+            key.push(',');
+        }
+        key.push_str(k);
+        key.push('=');
+        key.push_str(v);
+    }
+    key.push('}');
+    (key, sorted)
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn update(&self, name: &str, labels: &[(&str, &str)], f: impl FnOnce(Option<Value>) -> Value) {
+        let (key, sorted) = render_key(name, labels);
+        let mut entries = self.entries.lock().unwrap();
+        match entries.get_mut(&key) {
+            Some(e) => e.value = f(Some(e.value.clone())),
+            None => {
+                let value = f(None);
+                entries.insert(key, Entry { name: name.to_string(), labels: sorted, value });
+            }
+        }
+    }
+
+    /// Add `v` to a monotonically-increasing counter.
+    pub fn counter_add(&self, name: &str, labels: &[(&str, &str)], v: u64) {
+        self.update(name, labels, |old| match old {
+            Some(Value::Counter(c)) => Value::Counter(c + v),
+            _ => Value::Counter(v),
+        });
+    }
+
+    /// Set a gauge; its peak tracks the maximum ever set.
+    pub fn gauge_set(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.update(name, labels, |old| match old {
+            Some(Value::Gauge { peak, .. }) => Value::Gauge { value: v, peak: peak.max(v) },
+            _ => Value::Gauge { value: v, peak: v },
+        });
+    }
+
+    /// Record one observation into a count/sum/min/max histogram.
+    pub fn observe(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.update(name, labels, |old| match old {
+            Some(Value::Histogram { count, sum, min, max }) => Value::Histogram {
+                count: count + 1,
+                sum: sum + v,
+                min: min.min(v),
+                max: max.max(v),
+            },
+            _ => Value::Histogram { count: 1, sum: v, min: v, max: v },
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (fresh run in the same process).
+    pub fn reset(&self) {
+        self.entries.lock().unwrap().clear();
+    }
+
+    /// Deterministic snapshot: `{"schema": ..., "metrics": [...]}`, entries
+    /// sorted by `(name, labels)`.
+    pub fn snapshot_json(&self) -> Json {
+        let entries = self.entries.lock().unwrap();
+        let mut arr = Vec::with_capacity(entries.len());
+        for e in entries.values() {
+            let mut obj = BTreeMap::new();
+            obj.insert("name".to_string(), Json::Str(e.name.clone()));
+            let labels: BTreeMap<String, Json> =
+                e.labels.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect();
+            obj.insert("labels".to_string(), Json::Obj(labels));
+            match &e.value {
+                Value::Counter(c) => {
+                    obj.insert("kind".to_string(), Json::Str("counter".to_string()));
+                    obj.insert("value".to_string(), Json::Num(*c as f64));
+                }
+                Value::Gauge { value, peak } => {
+                    obj.insert("kind".to_string(), Json::Str("gauge".to_string()));
+                    obj.insert("value".to_string(), Json::Num(*value));
+                    obj.insert("peak".to_string(), Json::Num(*peak));
+                }
+                Value::Histogram { count, sum, min, max } => {
+                    obj.insert("kind".to_string(), Json::Str("histogram".to_string()));
+                    obj.insert("count".to_string(), Json::Num(*count as f64));
+                    obj.insert("sum".to_string(), Json::Num(*sum));
+                    obj.insert("min".to_string(), Json::Num(*min));
+                    obj.insert("max".to_string(), Json::Num(*max));
+                    obj.insert("mean".to_string(), Json::Num(*sum / (*count).max(1) as f64));
+                }
+            }
+            arr.push(Json::Obj(obj));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Str(METRICS_SCHEMA.to_string()));
+        root.insert("metrics".to_string(), Json::Arr(arr));
+        Json::Obj(root)
+    }
+}
+
+/// Look a metric's primary `value` up in a snapshot produced by
+/// [`MetricsRegistry::snapshot_json`].  `labels` must match the entry's
+/// label set exactly (same keys, same values).
+pub fn find_value(snapshot: &Json, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+    let arr = snapshot.get("metrics").ok()?.as_arr().ok()?;
+    for entry in arr {
+        if entry.get("name").ok()?.as_str().ok()? != name {
+            continue;
+        }
+        let got = entry.get("labels").ok()?.as_obj().ok()?;
+        if got.len() != labels.len() {
+            continue;
+        }
+        let all_match =
+            labels.iter().all(|(k, v)| got.get(*k).and_then(|j| j.as_str().ok()) == Some(*v));
+        if all_match {
+            return entry.get("value").ok()?.as_f64().ok();
+        }
+    }
+    None
+}
+
+// --- process-wide sink -------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// Whether the process-wide sink records anything.  Instrumented paths
+/// branch on this *before* building labels, so the disabled cost is one
+/// relaxed load and zero allocations.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn global() -> &'static MetricsRegistry {
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+/// Counter add on the global sink; no-op while disabled.
+pub fn counter_add(name: &str, labels: &[(&str, &str)], v: u64) {
+    if enabled() {
+        global().counter_add(name, labels, v);
+    }
+}
+
+/// Gauge set on the global sink; no-op while disabled.
+pub fn gauge_set(name: &str, labels: &[(&str, &str)], v: f64) {
+    if enabled() {
+        global().gauge_set(name, labels, v);
+    }
+}
+
+/// Histogram observation on the global sink; no-op while disabled.
+pub fn observe(name: &str, labels: &[(&str, &str)], v: f64) {
+    if enabled() {
+        global().observe(name, labels, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_records_and_snapshots_deterministically() {
+        let r = MetricsRegistry::new();
+        r.counter_add("bytes_total", &[("dir", "h2d")], 100);
+        r.counter_add("bytes_total", &[("dir", "h2d")], 50);
+        r.counter_add("bytes_total", &[("dir", "d2h")], 7);
+        r.gauge_set("window_slots", &[], 3.0);
+        r.gauge_set("window_slots", &[], 2.0);
+        r.observe("chunks", &[("op", "decode")], 4.0);
+        r.observe("chunks", &[("op", "decode")], 10.0);
+        assert_eq!(r.len(), 4);
+
+        let snap = r.snapshot_json();
+        assert_eq!(snap.get("schema").unwrap().as_str().unwrap(), METRICS_SCHEMA);
+        assert_eq!(find_value(&snap, "bytes_total", &[("dir", "h2d")]), Some(150.0));
+        assert_eq!(find_value(&snap, "bytes_total", &[("dir", "d2h")]), Some(7.0));
+        // Gauge value is last-set; peak is tracked separately.
+        assert_eq!(find_value(&snap, "window_slots", &[]), Some(2.0));
+        // Label sets must match exactly — a subset is not a match.
+        assert_eq!(find_value(&snap, "bytes_total", &[]), None);
+        assert_eq!(find_value(&snap, "missing", &[]), None);
+
+        // Byte-identical snapshots for identical contents, and label order
+        // at the call site never matters.
+        let r2 = MetricsRegistry::new();
+        r2.observe("chunks", &[("op", "decode")], 4.0);
+        r2.observe("chunks", &[("op", "decode")], 10.0);
+        r2.gauge_set("window_slots", &[], 3.0);
+        r2.gauge_set("window_slots", &[], 2.0);
+        r2.counter_add("bytes_total", &[("dir", "d2h")], 7);
+        r2.counter_add("bytes_total", &[("dir", "h2d")], 150);
+        assert_eq!(snap.to_string_pretty(), r2.snapshot_json().to_string_pretty());
+
+        r.reset();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn histogram_tracks_count_sum_min_max() {
+        let r = MetricsRegistry::new();
+        for v in [5.0, 1.0, 9.0] {
+            r.observe("h", &[], v);
+        }
+        let snap = r.snapshot_json();
+        let m = snap.get("metrics").unwrap().as_arr().unwrap();
+        let h = &m[0];
+        assert_eq!(h.get("count").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(h.get("sum").unwrap().as_f64().unwrap(), 15.0);
+        assert_eq!(h.get("min").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(h.get("max").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(h.get("mean").unwrap().as_f64().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn label_order_is_canonicalised() {
+        let r = MetricsRegistry::new();
+        r.counter_add("x", &[("b", "2"), ("a", "1")], 1);
+        r.counter_add("x", &[("a", "1"), ("b", "2")], 1);
+        assert_eq!(r.len(), 1, "same labels in any order are one series");
+        let snap = r.snapshot_json();
+        assert_eq!(find_value(&snap, "x", &[("a", "1"), ("b", "2")]), Some(2.0));
+    }
+}

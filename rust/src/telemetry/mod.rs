@@ -1,5 +1,13 @@
 //! Telemetry: timeline traces (paper Fig. 4), memory reports, throughput,
 //! and the host-scratch gauge (DRAM bytes held by reusable scratch buffers).
+//!
+//! Submodules: [`metrics`] — the labeled counter/gauge/histogram registry
+//! behind the disabled-by-default process-wide sink; [`trace`] — the
+//! Chrome-trace-event exporter shared by simulator plans and measured
+//! engine runs, plus the sim-vs-measured drift report.
+
+pub mod metrics;
+pub mod trace;
 
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -32,6 +40,14 @@ impl Gauge {
     pub fn peak(&self) -> u64 {
         self.peak.load(Ordering::SeqCst)
     }
+
+    /// Zero both the current value and the peak.  Process-wide gauges
+    /// (e.g. [`HOST_SCRATCH`]) call this at engine construction so
+    /// back-to-back runs in one process don't inherit a stale peak.
+    pub fn reset(&self) {
+        self.cur.store(0, Ordering::SeqCst);
+        self.peak.store(0, Ordering::SeqCst);
+    }
 }
 
 impl Default for Gauge {
@@ -49,6 +65,11 @@ pub static HOST_SCRATCH: Gauge = Gauge::new();
 #[derive(Debug, Clone)]
 pub struct TraceEvent {
     pub stream: &'static str,
+    /// Task category from the shared simulator/engine vocabulary
+    /// ([`crate::sched::TaskKind::cat_name`]); the drift report joins the
+    /// two traces on this, independent of which stream the work ran on
+    /// (the sequential-mode engine runs everything on one thread).
+    pub cat: &'static str,
     pub label: String,
     pub start: f64,
     pub end: f64,
@@ -73,10 +94,33 @@ impl Timeline {
         self.events.iter().map(|e| e.end).fold(0.0, f64::max)
     }
 
+    /// Append every event of `other`, shifted by `offset` seconds.  The
+    /// trainer uses this to concatenate per-step engine timelines into one
+    /// whole-run trace.
+    pub fn extend_offset(&mut self, other: &Timeline, offset: f64) {
+        for e in &other.events {
+            self.events.push(TraceEvent {
+                stream: e.stream,
+                cat: e.cat,
+                label: e.label.clone(),
+                start: e.start + offset,
+                end: e.end + offset,
+            });
+        }
+    }
+
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("stream,label,start_s,end_s\n");
+        let mut s = String::from("stream,cat,label,start_s,end_s\n");
         for e in &self.events {
-            let _ = writeln!(s, "{},{},{:.9},{:.9}", e.stream, e.label.replace(',', ";"), e.start, e.end);
+            let _ = writeln!(
+                s,
+                "{},{},{},{:.9},{:.9}",
+                e.stream,
+                e.cat,
+                e.label.replace(',', ";"),
+                e.start,
+                e.end
+            );
         }
         s
     }
@@ -84,6 +128,7 @@ impl Timeline {
     /// Render an ASCII gantt chart (one row per stream), `width` columns.
     /// This is the textual Figure 4.
     pub fn to_ascii_gantt(&self, width: usize) -> String {
+        let width = width.max(1);
         let total = self.makespan();
         if total <= 0.0 || self.events.is_empty() {
             return String::from("(empty timeline)\n");
@@ -99,8 +144,12 @@ impl Timeline {
         for s in streams {
             let mut row = vec![' '; width];
             for e in self.events.iter().filter(|e| e.stream == s) {
-                let a = ((e.start / total) * width as f64) as usize;
-                let b = (((e.end / total) * width as f64).ceil() as usize).min(width);
+                // Clamp so every event renders at least one cell: a
+                // zero-duration event (or one ending exactly at the
+                // makespan) must not round to an empty span or spill past
+                // the row.
+                let a = (((e.start / total) * width as f64) as usize).min(width - 1);
+                let b = ((((e.end / total) * width as f64).ceil()) as usize).clamp(a + 1, width);
                 let ch = match e.label.chars().next().unwrap_or('?') {
                     'U' => 'U',
                     'O' => 'O',
@@ -166,12 +215,16 @@ impl Series {
 mod tests {
     use super::*;
 
+    fn ev(stream: &'static str, label: &str, start: f64, end: f64) -> TraceEvent {
+        TraceEvent { stream, cat: "compute", label: label.into(), start, end }
+    }
+
     #[test]
     fn gantt_and_utilization() {
         let mut t = Timeline::new();
-        t.push(TraceEvent { stream: "compute", label: "C b0".into(), start: 0.0, end: 2.0 });
-        t.push(TraceEvent { stream: "upload", label: "U b1".into(), start: 0.0, end: 1.0 });
-        t.push(TraceEvent { stream: "compute", label: "C b1".into(), start: 2.0, end: 4.0 });
+        t.push(ev("compute", "C b0", 0.0, 2.0));
+        t.push(ev("upload", "U b1", 0.0, 1.0));
+        t.push(ev("compute", "C b1", 2.0, 4.0));
         assert_eq!(t.makespan(), 4.0);
         assert!((t.utilization("compute") - 1.0).abs() < 1e-12);
         assert!((t.utilization("upload") - 0.25).abs() < 1e-12);
@@ -180,6 +233,28 @@ mod tests {
         assert!(g.contains('#'));
         let csv = t.to_csv();
         assert!(csv.lines().count() == 4);
+    }
+
+    #[test]
+    fn gantt_renders_zero_width_events() {
+        let mut t = Timeline::new();
+        // Zero-duration event at t=0, and an event whose span rounds to
+        // less than one cell ending exactly at the makespan: both must
+        // still paint one cell, and no row may exceed `width`.
+        t.push(ev("compute", "C b0", 0.0, 10.0));
+        t.push(ev("upload", "U b0", 0.0, 0.0));
+        t.push(ev("offload", "O b0", 9.999, 10.0));
+        let g = t.to_ascii_gantt(10);
+        let upload_row = g.lines().find(|l| l.contains("upload")).unwrap();
+        assert!(upload_row.contains('U'), "zero-duration event vanished: {upload_row}");
+        let offload_row = g.lines().find(|l| l.contains("offload")).unwrap();
+        assert!(offload_row.contains('O'), "makespan-edge event vanished: {offload_row}");
+        for row in g.lines().skip(1) {
+            let cells = row.split('|').nth(1).unwrap();
+            assert_eq!(cells.chars().count(), 10, "row width must be exactly 10: {row}");
+        }
+        // Degenerate width is clamped to one column rather than panicking.
+        assert!(t.to_ascii_gantt(0).contains('|'));
     }
 
     #[test]
@@ -193,6 +268,21 @@ mod tests {
         assert_eq!(g.peak(), 150);
         g.add(10);
         assert_eq!(g.peak(), 150, "peak unchanged below the high-water mark");
+        g.reset();
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.peak(), 0, "reset clears the high-water mark");
+    }
+
+    #[test]
+    fn extend_offset_shifts_events() {
+        let mut step = Timeline::new();
+        step.push(ev("compute", "C b0", 0.0, 1.0));
+        let mut run = Timeline::new();
+        run.extend_offset(&step, 0.0);
+        run.extend_offset(&step, step.makespan());
+        assert_eq!(run.events.len(), 2);
+        assert!((run.events[1].start - 1.0).abs() < 1e-12);
+        assert!((run.makespan() - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Chrome-trace-event (Perfetto) export and predicted-vs-measured drift
+//! reports.
+//!
+//! Both the analytic simulator's plan [`Timeline`] and the real engine's
+//! measured [`Timeline`] export through [`chrome_trace`] with one shared
+//! mapping — `pid` = device index, `tid` = stream kind (the fixed
+//! [`crate::sched::STREAM_KINDS`] order) — so a simulated and a measured
+//! trace of the same config overlay track-for-track in `chrome://tracing`
+//! or <https://ui.perfetto.dev>.  [`drift_report`] joins such a pair on
+//! `(pid, tid)` and on the task category (`cat`, the shared
+//! [`crate::sched::TaskKind::cat_name`] vocabulary) and emits per-stream
+//! busy-time, per-task-kind duration, and makespan deltas — the
+//! calibration input the autotuner roadmap item needs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::sched::STREAM_KINDS;
+use crate::telemetry::Timeline;
+use crate::util::json::Json;
+
+/// Schema tag embedded in every exported trace (under `otherData`).
+pub const TRACE_SCHEMA: &str = "zo2-trace-v1";
+
+/// Schema tag of the drift-report JSON.
+pub const DRIFT_SCHEMA: &str = "zo2-drift-v1";
+
+/// `tid` used for stream names outside the fixed kind vocabulary.
+const TID_OTHER: usize = STREAM_KINDS.len();
+
+/// Split a timeline stream name ("compute", "d2.disk_read") into
+/// `(device, kind_name)`.
+fn stream_parts(stream: &str) -> (usize, &str) {
+    if let Some(rest) = stream.strip_prefix('d') {
+        if let Some((dev, kind)) = rest.split_once('.') {
+            if let Ok(d) = dev.parse::<usize>() {
+                return (d, kind);
+            }
+        }
+    }
+    (0, stream)
+}
+
+fn tid_of(kind: &str) -> usize {
+    STREAM_KINDS.iter().position(|k| k.name() == kind).unwrap_or(TID_OTHER)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Export a timeline as Chrome trace-event JSON: `ph:"M"` metadata naming
+/// each process (device) and thread (stream kind), then `ph:"X"` complete
+/// events sorted by `(ts, pid, tid)`.  Timestamps are microseconds.
+pub fn chrome_trace(tl: &Timeline) -> Json {
+    // (pid, tid) -> kind name, discovered from the events.
+    let mut threads: BTreeMap<(usize, usize), &str> = BTreeMap::new();
+    for e in &tl.events {
+        let (dev, kind) = stream_parts(e.stream);
+        threads.insert((dev, tid_of(kind)), kind);
+    }
+
+    let mut events: Vec<Json> = Vec::new();
+    let mut seen_pid = None;
+    for (&(pid, tid), &kind) in &threads {
+        if seen_pid != Some(pid) {
+            seen_pid = Some(pid);
+            events.push(obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("name", Json::Str("process_name".into())),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(0.0)),
+                ("args", obj(vec![("name", Json::Str(format!("device{pid}")))])),
+            ]));
+        }
+        events.push(obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("thread_name".into())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+            ("args", obj(vec![("name", Json::Str(kind.to_string()))])),
+        ]));
+    }
+
+    // Sort complete events by (ts, pid, tid) for a deterministic file even
+    // when the threaded engine pushed them in completion order.
+    let mut xs: Vec<(f64, usize, usize, &crate::telemetry::TraceEvent)> = tl
+        .events
+        .iter()
+        .map(|e| {
+            let (dev, kind) = stream_parts(e.stream);
+            (e.start, dev, tid_of(kind), e)
+        })
+        .collect();
+    xs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+    for (start, pid, tid, e) in xs {
+        let dur_us = ((e.end - e.start).max(0.0)) * 1e6;
+        events.push(obj(vec![
+            ("ph", Json::Str("X".into())),
+            ("name", Json::Str(e.label.clone())),
+            ("cat", Json::Str(e.cat.to_string())),
+            ("ts", Json::Num(start * 1e6)),
+            ("dur", Json::Num(dur_us)),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+        ]));
+    }
+
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("otherData", obj(vec![("schema", Json::Str(TRACE_SCHEMA.into()))])),
+    ])
+}
+
+/// Write a timeline to `path` as Chrome trace-event JSON.
+pub fn write_chrome_trace(path: &str, tl: &Timeline) -> Result<()> {
+    std::fs::write(path, chrome_trace(tl).to_string_pretty())
+        .with_context(|| format!("writing trace {path}"))
+}
+
+/// Parse a trace file written by [`write_chrome_trace`].
+pub fn load_trace(path: &str) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let doc = Json::parse(&text).with_context(|| format!("parsing trace {path}"))?;
+    ensure!(doc.get("traceEvents").is_ok(), "{path}: not a trace file (no traceEvents)");
+    Ok(doc)
+}
+
+/// Aggregates of one trace: stream/process names, per-stream busy seconds,
+/// per-category (duration, count), and the event span.
+struct TraceStats {
+    threads: BTreeMap<(usize, usize), String>,
+    busy_s: BTreeMap<(usize, usize), f64>,
+    cats: BTreeMap<String, (f64, u64)>,
+    makespan_s: f64,
+}
+
+fn trace_stats(doc: &Json) -> Result<TraceStats> {
+    let events = doc.get("traceEvents")?.as_arr()?;
+    let mut s = TraceStats {
+        threads: BTreeMap::new(),
+        busy_s: BTreeMap::new(),
+        cats: BTreeMap::new(),
+        makespan_s: 0.0,
+    };
+    for e in events {
+        let ph = e.get("ph")?.as_str()?;
+        match ph {
+            "M" => {
+                if e.get("name")?.as_str()? == "thread_name" {
+                    let pid = e.get("pid")?.as_usize()?;
+                    let tid = e.get("tid")?.as_usize()?;
+                    let name = e.get("args")?.get("name")?.as_str()?.to_string();
+                    s.threads.insert((pid, tid), name);
+                }
+            }
+            "X" => {
+                let pid = e.get("pid")?.as_usize()?;
+                let tid = e.get("tid")?.as_usize()?;
+                let ts = e.get("ts")?.as_f64()?;
+                let dur = e.get("dur")?.as_f64()?;
+                ensure!(dur >= 0.0, "negative duration in trace");
+                *s.busy_s.entry((pid, tid)).or_insert(0.0) += dur / 1e6;
+                if let Ok(cat) = e.get("cat") {
+                    let entry = s.cats.entry(cat.as_str()?.to_string()).or_insert((0.0, 0));
+                    entry.0 += dur / 1e6;
+                    entry.1 += 1;
+                }
+                s.makespan_s = s.makespan_s.max((ts + dur) / 1e6);
+            }
+            _ => {}
+        }
+    }
+    Ok(s)
+}
+
+fn ratio(sim: f64, measured: f64) -> Json {
+    if sim > 0.0 {
+        Json::Num(measured / sim)
+    } else {
+        Json::Null
+    }
+}
+
+/// Diff a simulated-plan trace against a measured-run trace of the same
+/// config.  Streams join on `(pid, tid)` — the shared export mapping —
+/// and task kinds join on `cat`.  Ratios are `measured / sim`
+/// (`null` when the sim side is zero or absent).
+pub fn drift_report(sim: &Json, measured: &Json) -> Result<Json> {
+    let a = trace_stats(sim).context("sim trace")?;
+    let b = trace_stats(measured).context("measured trace")?;
+
+    let mut streams = Vec::new();
+    let mut keys: Vec<(usize, usize)> =
+        a.busy_s.keys().chain(b.busy_s.keys()).copied().collect();
+    keys.sort();
+    keys.dedup();
+    for key in keys {
+        let (pid, tid) = key;
+        let name = a
+            .threads
+            .get(&key)
+            .or_else(|| b.threads.get(&key))
+            .cloned()
+            .unwrap_or_else(|| format!("tid{tid}"));
+        let sa = a.busy_s.get(&key).copied().unwrap_or(0.0);
+        let sb = b.busy_s.get(&key).copied().unwrap_or(0.0);
+        streams.push(obj(vec![
+            ("device", Json::Num(pid as f64)),
+            ("stream", Json::Str(name)),
+            ("sim_busy_s", Json::Num(sa)),
+            ("measured_busy_s", Json::Num(sb)),
+            ("delta_s", Json::Num(sb - sa)),
+            ("ratio", ratio(sa, sb)),
+        ]));
+    }
+
+    let mut kinds = Vec::new();
+    let mut cats: Vec<String> = a.cats.keys().chain(b.cats.keys()).cloned().collect();
+    cats.sort();
+    cats.dedup();
+    for cat in cats {
+        let (sa, ca) = a.cats.get(&cat).copied().unwrap_or((0.0, 0));
+        let (sb, cb) = b.cats.get(&cat).copied().unwrap_or((0.0, 0));
+        kinds.push(obj(vec![
+            ("kind", Json::Str(cat)),
+            ("sim_s", Json::Num(sa)),
+            ("sim_count", Json::Num(ca as f64)),
+            ("measured_s", Json::Num(sb)),
+            ("measured_count", Json::Num(cb as f64)),
+            ("delta_s", Json::Num(sb - sa)),
+            ("ratio", ratio(sa, sb)),
+        ]));
+    }
+
+    Ok(obj(vec![
+        ("schema", Json::Str(DRIFT_SCHEMA.into())),
+        (
+            "makespan_s",
+            obj(vec![
+                ("sim", Json::Num(a.makespan_s)),
+                ("measured", Json::Num(b.makespan_s)),
+                ("delta", Json::Num(b.makespan_s - a.makespan_s)),
+                ("ratio", ratio(a.makespan_s, b.makespan_s)),
+            ]),
+        ),
+        ("streams", Json::Arr(streams)),
+        ("task_kinds", Json::Arr(kinds)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::TraceEvent;
+
+    fn ev(stream: &'static str, cat: &'static str, label: &str, s: f64, e: f64) -> TraceEvent {
+        TraceEvent { stream, cat, label: label.to_string(), start: s, end: e }
+    }
+
+    #[test]
+    fn stream_parts_and_tids() {
+        assert_eq!(stream_parts("compute"), (0, "compute"));
+        assert_eq!(stream_parts("d3.disk_write"), (3, "disk_write"));
+        assert_eq!(stream_parts("dx.bogus"), (0, "dx.bogus"));
+        assert_eq!(tid_of("upload"), 0);
+        assert_eq!(tid_of("interconnect"), 5);
+        assert_eq!(tid_of("mystery"), TID_OTHER);
+    }
+
+    #[test]
+    fn empty_timeline_exports_zero_events() {
+        let doc = chrome_trace(&Timeline::new());
+        assert!(doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn export_is_deterministic_under_push_order() {
+        let mut t1 = Timeline::new();
+        t1.push(ev("compute", "compute", "C b0", 1.0, 2.0));
+        t1.push(ev("upload", "upload", "U b0", 0.0, 1.0));
+        let mut t2 = Timeline::new();
+        t2.push(ev("upload", "upload", "U b0", 0.0, 1.0));
+        t2.push(ev("compute", "compute", "C b0", 1.0, 2.0));
+        assert_eq!(
+            chrome_trace(&t1).to_string_pretty(),
+            chrome_trace(&t2).to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn drift_report_joins_streams_and_kinds() {
+        let mut sim = Timeline::new();
+        sim.push(ev("compute", "compute", "C b0", 0.0, 2.0));
+        sim.push(ev("upload", "upload", "U b0", 0.0, 1.0));
+        let mut measured = Timeline::new();
+        measured.push(ev("compute", "compute", "C b0", 0.0, 3.0));
+        measured.push(ev("compute", "disk_read", "R b0", 3.0, 3.5));
+
+        let rep =
+            drift_report(&chrome_trace(&sim), &chrome_trace(&measured)).unwrap();
+        assert_eq!(rep.get("schema").unwrap().as_str().unwrap(), DRIFT_SCHEMA);
+        let mk = rep.get("makespan_s").unwrap();
+        assert!((mk.get("sim").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        assert!((mk.get("measured").unwrap().as_f64().unwrap() - 3.5).abs() < 1e-9);
+        assert!((mk.get("ratio").unwrap().as_f64().unwrap() - 1.75).abs() < 1e-9);
+
+        let streams = rep.get("streams").unwrap().as_arr().unwrap();
+        let compute = streams
+            .iter()
+            .find(|s| s.get("stream").unwrap().as_str().unwrap() == "compute")
+            .unwrap();
+        assert!((compute.get("sim_busy_s").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        assert!((compute.get("measured_busy_s").unwrap().as_f64().unwrap() - 3.5).abs() < 1e-9);
+        // Upload ran in the sim but not the measured run: ratio 0, not null.
+        let upload = streams
+            .iter()
+            .find(|s| s.get("stream").unwrap().as_str().unwrap() == "upload")
+            .unwrap();
+        assert!((upload.get("ratio").unwrap().as_f64().unwrap()).abs() < 1e-9);
+
+        let kinds = rep.get("task_kinds").unwrap().as_arr().unwrap();
+        let dr = kinds
+            .iter()
+            .find(|k| k.get("kind").unwrap().as_str().unwrap() == "disk_read")
+            .unwrap();
+        assert_eq!(dr.get("sim_count").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(dr.get("measured_count").unwrap().as_f64().unwrap(), 1.0);
+        assert!(matches!(dr.get("ratio").unwrap(), Json::Null));
+    }
+}

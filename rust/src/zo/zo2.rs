@@ -160,6 +160,9 @@ pub struct Zo2Engine {
 
 impl Zo2Engine {
     pub fn new(rt: Runtime, cfg: ZoConfig, opts: Zo2Options) -> Result<Self> {
+        // Fresh engine, fresh scratch accounting: back-to-back runs in one
+        // process must not inherit the previous run's peak.
+        crate::telemetry::HOST_SCRATCH.reset();
         let mut params = ParamStore::init(rt.manifest(), cfg.seed, opts.wire);
         let device = DevicePool::new(opts.device_capacity);
         // Device residency: embedding + head (fp32) + the reusable slots.
@@ -384,6 +387,7 @@ impl Zo2Engine {
                     if spilled {
                         timeline.push(TraceEvent {
                             stream: "compute",
+                            cat: "disk_read",
                             label: format!("R b{i}"),
                             start: tr,
                             end: wall0.elapsed().as_secs_f64(),
@@ -411,6 +415,7 @@ impl Zo2Engine {
                     self.transfers.lock().unwrap().record_h2d(wire, &self.transfer_model);
                     timeline.push(TraceEvent {
                         stream: "compute",
+                        cat: "upload",
                         label: format!("U b{i}"),
                         start: tu,
                         end: wall0.elapsed().as_secs_f64(),
@@ -437,6 +442,7 @@ impl Zo2Engine {
                     hm = it.next().unwrap();
                     timeline.push(TraceEvent {
                         stream: "compute",
+                        cat: "compute",
                         label: format!("C b{i}"),
                         start: tc,
                         end: wall0.elapsed().as_secs_f64(),
@@ -451,6 +457,7 @@ impl Zo2Engine {
                     }
                     timeline.push(TraceEvent {
                         stream: "compute",
+                        cat: "offload",
                         label: format!("O b{i}"),
                         start: to,
                         end: wall0.elapsed().as_secs_f64(),
@@ -462,6 +469,7 @@ impl Zo2Engine {
                     if spilled {
                         timeline.push(TraceEvent {
                             stream: "compute",
+                            cat: "disk_write",
                             label: format!("W b{i}"),
                             start: tw,
                             end: wall0.elapsed().as_secs_f64(),
@@ -518,7 +526,38 @@ impl Zo2Engine {
 
         self.last_timeline = timeline;
         self.step += 1;
+        if crate::telemetry::metrics::enabled() {
+            self.record_step_metrics(t0.elapsed().as_secs_f64());
+        }
         Ok(StepStats { step: self.step - 1, loss_plus, loss_minus, g, wall_s: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Step-shape gauges/histograms for the process-wide metrics sink.
+    /// Only reached when the sink is enabled (`--metrics-out`): the
+    /// config labels make one run's series self-describing.
+    fn record_step_metrics(&self, wall_s: f64) {
+        use crate::telemetry::metrics;
+        let tier = match self.opts.tiering {
+            Tiering::TwoTier => "two",
+            Tiering::ThreeTier => "three",
+        };
+        let site = match self.opts.update_site {
+            UpdateSite::Device => "device",
+            UpdateSite::Cpu => "cpu",
+        };
+        let labels = [("codec", self.opts.wire.name()), ("tier", tier), ("update_site", site)];
+        metrics::observe("zo2_step_wall_s", &labels, wall_s);
+        metrics::gauge_set("device_peak_bytes", &[("device", "0")], self.device.peak() as f64);
+        metrics::gauge_set(
+            "host_scratch_peak_bytes",
+            &[],
+            crate::telemetry::HOST_SCRATCH.peak() as f64,
+        );
+        if let Some(t) = &self.disk {
+            metrics::gauge_set("dram_window_peak_slots", &[], t.window.peak_slots() as f64);
+            metrics::gauge_set("dram_window_peak_bytes", &[], t.window.peak_bytes() as f64);
+            metrics::gauge_set("disk_used_bytes", &[], t.pool.used() as f64);
+        }
     }
 
     /// Overlapped block pipeline (Algorithm 3 with real threads).
@@ -600,6 +639,7 @@ impl Zo2Engine {
                         let t_end = wall0.elapsed().as_secs_f64();
                         events.lock().unwrap().push(TraceEvent {
                             stream: "upload",
+                            cat: "upload",
                             label: format!("U b{idx}"),
                             start: t_start,
                             end: t_end,
@@ -622,6 +662,7 @@ impl Zo2Engine {
                         trans.lock().unwrap().record_d2h(wire_bytes[job.idx], &tmodel);
                         events.lock().unwrap().push(TraceEvent {
                             stream: "offload",
+                            cat: "offload",
                             label: format!("O b{}", job.idx),
                             start: t_start,
                             end: wall0.elapsed().as_secs_f64(),
@@ -659,6 +700,7 @@ impl Zo2Engine {
                 let t_end = wall0.elapsed().as_secs_f64();
                 events.lock().unwrap().push(TraceEvent {
                     stream: "compute",
+                    cat: "compute",
                     label: format!("C b{}", up.idx),
                     start: tc.max(up.t_end),
                     end: t_end,
@@ -774,8 +816,20 @@ impl Zo2Engine {
                     for (idx, bucket) in buckets.into_iter().enumerate() {
                         let staged = match &tier.entries[idx] {
                             Some(entry) => {
+                                // Time blocked on a free DRAM-window slot:
+                                // the prefetcher's stall when write-backs
+                                // can't retire staged buckets fast enough.
+                                let t_wait = crate::telemetry::metrics::enabled()
+                                    .then(std::time::Instant::now);
                                 if rx_tok.recv().is_err() {
                                     return; // write stream died
+                                }
+                                if let Some(t) = t_wait {
+                                    crate::telemetry::metrics::observe(
+                                        "dram_window_stall_s",
+                                        &[],
+                                        t.elapsed().as_secs_f64(),
+                                    );
                                 }
                                 tier.window
                                     .acquire(entry.wire_len() as u64)
@@ -792,6 +846,7 @@ impl Zo2Engine {
                                 };
                                 events.lock().unwrap().push(TraceEvent {
                                     stream: "disk_read",
+                                    cat: "disk_read",
                                     label: format!("R b{idx}"),
                                     start: t_start,
                                     end: wall0.elapsed().as_secs_f64(),
@@ -831,6 +886,7 @@ impl Zo2Engine {
                         let t_end = wall0.elapsed().as_secs_f64();
                         events.lock().unwrap().push(TraceEvent {
                             stream: "upload",
+                            cat: "upload",
                             label: format!("U b{idx}"),
                             start: t_start,
                             end: t_end,
@@ -852,6 +908,7 @@ impl Zo2Engine {
                         trans.lock().unwrap().record_d2h(wire_bytes[job.idx], &tmodel);
                         events.lock().unwrap().push(TraceEvent {
                             stream: "offload",
+                            cat: "offload",
                             label: format!("O b{}", job.idx),
                             start: t_start,
                             end: wall0.elapsed().as_secs_f64(),
@@ -887,6 +944,7 @@ impl Zo2Engine {
                                 }
                                 events.lock().unwrap().push(TraceEvent {
                                     stream: "disk_write",
+                                    cat: "disk_write",
                                     label: format!("W b{idx}"),
                                     start: t_start,
                                     end: wall0.elapsed().as_secs_f64(),
@@ -942,6 +1000,7 @@ impl Zo2Engine {
                 let t_end = wall0.elapsed().as_secs_f64();
                 events.lock().unwrap().push(TraceEvent {
                     stream: "compute",
+                    cat: "compute",
                     label: format!("C b{}", up.idx),
                     start: tc.max(up.t_end),
                     end: t_end,

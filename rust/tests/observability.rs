@@ -1,0 +1,261 @@
+//! Integration tests for the observability layer: the process-wide metrics
+//! sink lifecycle, the Chrome-trace exporter round-trip (file in, file
+//! out, schema intact), the drift report over a written trace pair, and
+//! the CLI end to end (`simulate --trace-out/--metrics-out` feeding
+//! `report`).
+//!
+//! The global-sink test is deliberately ONE `#[test]` fn: `cargo test`
+//! runs tests in one process on many threads, and the enabled flag plus
+//! the global registry are process-wide.  Everything else here uses local
+//! registries, local timelines, or spawned CLI processes.
+
+use zo2::hostpool::{fused, HostPool};
+use zo2::precision::Codec;
+use zo2::telemetry::metrics::{self, find_value};
+use zo2::telemetry::trace::{
+    drift_report, load_trace, write_chrome_trace, DRIFT_SCHEMA, TRACE_SCHEMA,
+};
+use zo2::telemetry::{Timeline, TraceEvent};
+use zo2::util::json::Json;
+
+fn ev(stream: &'static str, cat: &'static str, label: &str, start: f64, end: f64) -> TraceEvent {
+    TraceEvent { stream, cat, label: label.to_string(), start, end }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("zo2_obs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Disabled → enabled → disabled, in one test because the sink is global.
+#[test]
+fn global_sink_records_only_while_enabled() {
+    assert!(!metrics::enabled(), "sink must be off by default");
+
+    // Disabled: instrumented kernels and the free helpers record nothing.
+    let pool = HostPool::new(2);
+    let xs = vec![0.25f32; 100];
+    let wire = Codec::Bf16.encode(&xs);
+    let mut out = vec![0.0f32; xs.len()];
+    fused::decode_pooled(Codec::Bf16, &wire, &mut out, &pool);
+    metrics::counter_add("t_counter", &[], 3);
+    metrics::observe("t_hist", &[], 1.0);
+    assert_eq!(metrics::global().len(), 0, "disabled sink must stay empty");
+
+    // Enabled: the same calls land in the registry.
+    metrics::set_enabled(true);
+    metrics::global().reset();
+    fused::decode_pooled(Codec::Bf16, &wire, &mut out, &pool);
+    metrics::counter_add("t_counter", &[], 3);
+    metrics::counter_add("t_counter", &[], 4);
+    let snap = metrics::global().snapshot_json();
+    assert_eq!(find_value(&snap, "t_counter", &[]), Some(7.0));
+    let entries = snap.get("metrics").unwrap().as_arr().unwrap();
+    let chunks = entries
+        .iter()
+        .find(|e| e.get("name").unwrap().as_str().unwrap() == "hostpool_chunks_per_call")
+        .expect("decode_pooled must record a chunk histogram while enabled");
+    assert_eq!(chunks.get("kind").unwrap().as_str().unwrap(), "histogram");
+    assert_eq!(chunks.get("count").unwrap().as_f64().unwrap(), 1.0);
+    let labels = chunks.get("labels").unwrap().as_obj().unwrap();
+    assert_eq!(labels.get("codec").unwrap().as_str().unwrap(), "bf16");
+    assert_eq!(labels.get("op").unwrap().as_str().unwrap(), "decode");
+
+    // Back off: later records are dropped again.
+    metrics::set_enabled(false);
+    metrics::global().reset();
+    metrics::observe("t_hist", &[], 2.0);
+    assert_eq!(metrics::global().len(), 0);
+}
+
+#[test]
+fn chrome_trace_round_trips_through_a_file() {
+    let mut tl = Timeline::new();
+    tl.push(ev("compute", "compute", "C b0", 0.0, 2.0));
+    tl.push(ev("upload", "upload", "U b0", 0.0, 1.0));
+    tl.push(ev("d1.disk_read", "disk_read", "R b1", 0.5, 1.5));
+    tl.push(ev("d1.compute", "compute", "C b1", 2.0, 2.0)); // zero duration
+
+    let path = tmp("roundtrip.json");
+    write_chrome_trace(path.to_str().unwrap(), &tl).unwrap();
+    let doc = load_trace(path.to_str().unwrap()).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(
+        doc.get("otherData").unwrap().get("schema").unwrap().as_str().unwrap(),
+        TRACE_SCHEMA
+    );
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut n_x = 0usize;
+    let mut n_meta = 0usize;
+    for e in events {
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "M" => n_meta += 1,
+            "X" => {
+                n_x += 1;
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                let dur = e.get("dur").unwrap().as_f64().unwrap();
+                assert!(dur >= 0.0, "negative duration");
+                assert!(ts >= last_ts, "X events must be sorted by ts");
+                last_ts = ts;
+                let name = e.get("name").unwrap().as_str().unwrap();
+                let pid = e.get("pid").unwrap().as_usize().unwrap();
+                let tid = e.get("tid").unwrap().as_usize().unwrap();
+                match name {
+                    // pid = device index, tid = fixed stream-kind index.
+                    "C b0" => assert_eq!((pid, tid), (0, 1)),
+                    "U b0" => assert_eq!((pid, tid), (0, 0)),
+                    "R b1" => assert_eq!((pid, tid), (1, 3)),
+                    "C b1" => {
+                        assert_eq!((pid, tid), (1, 1));
+                        assert_eq!(dur, 0.0);
+                    }
+                    n => panic!("unexpected event {n}"),
+                }
+            }
+            ph => panic!("unexpected phase {ph}"),
+        }
+    }
+    assert_eq!(n_x, 4);
+    // 2 process_name (devices 0 and 1) + 4 thread_name records.
+    assert_eq!(n_meta, 6);
+    let thread_names: Vec<&str> = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").unwrap().as_str().unwrap() == "M"
+                && e.get("name").unwrap().as_str().unwrap() == "thread_name"
+        })
+        .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(thread_names, ["upload", "compute", "compute", "disk_read"]);
+}
+
+#[test]
+fn drift_report_over_a_written_pair() {
+    let mut sim = Timeline::new();
+    sim.push(ev("upload", "upload", "U b0", 0.0, 1.0));
+    sim.push(ev("compute", "compute", "C b0", 1.0, 3.0));
+    let mut measured = Timeline::new();
+    measured.push(ev("upload", "upload", "U b0", 0.0, 1.5));
+    measured.push(ev("compute", "compute", "C b0", 1.5, 5.5));
+
+    let ps = tmp("pair_sim.json");
+    let pm = tmp("pair_measured.json");
+    write_chrome_trace(ps.to_str().unwrap(), &sim).unwrap();
+    write_chrome_trace(pm.to_str().unwrap(), &measured).unwrap();
+    let rep = drift_report(
+        &load_trace(ps.to_str().unwrap()).unwrap(),
+        &load_trace(pm.to_str().unwrap()).unwrap(),
+    )
+    .unwrap();
+    let _ = std::fs::remove_file(&ps);
+    let _ = std::fs::remove_file(&pm);
+
+    assert_eq!(rep.get("schema").unwrap().as_str().unwrap(), DRIFT_SCHEMA);
+    let mk = rep.get("makespan_s").unwrap();
+    assert!((mk.get("sim").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-9);
+    assert!((mk.get("measured").unwrap().as_f64().unwrap() - 5.5).abs() < 1e-9);
+    let streams = rep.get("streams").unwrap().as_arr().unwrap();
+    assert_eq!(streams.len(), 2);
+    let compute = streams
+        .iter()
+        .find(|s| s.get("stream").unwrap().as_str().unwrap() == "compute")
+        .unwrap();
+    assert!((compute.get("ratio").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+    let kinds = rep.get("task_kinds").unwrap().as_arr().unwrap();
+    assert_eq!(kinds.len(), 2);
+}
+
+/// `simulate --trace-out/--metrics-out` twice (overlap vs sequential
+/// schedule of the same model), then `report` over the pair — the whole
+/// CLI surface this PR adds, in fresh processes.
+#[test]
+fn cli_simulate_then_report() {
+    let bin = env!("CARGO_BIN_EXE_zo2");
+    let t_sim = tmp("cli_sim_trace.json");
+    let m_sim = tmp("cli_sim_metrics.json");
+    let t_seq = tmp("cli_seq_trace.json");
+    let drift = tmp("cli_drift.json");
+    let run = |args: &[&str]| -> String {
+        let out = std::process::Command::new(bin)
+            .args(args)
+            .current_dir(std::env::temp_dir())
+            .output()
+            .expect("spawn zo2");
+        assert!(
+            out.status.success(),
+            "zo2 {:?} failed:\n{}{}",
+            args,
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+
+    run(&[
+        "simulate",
+        "--model",
+        "OPT-13B",
+        "--sim-steps",
+        "2",
+        "--trace-out",
+        t_sim.to_str().unwrap(),
+        "--metrics-out",
+        m_sim.to_str().unwrap(),
+    ]);
+    run(&[
+        "simulate",
+        "--model",
+        "OPT-13B",
+        "--sim-steps",
+        "2",
+        "--mode",
+        "seq",
+        "--trace-out",
+        t_seq.to_str().unwrap(),
+    ]);
+
+    // Metrics snapshot: schema + a positive makespan and per-stream busy.
+    let snap = Json::parse(&std::fs::read_to_string(&m_sim).unwrap()).unwrap();
+    assert_eq!(snap.get("schema").unwrap().as_str().unwrap(), "zo2-metrics-v1");
+    let makespan = find_value(&snap, "sim_makespan_s", &[]).unwrap();
+    assert!(makespan > 0.0);
+    let compute_busy =
+        find_value(&snap, "sim_stream_busy_s", &[("device", "0"), ("stream", "compute")])
+            .unwrap();
+    assert!(compute_busy > 0.0 && compute_busy <= makespan + 1e-9);
+
+    // Trace files parse and carry events.
+    for p in [&t_sim, &t_seq] {
+        let doc = load_trace(p.to_str().unwrap()).unwrap();
+        assert!(!doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    let stdout = run(&[
+        "report",
+        "--sim",
+        t_sim.to_str().unwrap(),
+        "--measured",
+        t_seq.to_str().unwrap(),
+        "--out",
+        drift.to_str().unwrap(),
+    ]);
+    assert!(stdout.contains("makespan:"), "report must print the makespan line:\n{stdout}");
+
+    let rep = Json::parse(&std::fs::read_to_string(&drift).unwrap()).unwrap();
+    assert_eq!(rep.get("schema").unwrap().as_str().unwrap(), "zo2-drift-v1");
+    assert!(!rep.get("streams").unwrap().as_arr().unwrap().is_empty());
+    assert!(!rep.get("task_kinds").unwrap().as_arr().unwrap().is_empty());
+    // The sequential schedule of the same plan can only be slower.
+    let mk = rep.get("makespan_s").unwrap();
+    assert!(
+        mk.get("measured").unwrap().as_f64().unwrap()
+            >= mk.get("sim").unwrap().as_f64().unwrap() - 1e-9
+    );
+
+    for p in [&t_sim, &m_sim, &t_seq, &drift] {
+        let _ = std::fs::remove_file(p);
+    }
+}
