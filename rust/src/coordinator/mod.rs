@@ -334,3 +334,90 @@ pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
         spilled_blocks,
     })
 }
+
+/// Configuration for an elastic fault-tolerant DP run driven from the CLI
+/// (`zo2 dp ...`).
+pub struct ElasticTrainConfig {
+    pub run: crate::dp::ElasticRunConfig,
+    /// Write the canonical per-step trajectory (values + raw f32 bit
+    /// patterns) as JSON, byte-comparable across runs.
+    pub losses_out: Option<String>,
+    /// Write the recovery-metrics snapshot as JSON.
+    pub metrics_out: Option<String>,
+    pub log_every: usize,
+}
+
+/// Render the canonical trajectory as JSON carrying raw f32 bit patterns,
+/// so two runs can be checked for bit-identity with a plain byte diff.
+pub fn elastic_losses_json(outcome: &crate::dp::RunOutcome) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"zo2-dp-losses-v1\",\n");
+    let _ = writeln!(s, "  \"final_step\": {},", outcome.final_snap.step);
+    let fnv = crate::dp::params_fingerprint(&outcome.final_snap.params);
+    let _ = writeln!(s, "  \"final_params_fnv\": \"{fnv:#018x}\",");
+    s.push_str("  \"records\": [\n");
+    for (i, r) in outcome.records.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"step\": {}, \"loss\": {}, \"g_bits\": {}, \"lp_bits\": {}, \"lm_bits\": {}}}",
+            r.step,
+            r.loss(),
+            r.g.to_bits(),
+            r.loss_plus.to_bits(),
+            r.loss_minus.to_bits()
+        );
+        s.push_str(if i + 1 == outcome.records.len() { "\n" } else { ",\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Drive the elastic fault-tolerant DP backend end to end and report the
+/// canonical trajectory.  Metrics follow the same pay-for-what-you-use
+/// contract as [`train`]: the sink is enabled (and cleared) only when
+/// `metrics_out` asks for a snapshot.
+pub fn train_elastic(cfg: &ElasticTrainConfig, verbose: bool) -> Result<crate::dp::RunOutcome> {
+    crate::telemetry::metrics::set_enabled(cfg.metrics_out.is_some());
+    if cfg.metrics_out.is_some() {
+        crate::telemetry::metrics::global().reset();
+    }
+    let t0 = std::time::Instant::now();
+    let outcome = crate::dp::run_elastic(&cfg.run)?;
+    let wall = t0.elapsed().as_secs_f64();
+    if verbose {
+        let every = cfg.log_every.max(1) as u64;
+        for r in &outcome.records {
+            if r.step % every == 0 || r.step + 1 == cfg.run.steps {
+                println!("step {:>5}  loss {:.4}  g {:+.3e}", r.step, r.loss(), r.g);
+            }
+        }
+        println!(
+            "elastic dp: {} steps in {:.2}s ({} deaths, {} joins), final step {}, params fnv {:#018x}",
+            outcome.records.len(),
+            wall,
+            outcome.deaths,
+            outcome.joins,
+            outcome.final_snap.step,
+            crate::dp::params_fingerprint(&outcome.final_snap.params)
+        );
+    }
+    if let Some(path) = &cfg.losses_out {
+        std::fs::write(path, elastic_losses_json(&outcome))
+            .map_err(|e| anyhow::anyhow!("writing losses {path}: {e}"))?;
+        if verbose {
+            println!("wrote losses {path}");
+        }
+    }
+    if let Some(path) = &cfg.metrics_out {
+        use crate::telemetry::metrics;
+        metrics::gauge_set("zo2_dp_deaths", &[], outcome.deaths as f64);
+        metrics::gauge_set("zo2_dp_joins", &[], outcome.joins as f64);
+        std::fs::write(path, metrics::global().snapshot_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing metrics {path}: {e}"))?;
+        if verbose {
+            println!("wrote metrics {path}");
+        }
+    }
+    Ok(outcome)
+}

@@ -1,0 +1,114 @@
+//! Checkpoint/restore of replica state through the persistent `DiskPool`.
+//!
+//! A DP checkpoint is deliberately tiny: because perturbations are derived
+//! from (seed, step) and updates from the committed g scalars, the full
+//! optimizer + RNG state reduces to *the committed step count plus the flat
+//! parameters*. The parameters live as an fp32 bucket in a persistent
+//! `DiskPool` file; a JSON sidecar (`<pool>.meta.json`) records the bucket
+//! layout and step so `DiskBucket::at` can reconstruct the handle on
+//! restore. fp32 round-trips bit-exactly through the pool, which is what
+//! makes kill-and-resume continue the identical trajectory.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::protocol::WorkerSnapshot;
+use crate::memory::{DiskBucket, DiskPool, TransferModel};
+use crate::precision::Codec;
+
+/// Schema tag written into the sidecar; bump on layout changes.
+pub const CKPT_SCHEMA: &str = "zo2-dp-ckpt-v1";
+
+fn meta_path(pool_path: &Path) -> std::path::PathBuf {
+    let mut s = pool_path.as_os_str().to_os_string();
+    s.push(".meta.json");
+    std::path::PathBuf::from(s)
+}
+
+/// Write `snap` to `path` as a persistent pool file plus sidecar metadata.
+/// Each save rewrites the pool from scratch — checkpoints supersede each
+/// other; history is not kept.
+pub fn save_worker_checkpoint(path: &Path, snap: &WorkerSnapshot) -> Result<()> {
+    let _ = std::fs::remove_file(path);
+    let pool = DiskPool::create_persistent(
+        path.to_path_buf(),
+        u64::MAX,
+        TransferModel::nvme_read(),
+        TransferModel::nvme_write(),
+    )
+    .context("creating checkpoint pool")?;
+    let mut bytes = Vec::with_capacity(snap.params.len() * 4);
+    for &p in &snap.params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    let bucket = pool.append(Codec::F32, snap.params.len(), &bytes)?;
+    let meta = format!(
+        "{{\"schema\": \"{}\", \"step\": {}, \"numel\": {}, \"offset\": {}}}\n",
+        CKPT_SCHEMA,
+        snap.step,
+        snap.params.len(),
+        bucket.offset()
+    );
+    std::fs::write(meta_path(path), meta).context("writing checkpoint sidecar")?;
+    Ok(())
+}
+
+/// Load a snapshot previously written by [`save_worker_checkpoint`].
+pub fn load_worker_checkpoint(path: &Path) -> Result<WorkerSnapshot> {
+    let meta_raw = std::fs::read_to_string(meta_path(path))
+        .with_context(|| format!("reading checkpoint sidecar for {}", path.display()))?;
+    let meta = crate::util::json::Json::parse(&meta_raw).context("parsing checkpoint sidecar")?;
+    let schema = meta.get("schema")?.as_str()?;
+    ensure!(schema == CKPT_SCHEMA, "unknown checkpoint schema {schema:?}");
+    let step = meta.get("step")?.as_f64()? as u64;
+    let numel = meta.get("numel")?.as_usize()?;
+    let offset = meta.get("offset")?.as_f64()? as u64;
+    let pool = DiskPool::open_persistent(
+        path.to_path_buf(),
+        TransferModel::nvme_read(),
+        TransferModel::nvme_write(),
+    )
+    .context("opening checkpoint pool")?;
+    let bucket = DiskBucket::at(Codec::F32, numel, offset);
+    let bytes = pool.read(&bucket)?;
+    ensure!(bytes.len() == numel * 4, "checkpoint bucket truncated");
+    let params = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(WorkerSnapshot { step, params })
+}
+
+/// Remove a checkpoint and its sidecar (test hygiene).
+pub fn remove_checkpoint(path: &Path) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(meta_path(path));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("zo2_dp_ckpt_test_{}.pool", std::process::id()));
+        let snap = WorkerSnapshot {
+            step: 17,
+            params: vec![0.1, -0.0, f32::MIN_POSITIVE, 1.0e30, -42.5],
+        };
+        save_worker_checkpoint(&path, &snap).unwrap();
+        let back = load_worker_checkpoint(&path).unwrap();
+        assert_eq!(back.step, 17);
+        let a: Vec<u32> = snap.params.iter().map(|p| p.to_bits()).collect();
+        let b: Vec<u32> = back.params.iter().map(|p| p.to_bits()).collect();
+        assert_eq!(a, b);
+        // A later save supersedes the first.
+        let snap2 = WorkerSnapshot { step: 18, params: vec![7.0; 5] };
+        save_worker_checkpoint(&path, &snap2).unwrap();
+        assert_eq!(load_worker_checkpoint(&path).unwrap().step, 18);
+        remove_checkpoint(&path);
+        assert!(load_worker_checkpoint(&path).is_err());
+    }
+}

@@ -1,0 +1,479 @@
+//! Deterministic fault injection for the elastic DP backend.
+//!
+//! A [`FaultSchedule`] is a fixed list of faults pinned to (worker, step)
+//! coordinates: worker kills and stalls, mid-run joins, and message-level
+//! drop/duplicate/delay rules. Schedules come from an explicit spec string
+//! (`kill:w1@10,delay:losses:w0@4:2,join:w2@12`) or from a seed
+//! (`seeded:123`), and are applied underneath the transport by
+//! [`FaultyTransport`] so the supervisor and workers see faults exactly as
+//! they would see real network misbehavior.
+//!
+//! Everything is counted in messages and steps, never wall-clock time, so a
+//! given schedule replays identically on every run — which is what lets the
+//! tests assert bit-identical loss trajectories under fire.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::protocol::Msg;
+use super::transport::Transport;
+use crate::rng::GaussianRng;
+
+/// Which protocol message a drop/dup/delay rule applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    Assign,
+    Losses,
+    Commit,
+}
+
+impl MsgKind {
+    fn parse(s: &str) -> Result<MsgKind> {
+        match s {
+            "assign" => Ok(MsgKind::Assign),
+            "losses" => Ok(MsgKind::Losses),
+            "commit" => Ok(MsgKind::Commit),
+            other => bail!("unknown message kind {other:?} (want assign|losses|commit)"),
+        }
+    }
+}
+
+/// A single injected fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Worker exits abruptly when it receives the assignment for `step`.
+    Kill { worker: u32, step: u64 },
+    /// Worker sleeps `ms` milliseconds before answering the assignment for
+    /// `step` (a straggler, not a death).
+    Stall { worker: u32, step: u64, ms: u64 },
+    /// A new worker with this id connects just before `step` runs.
+    Join { worker: u32, step: u64 },
+    /// The first matching message for (worker, step) is silently dropped.
+    Drop { worker: u32, step: u64, what: MsgKind },
+    /// The first matching message is delivered twice.
+    Dup { worker: u32, step: u64, what: MsgKind },
+    /// The first matching message is held back and delivered only after
+    /// `by` further messages have moved in the same direction.
+    Delay { worker: u32, step: u64, what: MsgKind, by: u32 },
+}
+
+/// A deterministic schedule of faults for one run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    faults: Vec<Fault>,
+}
+
+/// Worker-side faults for one worker, handed to its serve loop.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerFaults {
+    /// Die when the assignment for this step arrives.
+    pub kill_step: Option<u64>,
+    /// Sleep (step, ms) before answering this step's assignment.
+    pub stall: Option<(u64, u64)>,
+}
+
+fn parse_worker_at(spec: &str) -> Result<(u32, u64)> {
+    // "w<i>@<step>"
+    let rest = spec.strip_prefix('w').with_context(|| format!("expected w<i>@<step>: {spec:?}"))?;
+    let (w, s) = rest.split_once('@').with_context(|| format!("expected w<i>@<step>: {spec:?}"))?;
+    Ok((
+        w.parse::<u32>().with_context(|| format!("bad worker index in {spec:?}"))?,
+        s.parse::<u64>().with_context(|| format!("bad step in {spec:?}"))?,
+    ))
+}
+
+fn next_part<'a>(
+    parts: &mut std::str::Split<'a, char>,
+    what: &str,
+    entry: &str,
+) -> Result<&'a str> {
+    parts.next().with_context(|| format!("{what} missing in fault entry {entry:?}"))
+}
+
+impl FaultSchedule {
+    /// An empty, fault-free schedule.
+    pub fn none() -> FaultSchedule {
+        FaultSchedule::default()
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Parse a schedule spec. Entries are comma-separated:
+    ///
+    /// - `kill:w1@10` — kill worker 1 at step 10
+    /// - `stall:w2@6:50` — worker 2 stalls 50 ms before answering step 6
+    /// - `join:w3@20` — worker 3 joins just before step 20
+    /// - `drop:assign:w0@5` — drop worker 0's step-5 assignment
+    /// - `dup:losses:w2@4` — duplicate worker 2's step-4 loss reply
+    /// - `delay:losses:w1@7:2` — hold worker 1's step-7 reply back 2 messages
+    /// - `seeded:123` — generate a schedule from seed 123 (must be the only
+    ///   entry); `workers` and `steps` bound the generated coordinates.
+    pub fn parse(spec: &str, workers: usize, steps: u64) -> Result<FaultSchedule> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultSchedule::none());
+        }
+        if let Some(seed) = spec.strip_prefix("seeded:") {
+            let seed = seed.parse::<u64>().with_context(|| format!("bad seed in {spec:?}"))?;
+            return Ok(FaultSchedule::seeded(seed, workers, steps));
+        }
+        let mut faults = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let mut parts = entry.split(':');
+            let head = parts.next().unwrap_or_default();
+            match head {
+                "kill" => {
+                    let (worker, step) = parse_worker_at(next_part(&mut parts, "target", entry)?)?;
+                    faults.push(Fault::Kill { worker, step });
+                }
+                "stall" => {
+                    let (worker, step) = parse_worker_at(next_part(&mut parts, "target", entry)?)?;
+                    let ms = next_part(&mut parts, "stall ms", entry)?
+                        .parse::<u64>()
+                        .with_context(|| format!("bad ms in {entry:?}"))?;
+                    faults.push(Fault::Stall { worker, step, ms });
+                }
+                "join" => {
+                    let (worker, step) = parse_worker_at(next_part(&mut parts, "target", entry)?)?;
+                    faults.push(Fault::Join { worker, step });
+                }
+                "drop" | "dup" => {
+                    let kind = MsgKind::parse(next_part(&mut parts, "message kind", entry)?)?;
+                    let (worker, step) = parse_worker_at(next_part(&mut parts, "target", entry)?)?;
+                    faults.push(if head == "drop" {
+                        Fault::Drop { worker, step, what: kind }
+                    } else {
+                        Fault::Dup { worker, step, what: kind }
+                    });
+                }
+                "delay" => {
+                    let kind = MsgKind::parse(next_part(&mut parts, "message kind", entry)?)?;
+                    let (worker, step) = parse_worker_at(next_part(&mut parts, "target", entry)?)?;
+                    let by = next_part(&mut parts, "delay count", entry)?
+                        .parse::<u32>()
+                        .with_context(|| format!("bad delay count in {entry:?}"))?;
+                    faults.push(Fault::Delay { worker, step, what: kind, by });
+                }
+                other => bail!("unknown fault {other:?} in {entry:?}"),
+            }
+            ensure!(parts.next().is_none(), "trailing fields in fault entry {entry:?}");
+        }
+        Ok(FaultSchedule { faults })
+    }
+
+    /// Generate a deterministic schedule from a seed. Always contains at
+    /// least one kill (never of the last survivor), one message delay, one
+    /// duplicate, one drop, and one mid-run join — the full acceptance
+    /// gauntlet — with coordinates drawn from the seed.
+    pub fn seeded(seed: u64, workers: usize, steps: u64) -> FaultSchedule {
+        let k = workers.max(2) as u64;
+        let span = steps.max(8);
+        let mut rng = GaussianRng::new(seed, 0xFA_017);
+        // Draw a step in the middle half of the run so recovery has room to
+        // play out before the trajectory check.
+        let mid = |rng: &mut GaussianRng| span / 4 + rng.next_below((span / 2).max(1));
+        let kill_w = rng.next_below(k) as u32;
+        let kill_s = mid(&mut rng);
+        let delay_w = rng.next_below(k) as u32;
+        let dup_w = rng.next_below(k) as u32;
+        let drop_w = rng.next_below(k) as u32;
+        let join_s = mid(&mut rng).max(2);
+        let early = |rng: &mut GaussianRng| rng.next_below(span / 4 + 1);
+        let faults = vec![
+            Fault::Kill { worker: kill_w, step: kill_s },
+            Fault::Delay {
+                worker: delay_w,
+                step: early(&mut rng),
+                what: MsgKind::Losses,
+                by: 1 + rng.next_below(2) as u32,
+            },
+            Fault::Dup { worker: dup_w, step: early(&mut rng), what: MsgKind::Losses },
+            Fault::Drop { worker: drop_w, step: early(&mut rng), what: MsgKind::Commit },
+            Fault::Join { worker: workers as u32, step: join_s },
+            Fault::Stall {
+                worker: rng.next_below(k) as u32,
+                step: early(&mut rng),
+                ms: 5 + rng.next_below(20),
+            },
+        ];
+        FaultSchedule { faults }
+    }
+
+    /// Worker-side faults (kill/stall) for one worker id.
+    pub fn worker_faults(&self, worker: u32) -> WorkerFaults {
+        let mut wf = WorkerFaults::default();
+        for f in &self.faults {
+            match *f {
+                Fault::Kill { worker: w, step } if w == worker => wf.kill_step = Some(step),
+                Fault::Stall { worker: w, step, ms } if w == worker => wf.stall = Some((step, ms)),
+                _ => {}
+            }
+        }
+        wf
+    }
+
+    /// Scheduled joins as (worker id, step), sorted by step.
+    pub fn joins(&self) -> Vec<(u32, u64)> {
+        let mut js: Vec<(u32, u64)> = self
+            .faults
+            .iter()
+            .filter_map(|f| match *f {
+                Fault::Join { worker, step } => Some((worker, step)),
+                _ => None,
+            })
+            .collect();
+        js.sort_by_key(|&(_, s)| s);
+        js
+    }
+
+    /// The highest worker id mentioned anywhere in the schedule.
+    pub fn max_worker(&self) -> Option<u32> {
+        self.faults
+            .iter()
+            .map(|f| match *f {
+                Fault::Kill { worker, .. }
+                | Fault::Stall { worker, .. }
+                | Fault::Join { worker, .. }
+                | Fault::Drop { worker, .. }
+                | Fault::Dup { worker, .. }
+                | Fault::Delay { worker, .. } => worker,
+            })
+            .max()
+    }
+
+    /// One-shot message rules for a worker's supervisor-side endpoint.
+    fn rules_for(&self, worker: u32) -> Vec<MsgRule> {
+        self.faults
+            .iter()
+            .filter_map(|f| match *f {
+                Fault::Drop { worker: w, step, what } if w == worker => {
+                    Some(MsgRule { step, what, action: MsgAction::Drop })
+                }
+                Fault::Dup { worker: w, step, what } if w == worker => {
+                    Some(MsgRule { step, what, action: MsgAction::Dup })
+                }
+                Fault::Delay { worker: w, step, what, by } if w == worker => {
+                    Some(MsgRule { step, what, action: MsgAction::Delay(by) })
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Wrap a supervisor-side endpoint for `worker` with this schedule's
+    /// message faults.
+    pub fn wrap<T: Transport>(&self, worker: u32, inner: T) -> FaultyTransport<T> {
+        FaultyTransport {
+            inner,
+            rules: self.rules_for(worker),
+            delayed_send: VecDeque::new(),
+            recv_queue: VecDeque::new(),
+            recv_delayed: Vec::new(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum MsgAction {
+    Drop,
+    Dup,
+    Delay(u32),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct MsgRule {
+    step: u64,
+    what: MsgKind,
+    action: MsgAction,
+}
+
+fn classify(msg: &Msg) -> Option<(MsgKind, u64)> {
+    match msg {
+        Msg::Assign { step, .. } => Some((MsgKind::Assign, *step)),
+        Msg::Losses { step, .. } => Some((MsgKind::Losses, *step)),
+        Msg::Commit { step, .. } => Some((MsgKind::Commit, *step)),
+        _ => None,
+    }
+}
+
+/// A transport wrapper that injects the scheduled message faults for one
+/// worker. Sits on the supervisor side so both directions are covered:
+/// outbound Assign/Commit and inbound Losses.
+pub struct FaultyTransport<T: Transport> {
+    inner: T,
+    /// One-shot rules; a rule is removed when it fires.
+    rules: Vec<MsgRule>,
+    /// Outbound messages held back: (messages still to let pass, payload).
+    delayed_send: VecDeque<(u32, Msg)>,
+    /// Inbound messages ready to return ahead of the wire (duplicates and
+    /// released delays).
+    recv_queue: VecDeque<Msg>,
+    /// Inbound messages held back: (receives still to let pass, payload).
+    recv_delayed: Vec<(u32, Msg)>,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    /// Pop the first rule matching this message, if any.
+    fn take_rule(&mut self, msg: &Msg) -> Option<MsgRule> {
+        let (kind, step) = classify(msg)?;
+        let idx = self.rules.iter().position(|r| r.what == kind && r.step == step)?;
+        Some(self.rules.remove(idx))
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        // Age the held-back sends: each real send lets one tick pass.
+        for d in self.delayed_send.iter_mut() {
+            d.0 = d.0.saturating_sub(1);
+        }
+        match self.take_rule(msg).map(|r| r.action) {
+            Some(MsgAction::Drop) => {}
+            Some(MsgAction::Dup) => {
+                self.inner.send(msg)?;
+                self.inner.send(msg)?;
+            }
+            Some(MsgAction::Delay(by)) => {
+                self.delayed_send.push_back((by, msg.clone()));
+            }
+            None => self.inner.send(msg)?,
+        }
+        while let Some(&(left, _)) = self.delayed_send.front() {
+            if left > 0 {
+                break;
+            }
+            let (_, held) = self.delayed_send.pop_front().expect("front checked");
+            self.inner.send(&held)?;
+        }
+        Ok(())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Msg>> {
+        if let Some(msg) = self.recv_queue.pop_front() {
+            return Ok(Some(msg));
+        }
+        let got = self.inner.recv_timeout(timeout)?;
+        // Age the held-back receives on every wire attempt.
+        for d in self.recv_delayed.iter_mut() {
+            d.0 = d.0.saturating_sub(1);
+        }
+        let mut i = 0;
+        while i < self.recv_delayed.len() {
+            if self.recv_delayed[i].0 == 0 {
+                let (_, held) = self.recv_delayed.remove(i);
+                self.recv_queue.push_back(held);
+            } else {
+                i += 1;
+            }
+        }
+        let out = match got {
+            Some(msg) => match self.take_rule(&msg).map(|r| r.action) {
+                Some(MsgAction::Drop) => None,
+                Some(MsgAction::Dup) => {
+                    self.recv_queue.push_back(msg.clone());
+                    Some(msg)
+                }
+                Some(MsgAction::Delay(by)) => {
+                    self.recv_delayed.push((by, msg));
+                    None
+                }
+                None => Some(msg),
+            },
+            None => None,
+        };
+        match out {
+            Some(msg) => Ok(Some(msg)),
+            None => Ok(self.recv_queue.pop_front()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dp::transport::chan_pair;
+
+    fn losses(step: u64) -> Msg {
+        Msg::Losses { worker: 0, step, shard_ids: vec![0], pairs: vec![(1.0, 2.0)] }
+    }
+
+    #[test]
+    fn parse_roundtrip_covers_all_kinds() {
+        let sched = FaultSchedule::parse(
+            "kill:w1@10, stall:w2@6:50, join:w3@20, drop:assign:w0@5, dup:losses:w2@4, delay:losses:w1@7:2",
+            3,
+            32,
+        )
+        .unwrap();
+        assert_eq!(sched.faults().len(), 6);
+        assert_eq!(sched.worker_faults(1).kill_step, Some(10));
+        assert_eq!(sched.worker_faults(2).stall, Some((6, 50)));
+        assert_eq!(sched.joins(), vec![(3, 20)]);
+        assert_eq!(sched.max_worker(), Some(3));
+        assert!(FaultSchedule::parse("explode:w0@1", 2, 8).is_err());
+        assert!(FaultSchedule::parse("drop:smoke:w0@1", 2, 8).is_err());
+        assert!(FaultSchedule::parse("", 2, 8).unwrap().faults().is_empty());
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic_and_complete() {
+        let a = FaultSchedule::seeded(7, 3, 24);
+        let b = FaultSchedule::seeded(7, 3, 24);
+        assert_eq!(a.faults(), b.faults());
+        let has = |p: fn(&Fault) -> bool| a.faults().iter().any(p);
+        assert!(has(|f| matches!(f, Fault::Kill { .. })));
+        assert!(has(|f| matches!(f, Fault::Delay { .. })));
+        assert!(has(|f| matches!(f, Fault::Dup { .. })));
+        assert!(has(|f| matches!(f, Fault::Drop { .. })));
+        assert!(has(|f| matches!(f, Fault::Join { .. })));
+        let c = FaultSchedule::seeded(8, 3, 24);
+        assert_ne!(a.faults(), c.faults());
+    }
+
+    #[test]
+    fn drop_dup_delay_fire_once_on_recv() {
+        let sched =
+            FaultSchedule::parse("drop:losses:w0@1, dup:losses:w0@2, delay:losses:w0@3:1", 1, 8)
+                .unwrap();
+        let (sup, mut wrk) = chan_pair();
+        let mut faulty = sched.wrap(0, sup);
+        let t = Duration::from_millis(50);
+
+        // Dropped exactly once: the retry gets through.
+        wrk.send(&losses(1)).unwrap();
+        assert_eq!(faulty.recv_timeout(t).unwrap(), None);
+        wrk.send(&losses(1)).unwrap();
+        assert_eq!(faulty.recv_timeout(t).unwrap(), Some(losses(1)));
+
+        // Duplicated: same message twice.
+        wrk.send(&losses(2)).unwrap();
+        assert_eq!(faulty.recv_timeout(t).unwrap(), Some(losses(2)));
+        assert_eq!(faulty.recv_timeout(t).unwrap(), Some(losses(2)));
+
+        // Delayed by one receive: a miss, then delivery.
+        wrk.send(&losses(3)).unwrap();
+        assert_eq!(faulty.recv_timeout(t).unwrap(), None);
+        assert_eq!(faulty.recv_timeout(t).unwrap(), Some(losses(3)));
+    }
+
+    #[test]
+    fn delayed_send_is_released_after_later_traffic() {
+        let sched = FaultSchedule::parse("delay:commit:w0@1:1", 1, 8).unwrap();
+        let (sup, mut wrk) = chan_pair();
+        let mut faulty = sched.wrap(0, sup);
+        let t = Duration::from_millis(50);
+        faulty.send(&Msg::Commit { step: 1, g: 0.5 }).unwrap();
+        assert_eq!(wrk.recv_timeout(t).unwrap(), None);
+        faulty.send(&Msg::Commit { step: 2, g: 0.25 }).unwrap();
+        assert_eq!(wrk.recv_timeout(t).unwrap(), Some(Msg::Commit { step: 2, g: 0.25 }));
+        assert_eq!(wrk.recv_timeout(t).unwrap(), Some(Msg::Commit { step: 1, g: 0.5 }));
+    }
+}

@@ -1,0 +1,318 @@
+//! Elastic fault-tolerant data-parallel backend (the "real" DP runtime).
+//!
+//! ZO2's DP wire contract is one seed broadcast and one scalar all-reduce
+//! per step, and the all-reduce folds shard losses in canonical shard
+//! order, so the loss trajectory depends only on the shard set — never on
+//! how many workers exist or which worker evaluated which shard. This
+//! module exploits that: workers can die, straggle, join mid-run, or be
+//! resumed from a checkpoint, and the trajectory stays bit-identical to a
+//! fault-free single-worker run.
+//!
+//! Layout:
+//! - [`protocol`] — the message set and its wire encoding;
+//! - [`transport`] — in-process channels plus Unix/TCP framed streams;
+//! - [`faults`] — deterministic fault schedules and the injecting wrapper;
+//! - [`worker`] — the replica trait, reference worker, and serve loop;
+//! - [`supervisor`] — membership, heartbeats, reassignment, all-reduce;
+//! - [`checkpoint`] — snapshot persistence through the `DiskPool`.
+//!
+//! [`run_elastic`] wires these together for the CLI and tests: it spawns
+//! workers (threads over channels or sockets, or real processes running
+//! `dp-worker`), registers scheduled joiners, and supervises the run.
+
+pub mod checkpoint;
+pub mod faults;
+pub mod protocol;
+pub mod supervisor;
+pub mod transport;
+pub mod worker;
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+pub use faults::{Fault, FaultSchedule, MsgKind, WorkerFaults};
+pub use protocol::{Msg, WorkerSnapshot};
+pub use supervisor::{Joiner, RunOutcome, StepRecord, Supervisor, SupervisorConfig};
+pub use transport::{chan_pair, connect, ChanTransport, Listener, StreamTransport, Transport};
+pub use worker::{serve, ElasticWorker, SeedZoWorker, ServeExit};
+
+/// FNV-1a over the little-endian bit patterns of `params`: a compact
+/// fingerprint for comparing final states across runs (logs, CI) without
+/// shipping full vectors.
+pub fn params_fingerprint(params: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for p in params {
+        for b in p.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Which channel workers speak over.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channels (the serial reference path).
+    Chan,
+    /// Unix domain socket at this path.
+    Unix(PathBuf),
+    /// TCP on this host:port ("127.0.0.1:0" picks an ephemeral port).
+    Tcp(String),
+}
+
+impl TransportKind {
+    /// Parse `chan`, `unix[:/path]`, or `tcp[:host:port]`.
+    pub fn parse(spec: &str) -> Result<TransportKind> {
+        if spec == "chan" {
+            Ok(TransportKind::Chan)
+        } else if spec == "unix" {
+            let p = std::env::temp_dir().join(format!("zo2_dp_{}.sock", std::process::id()));
+            Ok(TransportKind::Unix(p))
+        } else if let Some(path) = spec.strip_prefix("unix:") {
+            Ok(TransportKind::Unix(PathBuf::from(path)))
+        } else if spec == "tcp" {
+            Ok(TransportKind::Tcp("127.0.0.1:0".to_string()))
+        } else if let Some(addr) = spec.strip_prefix("tcp:") {
+            Ok(TransportKind::Tcp(addr.to_string()))
+        } else {
+            bail!("unknown --dp-transport {spec:?} (want chan | unix[:/path] | tcp[:host:port])")
+        }
+    }
+}
+
+/// Configuration for one elastic DP run.
+#[derive(Debug, Clone)]
+pub struct ElasticRunConfig {
+    pub transport: TransportKind,
+    /// Initial worker count (joiners from the fault schedule come extra).
+    pub workers: usize,
+    pub shards: usize,
+    pub shard_len: usize,
+    pub steps: u64,
+    pub schedule: FaultSchedule,
+    /// Persistent checkpoint pool path.
+    pub checkpoint: Option<PathBuf>,
+    /// Checkpoint every N steps (0 = final only, when a path is set).
+    pub checkpoint_every: u64,
+    /// Resume from `checkpoint` if it exists.
+    pub resume: bool,
+    pub seed: u64,
+    pub data_seed: u64,
+    pub n_params: usize,
+    /// Spawn real `dp-worker` processes (socket transports only); when
+    /// false, socket workers run as in-process threads over real sockets.
+    pub processes: bool,
+}
+
+impl ElasticRunConfig {
+    pub fn quick(workers: usize, shards: usize, steps: u64) -> ElasticRunConfig {
+        ElasticRunConfig {
+            transport: TransportKind::Chan,
+            workers,
+            shards,
+            shard_len: 8,
+            steps,
+            schedule: FaultSchedule::none(),
+            checkpoint: None,
+            checkpoint_every: 0,
+            resume: false,
+            seed: 90,
+            data_seed: 4242,
+            n_params: 64,
+            processes: false,
+        }
+    }
+}
+
+type ThreadHandle = std::thread::JoinHandle<Result<ServeExit>>;
+
+/// Everything spawned for a run that must be reaped afterwards.
+#[derive(Default)]
+struct Reaper {
+    threads: Vec<ThreadHandle>,
+    processes: Vec<std::process::Child>,
+}
+
+impl Reaper {
+    /// Join every worker; injected kills are expected exits, anything else
+    /// abnormal is an error.
+    fn reap(mut self) -> Result<()> {
+        for h in self.threads.drain(..) {
+            match h.join() {
+                Ok(Ok(_exit)) => {}
+                Ok(Err(e)) => return Err(e.context("worker thread failed")),
+                Err(_) => bail!("worker thread panicked"),
+            }
+        }
+        for mut p in self.processes.drain(..) {
+            let status = p.wait().context("waiting for worker process")?;
+            ensure!(status.success(), "worker process exited with {status}");
+        }
+        Ok(())
+    }
+}
+
+fn spawn_thread_worker(
+    reaper: &Mutex<Reaper>,
+    transport: impl Transport + 'static,
+    id: u32,
+    faults: WorkerFaults,
+    seed: u64,
+    n_params: usize,
+) {
+    let h = std::thread::spawn(move || {
+        serve(transport, SeedZoWorker::new(seed, n_params), id, faults, Duration::from_secs(60))
+    });
+    reaper.lock().unwrap().threads.push(h);
+}
+
+fn spawn_process_worker(
+    reaper: &Mutex<Reaper>,
+    addr: &str,
+    id: u32,
+    faults: WorkerFaults,
+    seed: u64,
+    n_params: usize,
+) -> Result<()> {
+    let exe = std::env::current_exe().context("locating dp-worker executable")?;
+    let mut cmd = std::process::Command::new(exe);
+    cmd.arg("dp-worker")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--worker")
+        .arg(id.to_string())
+        .arg("--seed")
+        .arg(seed.to_string())
+        .arg("--n-params")
+        .arg(n_params.to_string());
+    if let Some(ks) = faults.kill_step {
+        cmd.arg("--kill-at").arg(ks.to_string());
+    }
+    if let Some((ss, ms)) = faults.stall {
+        cmd.arg("--stall-at").arg(ss.to_string()).arg("--stall-ms").arg(ms.to_string());
+    }
+    let child = cmd.spawn().context("spawning dp-worker process")?;
+    reaper.lock().unwrap().processes.push(child);
+    Ok(())
+}
+
+/// Spawn one worker (by the configured mechanism) and hand back the
+/// supervisor-side transport, fault-wrapped.
+fn launch_worker(
+    cfg: &ElasticRunConfig,
+    listener: Option<&Arc<Listener>>,
+    reaper: &Mutex<Reaper>,
+    id: u32,
+) -> Result<Box<dyn Transport>> {
+    let faults = cfg.schedule.worker_faults(id);
+    match (&cfg.transport, listener) {
+        (TransportKind::Chan, _) => {
+            let (sup, wrk) = chan_pair();
+            spawn_thread_worker(reaper, wrk, id, faults, cfg.seed, cfg.n_params);
+            Ok(Box::new(cfg.schedule.wrap(id, sup)))
+        }
+        (_, Some(listener)) => {
+            if cfg.processes {
+                spawn_process_worker(reaper, &listener.addr, id, faults, cfg.seed, cfg.n_params)?;
+            } else {
+                let addr = listener.addr.clone();
+                let (seed, n_params) = (cfg.seed, cfg.n_params);
+                let h = std::thread::spawn(move || {
+                    let t = connect(&addr)?;
+                    serve(t, SeedZoWorker::new(seed, n_params), id, faults, Duration::from_secs(60))
+                });
+                reaper.lock().unwrap().threads.push(h);
+            }
+            let t = listener
+                .accept_timeout(Duration::from_secs(20))?
+                .context("worker did not connect before the accept deadline")?;
+            Ok(Box::new(cfg.schedule.wrap(id, t)))
+        }
+        (_, None) => bail!("socket transport requires a listener"),
+    }
+}
+
+/// Run the elastic DP backend end to end: spawn the initial workers,
+/// register scheduled joiners, supervise the trajectory, and reap every
+/// worker. Returns the canonical per-step records and final state.
+pub fn run_elastic(cfg: &ElasticRunConfig) -> Result<RunOutcome> {
+    ensure!(cfg.workers > 0, "need at least one initial worker");
+    let listener = match &cfg.transport {
+        TransportKind::Chan => None,
+        TransportKind::Unix(path) => {
+            Some(Arc::new(Listener::bind(&format!("unix:{}", path.display()))?))
+        }
+        TransportKind::Tcp(addr) => Some(Arc::new(Listener::bind(&format!("tcp:{addr}"))?)),
+    };
+    ensure!(listener.is_some() || !cfg.processes, "--dp-processes requires a socket transport");
+
+    let resume_snap = match (&cfg.checkpoint, cfg.resume) {
+        (Some(path), true) if path.exists() => {
+            Some(checkpoint::load_worker_checkpoint(path).context("loading resume checkpoint")?)
+        }
+        (None, true) => bail!("resume requested but no --checkpoint path given"),
+        _ => None,
+    };
+
+    let sup_cfg = SupervisorConfig {
+        shards: cfg.shards,
+        shard_len: cfg.shard_len,
+        steps: cfg.steps,
+        seed: cfg.seed,
+        data_seed: cfg.data_seed,
+        n_params: cfg.n_params,
+        recv_timeout: Duration::from_millis(150),
+        max_retries: 8,
+        checkpoint: cfg.checkpoint.clone(),
+        checkpoint_every: cfg.checkpoint_every,
+    };
+    let mut sup = Supervisor::new(sup_cfg, resume_snap)?;
+
+    let reaper = Arc::new(Mutex::new(Reaper::default()));
+    for id in 0..cfg.workers as u32 {
+        let t = launch_worker(cfg, listener.as_ref(), &reaper, id)?;
+        sup.add_worker(id, t);
+    }
+    for (jw, jstep) in cfg.schedule.joins() {
+        let cfg2 = cfg.clone();
+        let listener2 = listener.clone();
+        let reaper2 = Arc::clone(&reaper);
+        sup.add_joiner(Joiner {
+            worker: jw,
+            step: jstep,
+            connect: Box::new(move || launch_worker(&cfg2, listener2.as_ref(), &reaper2, jw)),
+        });
+    }
+
+    let outcome = sup.run()?;
+    match Arc::try_unwrap(reaper) {
+        Ok(m) => m.into_inner().unwrap().reap()?,
+        Err(_) => bail!("worker bookkeeping leaked past the run"),
+    }
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("chan").unwrap(), TransportKind::Chan);
+        assert_eq!(
+            TransportKind::parse("unix:/tmp/x.sock").unwrap(),
+            TransportKind::Unix(PathBuf::from("/tmp/x.sock"))
+        );
+        assert_eq!(
+            TransportKind::parse("tcp:127.0.0.1:7777").unwrap(),
+            TransportKind::Tcp("127.0.0.1:7777".to_string())
+        );
+        assert!(matches!(TransportKind::parse("unix").unwrap(), TransportKind::Unix(_)));
+        assert!(matches!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp(_)));
+        assert!(TransportKind::parse("telegraph").is_err());
+    }
+}

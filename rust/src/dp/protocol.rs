@@ -1,0 +1,368 @@
+//! Wire protocol for the elastic data-parallel backend.
+//!
+//! ZO2's data-parallel step needs exactly two logical messages per worker per
+//! step: a shard assignment carrying the token batch (the "seed broadcast" —
+//! the perturbation itself is derived from the shared RNG contract, so only
+//! data and shard ids travel) and a scalar loss-pair reply that feeds the
+//! all-reduce. Everything else in this enum exists for membership: liveness
+//! probes, state transfer for joiners, and commit broadcasts that let a
+//! worker which missed a round catch up from the g-scalar log.
+//!
+//! The encoding is a tiny hand-rolled little-endian binary format with a
+//! one-byte tag per message; streams frame each message with a u32 length
+//! prefix (see `transport`). No external serialization crates are used.
+
+use anyhow::{ensure, Context, Result};
+
+/// Full state of a worker replica: the step it has committed through and its
+/// flat parameter vector. Checkpoints and joiner catch-up both move this.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSnapshot {
+    /// Number of fully committed steps (the next step to run).
+    pub step: u64,
+    /// Flat f32 parameters, bit-exact.
+    pub params: Vec<f32>,
+}
+
+/// Messages exchanged between the supervisor and workers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker announces itself after connecting.
+    Hello { worker: u32 },
+    /// Supervisor assigns shards for one step. `tokens` is the full step
+    /// batch laid out shard-major (`shard_len` tokens per shard);
+    /// `shard_ids` selects which shards this worker evaluates. `catchup`
+    /// carries committed g scalars for steps `[catchup_from, step)` that the
+    /// worker may have missed (dropped Commit messages self-repair here).
+    Assign {
+        step: u64,
+        shard_len: u32,
+        shard_ids: Vec<u32>,
+        tokens: Vec<i32>,
+        catchup_from: u64,
+        catchup: Vec<f32>,
+    },
+    /// Worker replies with one (loss_plus, loss_minus) pair per assigned
+    /// shard, in the same order as `shard_ids`.
+    Losses {
+        worker: u32,
+        step: u64,
+        shard_ids: Vec<u32>,
+        pairs: Vec<(f32, f32)>,
+    },
+    /// Supervisor broadcasts the all-reduced projected gradient for a step.
+    Commit { step: u64, g: f32 },
+    /// Liveness probe.
+    Ping { nonce: u64 },
+    /// Liveness reply.
+    Pong { worker: u32, nonce: u64 },
+    /// Supervisor pushes a snapshot plus a g-scalar replay tail to bring a
+    /// joiner to the current step.
+    LoadState { snap: WorkerSnapshot, replay: Vec<f32> },
+    /// Supervisor asks a worker for its current snapshot (used to verify
+    /// bitwise agreement at shutdown).
+    FetchState,
+    /// Worker returns its snapshot.
+    State { snap: WorkerSnapshot },
+    /// Orderly shutdown.
+    Shutdown,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_ASSIGN: u8 = 2;
+const TAG_LOSSES: u8 = 3;
+const TAG_COMMIT: u8 = 4;
+const TAG_PING: u8 = 5;
+const TAG_PONG: u8 = 6;
+const TAG_LOAD_STATE: u8 = 7;
+const TAG_FETCH_STATE: u8 = 8;
+const TAG_STATE: u8 = 9;
+const TAG_SHUTDOWN: u8 = 10;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "dp message truncated: need {} bytes at offset {}, have {}",
+            n,
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn u32_vec(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn i32_vec(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()? as i32);
+        }
+        Ok(v)
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "dp message has {} trailing bytes",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+fn put_f32_vec(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_f32(buf, x);
+    }
+}
+
+fn put_u32_vec(buf: &mut Vec<u8>, v: &[u32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_u32(buf, x);
+    }
+}
+
+fn put_i32_vec(buf: &mut Vec<u8>, v: &[i32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_u32(buf, x as u32);
+    }
+}
+
+fn put_snapshot(buf: &mut Vec<u8>, snap: &WorkerSnapshot) {
+    put_u64(buf, snap.step);
+    put_f32_vec(buf, &snap.params);
+}
+
+fn read_snapshot(r: &mut Reader<'_>) -> Result<WorkerSnapshot> {
+    let step = r.u64()?;
+    let params = r.f32_vec()?;
+    Ok(WorkerSnapshot { step, params })
+}
+
+impl Msg {
+    /// Encode to the little-endian wire format (without stream framing).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            Msg::Hello { worker } => {
+                buf.push(TAG_HELLO);
+                put_u32(&mut buf, *worker);
+            }
+            Msg::Assign { step, shard_len, shard_ids, tokens, catchup_from, catchup } => {
+                buf.push(TAG_ASSIGN);
+                put_u64(&mut buf, *step);
+                put_u32(&mut buf, *shard_len);
+                put_u32_vec(&mut buf, shard_ids);
+                put_i32_vec(&mut buf, tokens);
+                put_u64(&mut buf, *catchup_from);
+                put_f32_vec(&mut buf, catchup);
+            }
+            Msg::Losses { worker, step, shard_ids, pairs } => {
+                buf.push(TAG_LOSSES);
+                put_u32(&mut buf, *worker);
+                put_u64(&mut buf, *step);
+                put_u32_vec(&mut buf, shard_ids);
+                put_u32(&mut buf, pairs.len() as u32);
+                for &(lp, lm) in pairs {
+                    put_f32(&mut buf, lp);
+                    put_f32(&mut buf, lm);
+                }
+            }
+            Msg::Commit { step, g } => {
+                buf.push(TAG_COMMIT);
+                put_u64(&mut buf, *step);
+                put_f32(&mut buf, *g);
+            }
+            Msg::Ping { nonce } => {
+                buf.push(TAG_PING);
+                put_u64(&mut buf, *nonce);
+            }
+            Msg::Pong { worker, nonce } => {
+                buf.push(TAG_PONG);
+                put_u32(&mut buf, *worker);
+                put_u64(&mut buf, *nonce);
+            }
+            Msg::LoadState { snap, replay } => {
+                buf.push(TAG_LOAD_STATE);
+                put_snapshot(&mut buf, snap);
+                put_f32_vec(&mut buf, replay);
+            }
+            Msg::FetchState => buf.push(TAG_FETCH_STATE),
+            Msg::State { snap } => {
+                buf.push(TAG_STATE);
+                put_snapshot(&mut buf, snap);
+            }
+            Msg::Shutdown => buf.push(TAG_SHUTDOWN),
+        }
+        buf
+    }
+
+    /// Decode one message from an unframed byte slice.
+    pub fn decode(bytes: &[u8]) -> Result<Msg> {
+        let mut r = Reader::new(bytes);
+        let tag = r.u8().context("dp message empty")?;
+        let msg = match tag {
+            TAG_HELLO => Msg::Hello { worker: r.u32()? },
+            TAG_ASSIGN => {
+                let step = r.u64()?;
+                let shard_len = r.u32()?;
+                let shard_ids = r.u32_vec()?;
+                let tokens = r.i32_vec()?;
+                let catchup_from = r.u64()?;
+                let catchup = r.f32_vec()?;
+                Msg::Assign { step, shard_len, shard_ids, tokens, catchup_from, catchup }
+            }
+            TAG_LOSSES => {
+                let worker = r.u32()?;
+                let step = r.u64()?;
+                let shard_ids = r.u32_vec()?;
+                let n = r.u32()? as usize;
+                let mut pairs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let lp = r.f32()?;
+                    let lm = r.f32()?;
+                    pairs.push((lp, lm));
+                }
+                Msg::Losses { worker, step, shard_ids, pairs }
+            }
+            TAG_COMMIT => Msg::Commit { step: r.u64()?, g: r.f32()? },
+            TAG_PING => Msg::Ping { nonce: r.u64()? },
+            TAG_PONG => Msg::Pong { worker: r.u32()?, nonce: r.u64()? },
+            TAG_LOAD_STATE => {
+                let snap = read_snapshot(&mut r)?;
+                let replay = r.f32_vec()?;
+                Msg::LoadState { snap, replay }
+            }
+            TAG_FETCH_STATE => Msg::FetchState,
+            TAG_STATE => Msg::State { snap: read_snapshot(&mut r)? },
+            TAG_SHUTDOWN => Msg::Shutdown,
+            other => anyhow::bail!("unknown dp message tag {other}"),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let bytes = msg.encode();
+        let back = Msg::decode(&bytes).expect("decode");
+        assert_eq!(msg, back);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Hello { worker: 7 });
+        roundtrip(Msg::Assign {
+            step: 12,
+            shard_len: 3,
+            shard_ids: vec![0, 2, 5],
+            tokens: vec![1, -2, 40_000, 0, 9, 9, 1, 2, 3],
+            catchup_from: 10,
+            catchup: vec![0.25, -1.5],
+        });
+        roundtrip(Msg::Losses {
+            worker: 2,
+            step: 12,
+            shard_ids: vec![1, 3],
+            pairs: vec![(0.5, 0.25), (f32::MIN_POSITIVE, -0.0)],
+        });
+        roundtrip(Msg::Commit { step: 3, g: -0.125 });
+        roundtrip(Msg::Ping { nonce: u64::MAX });
+        roundtrip(Msg::Pong { worker: 0, nonce: 1 });
+        roundtrip(Msg::LoadState {
+            snap: WorkerSnapshot { step: 9, params: vec![1.0, 2.5, -3.75] },
+            replay: vec![0.1, 0.2],
+        });
+        roundtrip(Msg::FetchState);
+        roundtrip(Msg::State { snap: WorkerSnapshot { step: 0, params: vec![] } });
+        roundtrip(Msg::Shutdown);
+    }
+
+    #[test]
+    fn nan_g_survives_roundtrip_bitwise() {
+        let msg = Msg::Commit { step: 1, g: f32::NAN };
+        let back = Msg::decode(&msg.encode()).unwrap();
+        match back {
+            Msg::Commit { g, .. } => assert_eq!(g.to_bits(), f32::NAN.to_bits()),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_trailing_bytes_are_rejected() {
+        let bytes = Msg::Commit { step: 1, g: 0.5 }.encode();
+        assert!(Msg::decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(Msg::decode(&extra).is_err());
+        assert!(Msg::decode(&[]).is_err());
+        assert!(Msg::decode(&[200]).is_err());
+    }
+}

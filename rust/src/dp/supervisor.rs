@@ -1,0 +1,527 @@
+//! Supervising coordinator for the elastic DP backend.
+//!
+//! The supervisor owns the canonical trajectory. It keeps a *shadow
+//! replica* — a [`SeedZoWorker`] that never evaluates losses but applies
+//! every committed g — so at any instant it can mint a bit-exact snapshot
+//! for a joiner, write a checkpoint, or verify a worker's state at
+//! shutdown. Because the all-reduce folds shard losses in canonical
+//! ascending shard order, the committed g for a step depends only on the
+//! shard set, never on which worker evaluated which shard — which is why
+//! deaths, stragglers, retries, and joins all leave the loss trajectory
+//! bit-identical to a fault-free single-worker run.
+//!
+//! Liveness is heartbeat-based: a member that owes shards and stays silent
+//! past the receive timeout gets a Ping and an assignment retry with linear
+//! backoff; after `max_retries` misses (or a transport error, which means
+//! the peer is gone) it is declared dead and its unanswered shards are
+//! reassigned round-robin to the survivors. The run degrades gracefully to
+//! K=1 and only fails when no member is left and no joiner is due.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::checkpoint;
+use super::protocol::{Msg, WorkerSnapshot};
+use super::transport::Transport;
+use super::worker::{ElasticWorker, SeedZoWorker};
+use crate::rng::GaussianRng;
+use crate::telemetry::metrics;
+
+/// Vocabulary bound for synthetic step batches (matches the toy corpus used
+/// by the scheduler property tests).
+pub const VOCAB: u64 = 50_000;
+
+/// Static configuration for one supervised run.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Number of gradient shards per step (the unit of reassignment).
+    pub shards: usize,
+    /// Tokens per shard.
+    pub shard_len: usize,
+    /// Total steps the trajectory should reach (resume continues toward
+    /// the same target).
+    pub steps: u64,
+    /// Model seed: replica init and the shared per-step perturbation.
+    pub seed: u64,
+    /// Data seed: per-step synthetic batches, derived per step so resume
+    /// needs no corpus fast-forward.
+    pub data_seed: u64,
+    /// Replica parameter count.
+    pub n_params: usize,
+    /// How long to wait for one message before a heartbeat miss.
+    pub recv_timeout: Duration,
+    /// Heartbeat misses tolerated per member per step before it is dead.
+    pub max_retries: u32,
+    /// Checkpoint file (a persistent `DiskPool`); `None` disables both
+    /// checkpointing and checkpoint-based joiner catch-up.
+    pub checkpoint: Option<PathBuf>,
+    /// Write a checkpoint every N committed steps (0 = only at the end).
+    pub checkpoint_every: u64,
+}
+
+impl SupervisorConfig {
+    pub fn quick(shards: usize, steps: u64) -> SupervisorConfig {
+        SupervisorConfig {
+            shards,
+            shard_len: 8,
+            steps,
+            seed: 90,
+            data_seed: 4242,
+            n_params: 64,
+            recv_timeout: Duration::from_millis(120),
+            max_retries: 6,
+            checkpoint: None,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+/// One committed step of the canonical trajectory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss_plus: f32,
+    pub loss_minus: f32,
+    pub g: f32,
+}
+
+impl StepRecord {
+    pub fn loss(&self) -> f32 {
+        0.5 * (self.loss_plus + self.loss_minus)
+    }
+}
+
+/// Result of a supervised run.
+pub struct RunOutcome {
+    /// Committed steps, in order, starting at the resume point.
+    pub records: Vec<StepRecord>,
+    /// Final shadow state (bitwise-verified against every surviving
+    /// worker at shutdown).
+    pub final_snap: WorkerSnapshot,
+    /// Workers declared dead during the run.
+    pub deaths: usize,
+    /// Workers admitted mid-run.
+    pub joins: usize,
+}
+
+/// A deferred connection for a worker that joins mid-run.
+pub struct Joiner {
+    pub worker: u32,
+    pub step: u64,
+    /// Invoked when the join step is reached; spawns/accepts the new
+    /// worker's connection.
+    pub connect: Box<dyn FnOnce() -> Result<Box<dyn Transport>> + Send>,
+}
+
+struct Member {
+    id: u32,
+    transport: Box<dyn Transport>,
+    /// Shards this member still owes for the current step.
+    owed: Vec<u32>,
+    misses: u32,
+}
+
+/// Generate the deterministic step batch: `shards * shard_len` tokens drawn
+/// from the (data_seed, step) stream, shard-major.
+pub fn step_tokens(data_seed: u64, step: u64, shards: usize, shard_len: usize) -> Vec<i32> {
+    let mut rng = GaussianRng::new(data_seed, step);
+    (0..shards * shard_len).map(|_| rng.next_below(VOCAB) as i32).collect()
+}
+
+fn snapshots_bitwise_eq(a: &WorkerSnapshot, b: &WorkerSnapshot) -> bool {
+    a.step == b.step
+        && a.params.len() == b.params.len()
+        && a.params.iter().zip(&b.params).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// The supervising coordinator.
+pub struct Supervisor {
+    cfg: SupervisorConfig,
+    shadow: SeedZoWorker,
+    /// Committed gs since `g_base`, the self-repair and joiner-replay log.
+    g_log: Vec<f32>,
+    /// Step number of the first entry in `g_log`.
+    g_base: u64,
+    members: Vec<Member>,
+    joiners: Vec<Joiner>,
+    deaths: usize,
+    joins: usize,
+}
+
+impl Supervisor {
+    /// Create a supervisor. `resume_from` restores the shadow replica from
+    /// a checkpoint snapshot; workers are synced to it on connect.
+    pub fn new(cfg: SupervisorConfig, resume_from: Option<WorkerSnapshot>) -> Result<Supervisor> {
+        ensure!(cfg.shards > 0, "need at least one shard");
+        ensure!(cfg.shard_len > 0, "need a positive shard length");
+        let mut shadow = SeedZoWorker::new(cfg.seed, cfg.n_params);
+        let mut g_base = 0;
+        if let Some(snap) = resume_from {
+            ensure!(
+                snap.params.len() == cfg.n_params,
+                "checkpoint has {} params, config expects {}",
+                snap.params.len(),
+                cfg.n_params
+            );
+            g_base = snap.step;
+            shadow.restore(&snap, &[])?;
+        }
+        Ok(Supervisor {
+            cfg,
+            shadow,
+            g_log: Vec::new(),
+            g_base,
+            members: Vec::new(),
+            joiners: Vec::new(),
+            deaths: 0,
+            joins: 0,
+        })
+    }
+
+    /// Register a worker that is connected from the start.
+    pub fn add_worker(&mut self, id: u32, transport: Box<dyn Transport>) {
+        self.members.push(Member { id, transport, owed: Vec::new(), misses: 0 });
+    }
+
+    /// Register a worker that joins when `step` is reached.
+    pub fn add_joiner(&mut self, joiner: Joiner) {
+        self.joiners.push(joiner);
+        self.joiners.sort_by_key(|j| j.step);
+    }
+
+    fn hello_timeout(&self) -> Duration {
+        // Process spawn + connect can take much longer than one message.
+        self.cfg.recv_timeout.max(Duration::from_millis(100)) * (4 * self.cfg.max_retries.max(1))
+    }
+
+    /// Wait for a member's Hello and, if the trajectory is already past
+    /// step 0, push state so the replica matches the shadow bit-for-bit.
+    fn induct(&mut self, idx: usize, replayed_from_checkpoint: bool) -> Result<()> {
+        let deadline = Instant::now() + self.hello_timeout();
+        loop {
+            match self.members[idx].transport.recv_timeout(self.cfg.recv_timeout)? {
+                Some(Msg::Hello { worker }) => {
+                    ensure!(
+                        worker == self.members[idx].id,
+                        "worker announced id {worker}, expected {}",
+                        self.members[idx].id
+                    );
+                    break;
+                }
+                Some(other) => bail!("expected Hello, got {other:?}"),
+                None => {
+                    metrics::counter_add("zo2_dp_heartbeat_misses", &[], 1);
+                    ensure!(Instant::now() < deadline, "no Hello from worker before deadline");
+                }
+            }
+        }
+        if self.shadow.committed() > 0 {
+            let (snap, replay) = self.catchup_state(replayed_from_checkpoint)?;
+            self.members[idx].transport.send(&Msg::LoadState { snap, replay })?;
+            let deadline = Instant::now() + self.hello_timeout();
+            loop {
+                match self.members[idx].transport.recv_timeout(self.cfg.recv_timeout)? {
+                    Some(Msg::State { snap }) => {
+                        ensure!(
+                            snapshots_bitwise_eq(&snap, &self.shadow.snapshot()),
+                            "worker {} state diverged from the canonical trajectory after \
+                             catch-up (step {} vs {})",
+                            self.members[idx].id,
+                            snap.step,
+                            self.shadow.committed()
+                        );
+                        break;
+                    }
+                    Some(other) => bail!("expected State after LoadState, got {other:?}"),
+                    None => {
+                        metrics::counter_add("zo2_dp_retries", &[("op", "state")], 1);
+                        ensure!(Instant::now() < deadline, "no State ack before deadline");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The snapshot + g-replay pair used to catch a replica up to the
+    /// shadow. When a checkpoint exists the snapshot comes from disk and
+    /// the tail is replayed from the g-log — the seed-replay path — else
+    /// the shadow state ships directly.
+    fn catchup_state(&self, prefer_checkpoint: bool) -> Result<(WorkerSnapshot, Vec<f32>)> {
+        if prefer_checkpoint {
+            if let Some(path) = &self.cfg.checkpoint {
+                if path.exists() {
+                    let snap = checkpoint::load_worker_checkpoint(path)
+                        .context("loading joiner checkpoint")?;
+                    ensure!(
+                        snap.step >= self.g_base,
+                        "checkpoint at step {} predates the g-log base {}",
+                        snap.step,
+                        self.g_base
+                    );
+                    let from = (snap.step - self.g_base) as usize;
+                    ensure!(from <= self.g_log.len(), "checkpoint is ahead of the trajectory");
+                    return Ok((snap, self.g_log[from..].to_vec()));
+                }
+            }
+        }
+        Ok((self.shadow.snapshot(), Vec::new()))
+    }
+
+    /// Admit every joiner scheduled at or before `step`.
+    fn admit_joiners(&mut self, step: u64) -> Result<()> {
+        while self.joiners.first().is_some_and(|j| j.step <= step) {
+            let j = self.joiners.remove(0);
+            let t0 = Instant::now();
+            let transport = (j.connect)().context("connecting joiner")?;
+            self.members.push(Member { id: j.worker, transport, owed: Vec::new(), misses: 0 });
+            let idx = self.members.len() - 1;
+            self.induct(idx, true)?;
+            self.joins += 1;
+            metrics::observe("zo2_dp_recovery_wall_s", &[], t0.elapsed().as_secs_f64());
+        }
+        Ok(())
+    }
+
+    fn assign_msg(&self, step: u64, tokens: &[i32], shard_ids: Vec<u32>) -> Msg {
+        Msg::Assign {
+            step,
+            shard_len: self.cfg.shard_len as u32,
+            shard_ids,
+            tokens: tokens.to_vec(),
+            catchup_from: self.g_base,
+            catchup: self.g_log.clone(),
+        }
+    }
+
+    /// Remove the member at `idx`, reassigning its unanswered shards
+    /// round-robin to the survivors.
+    fn bury(&mut self, idx: usize, step: u64, tokens: &[i32]) -> Result<()> {
+        let t0 = Instant::now();
+        let dead = self.members.remove(idx);
+        self.deaths += 1;
+        ensure!(
+            !self.members.is_empty(),
+            "all workers dead at step {step} with no joiner due; cannot continue"
+        );
+        let orphaned = dead.owed.len();
+        if orphaned > 0 {
+            metrics::counter_add("zo2_dp_reassigned_shards", &[], orphaned as u64);
+            let n = self.members.len();
+            for (i, &sid) in dead.owed.iter().enumerate() {
+                self.members[i % n].owed.push(sid);
+            }
+            for m in &mut self.members {
+                m.owed.sort_unstable();
+            }
+            // Ship the supplemental assignments; a failure here is that
+            // member's own death, handled on its next receive.
+            let mut extras: Vec<(usize, Msg)> = Vec::new();
+            for (i, m) in self.members.iter().enumerate() {
+                let extra: Vec<u32> =
+                    m.owed.iter().copied().filter(|s| dead.owed.contains(s)).collect();
+                if !extra.is_empty() {
+                    extras.push((i, self.assign_msg(step, tokens, extra)));
+                }
+            }
+            for (i, msg) in extras {
+                let _ = self.members[i].transport.send(&msg);
+            }
+        }
+        metrics::observe("zo2_dp_recovery_wall_s", &[], t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Run one committed step: assign, collect with retries and
+    /// reassignment, all-reduce in canonical shard order, commit.
+    fn run_step(&mut self, step: u64) -> Result<StepRecord> {
+        self.admit_joiners(step)?;
+        ensure!(!self.members.is_empty(), "no live workers at step {step}");
+        let tokens = step_tokens(self.cfg.data_seed, step, self.cfg.shards, self.cfg.shard_len);
+
+        // Round-robin shard assignment over members ordered by id.
+        self.members.sort_by_key(|m| m.id);
+        let k = self.members.len();
+        for (i, m) in self.members.iter_mut().enumerate() {
+            m.owed = (i..self.cfg.shards).step_by(k).map(|s| s as u32).collect();
+            m.misses = 0;
+        }
+        let mut i = 0;
+        while i < self.members.len() {
+            let msg = self.assign_msg(step, &tokens, self.members[i].owed.clone());
+            if self.members[i].transport.send(&msg).is_err() {
+                // Peer already gone; bury reassigns its whole shard list.
+                self.bury(i, step, &tokens)?;
+            } else {
+                i += 1;
+            }
+        }
+
+        let mut per_shard: Vec<Option<(f32, f32)>> = vec![None; self.cfg.shards];
+        let mut guard = 0u32;
+        while per_shard.iter().any(|p| p.is_none()) {
+            guard += 1;
+            ensure!(guard < 10_000, "step {step} failed to converge after {guard} receive rounds");
+            let mut died: Option<usize> = None;
+            for i in 0..self.members.len() {
+                if self.members[i].owed.iter().all(|&s| per_shard[s as usize].is_some()) {
+                    continue; // nothing owed; don't block on idle members
+                }
+                match self.members[i].transport.recv_timeout(self.cfg.recv_timeout) {
+                    Ok(Some(Msg::Losses { step: s, shard_ids, pairs })) if s == step => {
+                        for (sid, pair) in shard_ids.iter().zip(pairs) {
+                            ensure!(
+                                (*sid as usize) < self.cfg.shards,
+                                "losses reference unknown shard {sid}"
+                            );
+                            per_shard[*sid as usize] = Some(pair);
+                        }
+                        self.members[i].misses = 0;
+                    }
+                    Ok(Some(_)) => {} // stale losses, pongs: ignore
+                    Ok(None) => {
+                        let m = &mut self.members[i];
+                        m.misses += 1;
+                        metrics::counter_add("zo2_dp_heartbeat_misses", &[], 1);
+                        if m.misses > self.cfg.max_retries {
+                            died = Some(i);
+                        } else {
+                            // Probe liveness and retry the outstanding
+                            // shards with linear backoff.
+                            let owed: Vec<u32> = m
+                                .owed
+                                .iter()
+                                .copied()
+                                .filter(|&s| per_shard[s as usize].is_none())
+                                .collect();
+                            let backoff = self.cfg.recv_timeout / 4 * self.members[i].misses;
+                            std::thread::sleep(backoff.min(Duration::from_millis(200)));
+                            metrics::counter_add("zo2_dp_retries", &[("op", "assign")], 1);
+                            let ping = Msg::Ping { nonce: (step << 8) | u64::from(guard) };
+                            let assign = self.assign_msg(step, &tokens, owed);
+                            let m = &mut self.members[i];
+                            if m.transport.send(&ping).is_err()
+                                || m.transport.send(&assign).is_err()
+                            {
+                                died = Some(i);
+                            }
+                        }
+                    }
+                    Err(_) => died = Some(i),
+                }
+                if died.is_some() {
+                    break;
+                }
+            }
+            if let Some(i) = died {
+                // Keep only genuinely outstanding shards on the corpse so
+                // bury() reassigns exactly what is missing.
+                self.members[i].owed.retain(|&s| per_shard[s as usize].is_none());
+                self.bury(i, step, &tokens)?;
+            }
+        }
+
+        // Canonical all-reduce: ascending shard order, independent of which
+        // worker produced each pair.
+        let eps = self.shadow.eps();
+        let s = self.cfg.shards;
+        let mut lp_sum = 0.0f32;
+        let mut lm_sum = 0.0f32;
+        let mut g_sum = 0.0f32;
+        for pair in per_shard.iter().flatten() {
+            let (lp, lm) = *pair;
+            lp_sum += lp;
+            lm_sum += lm;
+            g_sum += (lp - lm) / (2.0 * eps);
+        }
+        let g = g_sum / s as f32;
+        self.shadow.commit(step, g)?;
+        self.g_log.push(g);
+
+        // Broadcast the commit; a dead peer here is only fatal if it was
+        // the last one and more steps remain (checked next step).
+        let mut i = 0;
+        while i < self.members.len() {
+            if self.members[i].transport.send(&Msg::Commit { step, g }).is_err() {
+                self.members.remove(i);
+                self.deaths += 1;
+            } else {
+                i += 1;
+            }
+        }
+
+        if let Some(path) = &self.cfg.checkpoint {
+            let every = self.cfg.checkpoint_every;
+            if every > 0 && (step + 1) % every == 0 {
+                checkpoint::save_worker_checkpoint(path, &self.shadow.snapshot())
+                    .context("writing periodic checkpoint")?;
+            }
+        }
+
+        Ok(StepRecord { step, loss_plus: lp_sum / s as f32, loss_minus: lm_sum / s as f32, g })
+    }
+
+    /// Run the full trajectory from the resume point to `cfg.steps`,
+    /// verify every surviving worker bitwise, and shut them down.
+    pub fn run(mut self) -> Result<RunOutcome> {
+        for idx in 0..self.members.len() {
+            self.induct(idx, false)?;
+        }
+        let mut records = Vec::new();
+        let start = self.shadow.committed();
+        for step in start..self.cfg.steps {
+            records.push(self.run_step(step)?);
+        }
+        if let Some(path) = &self.cfg.checkpoint {
+            checkpoint::save_worker_checkpoint(path, &self.shadow.snapshot())
+                .context("writing final checkpoint")?;
+        }
+        let final_snap = self.shadow.snapshot();
+        for m in &mut self.members {
+            m.transport.send(&Msg::FetchState)?;
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                match m.transport.recv_timeout(self.cfg.recv_timeout)? {
+                    Some(Msg::State { snap }) => {
+                        ensure!(
+                            snapshots_bitwise_eq(&snap, &final_snap),
+                            "worker {} final state diverged from the canonical trajectory",
+                            m.id
+                        );
+                        break;
+                    }
+                    Some(_) => {} // late commits/pongs in flight
+                    None => ensure!(Instant::now() < deadline, "no final State from worker"),
+                }
+            }
+            m.transport.send(&Msg::Shutdown)?;
+        }
+        Ok(RunOutcome { records, final_snap, deaths: self.deaths, joins: self.joins })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_tokens_is_deterministic_per_step() {
+        let a = step_tokens(4242, 3, 4, 8);
+        let b = step_tokens(4242, 3, 4, 8);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32);
+        assert_ne!(a, step_tokens(4242, 4, 4, 8));
+        assert!(a.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+    }
+
+    #[test]
+    fn snapshots_compare_bitwise() {
+        let a = WorkerSnapshot { step: 1, params: vec![0.0, 1.5] };
+        let mut b = a.clone();
+        assert!(snapshots_bitwise_eq(&a, &b));
+        b.params[0] = -0.0; // same value, different bits
+        assert!(!snapshots_bitwise_eq(&a, &b));
+    }
+}

@@ -1,0 +1,331 @@
+//! Message transports for the elastic DP backend.
+//!
+//! Three concrete transports implement one small trait:
+//!
+//! - [`ChanTransport`] — in-process `mpsc` channels carrying encoded frames;
+//!   the default for tests and for the serial reference run.
+//! - [`StreamTransport`] — a framed byte stream over a Unix socket or TCP
+//!   connection, used by real worker processes (and by in-test thread
+//!   workers exercising the socket path).
+//!
+//! Every message is encoded by `protocol::Msg::encode` and framed with a u32
+//! little-endian length prefix on streams. `recv_timeout` returns
+//! `Ok(None)` on timeout (the peer may just be slow) and `Err` only when
+//! the peer is gone for good — the supervisor maps the former to heartbeat
+//! misses and the latter to membership removal.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::protocol::Msg;
+
+/// A bidirectional, message-oriented endpoint.
+pub trait Transport: Send {
+    /// Send one message. Errors mean the peer is unreachable.
+    fn send(&mut self, msg: &Msg) -> Result<()>;
+
+    /// Receive one message, waiting at most `timeout`. `Ok(None)` means the
+    /// timeout elapsed with no complete message; `Err` means the peer hung
+    /// up or the stream is corrupt.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Msg>>;
+}
+
+/// In-process transport over `mpsc` channels of encoded frames.
+pub struct ChanTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+/// Create a connected pair of in-process endpoints.
+pub fn chan_pair() -> (ChanTransport, ChanTransport) {
+    let (atx, brx) = mpsc::channel();
+    let (btx, arx) = mpsc::channel();
+    (ChanTransport { tx: atx, rx: arx }, ChanTransport { tx: btx, rx: brx })
+}
+
+impl Transport for ChanTransport {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        self.tx.send(msg.encode()).map_err(|_| anyhow::anyhow!("dp chan peer disconnected"))
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Msg>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(bytes) => Msg::decode(&bytes).map(Some),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => bail!("dp chan peer disconnected"),
+        }
+    }
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t),
+            Stream::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+
+    fn read_some(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+
+    fn write_all_bytes(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.write_all(buf),
+            Stream::Unix(s) => s.write_all(buf),
+        }
+    }
+}
+
+/// Framed socket transport (TCP or Unix domain).
+pub struct StreamTransport {
+    stream: Stream,
+    /// Bytes read from the stream that do not yet form a complete frame.
+    pending: Vec<u8>,
+}
+
+impl StreamTransport {
+    fn new(stream: Stream) -> Self {
+        StreamTransport { stream, pending: Vec::new() }
+    }
+
+    /// If `pending` holds a complete frame, pop and decode it.
+    fn try_pop_frame(&mut self) -> Result<Option<Msg>> {
+        if self.pending.len() < 4 {
+            return Ok(None);
+        }
+        let len =
+            u32::from_le_bytes([self.pending[0], self.pending[1], self.pending[2], self.pending[3]])
+                as usize;
+        if self.pending.len() < 4 + len {
+            return Ok(None);
+        }
+        let msg = Msg::decode(&self.pending[4..4 + len])?;
+        self.pending.drain(..4 + len);
+        Ok(Some(msg))
+    }
+}
+
+impl Transport for StreamTransport {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        let body = msg.encode();
+        let mut frame = Vec::with_capacity(4 + body.len());
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        self.stream.write_all_bytes(&frame).context("dp stream send")
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Msg>> {
+        if let Some(msg) = self.try_pop_frame()? {
+            return Ok(Some(msg));
+        }
+        self.stream
+            .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
+            .context("dp stream set timeout")?;
+        let mut buf = [0u8; 4096];
+        loop {
+            match self.stream.read_some(&mut buf) {
+                Ok(0) => bail!("dp stream peer closed the connection"),
+                Ok(n) => {
+                    self.pending.extend_from_slice(&buf[..n]);
+                    if let Some(msg) = self.try_pop_frame()? {
+                        return Ok(Some(msg));
+                    }
+                    // Partial frame: keep reading until the timeout fires.
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    return Ok(None);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("dp stream recv"),
+            }
+        }
+    }
+}
+
+enum ListenerInner {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+/// A listening socket accepting worker connections.
+pub struct Listener {
+    inner: ListenerInner,
+    /// The address workers should connect to (`tcp:host:port` or
+    /// `unix:/path`), with any ephemeral port resolved.
+    pub addr: String,
+}
+
+impl Listener {
+    /// Bind a listener. `spec` is `tcp:HOST:PORT` (PORT may be 0 for an
+    /// ephemeral port) or `unix:/path/to/socket`.
+    pub fn bind(spec: &str) -> Result<Listener> {
+        if let Some(addr) = spec.strip_prefix("tcp:") {
+            let l = TcpListener::bind(addr).with_context(|| format!("bind tcp {addr}"))?;
+            let local = l.local_addr().context("tcp local addr")?;
+            Ok(Listener { inner: ListenerInner::Tcp(l), addr: format!("tcp:{local}") })
+        } else if let Some(path) = spec.strip_prefix("unix:") {
+            let _ = std::fs::remove_file(path);
+            let l = UnixListener::bind(path).with_context(|| format!("bind unix {path}"))?;
+            Ok(Listener { inner: ListenerInner::Unix(l), addr: format!("unix:{path}") })
+        } else {
+            bail!("transport spec must start with tcp: or unix:, got {spec:?}")
+        }
+    }
+
+    /// Accept one connection, waiting at most `timeout`. `Ok(None)` on
+    /// timeout.
+    pub fn accept_timeout(&self, timeout: Duration) -> Result<Option<StreamTransport>> {
+        match &self.inner {
+            ListenerInner::Tcp(l) => {
+                l.set_nonblocking(true).context("tcp set nonblocking")?;
+                let deadline = std::time::Instant::now() + timeout;
+                loop {
+                    match l.accept() {
+                        Ok((s, _)) => {
+                            s.set_nonblocking(false).context("tcp stream blocking")?;
+                            return Ok(Some(StreamTransport::new(Stream::Tcp(s))));
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            if std::time::Instant::now() >= deadline {
+                                return Ok(None);
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(e) => return Err(e).context("tcp accept"),
+                    }
+                }
+            }
+            ListenerInner::Unix(l) => {
+                l.set_nonblocking(true).context("unix set nonblocking")?;
+                let deadline = std::time::Instant::now() + timeout;
+                loop {
+                    match l.accept() {
+                        Ok((s, _)) => {
+                            s.set_nonblocking(false).context("unix stream blocking")?;
+                            return Ok(Some(StreamTransport::new(Stream::Unix(s))));
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            if std::time::Instant::now() >= deadline {
+                                return Ok(None);
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(e) => return Err(e).context("unix accept"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Some(path) = self.addr.strip_prefix("unix:") {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Connect to a supervisor listener address (`tcp:HOST:PORT` or
+/// `unix:/path`).
+pub fn connect(addr: &str) -> Result<StreamTransport> {
+    if let Some(a) = addr.strip_prefix("tcp:") {
+        let s = TcpStream::connect(a).with_context(|| format!("connect tcp {a}"))?;
+        s.set_nodelay(true).ok();
+        Ok(StreamTransport::new(Stream::Tcp(s)))
+    } else if let Some(p) = addr.strip_prefix("unix:") {
+        let s = UnixStream::connect(p).with_context(|| format!("connect unix {p}"))?;
+        Ok(StreamTransport::new(Stream::Unix(s)))
+    } else {
+        bail!("connect addr must start with tcp: or unix:, got {addr:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chan_pair_roundtrips_and_times_out() {
+        let (mut a, mut b) = chan_pair();
+        a.send(&Msg::Ping { nonce: 9 }).unwrap();
+        let got = b.recv_timeout(Duration::from_millis(200)).unwrap();
+        assert_eq!(got, Some(Msg::Ping { nonce: 9 }));
+        let none = b.recv_timeout(Duration::from_millis(10)).unwrap();
+        assert_eq!(none, None);
+        drop(a);
+        assert!(b.recv_timeout(Duration::from_millis(10)).is_err());
+    }
+
+    #[test]
+    fn tcp_stream_frames_messages_across_partial_reads() {
+        let listener = Listener::bind("tcp:127.0.0.1:0").unwrap();
+        let addr = listener.addr.clone();
+        let client = std::thread::spawn(move || {
+            let mut t = connect(&addr).unwrap();
+            t.send(&Msg::Hello { worker: 3 }).unwrap();
+            t.send(&Msg::Losses {
+                worker: 3,
+                step: 1,
+                shard_ids: vec![0, 1],
+                pairs: vec![(1.0, 2.0), (3.0, 4.0)],
+            })
+            .unwrap();
+            let reply = t.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(reply, Some(Msg::Shutdown));
+        });
+        let mut server = listener.accept_timeout(Duration::from_secs(5)).unwrap().expect("accept");
+        let hello = server.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(hello, Some(Msg::Hello { worker: 3 }));
+        let losses = server.recv_timeout(Duration::from_secs(5)).unwrap();
+        match losses {
+            Some(Msg::Losses { worker: 3, step: 1, .. }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        server.send(&Msg::Shutdown).unwrap();
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn unix_stream_roundtrips() {
+        let path = std::env::temp_dir().join(format!("zo2_dp_test_{}.sock", std::process::id()));
+        let spec = format!("unix:{}", path.display());
+        let listener = Listener::bind(&spec).unwrap();
+        let addr = listener.addr.clone();
+        let client = std::thread::spawn(move || {
+            let mut t = connect(&addr).unwrap();
+            t.send(&Msg::Hello { worker: 0 }).unwrap();
+            assert_eq!(
+                t.recv_timeout(Duration::from_secs(5)).unwrap(),
+                Some(Msg::Commit { step: 4, g: 0.5 })
+            );
+        });
+        let mut server = listener.accept_timeout(Duration::from_secs(5)).unwrap().expect("accept");
+        assert_eq!(
+            server.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Some(Msg::Hello { worker: 0 })
+        );
+        server.send(&Msg::Commit { step: 4, g: 0.5 }).unwrap();
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn listener_rejects_bad_spec() {
+        assert!(Listener::bind("carrier-pigeon:coop").is_err());
+        assert!(connect("smoke-signal:hill").is_err());
+    }
+}

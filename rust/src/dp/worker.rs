@@ -1,0 +1,324 @@
+//! Worker replica and serve loop for the elastic DP backend.
+//!
+//! A worker owns a full model replica and speaks the seed+scalar protocol:
+//! evaluate (loss⁺, loss⁻) pairs for assigned shards, apply committed
+//! projected gradients in step order, and transfer snapshots for joins and
+//! shutdown verification. Evaluation never mutates parameters, so any
+//! assignment can be retried idempotently until its step commits — that is
+//! the property every recovery path in this module leans on.
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use super::faults::WorkerFaults;
+use super::protocol::{Msg, WorkerSnapshot};
+use super::transport::Transport;
+use crate::rng::GaussianRng;
+
+/// A model replica driven by the elastic protocol. Implementations must keep
+/// `eval_shards` free of side effects on parameters and apply commits
+/// strictly in step order (ignoring duplicates of already-committed steps).
+pub trait ElasticWorker: Send {
+    /// Dual-perturbation loss pairs for `shards` at `step`. Pure in params.
+    fn eval_shards(&mut self, step: u64, shards: &[&[i32]]) -> Result<Vec<(f32, f32)>>;
+    /// Apply the all-reduced g for `step`. Duplicate commits of earlier
+    /// steps are ignored; a gap (step beyond the next) is an error.
+    fn commit(&mut self, step: u64, g: f32) -> Result<()>;
+    /// Number of fully committed steps (the next step this worker can run).
+    fn committed(&self) -> u64;
+    /// Bit-exact state capture.
+    fn snapshot(&self) -> WorkerSnapshot;
+    /// Restore from a snapshot, then replay committed gs for the steps
+    /// `snap.step, snap.step+1, ...` — the seed-replay catch-up path.
+    fn restore(&mut self, snap: &WorkerSnapshot, replay: &[f32]) -> Result<()>;
+}
+
+/// The reference ZO worker: a quadratic surrogate whose perturbations and
+/// updates follow the exact MeZO recipe (shared-seed z per step, dual loss
+/// evaluation, `p -= lr * g * z`). Small enough to run hundreds of faulted
+/// steps in CI, faithful enough that the DP wire contract is identical to
+/// the full engine's.
+pub struct SeedZoWorker {
+    params: Vec<f32>,
+    seed: u64,
+    committed: u64,
+    eps: f32,
+    lr: f32,
+}
+
+impl SeedZoWorker {
+    pub const EPS: f32 = 1e-3;
+    pub const LR: f32 = 1e-2;
+
+    pub fn new(seed: u64, n_params: usize) -> SeedZoWorker {
+        let mut params = vec![0.0f32; n_params];
+        GaussianRng::new(seed, u64::MAX).fill_gaussian(&mut params);
+        SeedZoWorker { params, seed, committed: 0, eps: Self::EPS, lr: Self::LR }
+    }
+
+    pub fn eps(&self) -> f32 {
+        self.eps
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// The shared-seed perturbation for `step`: every replica derives the
+    /// same z from (seed, step), so only scalars ever cross the wire.
+    fn z(&self, step: u64) -> Vec<f32> {
+        let mut z = vec![0.0f32; self.params.len()];
+        GaussianRng::new(self.seed, step).fill_gaussian(&mut z);
+        z
+    }
+
+    fn loss(params: &[f32], shard: &[i32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (j, &p) in params.iter().enumerate() {
+            let tok = shard[j % shard.len()];
+            let target = ((tok as f32) * 0.01).sin();
+            let d = p - target;
+            acc += d * d;
+        }
+        acc / params.len() as f32
+    }
+}
+
+impl ElasticWorker for SeedZoWorker {
+    fn eval_shards(&mut self, step: u64, shards: &[&[i32]]) -> Result<Vec<(f32, f32)>> {
+        ensure!(
+            step == self.committed,
+            "eval for step {step} but worker has committed {} steps",
+            self.committed
+        );
+        let z = self.z(step);
+        let mut plus = self.params.clone();
+        let mut minus = self.params.clone();
+        for ((p, m), zi) in plus.iter_mut().zip(minus.iter_mut()).zip(&z) {
+            *p += self.eps * zi;
+            *m -= self.eps * zi;
+        }
+        let mut pairs = Vec::with_capacity(shards.len());
+        for shard in shards {
+            ensure!(!shard.is_empty(), "empty shard in eval at step {step}");
+            pairs.push((Self::loss(&plus, shard), Self::loss(&minus, shard)));
+        }
+        Ok(pairs)
+    }
+
+    fn commit(&mut self, step: u64, g: f32) -> Result<()> {
+        if step < self.committed {
+            return Ok(()); // duplicate of an already-applied commit
+        }
+        ensure!(
+            step == self.committed,
+            "commit gap: got step {step}, worker has committed {} steps",
+            self.committed
+        );
+        let z = self.z(step);
+        for (p, zi) in self.params.iter_mut().zip(&z) {
+            *p -= self.lr * g * zi;
+        }
+        self.committed += 1;
+        Ok(())
+    }
+
+    fn committed(&self) -> u64 {
+        self.committed
+    }
+
+    fn snapshot(&self) -> WorkerSnapshot {
+        WorkerSnapshot { step: self.committed, params: self.params.clone() }
+    }
+
+    fn restore(&mut self, snap: &WorkerSnapshot, replay: &[f32]) -> Result<()> {
+        self.params = snap.params.clone();
+        self.committed = snap.step;
+        for (i, &g) in replay.iter().enumerate() {
+            self.commit(snap.step + i as u64, g)?;
+        }
+        Ok(())
+    }
+}
+
+/// Why a serve loop ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeExit {
+    /// Orderly shutdown requested by the supervisor.
+    Shutdown,
+    /// An injected kill fault fired: the worker dies abruptly, connection
+    /// dropped mid-protocol.
+    Killed,
+    /// The supervisor hung up (e.g. it declared this worker dead after a
+    /// straggle); the worker exits quietly rather than erroring.
+    Orphaned,
+}
+
+/// Slice the shard-major step batch into this worker's assigned shards.
+fn select_shards<'a>(
+    tokens: &'a [i32],
+    shard_len: usize,
+    shard_ids: &[u32],
+) -> Result<Vec<&'a [i32]>> {
+    let mut out = Vec::with_capacity(shard_ids.len());
+    for &sid in shard_ids {
+        let start = sid as usize * shard_len;
+        ensure!(
+            start + shard_len <= tokens.len(),
+            "assignment references shard {sid} beyond batch of {} tokens",
+            tokens.len()
+        );
+        out.push(&tokens[start..start + shard_len]);
+    }
+    Ok(out)
+}
+
+/// Drive one worker over a transport until shutdown (or an injected kill).
+/// `idle_timeout` bounds how long the worker waits with no supervisor
+/// traffic before giving up.
+pub fn serve<T: Transport, W: ElasticWorker>(
+    mut transport: T,
+    mut worker: W,
+    id: u32,
+    faults: WorkerFaults,
+    idle_timeout: Duration,
+) -> Result<ServeExit> {
+    // Any transport failure means the supervisor is gone (it buried us or
+    // crashed); that is an orphaned exit, not a worker error.
+    if transport.send(&Msg::Hello { worker: id }).is_err() {
+        return Ok(ServeExit::Orphaned);
+    }
+    let mut idle = Duration::ZERO;
+    let tick = Duration::from_millis(200);
+    loop {
+        let msg = match transport.recv_timeout(tick) {
+            Err(_) => return Ok(ServeExit::Orphaned),
+            Ok(Some(m)) => {
+                idle = Duration::ZERO;
+                m
+            }
+            Ok(None) => {
+                idle += tick;
+                ensure!(idle < idle_timeout, "worker {id}: no supervisor traffic for {idle:?}");
+                continue;
+            }
+        };
+        match msg {
+            Msg::Assign { step, shard_len, shard_ids, tokens, catchup_from, catchup } => {
+                // Self-repair: apply any committed gs we missed (dropped
+                // Commit broadcasts) before touching this step.
+                for (i, &g) in catchup.iter().enumerate() {
+                    let s = catchup_from + i as u64;
+                    if s == worker.committed() && s < step {
+                        worker.commit(s, g)?;
+                    }
+                }
+                if faults.kill_step == Some(step) {
+                    return Ok(ServeExit::Killed);
+                }
+                if let Some((s, ms)) = faults.stall {
+                    if s == step {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
+                if step == worker.committed() {
+                    let shards = select_shards(&tokens, shard_len as usize, &shard_ids)?;
+                    let pairs = worker.eval_shards(step, &shards)?;
+                    let reply = Msg::Losses { worker: id, step, shard_ids, pairs };
+                    if transport.send(&reply).is_err() {
+                        return Ok(ServeExit::Orphaned);
+                    }
+                } else if step > worker.committed() {
+                    bail!(
+                        "worker {id}: assignment for step {step} but only {} steps committed \
+                         and catch-up did not cover the gap",
+                        worker.committed()
+                    );
+                }
+                // step < committed: a stale retry from before our commit
+                // landed; the supervisor has already moved on.
+            }
+            Msg::Commit { step, g } => {
+                // Only apply the next in-order commit; anything later will
+                // arrive again via Assign catch-up.
+                if step == worker.committed() {
+                    worker.commit(step, g)?;
+                }
+            }
+            Msg::Ping { nonce } => {
+                if transport.send(&Msg::Pong { worker: id, nonce }).is_err() {
+                    return Ok(ServeExit::Orphaned);
+                }
+            }
+            Msg::LoadState { snap, replay } => {
+                worker.restore(&snap, &replay)?;
+                if transport.send(&Msg::State { snap: worker.snapshot() }).is_err() {
+                    return Ok(ServeExit::Orphaned);
+                }
+            }
+            Msg::FetchState => {
+                if transport.send(&Msg::State { snap: worker.snapshot() }).is_err() {
+                    return Ok(ServeExit::Orphaned);
+                }
+            }
+            Msg::Shutdown => return Ok(ServeExit::Shutdown),
+            other => bail!("worker {id}: unexpected message {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(tok: i32) -> Vec<i32> {
+        vec![tok; 8]
+    }
+
+    #[test]
+    fn eval_is_pure_and_commit_advances() {
+        let mut w = SeedZoWorker::new(90, 64);
+        let before = w.snapshot();
+        let s0 = shard(100);
+        let shards = [s0.as_slice()];
+        let a = w.eval_shards(0, &shards).unwrap();
+        let b = w.eval_shards(0, &shards).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(w.snapshot(), before);
+        w.commit(0, 0.5).unwrap();
+        assert_eq!(w.committed(), 1);
+        assert_ne!(w.snapshot().params, before.params);
+        // Duplicate commit of an applied step is a no-op.
+        let after = w.snapshot();
+        w.commit(0, 123.0).unwrap();
+        assert_eq!(w.snapshot(), after);
+        // A gap is an error.
+        assert!(w.commit(5, 0.1).is_err());
+    }
+
+    #[test]
+    fn restore_with_replay_matches_live_trajectory() {
+        let gs = [0.5f32, -0.25, 0.125, 0.0625];
+        let mut live = SeedZoWorker::new(7, 32);
+        for (s, &g) in gs.iter().enumerate() {
+            live.commit(s as u64, g).unwrap();
+        }
+        let mut resumed = SeedZoWorker::new(7, 32);
+        for (s, &g) in gs.iter().take(2).enumerate() {
+            resumed.commit(s as u64, g).unwrap();
+        }
+        // A joiner needs the matching seed (for z replay) plus the snapshot.
+        let mut joiner = SeedZoWorker::new(7, 32);
+        joiner.restore(&resumed.snapshot(), &gs[2..]).unwrap();
+        assert_eq!(joiner.snapshot(), live.snapshot());
+    }
+
+    #[test]
+    fn select_shards_bounds_checked() {
+        let tokens: Vec<i32> = (0..16).collect();
+        let got = select_shards(&tokens, 8, &[1]).unwrap();
+        assert_eq!(got[0], &tokens[8..16]);
+        assert!(select_shards(&tokens, 8, &[2]).is_err());
+    }
+}

@@ -50,6 +50,12 @@
 //!   [`costmodel::Cluster`]s — mixed per-device [`costmodel::Hardware`]
 //!   and per-device links, priced per device by
 //!   [`costmodel::ClusterCost`].
+//! * [`dp`] — the elastic fault-tolerant data-parallel backend: the
+//!   seed+scalar wire protocol over in-process channels or Unix/TCP
+//!   sockets, deterministic fault injection, a supervising coordinator
+//!   with heartbeat-based membership and shard reassignment, and
+//!   `DiskPool`-backed checkpoint/restore — all bit-identical to the
+//!   fault-free single-worker trajectory.
 //! * [`runtime`] — PJRT client, artifact manifests, executable cache.
 //! * [`coordinator`] — the trainer: data, train/eval loops, metrics.
 
@@ -58,6 +64,7 @@ pub mod clock;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod dp;
 pub mod hostpool;
 pub mod memory;
 pub mod model;

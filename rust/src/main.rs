@@ -1,11 +1,15 @@
 //! zo2 — CLI for the ZO2 reproduction.
 //!
 //! Subcommands:
-//!   train     train a compiled config with MeZO or ZO2 (real PJRT execution)
-//!   simulate  paper-scale throughput/memory via the discrete-event simulator
-//!   memory    print the Fig. 1 memory table (analytic accounting)
-//!   info      show a config's manifest summary
-//!   report    diff a simulated trace against a measured one (drift JSON)
+//!   train      train a compiled config with MeZO or ZO2 (real PJRT execution)
+//!   simulate   paper-scale throughput/memory via the discrete-event simulator
+//!   memory     print the Fig. 1 memory table (analytic accounting)
+//!   info       show a config's manifest summary
+//!   report     diff a simulated trace against a measured one (drift JSON)
+//!   dp         run the elastic fault-tolerant DP backend (real transports,
+//!              fault schedules, checkpoints — see README "Fault tolerance")
+//!   dp-worker  internal: one DP worker process (spawned by `dp` with
+//!              `--dp-processes`)
 //!
 //! `train` and `simulate` accept `--trace-out FILE.json` (Chrome
 //! trace-event JSON, openable in chrome://tracing or ui.perfetto.dev) and
@@ -41,7 +45,8 @@ use zo2::zo::{RunMode, UpdateSite, ZoConfig};
 
 /// Flags that never take a value (so `zo2 run --timeline cfg.json` keeps
 /// `cfg.json` positional — see `util::cli`).
-const BOOL_FLAGS: &[&str] = &["timeline", "no-reusable-mem", "no-efficient-update"];
+const BOOL_FLAGS: &[&str] =
+    &["timeline", "no-reusable-mem", "no-efficient-update", "resume", "dp-processes"];
 
 fn main() -> Result<()> {
     let args = Args::from_env_with_bools(BOOL_FLAGS);
@@ -51,6 +56,8 @@ fn main() -> Result<()> {
         Some("memory") => cmd_memory(&args),
         Some("info") => cmd_info(&args),
         Some("report") => cmd_report(&args),
+        Some("dp") => cmd_dp(&args),
+        Some("dp-worker") => cmd_dp_worker(&args),
         _ => {
             eprintln!(
                 "usage: zo2 <train|simulate|memory|info|report> [--config tiny] [--engine zo2|mezo]\n\
@@ -64,7 +71,11 @@ fn main() -> Result<()> {
                  \x20      [--layout contiguous|cyclic|weighted] [--link nvlink|pcie[,...]]\n\
                  \x20      [--link-gbps F[,F,...]] [--microbatches M]\n\
                  \x20      [--trace-out FILE.json] [--metrics-out FILE.json]\n\
-                 \x20  report --sim sim_trace.json --measured run_trace.json [--out drift.json]"
+                 \x20  report --sim sim_trace.json --measured run_trace.json [--out drift.json]\n\
+                 \x20  dp [--dp-transport chan|unix[:/path]|tcp[:host:port]] [--dp-workers K]\n\
+                 \x20      [--dp-shards S] [--steps N] [--fault-schedule SPEC|seeded:N|none]\n\
+                 \x20      [--checkpoint FILE.pool] [--checkpoint-every N] [--resume]\n\
+                 \x20      [--dp-processes] [--losses-out FILE.json] [--metrics-out FILE.json]"
             );
             Ok(())
         }
@@ -713,6 +724,66 @@ fn cmd_info(args: &Args) -> Result<()> {
     for (name, file) in &m.artifacts {
         println!("  {name:<14} {file}");
     }
+    Ok(())
+}
+
+fn cmd_dp(args: &Args) -> Result<()> {
+    use zo2::coordinator::{train_elastic, ElasticTrainConfig};
+    use zo2::dp::{ElasticRunConfig, FaultSchedule, TransportKind};
+
+    let workers = args.get_usize_checked("dp-workers", 2)?;
+    let shards = args.get_usize_checked("dp-shards", 4)?;
+    let steps = args.get_usize_checked("steps", 24)? as u64;
+    let schedule =
+        FaultSchedule::parse(args.get_or("fault-schedule", "none").as_str(), workers, steps)?;
+    let cfg = ElasticTrainConfig {
+        run: ElasticRunConfig {
+            transport: TransportKind::parse(args.get_or("dp-transport", "chan").as_str())?,
+            workers,
+            shards,
+            shard_len: args.get_usize_checked("shard-len", 8)?,
+            steps,
+            schedule,
+            checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
+            checkpoint_every: args.get_usize_checked("checkpoint-every", 0)? as u64,
+            resume: args.get_bool("resume"),
+            seed: args.get_usize_checked("seed", 90)? as u64,
+            data_seed: args.get_usize_checked("data-seed", 4242)? as u64,
+            n_params: args.get_usize_checked("n-params", 64)?,
+            processes: args.get_bool("dp-processes"),
+        },
+        losses_out: args.get("losses-out").map(str::to_string),
+        metrics_out: args.get("metrics-out").map(str::to_string),
+        log_every: args.get_usize_checked("log-every", 1)?,
+    };
+    train_elastic(&cfg, true)?;
+    Ok(())
+}
+
+fn cmd_dp_worker(args: &Args) -> Result<()> {
+    use zo2::dp::{connect, serve, SeedZoWorker, WorkerFaults};
+
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("dp-worker needs --connect <tcp:..|unix:..>"))?;
+    let id = args.get_usize_checked("worker", 0)? as u32;
+    let seed = args.get_usize_checked("seed", 90)? as u64;
+    let n_params = args.get_usize_checked("n-params", 64)?;
+    let kill_step = match args.get("kill-at") {
+        Some(_) => Some(args.get_usize_checked("kill-at", 0)? as u64),
+        None => None,
+    };
+    let stall = match args.get("stall-at") {
+        Some(_) => Some((
+            args.get_usize_checked("stall-at", 0)? as u64,
+            args.get_usize_checked("stall-ms", 10)? as u64,
+        )),
+        None => None,
+    };
+    let faults = WorkerFaults { kill_step, stall };
+    let t = connect(addr)?;
+    let worker = SeedZoWorker::new(seed, n_params);
+    serve(t, worker, id, faults, std::time::Duration::from_secs(120))?;
     Ok(())
 }
 

@@ -49,6 +49,19 @@ impl DiskBucket {
     pub fn wire_len(&self) -> usize {
         self.len
     }
+
+    /// Byte offset of this bucket inside its pool file.
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    /// Reconstruct a bucket handle from persisted layout metadata (the
+    /// checkpoint loader's counterpart of [`DiskPool::append`]).  The
+    /// caller owns the invariant that `(offset, numel·codec-width)` really
+    /// describes a bucket of the pool file it is used against.
+    pub fn at(codec: Codec, numel: usize, offset: u64) -> Self {
+        Self { codec, numel, offset, len: numel * codec.bytes_per_el() }
+    }
 }
 
 /// File-backed bucket pool with capacity accounting and an NVMe cost model.
@@ -61,6 +74,9 @@ pub struct DiskPool {
     path: PathBuf,
     end: AtomicU64,
     capacity: u64,
+    /// Persistent pools (checkpoints) survive drop; scratch pools (the
+    /// engine's spill tier) are unlinked when the pool goes away.
+    persistent: bool,
     pub read_model: TransferModel,
     pub write_model: TransferModel,
     reads: Mutex<TransferStats>,
@@ -87,6 +103,51 @@ impl DiskPool {
             path,
             end: AtomicU64::new(0),
             capacity,
+            persistent: false,
+            read_model,
+            write_model,
+            reads: Mutex::new(TransferStats::default()),
+            writes: Mutex::new(TransferStats::default()),
+        })
+    }
+
+    /// Create (truncating) a pool file that *survives* the pool handle —
+    /// the checkpoint variant of [`Self::create`].
+    pub fn create_persistent(
+        path: PathBuf,
+        capacity: u64,
+        read_model: TransferModel,
+        write_model: TransferModel,
+    ) -> Result<Self> {
+        let mut pool = Self::create(path, capacity, read_model, write_model)?;
+        pool.persistent = true;
+        Ok(pool)
+    }
+
+    /// Reopen an existing pool file without truncating it (checkpoint
+    /// restore after a process kill).  The append cursor starts at the
+    /// current file end, so previously-appended buckets keep their offsets
+    /// and new appends land after them.
+    pub fn open_persistent(
+        path: PathBuf,
+        read_model: TransferModel,
+        write_model: TransferModel,
+    ) -> Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("opening disk pool {}", path.display()))?;
+        let end = file
+            .metadata()
+            .with_context(|| format!("stat of disk pool {}", path.display()))?
+            .len();
+        Ok(Self {
+            file: Mutex::new(file),
+            path,
+            end: AtomicU64::new(end),
+            capacity: u64::MAX,
+            persistent: true,
             read_model,
             write_model,
             reads: Mutex::new(TransferStats::default()),
@@ -244,7 +305,9 @@ impl DiskPool {
 
 impl Drop for DiskPool {
     fn drop(&mut self) {
-        let _ = std::fs::remove_file(&self.path);
+        if !self.persistent {
+            let _ = std::fs::remove_file(&self.path);
+        }
     }
 }
 
@@ -380,6 +443,29 @@ mod tests {
         pool.append(Codec::Fp8E4M3, 60, &vec![0u8; 60]).unwrap();
         assert!(pool.append(Codec::Fp8E4M3, 60, &vec![0u8; 60]).is_err(), "should hit capacity");
         assert_eq!(pool.used(), 60, "failed append must roll back");
+    }
+
+    #[test]
+    fn persistent_pool_survives_drop_and_reopens() {
+        let (r, w) = models();
+        let path = std::env::temp_dir()
+            .join(format!("zo2-disk-persist-{}.pool", std::process::id()));
+        let payload: Vec<u8> = (0..64u8).collect();
+        let (off, codec, numel) = {
+            let pool = DiskPool::create_persistent(path.clone(), u64::MAX, r, w).unwrap();
+            let e = pool.append(Codec::Fp8E4M3, 64, &payload).unwrap();
+            (e.offset(), e.codec(), e.numel())
+        };
+        assert!(path.is_file(), "persistent pool must survive drop");
+        let pool = DiskPool::open_persistent(path.clone(), r, w).unwrap();
+        assert_eq!(pool.used(), 64, "reopen resumes the append cursor at file end");
+        let bucket = DiskBucket::at(codec, numel, off);
+        assert_eq!(pool.read(&bucket).unwrap(), payload, "bytes survive the process boundary");
+        // Appends after reopen land behind the existing buckets.
+        let e2 = pool.append(Codec::Fp8E4M3, 8, &[9u8; 8]).unwrap();
+        assert_eq!(e2.offset(), 64);
+        drop(pool);
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

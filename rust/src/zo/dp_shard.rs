@@ -37,6 +37,12 @@ pub trait DpWorker {
     /// `(ℓ₊, ℓ₋)` pair per shard, in the given order.
     fn dp_dual_losses(&mut self, shards: &[&[i32]]) -> Result<Vec<(f32, f32)>>;
 
+    /// Evaluate *additional* shards for the step already parked by
+    /// [`Self::dp_dual_losses`] — the reassignment path after another
+    /// worker failed mid-step.  Must replay the same perturbation (same
+    /// step, same z) and leave the parked deferred update untouched.
+    fn dp_extra_losses(&mut self, shards: &[&[i32]]) -> Result<Vec<(f32, f32)>>;
+
     /// Deliver the all-reduced projected gradient for the step just
     /// evaluated.
     fn set_allreduced_g(&mut self, g: f32);
@@ -48,6 +54,10 @@ pub trait DpWorker {
 impl DpWorker for Zo2Engine {
     fn dp_dual_losses(&mut self, shards: &[&[i32]]) -> Result<Vec<(f32, f32)>> {
         Zo2Engine::dp_dual_losses(self, shards)
+    }
+
+    fn dp_extra_losses(&mut self, shards: &[&[i32]]) -> Result<Vec<(f32, f32)>> {
+        Zo2Engine::dp_extra_losses(self, shards)
     }
 
     fn set_allreduced_g(&mut self, g: f32) {
@@ -69,14 +79,16 @@ pub struct DpSimShard<W> {
 impl<W: DpWorker> DpSimShard<W> {
     /// `workers` must all be replicas initialised from the same seed; the
     /// shard count is fixed for the run (it is part of the trajectory's
-    /// identity — the worker count is not) and must divide evenly across
-    /// the workers.
+    /// identity — the worker count is not).  The round-robin assignment
+    /// handles uneven splits, so any `K ≤ S` is accepted — which is what
+    /// keeps the sim running when K shrinks after a worker failure.
     pub fn new(workers: Vec<W>, shards: usize) -> Result<Self> {
         anyhow::ensure!(!workers.is_empty(), "need at least one DP worker");
         anyhow::ensure!(shards >= 1, "need at least one shard");
         anyhow::ensure!(
-            shards % workers.len() == 0,
-            "{shards} shards do not divide across {} workers",
+            workers.len() <= shards,
+            "{} workers but only {shards} shards: extra workers would sit idle with \
+             no shard to evaluate",
             workers.len()
         );
         Ok(Self { workers, shards, step: 0 })
@@ -106,6 +118,14 @@ impl<W: DpWorker> DpSimShard<W> {
     /// in canonical shard order, then broadcasts ḡ to every worker's parked
     /// deferred update.  The reported loss is the shard-mean of the dual
     /// losses.
+    ///
+    /// The step is atomic with respect to worker failure: a worker whose
+    /// evaluation errors is removed from the group and its shards are
+    /// re-evaluated on the survivors (via [`DpWorker::dp_extra_losses`],
+    /// which replays the same perturbation) *before* any all-reduced
+    /// gradient is delivered, so the committed trajectory is unchanged.
+    /// Only when every worker fails does the step itself fail — and then
+    /// without having delivered a partial update to anyone.
     pub fn train_step(&mut self, ids: &[i32]) -> Result<StepStats> {
         let t0 = std::time::Instant::now();
         let s = self.shards;
@@ -118,23 +138,58 @@ impl<W: DpWorker> DpSimShard<W> {
         let shards: Vec<&[i32]> = ids.chunks(shard_len).collect();
         let k = self.workers.len();
 
-        let mut per_shard: Vec<(f32, f32)> = vec![(0.0, 0.0); s];
+        let mut per_shard: Vec<Option<(f32, f32)>> = vec![None; s];
+        let mut failed: Vec<usize> = Vec::new();
         for (w, worker) in self.workers.iter_mut().enumerate() {
-            let mine: Vec<&[i32]> = (w..s).step_by(k).map(|i| shards[i]).collect();
-            let losses = worker.dp_dual_losses(&mine)?;
-            anyhow::ensure!(losses.len() == mine.len(), "worker {w} shard count mismatch");
-            for (j, l) in losses.into_iter().enumerate() {
-                per_shard[w + j * k] = l;
+            let mine_idx: Vec<usize> = (w..s).step_by(k).collect();
+            let mine: Vec<&[i32]> = mine_idx.iter().map(|&i| shards[i]).collect();
+            match worker.dp_dual_losses(&mine) {
+                Ok(losses) => {
+                    anyhow::ensure!(losses.len() == mine.len(), "worker {w} shard count mismatch");
+                    for (j, l) in losses.into_iter().enumerate() {
+                        per_shard[mine_idx[j]] = Some(l);
+                    }
+                }
+                Err(_) => failed.push(w),
+            }
+        }
+
+        // Reassign the failed workers' shards to survivors before any
+        // gradient is committed anywhere.
+        if !failed.is_empty() {
+            for &w in failed.iter().rev() {
+                self.workers.remove(w);
+            }
+            anyhow::ensure!(
+                !self.workers.is_empty(),
+                "all {k} DP workers failed at step {}; no partial update was delivered",
+                self.step
+            );
+            let missing: Vec<usize> =
+                per_shard.iter().enumerate().filter(|(_, p)| p.is_none()).map(|(i, _)| i).collect();
+            crate::telemetry::metrics::counter_add(
+                "zo2_dp_reassigned_shards",
+                &[],
+                missing.len() as u64,
+            );
+            let survivors = self.workers.len();
+            for (j, &si) in missing.iter().enumerate() {
+                let extra = [shards[si]];
+                let losses = self.workers[j % survivors].dp_extra_losses(&extra)?;
+                anyhow::ensure!(losses.len() == 1, "reassigned shard count mismatch");
+                per_shard[si] = Some(losses[0]);
             }
         }
 
         // Canonical all-reduce: fixed shard order, plain f32 accumulation —
-        // the reduction is identical for every worker count.
+        // the reduction is identical for every worker count and for every
+        // assignment of shards to workers.
         let eps = self.workers[0].eps();
         let mut g_sum = 0.0f32;
         let mut lp_sum = 0.0f32;
         let mut lm_sum = 0.0f32;
-        for &(lp, lm) in &per_shard {
+        for pair in per_shard.iter().flatten() {
+            let (lp, lm) = *pair;
             g_sum += (lp - lm) / (2.0 * eps);
             lp_sum += lp;
             lm_sum += lm;

@@ -1156,6 +1156,34 @@ impl Zo2Engine {
         Ok(out)
     }
 
+    /// Evaluate additional shards for the step currently parked by
+    /// [`Self::dp_dual_losses`] — the DP reassignment path when another
+    /// worker dies mid-step.  Each shard replays the same ZO step (same
+    /// perturbation stream, exact no-op update), so the returned pairs are
+    /// bit-identical to what the dead worker would have produced, and the
+    /// parked deferred update stays parked (g remains the NaN sentinel).
+    pub fn dp_extra_losses(&mut self, shards: &[&[i32]]) -> Result<Vec<(f32, f32)>> {
+        anyhow::ensure!(!shards.is_empty(), "reassignment needs at least one shard");
+        anyhow::ensure!(
+            self.pending.as_ref().is_some_and(|p| p.g.is_nan()),
+            "dp_extra_losses requires a step parked by dp_dual_losses"
+        );
+        let step0 = self.step - 1;
+        let mut out = Vec::with_capacity(shards.len());
+        for ids in shards {
+            // Same replay recipe as the k > 0 arm of dp_dual_losses.
+            self.step = step0;
+            self.pending = None;
+            let st = self.train_step(ids)?;
+            let _ = self.manager.discard_current();
+            out.push((st.loss_plus, st.loss_minus));
+        }
+        if let Some(p) = self.pending.as_mut() {
+            p.g = f32::NAN; // still parked until the all-reduce lands
+        }
+        Ok(out)
+    }
+
     /// Deliver the all-reduced projected gradient for the step parked by
     /// [`Self::dp_dual_losses`].
     pub fn set_allreduced_g(&mut self, g: f32) {

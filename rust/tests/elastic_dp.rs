@@ -1,0 +1,144 @@
+//! Integration tests for the elastic fault-tolerant DP backend.
+//!
+//! The contract under test (DESIGN.md "Elasticity and recovery contract"):
+//! the loss trajectory is a function of the shard set only, so worker
+//! deaths, stragglers, dropped/duplicated/delayed messages, mid-run joins
+//! and checkpoint/resume must all reproduce the fault-free single-worker
+//! trajectory bit-for-bit.
+
+use std::path::PathBuf;
+
+use zo2::dp::{
+    checkpoint, params_fingerprint, run_elastic, ElasticRunConfig, FaultSchedule, RunOutcome,
+    TransportKind,
+};
+
+/// The trajectory as raw bit patterns — equality here is bit-identity.
+fn records_bits(o: &RunOutcome) -> Vec<(u64, u32, u32, u32)> {
+    o.records
+        .iter()
+        .map(|r| (r.step, r.loss_plus.to_bits(), r.loss_minus.to_bits(), r.g.to_bits()))
+        .collect()
+}
+
+/// The canonical reference: one worker, no faults, in-process channels.
+fn reference(shards: usize, steps: u64) -> RunOutcome {
+    run_elastic(&ElasticRunConfig::quick(1, shards, steps)).expect("fault-free K=1 run")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("zo2_elastic_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn trajectory_is_invariant_across_worker_counts() {
+    let base = reference(4, 16);
+    assert_eq!(base.records.len(), 16);
+    for k in [2usize, 3, 4] {
+        let out = run_elastic(&ElasticRunConfig::quick(k, 4, 16)).unwrap();
+        assert_eq!(records_bits(&base), records_bits(&out), "K={k} trajectory");
+        assert_eq!(
+            params_fingerprint(&base.final_snap.params),
+            params_fingerprint(&out.final_snap.params),
+            "K={k} final params"
+        );
+        assert_eq!((out.deaths, out.joins), (0, 0), "K={k} saw phantom membership churn");
+    }
+}
+
+#[test]
+fn seeded_fault_schedules_reproduce_the_fault_free_trajectory() {
+    // Property over seeds: every generated schedule (≥1 kill, a delayed and
+    // a duplicated reply, a dropped commit, a stall, and one mid-run join)
+    // leaves the trajectory bit-identical to the fault-free K=1 run.
+    let steps = 24u64;
+    let base = reference(4, steps);
+    for seed in [1u64, 7, 23] {
+        let mut cfg = ElasticRunConfig::quick(3, 4, steps);
+        cfg.schedule =
+            FaultSchedule::parse(&format!("seeded:{seed}"), cfg.workers, steps).unwrap();
+        let out = run_elastic(&cfg).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        assert_eq!(records_bits(&base), records_bits(&out), "seed {seed} trajectory");
+        assert_eq!(
+            params_fingerprint(&base.final_snap.params),
+            params_fingerprint(&out.final_snap.params),
+            "seed {seed} final params"
+        );
+        assert!(out.deaths >= 1, "seed {seed}: the scheduled kill must register as a death");
+        assert_eq!(out.joins, 1, "seed {seed}: the scheduled joiner must be admitted");
+    }
+}
+
+#[test]
+fn checkpoint_then_resume_continues_the_exact_trajectory() {
+    let steps = 24u64;
+    let base = reference(4, steps);
+    let path = tmp("resume.pool");
+    checkpoint::remove_checkpoint(&path);
+
+    // Phase 1: run the first half with periodic checkpoints; the run ends
+    // ("crashes") at step 12, having persisted its state to the DiskPool.
+    let mut cfg = ElasticRunConfig::quick(2, 4, 12);
+    cfg.checkpoint = Some(path.clone());
+    cfg.checkpoint_every = 5;
+    let first = run_elastic(&cfg).unwrap();
+    assert_eq!(first.records.len(), 12);
+    assert!(path.exists(), "checkpoint pool must exist after the first run");
+
+    // Phase 2: resume from the checkpoint toward the full target.
+    let mut cfg = ElasticRunConfig::quick(2, 4, steps);
+    cfg.checkpoint = Some(path.clone());
+    cfg.resume = true;
+    let second = run_elastic(&cfg).unwrap();
+    assert_eq!(second.records.first().map(|r| r.step), Some(12), "resume start step");
+
+    let mut stitched = records_bits(&first);
+    stitched.extend(records_bits(&second));
+    assert_eq!(records_bits(&base), stitched, "resumed trajectory diverged");
+    assert_eq!(
+        params_fingerprint(&base.final_snap.params),
+        params_fingerprint(&second.final_snap.params),
+        "resumed final params"
+    );
+    checkpoint::remove_checkpoint(&path);
+}
+
+#[test]
+fn socket_transports_match_the_chan_reference() {
+    let base = reference(4, 8);
+
+    let sock = tmp("smoke.sock");
+    let _ = std::fs::remove_file(&sock);
+    let mut cfg = ElasticRunConfig::quick(2, 4, 8);
+    cfg.transport = TransportKind::Unix(sock.clone());
+    let out = run_elastic(&cfg).unwrap();
+    assert_eq!(records_bits(&base), records_bits(&out), "unix transport trajectory");
+
+    let mut cfg = ElasticRunConfig::quick(3, 4, 8);
+    cfg.transport = TransportKind::Tcp("127.0.0.1:0".to_string());
+    let out = run_elastic(&cfg).unwrap();
+    assert_eq!(records_bits(&base), records_bits(&out), "tcp transport trajectory");
+}
+
+#[test]
+fn explicit_kill_join_and_message_faults_preserve_the_trajectory() {
+    use zo2::telemetry::metrics;
+
+    let steps = 16u64;
+    let base = reference(4, steps);
+
+    metrics::set_enabled(true);
+    metrics::global().reset();
+    let spec = "kill:w1@5,join:w3@9,delay:losses:w0@3:2,dup:losses:w2@2,drop:commit:w2@4";
+    let mut cfg = ElasticRunConfig::quick(3, 4, steps);
+    cfg.schedule = FaultSchedule::parse(spec, cfg.workers, steps).unwrap();
+    let out = run_elastic(&cfg).unwrap();
+    let snap = metrics::global().snapshot_json();
+    metrics::set_enabled(false);
+
+    assert_eq!(records_bits(&base), records_bits(&out), "faulted trajectory");
+    assert_eq!(out.deaths, 1, "exactly the scheduled kill");
+    assert_eq!(out.joins, 1, "exactly the scheduled join");
+    let reassigned = metrics::find_value(&snap, "zo2_dp_reassigned_shards", &[]).unwrap_or(0.0);
+    assert!(reassigned >= 1.0, "the killed worker's shards must be reassigned: {reassigned}");
+}

@@ -594,13 +594,16 @@ struct ToyZoWorker {
     lr: f32,
     /// (step, g); g is NaN until the all-reduce delivers it.
     pending: Option<(u64, f32)>,
+    /// Fail (error out of `dp_dual_losses`) at this step — the atomicity
+    /// test's injected mid-step worker death.
+    fail_at: Option<u64>,
 }
 
 impl ToyZoWorker {
     fn new(seed: u64, dim: usize) -> Self {
         let mut params = vec![0.0f32; dim];
         GaussianRng::new(seed, u64::MAX).fill_gaussian(&mut params);
-        Self { params, seed, step: 0, eps: 1e-3, lr: 1e-2, pending: None }
+        Self { params, seed, step: 0, eps: 1e-3, lr: 1e-2, pending: None, fail_at: None }
     }
 
     fn z(&self, step: u64) -> Vec<f32> {
@@ -625,6 +628,9 @@ impl ToyZoWorker {
 
 impl DpWorker for ToyZoWorker {
     fn dp_dual_losses(&mut self, shards: &[&[i32]]) -> anyhow::Result<Vec<(f32, f32)>> {
+        if self.fail_at == Some(self.step) {
+            anyhow::bail!("toy worker injected failure at step {}", self.step);
+        }
         // Deferred update with the all-reduced gradient of the last step.
         if let Some((step, g)) = self.pending.take() {
             anyhow::ensure!(!g.is_nan(), "toy worker missing all-reduced g");
@@ -644,6 +650,24 @@ impl DpWorker for ToyZoWorker {
         }
         self.pending = Some((self.step, f32::NAN));
         self.step += 1;
+        Ok(out)
+    }
+
+    fn dp_extra_losses(&mut self, shards: &[&[i32]]) -> anyhow::Result<Vec<(f32, f32)>> {
+        // Reassignment path: replay the parked step's perturbation without
+        // touching the params or the parked deferred update.
+        let (step, g) =
+            self.pending.ok_or_else(|| anyhow::anyhow!("no parked step to replay"))?;
+        anyhow::ensure!(g.is_nan(), "parked step already has its all-reduced g");
+        let z = self.z(step);
+        let mut out = Vec::with_capacity(shards.len());
+        for ids in shards {
+            let plus: Vec<f32> =
+                self.params.iter().zip(&z).map(|(p, zi)| p + self.eps * zi).collect();
+            let minus: Vec<f32> =
+                self.params.iter().zip(&z).map(|(p, zi)| p - self.eps * zi).collect();
+            out.push((Self::loss(&plus, ids), Self::loss(&minus, ids)));
+        }
         Ok(out)
     }
 
@@ -678,12 +702,14 @@ fn toy_dp_trajectory(workers: usize, shards: usize, steps: usize) -> (Vec<(f32, 
 
 #[test]
 fn dp_sim_shard_trajectory_is_bit_identical_for_any_worker_count() {
-    // Rule 10: with the shard set fixed (S = 4), K ∈ {1, 2, 4} workers
+    // Rule 10: with the shard set fixed (S = 4), K ∈ {1, 2, 3, 4} workers
     // produce bit-identical loss trajectories and final parameters — the
-    // "single-worker run" is K = 1 evaluating every shard itself.
+    // "single-worker run" is K = 1 evaluating every shard itself.  K = 3 is
+    // the uneven split (worker 0 owns two shards) the round-robin
+    // assignment handles since divisibility was lifted.
     let steps = 12;
     let (l1, p1) = toy_dp_trajectory(1, 4, steps);
-    for k in [2usize, 4] {
+    for k in [2usize, 3, 4] {
         let (lk, pk) = toy_dp_trajectory(k, 4, steps);
         for (i, (a, b)) in l1.iter().zip(&lk).enumerate() {
             assert_eq!(a.0.to_bits(), b.0.to_bits(), "K={k} step {i} loss+");
@@ -699,12 +725,51 @@ fn dp_sim_shard_trajectory_is_bit_identical_for_any_worker_count() {
 
 #[test]
 fn dp_sim_shard_rejects_bad_configurations() {
+    // Uneven splits are fine now (K ≤ S); only idle workers are rejected.
     let ws: Vec<ToyZoWorker> = (0..3).map(|_| ToyZoWorker::new(1, 8)).collect();
-    assert!(DpSimShard::new(ws, 4).is_err(), "4 shards on 3 workers");
+    assert!(DpSimShard::new(ws, 4).is_ok(), "4 shards on 3 workers is a valid uneven split");
+    let ws: Vec<ToyZoWorker> = (0..5).map(|_| ToyZoWorker::new(1, 8)).collect();
+    assert!(DpSimShard::new(ws, 4).is_err(), "5 workers on 4 shards would idle one");
     let ws: Vec<ToyZoWorker> = (0..2).map(|_| ToyZoWorker::new(1, 8)).collect();
     let mut dp = DpSimShard::new(ws, 2).unwrap();
     assert!(dp.train_step(&[1, 2, 3]).is_err(), "odd batch cannot split into 2 shards");
     assert!(DpSimShard::<ToyZoWorker>::new(Vec::new(), 2).is_err(), "no workers");
+}
+
+#[test]
+fn dp_sim_shard_worker_failure_is_atomic_and_trajectory_preserving() {
+    // Satellite (b): a worker erroring mid-step is removed and its shards
+    // are re-evaluated on the survivors *before* any all-reduced gradient
+    // is delivered, so the committed trajectory matches the healthy run
+    // bit-for-bit and no replica sees a partial update.
+    let steps = 10;
+    let (healthy, p_h) = toy_dp_trajectory(1, 4, steps);
+
+    let mut ws: Vec<ToyZoWorker> = (0..4).map(|_| ToyZoWorker::new(90, 64)).collect();
+    ws[2].fail_at = Some(5);
+    let mut dp = DpSimShard::new(ws, 4).unwrap();
+    let mut data_rng = GaussianRng::new(4242, 0);
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        let ids: Vec<i32> = (0..4 * 8).map(|_| data_rng.next_below(50_000) as i32).collect();
+        let st = dp.train_step(&ids).unwrap();
+        losses.push((st.loss_plus, st.loss_minus));
+    }
+    assert_eq!(dp.n_workers(), 3, "the failed worker was removed from the group");
+    for (i, (a, b)) in healthy.iter().zip(&losses).enumerate() {
+        assert_eq!(a.0.to_bits(), b.0.to_bits(), "step {i} loss+ diverged after the failure");
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "step {i} loss- diverged after the failure");
+    }
+    let p_f = &dp.workers()[0].params;
+    let diffs = p_h.iter().zip(p_f).filter(|(a, b)| a.to_bits() != b.to_bits()).count();
+    assert_eq!(diffs, 0, "{diffs}/{} params differ from the healthy run", p_h.len());
+
+    // Every worker failing at once is a loud error, not a partial update.
+    let mut ws: Vec<ToyZoWorker> = (0..2).map(|_| ToyZoWorker::new(90, 64)).collect();
+    ws[0].fail_at = Some(0);
+    ws[1].fail_at = Some(0);
+    let mut dp = DpSimShard::new(ws, 2).unwrap();
+    assert!(dp.train_step(&[1i32; 16]).is_err(), "all-workers-dead must fail the step");
 }
 
 // --- pipeline microbatching / per-partition spills (rules 11-13) -------------
