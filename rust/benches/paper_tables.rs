@@ -27,6 +27,7 @@ use zo2::shard::{
     blocks_per_device_of, bottleneck_weights, build_sharded_plan, build_sharded_plan_tiered,
     weighted_contiguous_owners, DeviceTier, ShardLayout, ShardSpec,
 };
+use zo2::simd::{self, SimdMode};
 use zo2::telemetry::metrics::MetricsRegistry;
 use zo2::util::fmt_mb;
 use zo2::util::json::Json;
@@ -432,10 +433,14 @@ fn table_disk_tier(hw: &Hardware) {
     }
 }
 
-/// Tentpole bench: host-kernel throughput per codec — scalar three-pass
-/// (decode → update → encode) vs the fused single pass vs fused+pool at
-/// 1/2/4/8 threads.  Writes `BENCH_host_kernels.json`, including the
-/// per-thread GB/s constants that calibrate `costmodel::HostKernels`.
+/// Tentpole bench: host-kernel throughput per codec — decode-only and
+/// encode-only passes, the scalar three-pass (decode → update → encode)
+/// composition, the fused single pass, and fused+pool at 1/2/4/8 threads —
+/// each timed under both `--host-simd off` (scalar) and `auto` (vector)
+/// dispatch, plus a pinned (`--host-pin`) 8-thread fused variant.  Writes
+/// `BENCH_host_kernels.json`, including the per-thread SIMD GB/s constants
+/// that calibrate `costmodel::HostKernels` (legacy `calibration` block and
+/// the telemetry-snapshot gauge `from_bench_json` prefers).
 /// `ZO2_HOST_KERNEL_ELEMS` overrides the bucket size (CI smoke uses a tiny
 /// one).  Every variant is asserted bit-identical before timing.
 fn table_host_kernels(_hw: &Hardware) {
@@ -443,10 +448,23 @@ fn table_host_kernels(_hw: &Hardware) {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(1 << 22);
-    println!("\n=== Host kernels: fused decode->update->encode throughput ({elems} elems) ===");
     println!(
-        "{:>5} | {:>12} {:>12} | {:>9} {:>9} {:>9} {:>9} | {:>8}",
-        "codec", "scalar GB/s", "fused GB/s", "p1", "p2", "p4", "p8", "f+p8/s"
+        "\n=== Host kernels: decode/update/encode throughput ({elems} elems, \
+         avx2 {}) ===",
+        if simd::avx2_supported() { "available" } else { "unavailable: simd == scalar" }
+    );
+    println!(
+        "{:>5} | {:>11} {:>11} {:>11} | {:>11} {:>11} | {:>9} {:>9} | {:>6} {:>6}",
+        "codec",
+        "dec s/v",
+        "enc s/v",
+        "3pass",
+        "fused s/v",
+        "p8 s/v",
+        "p8 pin",
+        "p1..p4 v",
+        "xfuse",
+        "xsimd"
     );
 
     let mut xs = vec![0.0f32; elems];
@@ -459,6 +477,61 @@ fn table_host_kernels(_hw: &Hardware) {
     let gbs = |t: f64| (elems * 4) as f64 / t / 1e9;
     let thread_counts = [1usize, 2, 4, 8];
 
+    /// p50 timings of every variant under one dispatch mode.
+    struct ModeTimes {
+        decode: f64,
+        encode: f64,
+        three_pass: f64,
+        fused_serial: f64,
+        /// One entry per `thread_counts` element.
+        pooled: Vec<f64>,
+        pinned8: f64,
+    }
+    let run = |codec: Codec, wire0: &[u8], mode: SimdMode| -> ModeTimes {
+        simd::set_mode(mode);
+        let mut tmp = vec![0.0f32; elems];
+        let decode = bench(1, 5, || codec.decode_into(wire0, &mut tmp)).percentile(50.0);
+        let mut enc = Vec::new();
+        let encode = bench(1, 5, || codec.encode_into(&tmp, &mut enc)).percentile(50.0);
+        // Three passes + a bucket-sized fp32 intermediate (the pre-fusion
+        // composition; under `off` this is the historical scalar baseline).
+        let mut bytes = wire0.to_vec();
+        let mut zs = ZScratch::new();
+        let three_pass = bench(1, 5, || {
+            codec.decode_into(&bytes, &mut tmp);
+            cpu_zo_sgd_update(&mut tmp, state, lr, g, &mut zs);
+            codec.encode_into(&tmp, &mut bytes);
+        })
+        .percentile(50.0);
+        // Fused single pass, serial (fusion win without the pool).
+        let serial_pool = HostPool::new(1);
+        let mut bytes = wire0.to_vec();
+        let fused_serial = bench(1, 5, || {
+            fused::fused_zo_sgd(codec, &mut bytes, elems, state, lr, g, &serial_pool);
+        })
+        .percentile(50.0);
+        // Fused + pool across thread counts.
+        let mut pooled = Vec::new();
+        for &threads in &thread_counts {
+            let pool = HostPool::new(threads);
+            let mut bytes = wire0.to_vec();
+            let t = bench(1, 5, || {
+                fused::fused_zo_sgd(codec, &mut bytes, elems, state, lr, g, &pool);
+            })
+            .percentile(50.0);
+            pooled.push(t);
+        }
+        // Fused + pinned 8-thread pool (`--host-pin`: static chunk→worker
+        // map, workers pinned across NUMA nodes).
+        let pin_pool = HostPool::with_opts(8, true);
+        let mut bytes = wire0.to_vec();
+        let pinned8 = bench(1, 5, || {
+            fused::fused_zo_sgd(codec, &mut bytes, elems, state, lr, g, &pin_pool);
+        })
+        .percentile(50.0);
+        ModeTimes { decode, encode, three_pass, fused_serial, pooled, pinned8 }
+    };
+
     let mut rows: Vec<Json> = Vec::new();
     let mut calib = BTreeMap::new();
     // Local (non-global) registry: the calibration constants are also
@@ -468,90 +541,99 @@ fn table_host_kernels(_hw: &Hardware) {
     for codec in [Codec::F32, Codec::Bf16, Codec::Fp16, Codec::Fp8E4M3] {
         let wire0 = codec.encode(&xs);
 
-        // Bit-identity check: fused+pool == scalar composition, once.
+        // Bit-identity: the scalar composition is the specification; the
+        // fused+pool (and pinned) paths must reproduce it bit-for-bit under
+        // BOTH dispatch modes before anything is timed.
         {
+            simd::set_mode(SimdMode::Off);
             let mut want_f32 = codec.decode(&wire0, elems);
             let mut zs = ZScratch::new();
             cpu_zo_sgd_update(&mut want_f32, state, lr, g, &mut zs);
             let want = codec.encode(&want_f32);
-            let pool = HostPool::new(8);
-            let mut got = wire0.clone();
-            fused::fused_zo_sgd(codec, &mut got, elems, state, lr, g, &pool);
-            assert_eq!(got, want, "{codec:?}: fused+pool must be bit-identical");
+            for mode in [SimdMode::Off, SimdMode::Auto] {
+                simd::set_mode(mode);
+                for pin in [false, true] {
+                    let pool = HostPool::with_opts(8, pin);
+                    let mut got = wire0.clone();
+                    fused::fused_zo_sgd(codec, &mut got, elems, state, lr, g, &pool);
+                    assert_eq!(
+                        got, want,
+                        "{codec:?} {mode:?} pin={pin}: fused+pool must be bit-identical"
+                    );
+                }
+            }
         }
 
-        // Scalar baseline: three passes + a bucket-sized fp32 intermediate.
-        let mut bytes = wire0.clone();
-        let mut tmp = vec![0.0f32; elems];
-        let mut zs = ZScratch::new();
-        let scalar = bench(1, 5, || {
-            codec.decode_into(&bytes, &mut tmp);
-            cpu_zo_sgd_update(&mut tmp, state, lr, g, &mut zs);
-            codec.encode_into(&tmp, &mut bytes);
-        })
-        .percentile(50.0);
-
-        // Fused single pass, serial (fusion win without the pool).
-        let mut bytes = wire0.clone();
-        let serial_pool = HostPool::new(1);
-        let fused_1 = bench(1, 5, || {
-            fused::fused_zo_sgd(codec, &mut bytes, elems, state, lr, g, &serial_pool);
-        })
-        .percentile(50.0);
-
-        // Fused + pool across thread counts.
-        let mut pooled = Vec::new();
-        for &threads in &thread_counts {
-            let pool = HostPool::new(threads);
-            let mut bytes = wire0.clone();
-            let t = bench(1, 5, || {
-                fused::fused_zo_sgd(codec, &mut bytes, elems, state, lr, g, &pool);
-            })
-            .percentile(50.0);
-            pooled.push(t);
-        }
-        let best = pooled.last().copied().unwrap_or(fused_1);
+        let off = run(codec, &wire0, SimdMode::Off);
+        let auto = run(codec, &wire0, SimdMode::Auto);
+        let best = auto.pooled.last().copied().unwrap_or(auto.fused_serial);
+        let best_off = off.pooled.last().copied().unwrap_or(off.fused_serial);
         println!(
-            "{:>5} | {:>12.2} {:>12.2} | {:>9.2} {:>9.2} {:>9.2} {:>9.2} | {:>7.2}x",
+            "{:>5} | {:>5.1}/{:<5.1} {:>5.1}/{:<5.1} {:>11.2} | {:>5.1}/{:<5.1} {:>5.1}/{:<5.1} \
+             | {:>9.1} {:>4.1} {:>4.1} | {:>5.2}x {:>5.2}x",
             codec.name(),
-            gbs(scalar),
-            gbs(fused_1),
-            gbs(pooled[0]),
-            gbs(pooled[1]),
-            gbs(pooled[2]),
-            gbs(pooled[3]),
-            scalar / best
+            gbs(off.decode),
+            gbs(auto.decode),
+            gbs(off.encode),
+            gbs(auto.encode),
+            gbs(off.three_pass),
+            gbs(off.fused_serial),
+            gbs(auto.fused_serial),
+            gbs(best_off),
+            gbs(best),
+            gbs(auto.pinned8),
+            gbs(auto.pooled[0]),
+            gbs(auto.pooled[2]),
+            off.three_pass / best,
+            best_off / best
         );
 
         let mut row = BTreeMap::new();
         row.insert("codec".to_string(), Json::Str(codec.name().to_string()));
         row.insert("elems".to_string(), Json::Num(elems as f64));
-        row.insert("scalar_gbps".to_string(), Json::Num(gbs(scalar)));
-        row.insert("fused_serial_gbps".to_string(), Json::Num(gbs(fused_1)));
+        row.insert("decode_scalar_gbps".to_string(), Json::Num(gbs(off.decode)));
+        row.insert("decode_simd_gbps".to_string(), Json::Num(gbs(auto.decode)));
+        row.insert("encode_scalar_gbps".to_string(), Json::Num(gbs(off.encode)));
+        row.insert("encode_simd_gbps".to_string(), Json::Num(gbs(auto.encode)));
+        row.insert("scalar_gbps".to_string(), Json::Num(gbs(off.three_pass)));
+        row.insert("fused_serial_scalar_gbps".to_string(), Json::Num(gbs(off.fused_serial)));
+        row.insert("fused_serial_gbps".to_string(), Json::Num(gbs(auto.fused_serial)));
         for (i, &threads) in thread_counts.iter().enumerate() {
-            row.insert(format!("fused_pool{threads}_gbps"), Json::Num(gbs(pooled[i])));
+            row.insert(format!("fused_pool{threads}_gbps"), Json::Num(gbs(auto.pooled[i])));
+            row.insert(
+                format!("fused_pool{threads}_scalar_gbps"),
+                Json::Num(gbs(off.pooled[i])),
+            );
         }
+        row.insert("fused_pool8_pinned_gbps".to_string(), Json::Num(gbs(auto.pinned8)));
         row.insert(
             "speedup_fused_pool8_vs_scalar".to_string(),
-            Json::Num(scalar / best),
+            Json::Num(off.three_pass / best),
+        );
+        row.insert(
+            "speedup_simd_vs_scalar_fused_pool8".to_string(),
+            Json::Num(best_off / best),
         );
         rows.push(Json::Obj(row));
         // Calibration constant: per-thread rate of the serial fused pass
-        // (what `costmodel::HostKernels` consumes, × threads).
+        // with SIMD dispatch on (what `costmodel::HostKernels` consumes,
+        // × threads; on non-AVX2 hosts this equals the scalar rate).
         calib.insert(
             format!("{}_bytes_per_s_per_thread", codec.name()),
-            Json::Num(gbs(fused_1) * 1e9),
+            Json::Num(gbs(auto.fused_serial) * 1e9),
         );
         reg.gauge_set(
             "host_kernel_bytes_per_s_per_thread",
             &[("codec", codec.name())],
-            gbs(fused_1) * 1e9,
+            gbs(auto.fused_serial) * 1e9,
         );
     }
+    simd::set_mode(SimdMode::Auto); // restore the process default
 
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("host_kernels".to_string()));
     doc.insert("elems".to_string(), Json::Num(elems as f64));
+    doc.insert("avx2".to_string(), Json::Bool(simd::avx2_supported()));
     doc.insert("rows".to_string(), Json::Arr(rows));
     doc.insert("calibration".to_string(), Json::Obj(calib));
     doc.insert("metrics".to_string(), reg.snapshot_json());
@@ -560,7 +642,7 @@ fn table_host_kernels(_hw: &Hardware) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => println!("could not write {path}: {e}"),
     }
-    println!("(target: fused+pool at 8 threads >= 4x scalar for the low-bit codecs;");
+    println!("(target: simd fused+pool at 8 threads >= 4x the scalar three-pass;");
     println!(" feed the calibration block back into costmodel::HostKernels::calibrated)");
 }
 

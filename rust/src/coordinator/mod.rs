@@ -107,6 +107,9 @@ pub struct TrainConfig {
     pub update_site: UpdateSite,
     /// Host compute pool threads (0 = machine parallelism).
     pub host_threads: usize,
+    /// Pin host-pool workers to cores (NUMA round-robin) with a static
+    /// chunk→worker map (`--host-pin`).  Never changes numerics.
+    pub host_pin: bool,
     /// Seed-synchronous DP sim-shard workers (1 = plain single-engine run).
     pub dp_workers: usize,
     /// DP microbatch shards per step (0 = one per worker).  The shard count
@@ -145,6 +148,7 @@ impl Default for TrainConfig {
             spill_placement: SpillPlacement::Trailing,
             update_site: UpdateSite::Device,
             host_threads: 0,
+            host_pin: false,
             dp_workers: 1,
             dp_shards: 0,
             trace_out: None,
@@ -193,6 +197,7 @@ fn zo2_options(cfg: &TrainConfig, rt: &Runtime) -> Zo2Options {
         spill_placement: cfg.spill_placement,
         update_site: cfg.update_site,
         host_threads: cfg.host_threads,
+        host_pin: cfg.host_pin,
         ..Zo2Options::default()
     }
 }
@@ -204,7 +209,8 @@ pub fn build_engine(cfg: &TrainConfig) -> Result<Engine> {
     rt.compile_all()?;
     Ok(match cfg.engine {
         EngineKind::Mezo => {
-            Engine::Mezo(MezoEngine::with_host_threads(rt, cfg.zo, cfg.host_threads)?)
+            let e = MezoEngine::with_host_pool_opts(rt, cfg.zo, cfg.host_threads, cfg.host_pin)?;
+            Engine::Mezo(e)
         }
         EngineKind::Zo2 if cfg.dp_workers > 1 || cfg.dp_shards > 1 => {
             // K seed-synchronous worker replicas over S microbatch shards

@@ -75,6 +75,40 @@ pub(crate) fn map_wire_chunk(
     }
 }
 
+/// Staged SIMD variant of a fused chunk pass: decode the chunk into a stack
+/// buffer, vector-update, encode back.  Returns `false` when the vector
+/// path is off/unsupported — the caller runs the single-pass scalar map
+/// instead.  Both paths apply the same per-element math in the same order,
+/// so they are bit-identical; the staging buffer is 64 KiB and
+/// cache-resident, so the extra passes are cheap next to the scalar
+/// per-element codec calls they replace.
+#[inline]
+pub(crate) fn simd_sgd_wire_chunk(
+    codec: Codec,
+    bytes: &mut [u8],
+    len: usize,
+    z: &[f32],
+    scale: f32,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::simd::active() && len <= CHUNK_ELEMS {
+            let mut buf = [0.0f32; CHUNK_ELEMS];
+            let w = &mut buf[..len];
+            // Safety: AVX2 availability is checked by `active()`; slice
+            // sizes match the chunk grid.
+            unsafe {
+                crate::simd::avx2::decode_chunk(codec, bytes, w);
+                crate::simd::avx2::sgd_update(w, &z[..len], scale);
+                crate::simd::avx2::encode_chunk(codec, w, bytes);
+            }
+            return true;
+        }
+    }
+    let _ = (codec, bytes, len, z, scale);
+    false
+}
+
 /// Pooled whole-bucket decode — bit-identical to [`Codec::decode_into`] at
 /// any thread count (disjoint chunks, same per-element conversion).
 pub fn decode_pooled(codec: Codec, src: &[u8], out: &mut [f32], pool: &HostPool) {
@@ -129,8 +163,10 @@ pub fn fused_zo_sgd(
         let mut z = [0.0f32; CHUNK_ELEMS];
         let z = &mut z[..len];
         fill_z_chunk(state, start, z);
-        // Same op order as the scalar reference: mul, then sub.
-        map_wire_chunk(codec, bytes, len, |i, w| w - scale * z[i]);
+        if !simd_sgd_wire_chunk(codec, bytes, len, z, scale) {
+            // Same op order as the scalar reference: mul, then sub.
+            map_wire_chunk(codec, bytes, len, |i, w| w - scale * z[i]);
+        }
     });
 }
 

@@ -43,7 +43,13 @@ pub const CHUNK_ELEMS: usize = 16 * 1024;
 struct Job {
     f: RawFn,
     n_chunks: usize,
-    /// Next unclaimed chunk index (may run past `n_chunks`).
+    /// `Some(t)` = static chunk→participant mapping (pinned pools):
+    /// participant `p` runs chunks `p, p+t, p+2t, …`.  The mapping is a pure
+    /// function of the chunk index, so the same chunk lands on the same
+    /// (NUMA-pinned) thread every step — first-touch pages stay local.
+    /// `None` = dynamic work-stealing claim via `next`.
+    stride: Option<usize>,
+    /// Next unclaimed chunk index (dynamic mode; may run past `n_chunks`).
     next: AtomicUsize,
     /// Finished chunk count; the job is complete when it reaches `n_chunks`.
     done: AtomicUsize,
@@ -95,28 +101,49 @@ pub struct HostPool {
     turn: Mutex<()>,
     workers: Vec<JoinHandle<()>>,
     threads: usize,
+    pin: bool,
 }
 
 impl HostPool {
     /// `threads = 0` selects the machine's available parallelism.
     pub fn new(threads: usize) -> Self {
+        Self::with_opts(threads, false)
+    }
+
+    /// Build a pool, optionally with NUMA-aware worker pinning
+    /// (`--host-pin`).  Pinned pools additionally switch chunk claiming
+    /// from dynamic stealing to the static strided mapping, so a chunk's
+    /// pages are always touched from the same core — see [`Job::stride`].
+    /// The submitting thread (participant 0) is deliberately *not* pinned:
+    /// hijacking the caller's affinity would leak far beyond the pool.
+    pub fn with_opts(threads: usize, pin: bool) -> Self {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
         };
+        // The affinity mask below covers 512 CPUs; also a sane upper bound
+        // against accidental fork bombs from miskeyed CLI values.
+        let threads = threads.min(512);
         let shared = Arc::new(Shared {
             slot: Mutex::new(Slot { generation: 0, job: None, shutdown: false }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
         });
+        let topo = if pin { numa_nodes() } else { Vec::new() };
         let workers = (1..threads)
-            .map(|_| {
+            .map(|participant| {
                 let shared = shared.clone();
-                std::thread::spawn(move || Self::worker_loop(&shared))
+                let cpu = if pin { Some(cpu_for_participant(participant, &topo)) } else { None };
+                std::thread::spawn(move || {
+                    if let Some(cpu) = cpu {
+                        pin_current_thread(cpu);
+                    }
+                    Self::worker_loop(&shared, participant)
+                })
             })
             .collect();
-        Self { shared, turn: Mutex::new(()), workers, threads }
+        Self { shared, turn: Mutex::new(()), workers, threads, pin }
     }
 
     /// Total participating threads (workers + the submitting thread).
@@ -124,7 +151,12 @@ impl HostPool {
         self.threads
     }
 
-    fn worker_loop(shared: &Shared) {
+    /// Whether workers are NUMA-pinned (and jobs strided).
+    pub fn pinned(&self) -> bool {
+        self.pin
+    }
+
+    fn worker_loop(shared: &Shared, participant: usize) {
         let mut seen = 0u64;
         loop {
             let job: Arc<Job> = {
@@ -142,7 +174,7 @@ impl HostPool {
                     slot = shared.work_cv.wait(slot).unwrap();
                 }
             };
-            Self::drain(&job);
+            Self::drain(&job, participant);
             // The last chunk may have been ours: wake a waiting submitter.
             // Lock/unlock pairs the notify with the submitter's predicate
             // check (standard condvar discipline).
@@ -155,18 +187,34 @@ impl HostPool {
     /// kernel are caught and recorded: every claimed chunk is accounted in
     /// `done` no matter what, so the submitter's completion wait always
     /// terminates and the erased closure borrow is never outlived.
-    fn drain(job: &Job) {
+    fn drain(job: &Job, participant: usize) {
         // Safety: see `RawFn` — `run` blocks until every chunk retired.
         let f = unsafe { &*job.f.0 };
-        loop {
-            let i = job.next.fetch_add(1, Ordering::Relaxed);
-            if i >= job.n_chunks {
-                return;
-            }
+        let mut run_one = |i: usize| {
             if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err() {
                 job.poisoned.store(true, Ordering::Release);
             }
             job.done.fetch_add(1, Ordering::Release);
+        };
+        match job.stride {
+            // Static mapping: this participant's residue class, exactly once
+            // (the generation guard in `worker_loop` prevents re-entry, which
+            // would double-run chunks here — unlike the idempotent claim
+            // counter below).
+            Some(t) => {
+                let mut i = participant;
+                while i < job.n_chunks {
+                    run_one(i);
+                    i += t;
+                }
+            }
+            None => loop {
+                let i = job.next.fetch_add(1, Ordering::Relaxed);
+                if i >= job.n_chunks {
+                    return;
+                }
+                run_one(i);
+            },
         }
     }
 
@@ -193,6 +241,7 @@ impl HostPool {
         let job = Arc::new(Job {
             f: RawFn(f_static as *const (dyn Fn(usize) + Sync)),
             n_chunks,
+            stride: if self.pin { Some(self.threads) } else { None },
             next: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
             poisoned: AtomicBool::new(false),
@@ -203,8 +252,8 @@ impl HostPool {
             slot.job = Some(job.clone());
         }
         self.shared.work_cv.notify_all();
-        // The submitter participates instead of idling.
-        Self::drain(&job);
+        // The submitter participates instead of idling (participant 0).
+        Self::drain(&job, 0);
         {
             let mut slot = self.shared.slot.lock().unwrap();
             while job.done.load(Ordering::Acquire) < n_chunks {
@@ -244,6 +293,80 @@ impl Drop for HostPool {
         }
     }
 }
+
+// --- NUMA topology / pinning (best-effort, Linux) ------------------------------
+
+/// Per-NUMA-node CPU lists from sysfs; a single node spanning all CPUs when
+/// the topology is unreadable (non-Linux, containers without sysfs).
+fn numa_nodes() -> Vec<Vec<usize>> {
+    let mut nodes = Vec::new();
+    #[cfg(target_os = "linux")]
+    for idx in 0.. {
+        let path = format!("/sys/devices/system/node/node{idx}/cpulist");
+        match std::fs::read_to_string(&path) {
+            Ok(s) => {
+                let cpus = parse_cpulist(&s);
+                if !cpus.is_empty() {
+                    nodes.push(cpus);
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    if nodes.is_empty() {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        nodes.push((0..n).collect());
+    }
+    nodes
+}
+
+/// Parse a sysfs cpulist like `"0-15,32-47"` into explicit CPU ids.
+fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                out.extend(a..=b.max(a));
+            }
+        } else if let Ok(c) = part.parse::<usize>() {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Round-robin participants across nodes first, then within each node —
+/// spreads the pool over memory controllers so pinned first-touch pages
+/// distribute instead of piling onto node 0.
+fn cpu_for_participant(participant: usize, nodes: &[Vec<usize>]) -> usize {
+    let node = &nodes[participant % nodes.len()];
+    node[(participant / nodes.len()) % node.len()]
+}
+
+/// Pin the calling thread to one CPU.  Best-effort: failure (restricted
+/// cpuset, exotic kernel) leaves the thread unpinned — correctness never
+/// depends on placement, only locality does.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(cpu: usize) {
+    const MASK_WORDS: usize = 8; // 512 CPUs
+    if cpu >= MASK_WORDS * 64 {
+        return;
+    }
+    let mut mask = [0u64; MASK_WORDS];
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // pid 0 = the calling thread.
+    let _ = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_cpu: usize) {}
 
 /// Shareable raw base pointer of a mutable slice, so pool chunks can write
 /// disjoint ranges.  Callers must guarantee range disjointness; every use
@@ -342,6 +465,39 @@ mod tests {
             assert_eq!(c.load(Ordering::SeqCst), 29);
         }
         t.join().unwrap();
+    }
+
+    #[test]
+    fn pinned_pool_runs_every_chunk_exactly_once() {
+        let pool = HostPool::with_opts(4, true);
+        assert!(pool.pinned());
+        for n in [0usize, 1, 2, 3, 4, 7, 64, 1000] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.run(n, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "n = {n}");
+        }
+        // Back-to-back jobs on the strided pool complete fully too.
+        for _ in 0..30 {
+            let c = AtomicU64::new(0);
+            pool.run(13, |_| {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(c.load(Ordering::SeqCst), 13);
+        }
+    }
+
+    #[test]
+    fn cpulist_parser_handles_ranges_and_singles() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-1,4,8-9\n"), vec![0, 1, 4, 8, 9]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("7"), vec![7]);
+        // Participant→CPU round-robins across nodes first.
+        let nodes = vec![vec![0, 1], vec![2, 3]];
+        let cpus: Vec<usize> = (0..6).map(|p| cpu_for_participant(p, &nodes)).collect();
+        assert_eq!(cpus, vec![0, 2, 1, 3, 0, 2]);
     }
 
     #[test]

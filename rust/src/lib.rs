@@ -34,7 +34,11 @@
 //! * [`hostpool`] — the persistent host compute pool: cache-blocked chunk
 //!   kernels over encoded buckets, including fused
 //!   decode→ZO-update→encode passes that never materialise a full-bucket
-//!   fp32 intermediate; bit-identical at any thread count.
+//!   fp32 intermediate; bit-identical at any thread count, with opt-in
+//!   NUMA-aware worker pinning (`--host-pin`).
+//! * [`simd`] — runtime-dispatched AVX2 host kernels (`--host-simd`):
+//!   vectorised codec, Gaussian-fill and ZO-update loops, each
+//!   bit-identical to its scalar reference.
 //! * [`zo`] — ZO-SGD math, the MeZO baseline engine (Algorithm 1) and the
 //!   ZO2 engine (Algorithms 2 + 3, deferred updates §5.4) with
 //!   [`sched::Tiering`] selecting two- or three-tier parameter placement
@@ -73,6 +77,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sched;
 pub mod shard;
+pub mod simd;
 pub mod telemetry;
 pub mod util;
 pub mod zo;

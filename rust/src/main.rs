@@ -46,10 +46,36 @@ use zo2::zo::{RunMode, UpdateSite, ZoConfig};
 /// Flags that never take a value (so `zo2 run --timeline cfg.json` keeps
 /// `cfg.json` positional — see `util::cli`).
 const BOOL_FLAGS: &[&str] =
-    &["timeline", "no-reusable-mem", "no-efficient-update", "resume", "dp-processes"];
+    &["timeline", "no-reusable-mem", "no-efficient-update", "resume", "dp-processes", "host-pin"];
+
+/// Apply the process-wide host-kernel switches (`--host-simd`,
+/// `--disk-uring`) before any subcommand builds an engine.  Both default to
+/// `auto`; unknown values are hard errors, never silent fallbacks.
+fn set_kernel_switches(args: &Args) -> Result<()> {
+    let simd = args.get_or("host-simd", "auto");
+    let mode = zo2::simd::SimdMode::parse(&simd)
+        .ok_or_else(|| anyhow::anyhow!("unknown --host-simd `{simd}` (expected auto|off)"))?;
+    zo2::simd::set_mode(mode);
+    match args.get_or("disk-uring", "auto").as_str() {
+        "auto" => zo2::memory::disk::set_disk_uring(true),
+        "off" => zo2::memory::disk::set_disk_uring(false),
+        u => bail!("unknown --disk-uring `{u}` (expected auto|off)"),
+    }
+    Ok(())
+}
+
+/// `--host-threads N` (0 = auto-detect machine parallelism).  Parsed
+/// checked like every numeric flag; a value beyond the pool's 512-CPU
+/// affinity-mask limit is rejected rather than silently clamped.
+fn parse_host_threads(args: &Args) -> Result<usize> {
+    let t = args.get_usize_checked("host-threads", 0)?;
+    anyhow::ensure!(t <= 512, "bad --host-threads: {t} (max 512; 0 = auto-detect)");
+    Ok(t)
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env_with_bools(BOOL_FLAGS);
+    set_kernel_switches(&args)?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -66,7 +92,8 @@ fn main() -> Result<()> {
                  \x20      [--tiering two|three] [--dram-budget GB[,GB,...]] [--dram-slots N]\n\
                  \x20      [--nvme-gbps F] [--nvme-write-gbps F] [--disk-batch N]\n\
                  \x20      [--spill-placement trailing|interleaved]\n\
-                 \x20      [--update-site device|cpu] [--host-threads N] [--dp-workers K] [--dp-shards S]\n\
+                 \x20      [--update-site device|cpu] [--host-threads N] [--host-simd auto|off]\n\
+                 \x20      [--host-pin] [--disk-uring auto|off] [--dp-workers K] [--dp-shards S]\n\
                  \x20      [--devices N] [--device-spec a100:2,rtx4090:2] [--shard dp|pipeline]\n\
                  \x20      [--layout contiguous|cyclic|weighted] [--link nvlink|pcie[,...]]\n\
                  \x20      [--link-gbps F[,F,...]] [--microbatches M]\n\
@@ -277,7 +304,8 @@ fn cmd_train(args: &Args) -> Result<()> {
             "cpu" | "host" => UpdateSite::Cpu,
             s => bail!("unknown update site `{s}` (expected device|cpu)"),
         },
-        host_threads: args.get_usize_checked("host-threads", 0)?,
+        host_threads: parse_host_threads(args)?,
+        host_pin: args.get_bool("host-pin"),
         dp_workers: args.get_usize_checked("dp-workers", 1)?.max(1),
         dp_shards: args.get_usize_checked("dp-shards", 0)?,
         trace_out: args.get("trace-out").map(String::from),
@@ -862,6 +890,49 @@ mod tests {
         assert!(parse_links(&args(&["simulate", "--link-gbps", "fast"]), 2).is_err());
         assert!(parse_links(&args(&["simulate", "--link-gbps", "-5"]), 2).is_err());
         assert!(parse_links(&args(&["simulate", "--link", "token-ring"]), 2).is_err());
+    }
+
+    #[test]
+    fn kernel_switches_validate_loudly() {
+        // Valid spellings set the switches without error.
+        set_kernel_switches(&args(&["train", "--host-simd", "auto", "--disk-uring", "auto"]))
+            .unwrap();
+        set_kernel_switches(&args(&["train", "--host-simd", "off", "--disk-uring", "off"]))
+            .unwrap();
+        // Unknown values are loud, naming the flag.
+        let e = set_kernel_switches(&args(&["train", "--host-simd", "avx9"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--host-simd") && e.contains("avx9"), "{e}");
+        let e = set_kernel_switches(&args(&["train", "--disk-uring", "maybe"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--disk-uring") && e.contains("maybe"), "{e}");
+        // `--host-pin` is a boolean flag: it must not eat the next token.
+        let a = args(&["train", "--host-pin", "--steps", "3"]);
+        assert!(a.get_bool("host-pin"));
+        assert_eq!(a.get("steps"), Some("3"));
+        // Leave the process defaults restored for other tests.
+        set_kernel_switches(&args(&["train"])).unwrap();
+    }
+
+    #[test]
+    fn host_threads_zero_is_auto_and_bounds_are_enforced() {
+        assert_eq!(parse_host_threads(&args(&["train"])).unwrap(), 0);
+        assert_eq!(parse_host_threads(&args(&["train", "--host-threads", "0"])).unwrap(), 0);
+        assert_eq!(parse_host_threads(&args(&["train", "--host-threads", "512"])).unwrap(), 512);
+        // Malformed (negative / non-numeric / overflow) values fail via the
+        // checked parser; beyond the affinity-mask limit fails the bound.
+        assert!(parse_host_threads(&args(&["train", "--host-threads", "-1"])).is_err());
+        assert!(parse_host_threads(&args(&["train", "--host-threads", "8x"])).is_err());
+        assert!(
+            parse_host_threads(&args(&["train", "--host-threads", "99999999999999999999"]))
+                .is_err()
+        );
+        let e = parse_host_threads(&args(&["train", "--host-threads", "513"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("513") && e.contains("512"), "{e}");
     }
 
     #[test]

@@ -14,6 +14,8 @@
 
 pub mod disk;
 pub mod transfer;
+#[cfg(target_os = "linux")]
+pub(crate) mod uring;
 
 pub use disk::{DiskBucket, DiskPool, DramWindow};
 pub use transfer::{TransferEngine, TransferModel};

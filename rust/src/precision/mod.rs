@@ -60,8 +60,24 @@ impl Codec {
     /// Encode one slice range into an exactly-sized wire buffer.  This is
     /// the chunk entry point the host pool fans out over; ranges encoded
     /// piecewise are byte-identical to a single whole-slice encode.
+    /// Dispatches to the SIMD kernel when `--host-simd` resolves to one —
+    /// bit-identical to the scalar body by construction.
     pub fn encode_chunk(self, src: &[f32], out: &mut [u8]) {
+        self.encode_chunk_with(crate::simd::level(), src, out)
+    }
+
+    /// Encode with an explicit dispatch level (bench/test entry point).
+    /// A vector level silently degrades to scalar on CPUs without the
+    /// instruction set, keeping this API safe.
+    pub fn encode_chunk_with(self, level: crate::simd::SimdLevel, src: &[f32], out: &mut [u8]) {
         assert_eq!(out.len(), src.len() * self.bytes_per_el(), "payload size mismatch");
+        #[cfg(target_arch = "x86_64")]
+        if level == crate::simd::SimdLevel::Avx2 && crate::simd::avx2_supported() {
+            // Safety: AVX2 availability checked; sizes asserted above.
+            unsafe { crate::simd::avx2::encode_chunk(self, src, out) };
+            return;
+        }
+        let _ = level;
         match self {
             Codec::F32 => {
                 // Identity format: single memcpy (hot offload path).
@@ -93,8 +109,21 @@ impl Codec {
 
     /// Decode one wire range into an exactly-sized f32 buffer (chunk entry
     /// point; piecewise decodes are bit-identical to a whole-slice decode).
+    /// SIMD-dispatched like [`Codec::encode_chunk`].
     pub fn decode_chunk(self, src: &[u8], out: &mut [f32]) {
+        self.decode_chunk_with(crate::simd::level(), src, out)
+    }
+
+    /// Decode with an explicit dispatch level (bench/test entry point).
+    pub fn decode_chunk_with(self, level: crate::simd::SimdLevel, src: &[u8], out: &mut [f32]) {
         assert_eq!(src.len(), out.len() * self.bytes_per_el(), "payload size mismatch");
+        #[cfg(target_arch = "x86_64")]
+        if level == crate::simd::SimdLevel::Avx2 && crate::simd::avx2_supported() {
+            // Safety: AVX2 availability checked; sizes asserted above.
+            unsafe { crate::simd::avx2::decode_chunk(self, src, out) };
+            return;
+        }
+        let _ = level;
         match self {
             Codec::F32 => {
                 // Identity format: single memcpy (hot upload path).
@@ -251,7 +280,8 @@ pub fn fp16_to_f32(h: u16) -> f32 {
 
 /// 65536-entry fp16 → f32 table (256 KiB, built once): replaces the
 /// subnormal branch + `leading_zeros` of [`fp16_to_f32`] with one load.
-fn fp16_lut() -> &'static [f32; 65536] {
+/// `pub(crate)` so the AVX2 decode gathers from the *same* table.
+pub(crate) fn fp16_lut() -> &'static [f32; 65536] {
     static LUT: OnceLock<Box<[f32; 65536]>> = OnceLock::new();
     LUT.get_or_init(|| {
         let mut t = vec![0.0f32; 65536].into_boxed_slice();
@@ -354,6 +384,40 @@ pub fn f32_to_fp16_tab(x: f32) -> u16 {
     out.wrapping_add(inc)
 }
 
+/// [`F16Enc`] widened to u32 lanes for the AVX2 encoder's 32-bit gathers.
+/// Values are bit-for-bit the [`f16_enc`] tables (`u16`/`u8` zero-extended;
+/// the `u32::MAX` never-rounds sentinel carried through unchanged), so the
+/// vector encode computes with literally the same constants as the scalar.
+pub(crate) struct F16EncW {
+    pub(crate) base: [u32; 512],
+    pub(crate) shift: [u32; 512],
+    pub(crate) mask: [u32; 512],
+    pub(crate) half: [u32; 512],
+    pub(crate) imp: [u32; 512],
+}
+
+pub(crate) fn f16_enc_w() -> &'static F16EncW {
+    static TAB: OnceLock<Box<F16EncW>> = OnceLock::new();
+    TAB.get_or_init(|| {
+        let n = f16_enc();
+        let mut w = Box::new(F16EncW {
+            base: [0; 512],
+            shift: [0; 512],
+            mask: [0; 512],
+            half: [0; 512],
+            imp: [0; 512],
+        });
+        for cls in 0..512 {
+            w.base[cls] = n.base[cls] as u32;
+            w.shift[cls] = n.shift[cls] as u32;
+            w.mask[cls] = n.mask[cls];
+            w.half[cls] = n.half[cls];
+            w.imp[cls] = n.imp[cls];
+        }
+        w
+    })
+}
+
 // --- fp8 e4m3 ------------------------------------------------------------------
 
 /// Encode with round-to-nearest-even, clamping to ±448 (no inf in e4m3).
@@ -426,7 +490,8 @@ pub fn fp8_e4m3_to_f32(b: u8) -> f32 {
 
 /// 256-entry fp8 → f32 table (1 KiB, built once from the reference
 /// conversion): the whole decode becomes one load.
-fn fp8_lut() -> &'static [f32; 256] {
+/// `pub(crate)` so the AVX2 decode gathers from the *same* table.
+pub(crate) fn fp8_lut() -> &'static [f32; 256] {
     static LUT: OnceLock<[f32; 256]> = OnceLock::new();
     LUT.get_or_init(|| {
         let mut t = [0.0f32; 256];

@@ -1,0 +1,190 @@
+//! Crate-local deterministic `ln` / `sin·cos` for the Box–Muller transform.
+//!
+//! The Gaussian fill is the hot inner loop of every host-side kernel (one
+//! `z` draw per parameter element per step), and on libm it is dominated by
+//! the `ln`/`sin`/`cos` calls.  Two problems with libm here:
+//!
+//! 1. **Vectorisation**: a SIMD Gaussian fill must be *bit-identical* to
+//!    the scalar one (the chunk-replay determinism contract), which is
+//!    impossible against an opaque libm — its polynomial and table choices
+//!    are not mirrorable lane-for-lane.
+//! 2. **Portability**: libm results differ across platforms/versions, so
+//!    trajectories were only reproducible on one build.  These
+//!    straight-line polynomials make the Gaussian stream a pure function of
+//!    `(seed, stream, counter)` on every platform.
+//!
+//! Every function here is a fixed sequence of IEEE-754 f64 operations
+//! (add/sub/mul/div/sqrt/floor — each correctly rounded and therefore
+//! deterministic) with coefficients shared as named constants.  The AVX2
+//! fill in [`crate::simd`] mirrors each operation one vector instruction
+//! per scalar op, in the same order, with the same constants — which is the
+//! whole bit-identity argument; there is nothing to "verify" beyond op
+//! order, and tests assert it exhaustively anyway.
+//!
+//! Accuracy: |error| < ~1e-9 absolute against libm over the used domains —
+//! three orders of magnitude below f32 resolution of the emitted Gaussians,
+//! so the statistical properties (moments, tails) are unaffected.  The
+//! substitution *does* change the concrete trajectory once relative to the
+//! old libm-based stream; all determinism tests compare run-vs-run, never
+//! stored values, so this is a one-time, documented re-baseline.
+
+/// Exactly 2⁻³², as a constant so scalar and SIMD scale uniforms with the
+/// same (exact, power-of-two) multiply.
+pub const INV_2P32: f64 = 1.0 / 4_294_967_296.0;
+
+/// 2⁵² — the integer↔double "magic number" pivot used by the SIMD u32→f64
+/// conversion; kept here so the scalar path documents the same constant.
+pub const EXP52: f64 = 4_503_599_627_370_496.0;
+
+// ln(m) on m ∈ [√2/2, √2] via the atanh series:
+// ln(m) = s·(2 + 2s²/3 + 2s⁴/5 + …) with s = (m−1)/(m+1), |s| ≤ 3−2√2.
+pub const LN_P0: f64 = 2.0;
+pub const LN_P1: f64 = 2.0 / 3.0;
+pub const LN_P2: f64 = 2.0 / 5.0;
+pub const LN_P3: f64 = 2.0 / 7.0;
+pub const LN_P4: f64 = 2.0 / 9.0;
+pub const LN_P5: f64 = 2.0 / 11.0;
+pub const LN_P6: f64 = 2.0 / 13.0;
+
+// sin(a) = a·(1 + c₁a² + …) and cos(a) = 1 + d₁a² + … on a ∈ [0, π/2)
+// (Taylor; the quadrant reduction keeps the argument small).
+pub const SIN_C0: f64 = 1.0;
+pub const SIN_C1: f64 = -1.0 / 6.0;
+pub const SIN_C2: f64 = 1.0 / 120.0;
+pub const SIN_C3: f64 = -1.0 / 5_040.0;
+pub const SIN_C4: f64 = 1.0 / 362_880.0;
+pub const SIN_C5: f64 = -1.0 / 39_916_800.0;
+pub const SIN_C6: f64 = 1.0 / 6_227_020_800.0;
+
+pub const COS_C0: f64 = 1.0;
+pub const COS_C1: f64 = -1.0 / 2.0;
+pub const COS_C2: f64 = 1.0 / 24.0;
+pub const COS_C3: f64 = -1.0 / 720.0;
+pub const COS_C4: f64 = 1.0 / 40_320.0;
+pub const COS_C5: f64 = -1.0 / 3_628_800.0;
+pub const COS_C6: f64 = 1.0 / 479_001_600.0;
+pub const COS_C7: f64 = -1.0 / 87_178_291_200.0;
+
+/// Natural log of a positive, finite, *normal* f64 (the uniforms here are
+/// ≥ 2⁻³², far above the subnormal range).  Exponent/mantissa split, fold
+/// the mantissa into [√2/2, √2], then the atanh series.
+#[inline]
+pub fn ln(x: f64) -> f64 {
+    debug_assert!(x >= f64::MIN_POSITIVE && x.is_finite());
+    let bits = x.to_bits();
+    // Sign bit is clear (x > 0), so the raw exponent is just bits >> 52.
+    let e_raw = (bits >> 52) as i64;
+    let mut e = (e_raw - 1023) as f64; // integer-valued: exact
+    let mut m = f64::from_bits((bits & 0x000F_FFFF_FFFF_FFFF) | 0x3FF0_0000_0000_0000);
+    if m > std::f64::consts::SQRT_2 {
+        m *= 0.5; // power-of-two scale: exact
+        e += 1.0; // small-integer add: exact
+    }
+    let s = (m - 1.0) / (m + 1.0);
+    let s2 = s * s;
+    let mut p = LN_P6;
+    p = p * s2 + LN_P5;
+    p = p * s2 + LN_P4;
+    p = p * s2 + LN_P3;
+    p = p * s2 + LN_P2;
+    p = p * s2 + LN_P1;
+    p = p * s2 + LN_P0;
+    e * std::f64::consts::LN_2 + s * p
+}
+
+/// `(sin 2πu, cos 2πu)` for `u ∈ [0, 1)`.  `u·4` is exact (u is a multiple
+/// of 2⁻³² here, and ×4 is a power-of-two scale), the quadrant subtraction
+/// `t − ⌊t⌋` is exact by Sterbenz, so both paths reduce to the *same*
+/// polynomial argument in [0, π/2); negation is a sign-bit flip (exact).
+#[inline]
+pub fn sincos_2pi(u: f64) -> (f64, f64) {
+    debug_assert!((0.0..1.0).contains(&u));
+    let t = u * 4.0;
+    let q = t.floor(); // 0, 1, 2 or 3
+    let a = (t - q) * std::f64::consts::FRAC_PI_2;
+    let a2 = a * a;
+    let mut sp = SIN_C6;
+    sp = sp * a2 + SIN_C5;
+    sp = sp * a2 + SIN_C4;
+    sp = sp * a2 + SIN_C3;
+    sp = sp * a2 + SIN_C2;
+    sp = sp * a2 + SIN_C1;
+    sp = sp * a2 + SIN_C0;
+    let sp = a * sp;
+    let mut cp = COS_C7;
+    cp = cp * a2 + COS_C6;
+    cp = cp * a2 + COS_C5;
+    cp = cp * a2 + COS_C4;
+    cp = cp * a2 + COS_C3;
+    cp = cp * a2 + COS_C2;
+    cp = cp * a2 + COS_C1;
+    cp = cp * a2 + COS_C0;
+    match q as u32 {
+        0 => (sp, cp),
+        1 => (cp, -sp),
+        2 => (-sp, -cp),
+        _ => (-cp, sp),
+    }
+}
+
+/// One Box–Muller pair from one counter tick's u64 — the shared scalar
+/// definition of the Gaussian stream (the AVX2 fill mirrors it op-for-op).
+/// High 32 bits → radius uniform in (0, 1] (avoids ln 0; u1 = 1 gives the
+/// consistent `sqrt(-0.0) = -0.0` radius), low 32 → angle in [0, 1).
+#[inline]
+pub fn box_muller(v: u64) -> (f32, f32) {
+    let u1 = ((v >> 32) as f64 + 1.0) * INV_2P32;
+    let u2 = (v & 0xFFFF_FFFF) as f64 * INV_2P32;
+    let r = (-2.0 * ln(u1)).sqrt();
+    let (s, c) = sincos_2pi(u2);
+    ((r * c) as f32, (r * s) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_tracks_libm_over_the_uniform_domain() {
+        // The u1 domain is [2^-32, 1]; sweep it plus dyadic edges.
+        let mut worst = 0.0f64;
+        for i in 1..=200_000u64 {
+            let x = i as f64 / 200_000.0;
+            let err = (ln(x) - x.ln()).abs();
+            worst = worst.max(err);
+        }
+        for e in 1..=32 {
+            let x = 2f64.powi(-e);
+            worst = worst.max((ln(x) - x.ln()).abs());
+            let x = 1.5 * 2f64.powi(-e);
+            worst = worst.max((ln(x) - x.ln()).abs());
+        }
+        assert!(worst < 1e-9, "worst ln error {worst:e}");
+        assert_eq!(ln(1.0).to_bits(), 0.0f64.to_bits(), "ln(1) must be +0");
+    }
+
+    #[test]
+    fn sincos_tracks_libm_over_the_angle_domain() {
+        let mut worst = 0.0f64;
+        for i in 0..200_000u64 {
+            let u = i as f64 / 200_000.0;
+            let (s, c) = sincos_2pi(u);
+            let th = 2.0 * std::f64::consts::PI * u;
+            worst = worst.max((s - th.sin()).abs()).max((c - th.cos()).abs());
+        }
+        assert!(worst < 1e-8, "worst sincos error {worst:e}");
+        let (s0, c0) = sincos_2pi(0.0);
+        assert_eq!(s0.to_bits(), 0.0f64.to_bits());
+        assert_eq!(c0.to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn box_muller_radius_is_bounded() {
+        // Max radius = sqrt(-2 ln 2^-32) ≈ 6.66: the |z| < 7 tail contract
+        // of the Gaussian stream holds structurally.
+        let (a, b) = box_muller(0); // u1 minimal → max radius at angle 0
+        assert!(a.abs() < 7.0 && b.abs() < 7.0, "{a} {b}");
+        let max_r = (-2.0 * ln(INV_2P32)).sqrt();
+        assert!(max_r < 7.0, "max radius {max_r}");
+    }
+}

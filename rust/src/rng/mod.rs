@@ -17,6 +17,8 @@
 
 use std::collections::VecDeque;
 
+pub mod fastmath;
+
 /// A snapshot of a generator — the paper's `rng_state`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RngState {
@@ -37,7 +39,7 @@ pub struct GaussianRng {
 }
 
 #[inline]
-fn splitmix64(mut x: u64) -> u64 {
+pub(crate) fn splitmix64(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
@@ -71,21 +73,21 @@ impl GaussianRng {
         v
     }
 
-    /// One Box–Muller pair per counter tick.
+    /// One Box–Muller pair per counter tick (see [`fastmath::box_muller`]
+    /// for the shared scalar definition the SIMD fill mirrors).
     #[inline]
     fn next_pair(&mut self) -> (f32, f32) {
-        let v = self.next_u64();
-        // u1 in (0, 1]: avoids ln(0). u2 in [0, 1).
-        let u1 = ((v >> 32) as f64 + 1.0) / 4_294_967_296.0;
-        let u2 = (v & 0xFFFF_FFFF) as f64 / 4_294_967_296.0;
-        let r = (-2.0 * u1.ln()).sqrt();
-        let th = 2.0 * std::f64::consts::PI * u2;
-        ((r * th.cos()) as f32, (r * th.sin()) as f32)
+        fastmath::box_muller(self.next_u64())
     }
 
     /// Fill `out` with standard Gaussians (the module's direction `z`).
+    ///
+    /// Dispatches the leading multiple-of-8 elements to the SIMD bulk fill
+    /// when `--host-simd` resolves to a vector path — bit-identical to the
+    /// scalar pair loop, which finishes the tail either way.
     pub fn fill_gaussian(&mut self, out: &mut [f32]) {
-        let mut i = 0;
+        let mut i = crate::simd::fill_gaussian_bulk(self.state, out);
+        self.state.counter = self.state.counter.wrapping_add((i / 2) as u64);
         while i + 1 < out.len() {
             let (a, b) = self.next_pair();
             out[i] = a;

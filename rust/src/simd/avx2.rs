@@ -1,0 +1,450 @@
+//! AVX2 kernels — each bit-identical to its scalar reference.
+//!
+//! Everything in this file is `unsafe fn` + `#[target_feature(enable =
+//! "avx2")]`: callers (all inside this crate) must have checked
+//! [`super::avx2_supported`] first — [`super::active`] and the
+//! `*_chunk_with` codec entry points do.
+//!
+//! Identity arguments, kernel by kernel:
+//!
+//! * **decodes** — fp16/fp8 gather from the same `OnceLock` LUTs the scalar
+//!   loops index (identical by construction); bf16 is `bits << 16`, pure
+//!   integer.
+//! * **bf16 encode** — the scalar round-to-nearest-even is three integer
+//!   adds and a shift; integer vector ops are exact, NaN lanes blend to the
+//!   scalar's quieten-and-truncate result.
+//! * **fp16 encode** — mirrors the class-table encoder through u32-widened
+//!   tables.  All intermediate sums fit in 16 bits (max `base + shifted` is
+//!   0xFBFF), so u32 lane adds equal the scalar's wrapping u16 adds.  The
+//!   `u32::MAX` "never rounds" sentinel survives the unsigned-compare trick
+//!   (sign-flip + signed compare maps it to `i32::MAX`, which no remainder
+//!   exceeds).  NaN lanes are patched via the scalar reference (rare).
+//! * **updates** — mul/add/sub/div/sqrt only (no FMA: it would change
+//!   rounding), in the scalar op order; `_mm256_sqrt_ps` and `_mm256_cvtpd_ps`
+//!   are IEEE-correctly-rounded like their scalar counterparts.
+//! * **Gaussian fill** — SplitMix64 on 64-bit lanes (32×32 partial
+//!   products), then the [`crate::rng::fastmath`] polynomials one vector op
+//!   per scalar op with the same constants.  Negation = sign-bit XOR
+//!   (exact), u32→f64 by the 2⁵² magic-number trick (exact).
+
+use std::arch::x86_64::*;
+
+use crate::precision::{self, Codec};
+use crate::rng::{fastmath, RngState};
+use crate::zo::AdamHp;
+
+// --- 64-bit lane helpers -------------------------------------------------------
+
+/// `(a * b) mod 2^64` per lane: AVX2 has no 64-bit multiply, so assemble it
+/// from 32×32→64 partial products (the high×high term shifts out).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mul64(a: __m256i, b: __m256i) -> __m256i {
+    let lo_lo = _mm256_mul_epu32(a, b);
+    let a_hi = _mm256_srli_epi64::<32>(a);
+    let b_hi = _mm256_srli_epi64::<32>(b);
+    let cross = _mm256_add_epi64(_mm256_mul_epu32(a_hi, b), _mm256_mul_epu32(a, b_hi));
+    _mm256_add_epi64(lo_lo, _mm256_slli_epi64::<32>(cross))
+}
+
+/// Four independent SplitMix64 finalisations — same constants and op order
+/// as the scalar `splitmix64`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn splitmix64x4(x: __m256i) -> __m256i {
+    let x = _mm256_add_epi64(x, _mm256_set1_epi64x(0x9E37_79B9_7F4A_7C15u64 as i64));
+    let x = _mm256_xor_si256(x, _mm256_srli_epi64::<30>(x));
+    let x = mul64(x, _mm256_set1_epi64x(0xBF58_476D_1CE4_E5B9u64 as i64));
+    let x = _mm256_xor_si256(x, _mm256_srli_epi64::<27>(x));
+    let x = mul64(x, _mm256_set1_epi64x(0x94D0_49BB_1331_11EBu64 as i64));
+    _mm256_xor_si256(x, _mm256_srli_epi64::<31>(x))
+}
+
+/// Exact u64-lane (< 2³²) → f64 conversion: OR the value into the mantissa
+/// of 2⁵² and subtract 2⁵² (both steps exact).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn u32s_to_f64(v: __m256i) -> __m256d {
+    let magic = _mm256_set1_epi64x(0x4330_0000_0000_0000u64 as i64);
+    _mm256_sub_pd(
+        _mm256_castsi256_pd(_mm256_or_si256(v, magic)),
+        _mm256_set1_pd(fastmath::EXP52),
+    )
+}
+
+// --- fastmath mirrors ----------------------------------------------------------
+
+/// Vector mirror of [`fastmath::ln`]: same decomposition, same constants,
+/// one vector instruction per scalar op.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn ln4(x: __m256d) -> __m256d {
+    let bits = _mm256_castpd_si256(x);
+    // Raw exponent (sign bit clear: x > 0) to f64 via the magic-number
+    // trick, bias folded into the one exact subtraction.
+    let e_raw = _mm256_srli_epi64::<52>(bits);
+    let magic = _mm256_set1_epi64x(0x4330_0000_0000_0000u64 as i64);
+    let mut e = _mm256_sub_pd(
+        _mm256_castsi256_pd(_mm256_or_si256(e_raw, magic)),
+        _mm256_set1_pd(fastmath::EXP52 + 1023.0),
+    );
+    let mant = _mm256_and_si256(bits, _mm256_set1_epi64x(0x000F_FFFF_FFFF_FFFFu64 as i64));
+    let mut m =
+        _mm256_castsi256_pd(_mm256_or_si256(mant, _mm256_set1_epi64x(0x3FF0_0000_0000_0000u64 as i64)));
+    // if m > sqrt(2) { m *= 0.5; e += 1.0 } — both arms exact, blended.
+    let fold = _mm256_cmp_pd::<_CMP_GT_OQ>(m, _mm256_set1_pd(std::f64::consts::SQRT_2));
+    m = _mm256_blendv_pd(m, _mm256_mul_pd(m, _mm256_set1_pd(0.5)), fold);
+    e = _mm256_add_pd(e, _mm256_and_pd(fold, _mm256_set1_pd(1.0)));
+    let one = _mm256_set1_pd(1.0);
+    let s = _mm256_div_pd(_mm256_sub_pd(m, one), _mm256_add_pd(m, one));
+    let s2 = _mm256_mul_pd(s, s);
+    let mut p = _mm256_set1_pd(fastmath::LN_P6);
+    p = _mm256_add_pd(_mm256_mul_pd(p, s2), _mm256_set1_pd(fastmath::LN_P5));
+    p = _mm256_add_pd(_mm256_mul_pd(p, s2), _mm256_set1_pd(fastmath::LN_P4));
+    p = _mm256_add_pd(_mm256_mul_pd(p, s2), _mm256_set1_pd(fastmath::LN_P3));
+    p = _mm256_add_pd(_mm256_mul_pd(p, s2), _mm256_set1_pd(fastmath::LN_P2));
+    p = _mm256_add_pd(_mm256_mul_pd(p, s2), _mm256_set1_pd(fastmath::LN_P1));
+    p = _mm256_add_pd(_mm256_mul_pd(p, s2), _mm256_set1_pd(fastmath::LN_P0));
+    _mm256_add_pd(
+        _mm256_mul_pd(e, _mm256_set1_pd(std::f64::consts::LN_2)),
+        _mm256_mul_pd(s, p),
+    )
+}
+
+/// Vector mirror of [`fastmath::sincos_2pi`].  Quadrant selection is
+/// blend + sign-bit XOR, both exact, so it equals the scalar `match`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn sincos_2pi4(u: __m256d) -> (__m256d, __m256d) {
+    let t = _mm256_mul_pd(u, _mm256_set1_pd(4.0));
+    let q = _mm256_floor_pd(t);
+    let a = _mm256_mul_pd(_mm256_sub_pd(t, q), _mm256_set1_pd(std::f64::consts::FRAC_PI_2));
+    let a2 = _mm256_mul_pd(a, a);
+    let mut sp = _mm256_set1_pd(fastmath::SIN_C6);
+    sp = _mm256_add_pd(_mm256_mul_pd(sp, a2), _mm256_set1_pd(fastmath::SIN_C5));
+    sp = _mm256_add_pd(_mm256_mul_pd(sp, a2), _mm256_set1_pd(fastmath::SIN_C4));
+    sp = _mm256_add_pd(_mm256_mul_pd(sp, a2), _mm256_set1_pd(fastmath::SIN_C3));
+    sp = _mm256_add_pd(_mm256_mul_pd(sp, a2), _mm256_set1_pd(fastmath::SIN_C2));
+    sp = _mm256_add_pd(_mm256_mul_pd(sp, a2), _mm256_set1_pd(fastmath::SIN_C1));
+    sp = _mm256_add_pd(_mm256_mul_pd(sp, a2), _mm256_set1_pd(fastmath::SIN_C0));
+    let sp = _mm256_mul_pd(a, sp);
+    let mut cp = _mm256_set1_pd(fastmath::COS_C7);
+    cp = _mm256_add_pd(_mm256_mul_pd(cp, a2), _mm256_set1_pd(fastmath::COS_C6));
+    cp = _mm256_add_pd(_mm256_mul_pd(cp, a2), _mm256_set1_pd(fastmath::COS_C5));
+    cp = _mm256_add_pd(_mm256_mul_pd(cp, a2), _mm256_set1_pd(fastmath::COS_C4));
+    cp = _mm256_add_pd(_mm256_mul_pd(cp, a2), _mm256_set1_pd(fastmath::COS_C3));
+    cp = _mm256_add_pd(_mm256_mul_pd(cp, a2), _mm256_set1_pd(fastmath::COS_C2));
+    cp = _mm256_add_pd(_mm256_mul_pd(cp, a2), _mm256_set1_pd(fastmath::COS_C1));
+    cp = _mm256_add_pd(_mm256_mul_pd(cp, a2), _mm256_set1_pd(fastmath::COS_C0));
+    // Quadrant map: q0 (s,c)  q1 (c,-s)  q2 (-s,-c)  q3 (-c,s).
+    let one = _mm256_set1_pd(1.0);
+    let two = _mm256_set1_pd(2.0);
+    let swap = _mm256_or_pd(
+        _mm256_cmp_pd::<_CMP_EQ_OQ>(q, one),
+        _mm256_cmp_pd::<_CMP_EQ_OQ>(q, _mm256_set1_pd(3.0)),
+    );
+    let sin_sel = _mm256_blendv_pd(sp, cp, swap);
+    let cos_sel = _mm256_blendv_pd(cp, sp, swap);
+    let sign = _mm256_set1_pd(-0.0);
+    let neg_sin = _mm256_and_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(q, two), sign);
+    let neg_cos = _mm256_and_pd(
+        _mm256_and_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(q, one), _mm256_cmp_pd::<_CMP_LE_OQ>(q, two)),
+        sign,
+    );
+    (_mm256_xor_pd(sin_sel, neg_sin), _mm256_xor_pd(cos_sel, neg_cos))
+}
+
+// --- Gaussian fill -------------------------------------------------------------
+
+/// Fill `out` (length a multiple of 8) with the Gaussian stream from
+/// `state` — bit-identical to the scalar `fill_gaussian` pair loop.  Four
+/// counter ticks per iteration, each yielding an interleaved (cos, sin)
+/// pair, exactly like the scalar layout `out[2j], out[2j+1]`.
+///
+/// # Safety
+/// AVX2 must be available; `out.len() % 8 == 0`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fill_gaussian(state: RngState, out: &mut [f32]) {
+    debug_assert_eq!(out.len() % 8, 0);
+    let k = crate::rng::splitmix64(state.seed ^ crate::rng::splitmix64(state.stream));
+    let kv = _mm256_set1_epi64x(k as i64);
+    let cmul = _mm256_set1_epi64x(0xD6E8_FEB8_6659_FD93u64 as i64);
+    let lo_mask = _mm256_set1_epi64x(0xFFFF_FFFFu64 as i64);
+    let one = _mm256_set1_pd(1.0);
+    let inv = _mm256_set1_pd(fastmath::INV_2P32);
+    let neg_two = _mm256_set1_pd(-2.0);
+    let mut counter = state.counter;
+    let mut i = 0usize;
+    while i < out.len() {
+        // Lanes 0..3 = counters c, c+1, c+2, c+3 (set_epi64x is high→low).
+        let c = _mm256_set_epi64x(
+            counter.wrapping_add(3) as i64,
+            counter.wrapping_add(2) as i64,
+            counter.wrapping_add(1) as i64,
+            counter as i64,
+        );
+        let v = splitmix64x4(_mm256_xor_si256(kv, mul64(c, cmul)));
+        let u1 = _mm256_mul_pd(_mm256_add_pd(u32s_to_f64(_mm256_srli_epi64::<32>(v)), one), inv);
+        let u2 = _mm256_mul_pd(u32s_to_f64(_mm256_and_si256(v, lo_mask)), inv);
+        let r = _mm256_sqrt_pd(_mm256_mul_pd(neg_two, ln4(u1)));
+        let (s, co) = sincos_2pi4(u2);
+        let x = _mm256_cvtpd_ps(_mm256_mul_pd(r, co)); // out[2j]   (r·cos)
+        let y = _mm256_cvtpd_ps(_mm256_mul_pd(r, s)); // out[2j+1] (r·sin)
+        _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_unpacklo_ps(x, y));
+        _mm_storeu_ps(out.as_mut_ptr().add(i + 4), _mm_unpackhi_ps(x, y));
+        counter = counter.wrapping_add(4);
+        i += 8;
+    }
+}
+
+// --- codec kernels -------------------------------------------------------------
+
+/// Pack 8 u32 lanes (each ≤ 0xFFFF — saturation never fires) into 8 u16
+/// and store them little-endian at `dst`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn store_u16x8(v: __m256i, dst: *mut u8) {
+    let packed = _mm256_packus_epi32(v, v);
+    let ordered = _mm256_permute4x64_epi64::<0b1101_1000>(packed);
+    _mm_storeu_si128(dst as *mut __m128i, _mm256_castsi256_si128(ordered));
+}
+
+/// Vector decode of one chunk — same per-element conversion as the scalar
+/// [`Codec::decode_chunk`] body (gathers index the same LUTs).
+///
+/// # Safety
+/// AVX2 must be available; `src.len() == out.len() * codec.bytes_per_el()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn decode_chunk(codec: Codec, src: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len() * codec.bytes_per_el());
+    match codec {
+        Codec::F32 => {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), out.as_mut_ptr() as *mut u8, src.len());
+        }
+        Codec::Bf16 => {
+            let n = out.len();
+            let n8 = n / 8 * 8;
+            let mut i = 0;
+            while i < n8 {
+                let codes = _mm_loadu_si128(src.as_ptr().add(2 * i) as *const __m128i);
+                let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(codes));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_castsi256_ps(w));
+                i += 8;
+            }
+            for j in n8..n {
+                out[j] = precision::bf16_to_f32(u16::from_le_bytes([src[2 * j], src[2 * j + 1]]));
+            }
+        }
+        Codec::Fp16 => {
+            let lut = precision::fp16_lut();
+            let base = lut.as_ptr();
+            let n = out.len();
+            let n8 = n / 8 * 8;
+            let mut i = 0;
+            while i < n8 {
+                let codes = _mm_loadu_si128(src.as_ptr().add(2 * i) as *const __m128i);
+                let idx = _mm256_cvtepu16_epi32(codes);
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_i32gather_ps::<4>(base, idx));
+                i += 8;
+            }
+            for j in n8..n {
+                out[j] = lut[u16::from_le_bytes([src[2 * j], src[2 * j + 1]]) as usize];
+            }
+        }
+        Codec::Fp8E4M3 => {
+            let lut = precision::fp8_lut();
+            let base = lut.as_ptr();
+            let n = out.len();
+            let n8 = n / 8 * 8;
+            let mut i = 0;
+            while i < n8 {
+                let codes = _mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i);
+                let idx = _mm256_cvtepu8_epi32(codes);
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_i32gather_ps::<4>(base, idx));
+                i += 8;
+            }
+            for j in n8..n {
+                out[j] = lut[src[j] as usize];
+            }
+        }
+    }
+}
+
+/// Vector encode of one chunk — bit-identical to the scalar
+/// [`Codec::encode_chunk`] body (fp8 stays on the scalar reference: its
+/// subnormal round-ties-even is branchy and the codec is 1 byte/el).
+///
+/// # Safety
+/// AVX2 must be available; `out.len() == src.len() * codec.bytes_per_el()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn encode_chunk(codec: Codec, src: &[f32], out: &mut [u8]) {
+    debug_assert_eq!(out.len(), src.len() * codec.bytes_per_el());
+    match codec {
+        Codec::F32 => {
+            std::ptr::copy_nonoverlapping(src.as_ptr() as *const u8, out.as_mut_ptr(), out.len());
+        }
+        Codec::Bf16 => encode_bf16(src, out),
+        Codec::Fp16 => encode_fp16(src, out),
+        Codec::Fp8E4M3 => {
+            for (b, &x) in out.iter_mut().zip(src) {
+                *b = precision::f32_to_fp8_e4m3(x);
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn encode_bf16(src: &[f32], out: &mut [u8]) {
+    let n = src.len();
+    let n8 = n / 8 * 8;
+    let bias = _mm256_set1_epi32(0x7FFF);
+    let lsb = _mm256_set1_epi32(1);
+    let quiet = _mm256_set1_epi32(0x0040);
+    let mut i = 0;
+    while i < n8 {
+        let x = _mm256_loadu_ps(src.as_ptr().add(i));
+        let bits = _mm256_castps_si256(x);
+        // Round-to-nearest-even: (bits + 0x7FFF + ((bits >> 16) & 1)) >> 16.
+        let round = _mm256_and_si256(_mm256_srli_epi32::<16>(bits), lsb);
+        let rne = _mm256_srli_epi32::<16>(_mm256_add_epi32(bits, _mm256_add_epi32(bias, round)));
+        // NaN: quieten and truncate, like the scalar branch.
+        let nan_out = _mm256_or_si256(_mm256_srli_epi32::<16>(bits), quiet);
+        let is_nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
+        store_u16x8(_mm256_blendv_epi8(rne, nan_out, is_nan), out.as_mut_ptr().add(2 * i));
+        i += 8;
+    }
+    for j in n8..n {
+        out[2 * j..2 * j + 2].copy_from_slice(&precision::f32_to_bf16(src[j]).to_le_bytes());
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn encode_fp16(src: &[f32], out: &mut [u8]) {
+    let t = precision::f16_enc_w();
+    let n = src.len();
+    let n8 = n / 8 * 8;
+    let man_mask = _mm256_set1_epi32(0x007F_FFFF);
+    let sign_flip = _mm256_set1_epi32(i32::MIN);
+    let lsb = _mm256_set1_epi32(1);
+    let mut i = 0;
+    while i < n8 {
+        let x = _mm256_loadu_ps(src.as_ptr().add(i));
+        let bits = _mm256_castps_si256(x);
+        let cls = _mm256_srli_epi32::<23>(bits); // 9-bit sign+exponent class
+        let base = _mm256_i32gather_epi32::<4>(t.base.as_ptr() as *const i32, cls);
+        let shift = _mm256_i32gather_epi32::<4>(t.shift.as_ptr() as *const i32, cls);
+        let mask = _mm256_i32gather_epi32::<4>(t.mask.as_ptr() as *const i32, cls);
+        let half = _mm256_i32gather_epi32::<4>(t.half.as_ptr() as *const i32, cls);
+        let imp = _mm256_i32gather_epi32::<4>(t.imp.as_ptr() as *const i32, cls);
+        let full = _mm256_or_si256(_mm256_and_si256(bits, man_mask), imp);
+        // base + (full >> shift): every sum ≤ 0xFBFF (+1 below), so u32
+        // adds equal the scalar u16 wrapping adds.
+        let o = _mm256_add_epi32(base, _mm256_srlv_epi32(full, shift));
+        let rem = _mm256_and_si256(full, mask);
+        // Unsigned rem > half via sign-flip + signed compare; the
+        // `u32::MAX` never-rounds sentinel flips to i32::MAX — unreachable.
+        let gt = _mm256_cmpgt_epi32(
+            _mm256_xor_si256(rem, sign_flip),
+            _mm256_xor_si256(half, sign_flip),
+        );
+        let eq = _mm256_cmpeq_epi32(rem, half);
+        // inc = (rem > half) | (rem == half && out odd), as 0/1 lanes.
+        let inc = _mm256_and_si256(_mm256_or_si256(gt, _mm256_and_si256(eq, o)), lsb);
+        store_u16x8(_mm256_add_epi32(o, inc), out.as_mut_ptr().add(2 * i));
+        // The class table clamps inf *and NaN* classes to ±inf; the scalar
+        // reference returns a quiet NaN payload instead — patch those lanes
+        // (never parameter data).
+        let nan = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
+        if nan != 0 {
+            for l in 0..8 {
+                if nan & (1 << l) != 0 {
+                    let b = src[i + l].to_bits();
+                    let h = (((b >> 16) & 0x8000) as u16) | 0x7E00;
+                    out[2 * (i + l)..2 * (i + l) + 2].copy_from_slice(&h.to_le_bytes());
+                }
+            }
+        }
+        i += 8;
+    }
+    for j in n8..n {
+        out[2 * j..2 * j + 2].copy_from_slice(&precision::f32_to_fp16_tab(src[j]).to_le_bytes());
+    }
+}
+
+// --- update kernels ------------------------------------------------------------
+
+/// In-place `w[i] -= scale·z[i]` — mul then sub, like the scalar loop.
+///
+/// # Safety
+/// AVX2 must be available; `w.len() == z.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sgd_update(w: &mut [f32], z: &[f32], scale: f32) {
+    debug_assert_eq!(w.len(), z.len());
+    let n = w.len();
+    let n8 = n / 8 * 8;
+    let sv = _mm256_set1_ps(scale);
+    let mut i = 0;
+    while i < n8 {
+        let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+        let zv = _mm256_loadu_ps(z.as_ptr().add(i));
+        _mm256_storeu_ps(w.as_mut_ptr().add(i), _mm256_sub_ps(wv, _mm256_mul_ps(sv, zv)));
+        i += 8;
+    }
+    for j in n8..n {
+        w[j] -= scale * z[j];
+    }
+}
+
+/// In-place fused ZO-AdamW step over one chunk — the vector transcription
+/// of `adamw_el` (same op order; division and square root are IEEE-exact).
+///
+/// # Safety
+/// AVX2 must be available; all slices share one length.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn adamw_update(
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    z: &[f32],
+    g: f32,
+    hp: AdamHp,
+    b1t: f32,
+    b2t: f32,
+) {
+    debug_assert!(w.len() == z.len() && m.len() == z.len() && v.len() == z.len());
+    let n = w.len();
+    let n8 = n / 8 * 8;
+    let gv = _mm256_set1_ps(g);
+    let b1 = _mm256_set1_ps(hp.beta1);
+    let omb1 = _mm256_set1_ps(1.0 - hp.beta1);
+    let b2 = _mm256_set1_ps(hp.beta2);
+    let omb2 = _mm256_set1_ps(1.0 - hp.beta2);
+    let b1tv = _mm256_set1_ps(b1t);
+    let b2tv = _mm256_set1_ps(b2t);
+    let epsv = _mm256_set1_ps(hp.eps);
+    let lrv = _mm256_set1_ps(hp.lr);
+    let wdv = _mm256_set1_ps(hp.weight_decay);
+    let mut i = 0;
+    while i < n8 {
+        let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+        let mv = _mm256_loadu_ps(m.as_ptr().add(i));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+        let zv = _mm256_loadu_ps(z.as_ptr().add(i));
+        let gi = _mm256_mul_ps(gv, zv);
+        let m2 = _mm256_add_ps(_mm256_mul_ps(b1, mv), _mm256_mul_ps(omb1, gi));
+        let v2 =
+            _mm256_add_ps(_mm256_mul_ps(b2, vv), _mm256_mul_ps(_mm256_mul_ps(omb2, gi), gi));
+        let mhat = _mm256_div_ps(m2, b1tv);
+        let vhat = _mm256_div_ps(v2, b2tv);
+        let denom = _mm256_add_ps(_mm256_sqrt_ps(vhat), epsv);
+        let step = _mm256_add_ps(_mm256_div_ps(mhat, denom), _mm256_mul_ps(wdv, wv));
+        _mm256_storeu_ps(m.as_mut_ptr().add(i), m2);
+        _mm256_storeu_ps(v.as_mut_ptr().add(i), v2);
+        _mm256_storeu_ps(w.as_mut_ptr().add(i), _mm256_sub_ps(wv, _mm256_mul_ps(lrv, step)));
+        i += 8;
+    }
+    for j in n8..n {
+        w[j] = crate::zo::cpu_optim::adamw_el(w[j], &mut m[j], &mut v[j], g * z[j], hp, b1t, b2t);
+    }
+}

@@ -1,0 +1,167 @@
+//! Runtime-dispatched SIMD host kernels (`--host-simd auto|off`).
+//!
+//! The host-side roofline of ZO2 is the chunked decode→ZO-update→encode
+//! loops in [`crate::hostpool`] / [`crate::zo`] and the Gaussian `z` fill
+//! feeding them — at paper scale, loops over ~1e11 elements per step.  This
+//! module vectorises them with explicit AVX2 intrinsics behind *runtime*
+//! CPU-feature detection; the scalar loops remain the always-available
+//! fallback and the specification.
+//!
+//! # Bit-identity contract
+//!
+//! Every vector kernel is constructed to be **bit-identical** to its scalar
+//! reference, so `--host-simd auto` and `--host-simd off` produce the same
+//! trajectory:
+//!
+//! * codec decodes gather from the *same* LUTs the scalar path indexes;
+//! * bf16/fp16 encodes are pure integer arithmetic mirroring the scalar
+//!   bit-twiddling (NaN lanes patched through the scalar reference; fp8
+//!   encode stays scalar — its subnormal rounding is branchy and fp8 is
+//!   compute-light anyway);
+//! * update kernels use only IEEE-exact ops (mul/add/sub/div/sqrt — never
+//!   FMA, which would change rounding) in the scalar op order;
+//! * the Gaussian fill mirrors the shared [`crate::rng::fastmath`]
+//!   polynomials one vector instruction per scalar op.
+//!
+//! The 16Ki-element chunk grid is a multiple of every lane width used here
+//! (8 × f32 / 4 × f64), so full chunks split evenly into vector iterations;
+//! tail elements (only ever in a bucket's last chunk) take the scalar path,
+//! which is bit-for-bit the same math.
+//!
+//! The mode is a process-wide switch (like [`crate::telemetry::metrics`]):
+//! the CLI sets it once at startup; tests may toggle it, which is race-free
+//! *because* both paths produce identical bytes.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+
+/// CLI-selectable dispatch policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Use the best instruction set the CPU reports (scalar if none).
+    #[default]
+    Auto,
+    /// Force the scalar reference path.
+    Off,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s {
+            "auto" | "on" => Some(SimdMode::Auto),
+            "off" | "scalar" => Some(SimdMode::Off),
+            _ => None,
+        }
+    }
+}
+
+/// Resolved instruction set for one kernel invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    Scalar,
+    Avx2,
+}
+
+static MODE: AtomicU8 = AtomicU8::new(0); // 0 = Auto, 1 = Off
+
+/// Set the process-wide dispatch mode (`--host-simd`).
+pub fn set_mode(mode: SimdMode) {
+    MODE.store(matches!(mode, SimdMode::Off) as u8, Ordering::Relaxed);
+}
+
+pub fn mode() -> SimdMode {
+    if MODE.load(Ordering::Relaxed) == 0 {
+        SimdMode::Auto
+    } else {
+        SimdMode::Off
+    }
+}
+
+/// Whether this CPU can run the AVX2 kernels at all (independent of the
+/// mode switch).  Detection is cached by the standard library.
+pub fn avx2_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_64_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The level the current mode resolves to on this CPU.
+pub fn level() -> SimdLevel {
+    if mode() == SimdMode::Auto && avx2_supported() {
+        SimdLevel::Avx2
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+/// True when kernels should take the vector path.
+#[inline]
+pub fn active() -> bool {
+    level() == SimdLevel::Avx2
+}
+
+/// Bulk-fill the leading multiple-of-8 elements of `out` with the Gaussian
+/// stream starting at `state`, returning how many elements were written
+/// (0 when the vector path is off/unsupported).  The caller advances its
+/// counter by `written / 2` and finishes the tail with the scalar pair
+/// loop — which lands on exactly the same values the vector path would.
+pub(crate) fn fill_gaussian_bulk(state: crate::rng::RngState, out: &mut [f32]) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active() && out.len() >= 8 {
+            let m8 = out.len() / 8 * 8;
+            // Safety: AVX2 availability is checked by `active()`.
+            unsafe { avx2::fill_gaussian(state, &mut out[..m8]) };
+            return m8;
+        }
+    }
+    let _ = (state, out);
+    0
+}
+
+/// Vectorised in-place `w[i] -= scale·z[i]` when active; `false` asks the
+/// caller to run the scalar loop instead.
+pub(crate) fn try_sgd_update(w: &mut [f32], z: &[f32], scale: f32) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active() {
+            // Safety: AVX2 availability is checked by `active()`.
+            unsafe { avx2::sgd_update(w, z, scale) };
+            return true;
+        }
+    }
+    let _ = (w, z, scale);
+    false
+}
+
+/// Vectorised in-place fused ZO-AdamW step when active; `false` asks the
+/// caller to run the scalar loop instead.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn try_adamw_update(
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    z: &[f32],
+    g: f32,
+    hp: crate::zo::AdamHp,
+    b1t: f32,
+    b2t: f32,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active() {
+            // Safety: AVX2 availability is checked by `active()`.
+            unsafe { avx2::adamw_update(w, m, v, z, g, hp, b1t, b2t) };
+            return true;
+        }
+    }
+    let _ = (w, m, v, z, g, hp, b1t, b2t);
+    false
+}

@@ -136,8 +136,10 @@ pub fn cpu_zo_sgd_update_pooled(
         let mut z = [0.0f32; CHUNK_ELEMS];
         let z = &mut z[..len];
         fill_z_chunk(state, start, z);
-        for (wi, &zi) in w.iter_mut().zip(z.iter()) {
-            *wi -= scale * zi;
+        if !crate::simd::try_sgd_update(w, z, scale) {
+            for (wi, &zi) in w.iter_mut().zip(z.iter()) {
+                *wi -= scale * zi;
+            }
         }
     });
 }
@@ -179,9 +181,18 @@ impl Default for AdamHp {
 
 /// The per-element ZO-AdamW step: returns the updated weight, mutating the
 /// moment cells in place.  One body shared by the scalar, pooled and fused
-/// variants — sharing it *is* the bit-identity argument.
+/// variants — sharing it *is* the bit-identity argument (`pub(crate)` so
+/// the AVX2 kernel's scalar tail reuses it too).
 #[inline]
-fn adamw_el(w: f32, m: &mut f32, v: &mut f32, gi: f32, hp: AdamHp, b1t: f32, b2t: f32) -> f32 {
+pub(crate) fn adamw_el(
+    w: f32,
+    m: &mut f32,
+    v: &mut f32,
+    gi: f32,
+    hp: AdamHp,
+    b1t: f32,
+    b2t: f32,
+) -> f32 {
     *m = hp.beta1 * *m + (1.0 - hp.beta1) * gi;
     *v = hp.beta2 * *v + (1.0 - hp.beta2) * gi * gi;
     let mhat = *m / b1t;
@@ -240,8 +251,10 @@ pub fn cpu_zo_adamw_update_pooled(
         let mut z = [0.0f32; CHUNK_ELEMS];
         let z = &mut z[..len];
         fill_z_chunk(state, start, z);
-        for i in 0..len {
-            w[i] = adamw_el(w[i], &mut m[i], &mut v[i], g * z[i], hp, b1t, b2t);
+        if !crate::simd::try_adamw_update(w, m, v, z, g, hp, b1t, b2t) {
+            for i in 0..len {
+                w[i] = adamw_el(w[i], &mut m[i], &mut v[i], g * z[i], hp, b1t, b2t);
+            }
         }
     });
 }
@@ -280,10 +293,49 @@ pub fn fused_zo_adamw(
         let mut z = [0.0f32; CHUNK_ELEMS];
         let z = &mut z[..len];
         fill_z_chunk(state, start, z);
-        map_wire_chunk(codec, bytes, len, |i, w| {
-            adamw_el(w, &mut m[i], &mut v[i], g * z[i], hp, b1t, b2t)
-        });
+        if !simd_adamw_wire_chunk(codec, bytes, len, m, v, z, g, hp, b1t, b2t) {
+            map_wire_chunk(codec, bytes, len, |i, w| {
+                adamw_el(w, &mut m[i], &mut v[i], g * z[i], hp, b1t, b2t)
+            });
+        }
     });
+}
+
+/// Staged SIMD variant of the fused AdamW chunk pass (decode → vector
+/// moment-update → encode through a 64 KiB stack buffer) — the AdamW twin
+/// of [`crate::hostpool::fused::simd_sgd_wire_chunk`], with the same
+/// bit-identity argument.  Returns `false` when the vector path is off.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn simd_adamw_wire_chunk(
+    codec: Codec,
+    bytes: &mut [u8],
+    len: usize,
+    m: &mut [f32],
+    v: &mut [f32],
+    z: &[f32],
+    g: f32,
+    hp: AdamHp,
+    b1t: f32,
+    b2t: f32,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::simd::active() && len <= CHUNK_ELEMS {
+            let mut buf = [0.0f32; CHUNK_ELEMS];
+            let w = &mut buf[..len];
+            // Safety: AVX2 availability is checked by `active()`; slice
+            // sizes match the chunk grid.
+            unsafe {
+                crate::simd::avx2::decode_chunk(codec, bytes, w);
+                crate::simd::avx2::adamw_update(w, m, v, &z[..len], g, hp, b1t, b2t);
+                crate::simd::avx2::encode_chunk(codec, w, bytes);
+            }
+            return true;
+        }
+    }
+    let _ = (codec, bytes, len, m, v, z, g, hp, b1t, b2t);
+    false
 }
 
 #[cfg(test)]

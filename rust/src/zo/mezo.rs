@@ -45,6 +45,17 @@ impl MezoEngine {
     /// Like [`Self::new`], with `host_threads` pool participants
     /// (0 = machine parallelism) for the bucket staging kernels.
     pub fn with_host_threads(rt: Runtime, cfg: ZoConfig, host_threads: usize) -> Result<Self> {
+        Self::with_host_pool_opts(rt, cfg, host_threads, false)
+    }
+
+    /// Like [`Self::with_host_threads`], optionally pinning pool workers to
+    /// cores (`--host-pin`).  Pinning never changes numerics.
+    pub fn with_host_pool_opts(
+        rt: Runtime,
+        cfg: ZoConfig,
+        host_threads: usize,
+        host_pin: bool,
+    ) -> Result<Self> {
         let params = ParamStore::init(rt.manifest(), cfg.seed, Codec::F32);
         let device = DevicePool::unlimited();
         // MeZO keeps every parameter resident on the device.
@@ -57,7 +68,7 @@ impl MezoEngine {
             manager: RngStateManager::new(cfg.seed),
             step: 0,
             device,
-            hostpool: Arc::new(HostPool::new(host_threads)),
+            hostpool: Arc::new(HostPool::with_opts(host_threads, host_pin)),
         })
     }
 

@@ -92,6 +92,10 @@ pub struct Zo2Options {
     /// (0 = machine parallelism).  Never changes numerics: host kernel
     /// results are bit-identical at any thread count.
     pub host_threads: usize,
+    /// Pin pool workers to cores round-robined across NUMA nodes and give
+    /// the pool a static chunk→worker map (first-touch locality).  Never
+    /// changes numerics — chunk results are position-independent.
+    pub host_pin: bool,
 }
 
 impl Default for Zo2Options {
@@ -109,6 +113,7 @@ impl Default for Zo2Options {
             spill_placement: SpillPlacement::Trailing,
             update_site: UpdateSite::Device,
             host_threads: 0,
+            host_pin: false,
         }
     }
 }
@@ -210,7 +215,7 @@ impl Zo2Engine {
             transfers: Mutex::new(TransferEngine::new()),
             transfer_model: TransferModel::pcie4(),
             disk,
-            hostpool: Arc::new(HostPool::new(opts.host_threads)),
+            hostpool: Arc::new(HostPool::with_opts(opts.host_threads, opts.host_pin)),
             last_timeline: Timeline::new(),
         })
     }
@@ -278,10 +283,29 @@ impl Zo2Engine {
     /// [`ParamStore::to_flat_f32`], for parity checks).
     pub fn flat_params(&self) -> Result<Vec<f32>> {
         let mut out = self.params.embed.clone();
+        // One batched submission covers every spilled bucket (io_uring when
+        // available, positioned reads otherwise) instead of a pread per
+        // block; decode order — and therefore the output — is unchanged.
+        let mut batched: Vec<Vec<u8>> = Vec::new();
+        if let Some(tier) = &self.disk {
+            let spilled: Vec<&DiskBucket> = tier.entries.iter().flatten().collect();
+            if !spilled.is_empty() {
+                batched = tier.pool.read_batch(&spilled)?;
+                batched.reverse(); // pop() below yields block order
+            }
+        }
         for i in 0..self.params.blocks.len() {
             if let Some(tier) = &self.disk {
                 if let Some(entry) = &tier.entries[i] {
-                    out.extend(tier.pool.read_decoded(entry, &self.hostpool)?);
+                    let bytes = batched.pop().expect("one batched read per spilled bucket");
+                    let mut dec = vec![0.0f32; entry.numel()];
+                    crate::hostpool::fused::decode_pooled(
+                        entry.codec(),
+                        &bytes,
+                        &mut dec,
+                        &self.hostpool,
+                    );
+                    out.extend(dec);
                     continue;
                 }
             }

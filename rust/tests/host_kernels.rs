@@ -22,11 +22,22 @@ use zo2::hostpool::{fused, HostPool, CHUNK_ELEMS};
 use zo2::precision::Codec;
 use zo2::rng::{GaussianRng, RngState};
 use zo2::runtime::Runtime;
+use zo2::simd::{self, SimdLevel, SimdMode};
 use zo2::util::json::Json;
 use zo2::zo::{
     cpu_zo_adamw_update, cpu_zo_sgd_update, AdamHp, AdamState, RunMode, Tiering, UpdateSite,
     ZScratch, Zo2Engine, Zo2Options, ZoConfig,
 };
+
+/// Serialises tests that flip the process-wide `--host-simd` /
+/// `--disk-uring` switches so each sees the mode it set.  (Correctness
+/// never depends on the mode — both paths are bit-identical — this lock
+/// only keeps the *intent* of each toggle test meaningful.)
+static SWITCH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn switch_guard() -> std::sync::MutexGuard<'static, ()> {
+    SWITCH_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 macro_rules! require_artifacts {
     () => {
@@ -156,6 +167,161 @@ fn fused_adamw_composition_over_multiple_steps() {
         }
         assert_eq!(st_ref.t, st_fused.t);
     }
+}
+
+// --- SIMD-vs-scalar bit-equality (tentpole contract) ---------------------------
+
+#[test]
+fn simd_decode_is_bit_identical_for_every_wire_pattern() {
+    // Exhaustive: all 65536 fp16 / bf16 wire patterns and all 256 fp8
+    // patterns — every NaN, infinity, denormal and normal lane — decoded
+    // through the explicit-level API.  On CPUs without AVX2 the vector
+    // level degrades to scalar and the test is trivially green.
+    for codec in [Codec::Fp16, Codec::Bf16] {
+        let mut src = Vec::with_capacity(2 * 65536);
+        for p in 0..=u16::MAX {
+            src.extend_from_slice(&p.to_le_bytes());
+        }
+        let mut scalar = vec![0.0f32; 65536];
+        let mut vector = vec![0.0f32; 65536];
+        codec.decode_chunk_with(SimdLevel::Scalar, &src, &mut scalar);
+        codec.decode_chunk_with(SimdLevel::Avx2, &src, &mut vector);
+        for (p, (a, b)) in scalar.iter().zip(&vector).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{codec:?} wire pattern {p:#06x}");
+        }
+    }
+    let src: Vec<u8> = (0..=u8::MAX).collect();
+    let mut scalar = vec![0.0f32; 256];
+    let mut vector = vec![0.0f32; 256];
+    Codec::Fp8E4M3.decode_chunk_with(SimdLevel::Scalar, &src, &mut scalar);
+    Codec::Fp8E4M3.decode_chunk_with(SimdLevel::Avx2, &src, &mut vector);
+    for (p, (a, b)) in scalar.iter().zip(&vector).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "fp8 wire pattern {p:#04x}");
+    }
+}
+
+#[test]
+fn simd_encode_is_bit_identical_over_boundary_and_random_values() {
+    // Encode inputs: every f32 whose high 16 bits take each of the 65536
+    // patterns (all signs/exponents, incl. NaN/inf/denormal), crossed with
+    // low-bit variants straddling the round-to-nearest-even boundaries;
+    // plus every exactly-representable fp16 value and a random-bits sweep.
+    let mut vals: Vec<f32> = Vec::new();
+    for p in 0..=u16::MAX {
+        let hi = (p as u32) << 16;
+        for lo in [0u32, 1, 0x7FFF, 0x8000, 0x8001, 0xFFFF] {
+            vals.push(f32::from_bits(hi | lo));
+        }
+    }
+    {
+        let mut wire = Vec::with_capacity(2 * 65536);
+        for p in 0..=u16::MAX {
+            wire.extend_from_slice(&p.to_le_bytes());
+        }
+        let mut dec = vec![0.0f32; 65536];
+        Codec::Fp16.decode_chunk_with(SimdLevel::Scalar, &wire, &mut dec);
+        vals.extend_from_slice(&dec);
+    }
+    let mut rng = GaussianRng::new(515, 0);
+    for _ in 0..(1 << 18) {
+        vals.push(f32::from_bits(rng.next_below(1u64 << 32) as u32));
+    }
+    // Odd length: the vector kernels' scalar tails are exercised too.
+    vals.push(0.5);
+
+    for codec in CODECS {
+        let mut scalar = vec![0u8; vals.len() * codec.bytes_per_el()];
+        let mut vector = scalar.clone();
+        codec.encode_chunk_with(SimdLevel::Scalar, &vals, &mut scalar);
+        codec.encode_chunk_with(SimdLevel::Avx2, &vals, &mut vector);
+        if let Some(i) = (0..scalar.len()).find(|&i| scalar[i] != vector[i]) {
+            let el = i / codec.bytes_per_el();
+            panic!(
+                "{codec:?}: encode diverges at element {el} (input bits {:#010x}): \
+                 scalar byte {:#04x} vs simd {:#04x}",
+                vals[el].to_bits(),
+                scalar[i],
+                vector[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn gaussian_fill_is_bit_identical_simd_vs_scalar() {
+    let _g = switch_guard();
+    // Lengths straddling the 8-lane width (odd tails, sub-lane buffers)
+    // and counters deep into the stream (per-chunk replay offsets).
+    for n in [1usize, 2, 7, 8, 9, 31, 1000, CHUNK_ELEMS + 3] {
+        for counter in [0u64, 5, 1 << 33] {
+            let state = RngState { seed: 77, stream: 3, counter };
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            simd::set_mode(SimdMode::Off);
+            let mut r = GaussianRng::from_state(state);
+            r.fill_gaussian(&mut a);
+            let end_scalar = r.state();
+            simd::set_mode(SimdMode::Auto);
+            let mut r = GaussianRng::from_state(state);
+            r.fill_gaussian(&mut b);
+            let end_simd = r.state();
+            simd::set_mode(SimdMode::Auto);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n} counter={counter} elem {i}");
+            }
+            // The post-fill counter must agree so subsequent draws align.
+            assert_eq!(end_scalar.counter, end_simd.counter, "n={n} counter={counter}");
+        }
+    }
+}
+
+#[test]
+fn fused_kernels_are_invariant_across_simd_pin_and_thread_grid() {
+    let _g = switch_guard();
+    let n = 2 * CHUNK_ELEMS + 777;
+    let xs = params(n, 31);
+    let state = RngState { seed: 6, stream: 2, counter: 9 };
+    let hp = AdamHp { lr: 1e-3, weight_decay: 0.01, ..Default::default() };
+    for codec in CODECS {
+        let wire0 = codec.encode(&xs);
+        // Reference: scalar dispatch, 1 unpinned thread.
+        simd::set_mode(SimdMode::Off);
+        let mut sgd_ref = wire0.clone();
+        fused::fused_zo_sgd(codec, &mut sgd_ref, n, state, 1e-3, 0.7, &HostPool::new(1));
+        let mut adamw_ref = wire0.clone();
+        let mut st_ref = AdamState::new(n);
+        zo2::zo::fused_zo_adamw(
+            &HostPool::new(1),
+            codec,
+            &mut adamw_ref,
+            &mut st_ref,
+            state,
+            hp,
+            1.1,
+        );
+        for mode in [SimdMode::Off, SimdMode::Auto] {
+            for pin in [false, true] {
+                for threads in [1usize, 2, 8] {
+                    simd::set_mode(mode);
+                    let pool = HostPool::with_opts(threads, pin);
+                    let tag = format!("{codec:?} {mode:?} pin={pin} threads={threads}");
+                    let mut w = wire0.clone();
+                    fused::fused_zo_sgd(codec, &mut w, n, state, 1e-3, 0.7, &pool);
+                    assert_eq!(w, sgd_ref, "{tag}: sgd");
+                    let mut w = wire0.clone();
+                    let mut st = AdamState::new(n);
+                    zo2::zo::fused_zo_adamw(&pool, codec, &mut w, &mut st, state, hp, 1.1);
+                    assert_eq!(w, adamw_ref, "{tag}: adamw wire");
+                    assert!(
+                        st.m.iter().zip(&st_ref.m).all(|(a, b)| a.to_bits() == b.to_bits())
+                            && st.v.iter().zip(&st_ref.v).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{tag}: adamw moments"
+                    );
+                }
+            }
+        }
+    }
+    simd::set_mode(SimdMode::Auto);
 }
 
 // --- calibration-loader coverage (costmodel::HostKernels) ----------------------
@@ -319,6 +485,34 @@ fn cpu_update_site_is_deterministic_across_modes_tiers_and_threads() {
         ..base
     });
     assert_runs_equal(&reference, &spilled, "three-tier");
+    // Neither do the host-kernel switches: SIMD dispatch off, NUMA-pinned
+    // pool workers, and the io_uring batched-read path vs its positioned
+    // read fallback (exercised through the spilled three-tier config).
+    {
+        let _g = switch_guard();
+        simd::set_mode(SimdMode::Off);
+        let simd_off = run_engine(base);
+        simd::set_mode(SimdMode::Auto);
+        assert_runs_equal(&reference, &simd_off, "--host-simd off");
+    }
+    let pinned = run_engine(Zo2Options { host_pin: true, host_threads: 4, ..base });
+    assert_runs_equal(&reference, &pinned, "--host-pin");
+    {
+        let _g = switch_guard();
+        let spilled_opts = Zo2Options {
+            tiering: Tiering::ThreeTier,
+            dram_resident_blocks: 0,
+            dram_slots: 2,
+            host_pin: true,
+            ..base
+        };
+        zo2::memory::disk::set_disk_uring(false);
+        let uring_off = run_engine(spilled_opts);
+        zo2::memory::disk::set_disk_uring(true);
+        let uring_auto = run_engine(spilled_opts);
+        assert_runs_equal(&reference, &uring_off, "three-tier pinned, --disk-uring off");
+        assert_runs_equal(&reference, &uring_auto, "three-tier pinned, --disk-uring auto");
+    }
     // And the CPU site is a *different* deterministic trajectory than the
     // device site (host RNG draw; documented in cpu_optim).
     let device = run_engine(Zo2Options::default());
