@@ -29,6 +29,7 @@ use zo2::shard::{
 };
 use zo2::simd::{self, SimdMode};
 use zo2::telemetry::metrics::MetricsRegistry;
+use zo2::tune::{evaluate, tune, Scenario, SearchSpace, TuneOpts, Verdict};
 use zo2::util::fmt_mb;
 use zo2::util::json::Json;
 use zo2::util::stats::bench;
@@ -1011,6 +1012,101 @@ fn table_multi_gpu(hw: &Hardware) {
     println!(" where every block boundary crosses the link)");
 }
 
+/// Autotuner grid: model scale × device count × DDR budget, each cell tuned
+/// with the same seed, then the winner re-priced through a fresh oracle call
+/// — the predicted-vs-simulated error column is the autotuner's replay
+/// guarantee made visible (it must be ~0 by construction).
+fn table_tune(hw: &Hardware) {
+    println!("\n== autotuner grid (tune: beam+anneal over the policy knobs, fp16 wire) ==");
+    let opts = TuneOpts { seed: 0, beam: 2, anneal_iters: 16, topk: 3 };
+    let gb = 1u64 << 30;
+    let mut rows: Vec<Json> = Vec::new();
+    for model in ["OPT-13B", "OPT-30B", "OPT-175B"] {
+        let shape = opt_by_name(model).unwrap();
+        for devices in [1usize, 2, 4] {
+            for dram_gb in [24u64, 64] {
+                let wl = Workload {
+                    shape: shape.clone(),
+                    batch: 1,
+                    seq: 2048,
+                    wire: Codec::Fp16,
+                    compute: ComputeMode::Fp16,
+                };
+                let sc = Scenario {
+                    wl,
+                    hw: vec![hw.clone(); devices],
+                    links: vec![Interconnect::nvlink(); devices],
+                    dram_budget_bytes: Some(vec![dram_gb * gb; devices]),
+                    steps: SIM_STEPS,
+                    param_bytes: 2,
+                };
+                let space = SearchSpace::default_for(devices, true);
+                let result = tune(&sc, &space, &opts).unwrap();
+                let mut row = BTreeMap::new();
+                row.insert("model".to_string(), Json::Str(model.to_string()));
+                row.insert("devices".to_string(), Json::Num(devices as f64));
+                row.insert("dram_gb".to_string(), Json::Num(dram_gb as f64));
+                row.insert("explored".to_string(), Json::Num(result.explored as f64));
+                row.insert("pruned".to_string(), Json::Num(result.pruned.len() as f64));
+                match &result.best {
+                    Some(best) => {
+                        // Replay check: a fresh oracle call on the winning
+                        // candidate must land on the predicted step time.
+                        let resim = match evaluate(&sc, &best.cand) {
+                            Verdict::Feasible { step_s, .. } => step_s,
+                            Verdict::Infeasible { reason } => {
+                                panic!("{model} x{devices}: best became infeasible: {reason}")
+                            }
+                        };
+                        let err = (resim - best.step_s).abs();
+                        assert!(
+                            err < 1e-9,
+                            "{model} x{devices} @{dram_gb}GB: predicted {} vs resim {resim}",
+                            best.step_s
+                        );
+                        println!(
+                            "  {model:<9} x{devices} @{dram_gb:>2}GB: step {:.3}s ({}) | {} | \
+                             err {err:.1e} | explored {}/{} ({} pruned)",
+                            best.step_s,
+                            best.bottleneck,
+                            best.cand.key(),
+                            result.explored,
+                            result.space_size,
+                            result.pruned.len(),
+                        );
+                        row.insert("config".to_string(), Json::Str(best.cand.key()));
+                        row.insert("predicted_step_s".to_string(), Json::Num(best.step_s));
+                        row.insert("resim_step_s".to_string(), Json::Num(resim));
+                        row.insert("abs_err_s".to_string(), Json::Num(err));
+                    }
+                    None => {
+                        println!(
+                            "  {model:<9} x{devices} @{dram_gb:>2}GB: no feasible config \
+                             ({} explored, all pruned)",
+                            result.explored,
+                        );
+                        row.insert("config".to_string(), Json::Null);
+                    }
+                }
+                rows.push(Json::Obj(row));
+            }
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("tune".to_string()));
+    doc.insert("wire".to_string(), Json::Str("fp16".to_string()));
+    doc.insert("objective".to_string(), Json::Str("steady_step_s".to_string()));
+    doc.insert("tune_seed".to_string(), Json::Num(opts.seed as f64));
+    doc.insert("rows".to_string(), Json::Arr(rows));
+    let path = "BENCH_tune.json";
+    match std::fs::write(path, Json::Obj(doc).to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+    println!("(the error column is the replay contract: tune prices candidates with the");
+    println!(" same planner + simulator path `simulate --config tuned.json` replays)");
+}
+
 fn main() {
     let filter = std::env::args().nth(1).unwrap_or_default();
     let hw = Hardware::a100_pcie4();
@@ -1052,6 +1148,9 @@ fn main() {
     }
     if run("multi_gpu") {
         table_multi_gpu(&hw);
+    }
+    if run("tune") {
+        table_tune(&hw);
     }
     println!("\n(Table 3 is regenerated by `cargo run --release --example accuracy_parity`");
     println!(" and asserted bit-exactly by `cargo test --test parity`.)");

@@ -60,6 +60,10 @@
 //!   with heartbeat-based membership and shard reassignment, and
 //!   `DiskPool`-backed checkpoint/restore — all bit-identical to the
 //!   fault-free single-worker trajectory.
+//! * [`tune`] — the simulator-driven autotuner (`zo2 tune`): deterministic
+//!   beam search with a seeded annealing fallback over the policy knobs,
+//!   the tier planners as hard feasibility constraints, steady-state step
+//!   time as the objective, and a replayable `zo2-tune-v1` report.
 //! * [`runtime`] — PJRT client, artifact manifests, executable cache.
 //! * [`coordinator`] — the trainer: data, train/eval loops, metrics.
 
@@ -79,6 +83,7 @@ pub mod sched;
 pub mod shard;
 pub mod simd;
 pub mod telemetry;
+pub mod tune;
 pub mod util;
 pub mod zo;
 

@@ -5,6 +5,9 @@
 //!   simulate   paper-scale throughput/memory via the discrete-event simulator
 //!   memory     print the Fig. 1 memory table (analytic accounting)
 //!   info       show a config's manifest summary
+//!   tune       autotune the offload/shard knobs against the simulator
+//!              (deterministic beam+anneal search; emits a replayable
+//!              `zo2-tune-v1` report — see README "Autotuning")
 //!   report     diff a simulated trace against a measured one (drift JSON)
 //!   dp         run the elastic fault-tolerant DP backend (real transports,
 //!              fault schedules, checkpoints — see README "Fault tolerance")
@@ -23,13 +26,15 @@
 //! `--link` and `--link-gbps` accept comma lists for heterogeneous
 //! clusters (one entry per device, or a single entry for all).
 
+use std::collections::BTreeMap;
+
 use anyhow::{bail, Result};
 
 use zo2::coordinator::{train, EngineKind, TrainConfig};
 use zo2::costmodel::{
-    gpu_memory_bytes, plan_three_tier, plan_three_tier_owned, two_tier_dram_bytes, Cluster,
-    ClusterCost, ComputeMode, Hardware, Interconnect, MemoryBudget, SimCost, Strategy, TierPlan,
-    Workload,
+    gpu_memory_bytes, min_hbm_capacity, plan_three_tier, plan_three_tier_owned,
+    two_tier_dram_bytes, Cluster, ClusterCost, ComputeMode, Hardware, HostKernels, Interconnect,
+    MemoryBudget, SimCost, Strategy, TierPlan, Workload,
 };
 use zo2::model::{opt_by_name, opt_family};
 use zo2::precision::Codec;
@@ -39,8 +44,13 @@ use zo2::shard::{
     blocks_per_device, blocks_per_device_of, bottleneck_weights, build_sharded_plan_tiered,
     weighted_contiguous_owners, DeviceTier, ShardLayout, ShardSpec, ShardStrategy,
 };
+use zo2::tune::{
+    report_json, tune, CalibrationReport, LayoutChoice, Scenario, SearchSpace, TuneOpts,
+    TUNE_SCHEMA,
+};
 use zo2::util::cli::Args;
 use zo2::util::fmt_mb;
+use zo2::util::json::Json;
 use zo2::zo::{RunMode, UpdateSite, ZoConfig};
 
 /// Flags that never take a value (so `zo2 run --timeline cfg.json` keeps
@@ -74,11 +84,13 @@ fn parse_host_threads(args: &Args) -> Result<usize> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env_with_bools(BOOL_FLAGS);
+    let mut args = Args::from_env_with_bools(BOOL_FLAGS);
+    apply_tuned_config(&mut args)?;
     set_kernel_switches(&args)?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("tune") => cmd_tune(&args),
         Some("memory") => cmd_memory(&args),
         Some("info") => cmd_info(&args),
         Some("report") => cmd_report(&args),
@@ -86,7 +98,7 @@ fn main() -> Result<()> {
         Some("dp-worker") => cmd_dp_worker(&args),
         _ => {
             eprintln!(
-                "usage: zo2 <train|simulate|memory|info|report> [--config tiny] [--engine zo2|mezo]\n\
+                "usage: zo2 <train|simulate|tune|memory|info|report> [--config tiny] [--engine zo2|mezo]\n\
                  \x20      [--steps N] [--lr F] [--eps F] [--seed N] [--wire fp32|bf16|fp16|fp8]\n\
                  \x20      [--mode seq|overlap] [--model OPT-13B] [--compute fp32|tf32|fp16]\n\
                  \x20      [--tiering two|three] [--dram-budget GB[,GB,...]] [--dram-slots N]\n\
@@ -98,6 +110,12 @@ fn main() -> Result<()> {
                  \x20      [--layout contiguous|cyclic|weighted] [--link nvlink|pcie[,...]]\n\
                  \x20      [--link-gbps F[,F,...]] [--microbatches M]\n\
                  \x20      [--trace-out FILE.json] [--metrics-out FILE.json]\n\
+                 \x20  tune [simulate scenario flags] [--tune-seed N] [--beam K] [--anneal-iters N]\n\
+                 \x20      [--topk K] [--calibrate BENCH.json[,BENCH2.json]] [--out tuned.json]\n\
+                 \x20      [--tune-slots L] [--tune-dram-slots L] [--tune-disk-batch L]\n\
+                 \x20      [--tune-microbatches L] [--tune-strategies dp,pipeline]\n\
+                 \x20      [--tune-layouts contiguous,cyclic,weighted] [--tune-spill trailing,...]\n\
+                 \x20  simulate|train --config tuned.json   (replay a tune report's best flags)\n\
                  \x20  report --sim sim_trace.json --measured run_trace.json [--out drift.json]\n\
                  \x20  dp [--dp-transport chan|unix[:/path]|tcp[:host:port]] [--dp-workers K]\n\
                  \x20      [--dp-shards S] [--steps N] [--fault-schedule SPEC|seeded:N|none]\n\
@@ -110,19 +128,15 @@ fn main() -> Result<()> {
 }
 
 fn parse_tiering(args: &Args) -> Result<Tiering> {
-    match args.get_or("tiering", "two").as_str() {
-        "two" | "2" => Ok(Tiering::TwoTier),
-        "three" | "3" => Ok(Tiering::ThreeTier),
-        t => bail!("unknown tiering `{t}` (expected two|three)"),
-    }
+    let t = args.get_or("tiering", "two");
+    Tiering::parse(&t).ok_or_else(|| anyhow::anyhow!("unknown tiering `{t}` (expected two|three)"))
 }
 
 fn parse_spill_placement(args: &Args) -> Result<SpillPlacement> {
-    match args.get_or("spill-placement", "trailing").as_str() {
-        "trailing" | "tail" => Ok(SpillPlacement::Trailing),
-        "interleaved" | "interleave" => Ok(SpillPlacement::Interleaved),
-        p => bail!("unknown spill placement `{p}` (expected trailing|interleaved)"),
-    }
+    let p = args.get_or("spill-placement", "trailing");
+    SpillPlacement::parse(&p).ok_or_else(|| {
+        anyhow::anyhow!("unknown spill placement `{p}` (expected trailing|interleaved)")
+    })
 }
 
 /// Parse `--dram-budget` as GB values in bytes — one per host, or one value
@@ -504,7 +518,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                      distinct per-host --dram-budget values need --shard pipeline (or give \
                      every host the same budget)"
                 );
-                let hbm = hw_list.iter().map(|h| h.hbm_capacity).min().unwrap();
+                // Checked min: an empty device list reaches this through
+                // programmatic callers (the autotuner sweeps here too) and
+                // must be a named error, never an unwrap panic.
+                let hbm = min_hbm_capacity(&hw_list)?;
                 let budget = MemoryBudget { hbm, dram: budget_bytes[0], nvme: 2 << 40 };
                 let plan = plan_three_tier(
                     &wl,
@@ -661,6 +678,263 @@ fn write_sim_observability(
             .map_err(|e| anyhow::anyhow!("writing metrics {path}: {e}"))?;
         println!("wrote metrics {path}");
     }
+    Ok(())
+}
+
+/// Parse `--KEY a,b,c` as positive integers (search-space overrides for
+/// `tune`).  Checked like every list flag: malformed, fractional or zero
+/// entries are hard errors naming the flag.
+fn parse_usize_list(args: &Args, key: &str) -> Result<Option<Vec<usize>>> {
+    let Some(list) = args.get_f64_list_checked(key)? else {
+        return Ok(None);
+    };
+    let mut out = Vec::with_capacity(list.len());
+    for &v in &list {
+        anyhow::ensure!(
+            v.is_finite() && v >= 1.0 && v.fract() == 0.0,
+            "bad --{key}: {v} (expected positive integers)"
+        );
+        out.push(v as usize);
+    }
+    Ok(Some(out))
+}
+
+/// Parse `--KEY name1,name2` through a knob's `parse` function (search-space
+/// overrides for `tune`); unknown names are hard errors naming the flag.
+fn parse_name_list<T>(
+    args: &Args,
+    key: &str,
+    parse: impl Fn(&str) -> Option<T>,
+    expected: &str,
+) -> Result<Option<Vec<T>>> {
+    let Some(raw) = args.get(key) else {
+        return Ok(None);
+    };
+    let mut out = Vec::new();
+    for tok in raw.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        out.push(
+            parse(tok)
+                .ok_or_else(|| anyhow::anyhow!("bad --{key}: `{tok}` (expected {expected})"))?,
+        );
+    }
+    anyhow::ensure!(!out.is_empty(), "bad --{key}: empty list (expected {expected})");
+    Ok(Some(out))
+}
+
+/// `zo2 tune` — search the policy space for the scenario these flags
+/// describe, with the analytic simulator as the oracle (see the [`zo2::tune`]
+/// module docs).  Scenario parsing mirrors `simulate` exactly, so the
+/// reported best config replays bit-for-bit through
+/// `simulate --config tuned.json`.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "OPT-13B");
+    let shape = opt_by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let read_gbps = args.get_f64_checked("nvme-gbps", 6.8)?;
+    anyhow::ensure!(read_gbps > 0.0, "bad --nvme-gbps: {read_gbps} (must be positive)");
+    let write_gbps = args.get_f64_checked("nvme-write-gbps", read_gbps * 0.75)?;
+    anyhow::ensure!(write_gbps > 0.0, "bad --nvme-write-gbps: {write_gbps} (must be positive)");
+    let devices_flag = if args.has("devices") {
+        Some(args.get_usize_checked("devices", 1)?.max(1))
+    } else {
+        None
+    };
+    let mut hw_list: Vec<Hardware> = parse_device_specs(args, devices_flag)?
+        .into_iter()
+        .map(|hw| hw.with_nvme_gbps(read_gbps, write_gbps))
+        .collect();
+    let devices = hw_list.len();
+    let wire = Codec::parse(&args.get_or("wire", "fp32"))
+        .ok_or_else(|| anyhow::anyhow!("bad wire"))?;
+    let wl = Workload {
+        shape,
+        batch: args.get_usize_checked("batch", 1)?,
+        seq: args.get_usize_checked("seq", 2048)?,
+        wire,
+        compute: match args.get_or("compute", "fp32").as_str() {
+            "tf32" => ComputeMode::Tf32,
+            "fp16" => ComputeMode::Fp16,
+            "bf16" => ComputeMode::Bf16,
+            _ => ComputeMode::Fp32,
+        },
+    };
+    let param_bytes = wire.bytes_per_el().min(4);
+    let tiering = parse_tiering(args)?;
+    let steps = args.get_usize_checked("sim-steps", 4)?;
+    let dram_budget_bytes = if tiering == Tiering::ThreeTier {
+        Some(parse_dram_budgets(args, devices)?)
+    } else {
+        // Checked-parsing contract: a budget given in two-tier mode is
+        // still validated, never silently dropped.
+        if args.has("dram-budget") {
+            parse_dram_budgets(args, devices)?;
+        }
+        None
+    };
+    let links = parse_links(args, devices)?;
+
+    // Calibration: a host-kernel bench retunes the oracle's host-side
+    // rates before the search; a sim-gauge snapshot is recorded for the
+    // report's predicted-vs-measured drift rows.  The oracle is never
+    // rescaled by measured gauges — that would break `--config` replay.
+    let mut calibration = CalibrationReport::default();
+    if let Some(raw) = args.get("calibrate") {
+        for path in raw.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            calibration.files.push(path.to_string());
+            match HostKernels::from_bench_json(path) {
+                Ok(hk) => {
+                    for hw in hw_list.iter_mut() {
+                        hw.host = hk;
+                    }
+                    calibration.host_kernels = true;
+                }
+                Err(host_err) => match SimCost::from_bench_json(path) {
+                    Ok(gauges) => {
+                        for (k, v) in gauges.entries() {
+                            calibration.sim_gauges.push((k.0.clone(), k.1, k.2.clone(), v));
+                        }
+                    }
+                    Err(sim_err) => bail!(
+                        "--calibrate {path}: not a host-kernel bench ({host_err}) and not a \
+                         sim-gauge snapshot ({sim_err})"
+                    ),
+                },
+            }
+        }
+    }
+
+    let mut space = SearchSpace::default_for(devices, tiering == Tiering::ThreeTier);
+    if let Some(v) = parse_usize_list(args, "tune-slots")? {
+        space.slots = v;
+    }
+    if let Some(v) = parse_usize_list(args, "tune-dram-slots")? {
+        space.dram_slots = v;
+    }
+    if let Some(v) = parse_usize_list(args, "tune-disk-batch")? {
+        space.disk_batch = v;
+    }
+    if let Some(v) = parse_usize_list(args, "tune-microbatches")? {
+        space.microbatches = v;
+    }
+    if let Some(v) = parse_name_list(args, "tune-strategies", ShardStrategy::parse, "dp|pipeline")?
+    {
+        space.strategies = v;
+    }
+    if let Some(v) =
+        parse_name_list(args, "tune-layouts", LayoutChoice::parse, "contiguous|cyclic|weighted")?
+    {
+        space.layouts = v;
+    }
+    if let Some(v) =
+        parse_name_list(args, "tune-spill", SpillPlacement::parse, "trailing|interleaved")?
+    {
+        space.spill_placements = v;
+    }
+
+    let opts = TuneOpts {
+        seed: args.get_usize_checked("tune-seed", 0)? as u64,
+        beam: args.get_usize_checked("beam", 4)?.max(1),
+        anneal_iters: args.get_usize_checked("anneal-iters", 64)?,
+        topk: args.get_usize_checked("topk", 5)?.max(1),
+    };
+
+    // Scenario flags: everything `simulate --config tuned.json` needs to
+    // rebuild this exact scenario (the tuned knobs come from the winning
+    // candidate; explicit CLI flags at replay time still win).
+    let mut scenario_flags: BTreeMap<String, String> = BTreeMap::new();
+    scenario_flags.insert("model".to_string(), name.clone());
+    if let Some(spec) = args.get("device-spec") {
+        scenario_flags.insert("device-spec".to_string(), spec.to_string());
+    } else {
+        scenario_flags.insert("devices".to_string(), devices.to_string());
+    }
+    scenario_flags.insert("tiering".to_string(), tiering.name().to_string());
+    for key in [
+        "wire",
+        "compute",
+        "batch",
+        "seq",
+        "sim-steps",
+        "nvme-gbps",
+        "nvme-write-gbps",
+        "link",
+        "link-gbps",
+        "dram-budget",
+    ] {
+        if let Some(v) = args.get(key) {
+            scenario_flags.insert(key.to_string(), v.to_string());
+        }
+    }
+
+    let sc = Scenario { wl, hw: hw_list, links, dram_budget_bytes, steps, param_bytes };
+    let result = tune(&sc, &space, &opts)?;
+
+    println!(
+        "space: {} configs | explored {} ({} pruned as infeasible) | seed {}",
+        result.space_size,
+        result.explored,
+        result.pruned.len(),
+        opts.seed,
+    );
+    match &result.best {
+        Some(best) => {
+            println!("best: {}", best.cand.key());
+            println!(
+                "  predicted: step {:.4}s -> {:.0} tokens/s ({})",
+                best.step_s, best.tokens_per_s, best.bottleneck
+            );
+        }
+        None => {
+            println!("no feasible configuration in the space (see the report's pruned reasons)")
+        }
+    }
+    let report = report_json(&sc, &space, &opts, &result, &scenario_flags, &calibration);
+    let text = report.to_string_pretty();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &text).map_err(|e| anyhow::anyhow!("writing report {out}: {e}"))?;
+        println!("wrote tune report {out} (replay: zo2 simulate --config {out})");
+    } else {
+        println!("{text}");
+    }
+    Ok(())
+}
+
+/// `--config FILE.json` replays a `zo2-tune-v1` report: the best config's
+/// flags fill in every flag the command line leaves unset (explicit flags
+/// win), then the flag itself is consumed so downstream parsing never sees
+/// it.  Non-`.json` values are compiled-config names (`train --config
+/// tiny`) and pass through untouched.
+fn apply_tuned_config(args: &mut Args) -> Result<()> {
+    let Some(path) = args.get("config").map(String::from) else {
+        return Ok(());
+    };
+    if !path.ends_with(".json") {
+        return Ok(());
+    }
+    let text =
+        std::fs::read_to_string(&path).map_err(|e| anyhow::anyhow!("--config {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("--config {path}: {e}"))?;
+    let schema =
+        doc.get("schema").and_then(|s| s.as_str()).map(str::to_string).unwrap_or_default();
+    anyhow::ensure!(
+        schema == TUNE_SCHEMA,
+        "--config {path}: schema `{schema}` is not a tune report (expected {TUNE_SCHEMA})"
+    );
+    let best = doc.get("best").map_err(|e| anyhow::anyhow!("--config {path}: {e}"))?;
+    anyhow::ensure!(
+        !matches!(best, Json::Null),
+        "--config {path}: the report records no feasible best config to replay"
+    );
+    let flags = best
+        .get("flags")
+        .and_then(|f| f.as_obj())
+        .map_err(|e| anyhow::anyhow!("--config {path}: {e}"))?;
+    for (k, v) in flags {
+        let v = v.as_str().map_err(|e| anyhow::anyhow!("--config {path}: flag {k}: {e}"))?;
+        if !args.flags.contains_key(k) {
+            args.flags.insert(k.clone(), v.to_string());
+        }
+    }
+    args.flags.remove("config");
     Ok(())
 }
 
@@ -953,5 +1227,83 @@ mod tests {
         assert_eq!(a.get("metrics-out"), Some("m.json"));
         assert!(a.has("timeline"));
         assert_eq!(a.get("model"), Some("OPT-13B"));
+    }
+
+    #[test]
+    fn empty_device_lists_error_loudly_instead_of_panicking() {
+        // CLI form: an empty --device-spec value is a named error.
+        let e = parse_device_specs(&args(&["simulate", "--device-spec", ""]), None)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--device-spec"), "{e}");
+        // Programmatic form (the autotuner sweeps this path): the checked
+        // min over HBM capacities names the flag instead of unwrap-panicking
+        // on an empty list.
+        let e = min_hbm_capacity(&[]).unwrap_err().to_string();
+        assert!(e.contains("--device-spec"), "{e}");
+        assert_eq!(
+            min_hbm_capacity(&[Hardware::a100_pcie4(), Hardware::rtx4090_pcie4()]).unwrap(),
+            Hardware::rtx4090_pcie4().hbm_capacity
+        );
+    }
+
+    #[test]
+    fn tuned_config_replay_merges_flags_with_cli_precedence() {
+        let dir = std::env::temp_dir().join(format!("zo2_tunecfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tuned.json");
+        std::fs::write(
+            &path,
+            r#"{"schema": "zo2-tune-v1", "best": {"flags": {"model": "OPT-30B", "slots": "4"}}}"#,
+        )
+        .unwrap();
+        let p = path.to_str().unwrap().to_string();
+        // Report flags fill unset flags; explicit CLI flags win; the
+        // --config flag itself is consumed.
+        let mut a = args(&["simulate", "--config", &p, "--slots", "6"]);
+        apply_tuned_config(&mut a).unwrap();
+        assert_eq!(a.get("model"), Some("OPT-30B"));
+        assert_eq!(a.get("slots"), Some("6"));
+        assert_eq!(a.get("config"), None);
+        // Non-.json values are compiled-config names: untouched.
+        let mut a = args(&["train", "--config", "tiny"]);
+        apply_tuned_config(&mut a).unwrap();
+        assert_eq!(a.get("config"), Some("tiny"));
+        // Wrong schema, a report with no feasible best, and a missing file
+        // are loud errors naming the path.
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, r#"{"schema": "zo2-metrics-v1", "best": null}"#).unwrap();
+        let mut a = args(&["simulate", "--config", bad.to_str().unwrap()]);
+        let e = apply_tuned_config(&mut a).unwrap_err().to_string();
+        assert!(e.contains("zo2-tune-v1"), "{e}");
+        let none = dir.join("none.json");
+        std::fs::write(&none, r#"{"schema": "zo2-tune-v1", "best": null}"#).unwrap();
+        let mut a = args(&["simulate", "--config", none.to_str().unwrap()]);
+        let e = apply_tuned_config(&mut a).unwrap_err().to_string();
+        assert!(e.contains("no feasible"), "{e}");
+        let missing = dir.join("missing.json");
+        let mut a = args(&["simulate", "--config", missing.to_str().unwrap()]);
+        assert!(apply_tuned_config(&mut a).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tune_list_overrides_parse_checked() {
+        let a = args(&["tune", "--tune-slots", "2,4,8"]);
+        assert_eq!(parse_usize_list(&a, "tune-slots").unwrap(), Some(vec![2, 4, 8]));
+        assert_eq!(parse_usize_list(&a, "tune-dram-slots").unwrap(), None);
+        assert!(parse_usize_list(&args(&["tune", "--tune-slots", "0"]), "tune-slots").is_err());
+        assert!(parse_usize_list(&args(&["tune", "--tune-slots", "2.5"]), "tune-slots").is_err());
+        assert!(parse_usize_list(&args(&["tune", "--tune-slots", "x"]), "tune-slots").is_err());
+        let a = args(&["tune", "--tune-strategies", "dp,pipeline"]);
+        let v = parse_name_list(&a, "tune-strategies", ShardStrategy::parse, "dp|pipeline")
+            .unwrap()
+            .unwrap();
+        assert_eq!(v, vec![ShardStrategy::DataParallel, ShardStrategy::Pipeline]);
+        let a = args(&["tune", "--tune-layouts", "fancy"]);
+        let e = parse_name_list(&a, "tune-layouts", LayoutChoice::parse, "contiguous|cyclic")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--tune-layouts") && e.contains("fancy"), "{e}");
     }
 }

@@ -260,6 +260,26 @@ pub enum Tiering {
     ThreeTier,
 }
 
+impl Tiering {
+    /// The canonical CLI spelling (`--tiering two|three`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tiering::TwoTier => "two",
+            Tiering::ThreeTier => "three",
+        }
+    }
+
+    /// Parse a CLI spelling; shared by `main.rs` and the tune report so
+    /// every emitted flag value round-trips through the same table.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "two" | "2" => Some(Tiering::TwoTier),
+            "three" | "3" => Some(Tiering::ThreeTier),
+            _ => None,
+        }
+    }
+}
+
 /// Which blocks spill to the disk tier (three-tier mode).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SpillPlacement {
@@ -269,6 +289,25 @@ pub enum SpillPlacement {
     /// Spills spread evenly across the block order: disk reads interleave
     /// with DDR-resident uploads, smoothing the NVMe queues over the step.
     Interleaved,
+}
+
+impl SpillPlacement {
+    /// The canonical CLI spelling (`--spill-placement trailing|interleaved`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpillPlacement::Trailing => "trailing",
+            SpillPlacement::Interleaved => "interleaved",
+        }
+    }
+
+    /// Parse a CLI spelling (aliases included, like `main.rs` accepts).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "trailing" | "tail" => Some(SpillPlacement::Trailing),
+            "interleaved" | "interleave" => Some(SpillPlacement::Interleaved),
+            _ => None,
+        }
+    }
 }
 
 /// Whether block `i` of `n_blocks` lives on the disk tier when `spilled`

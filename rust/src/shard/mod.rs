@@ -70,6 +70,27 @@ pub enum ShardLayout {
     Cyclic,
 }
 
+impl ShardLayout {
+    /// The canonical CLI spelling (`--layout contiguous|cyclic`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardLayout::Contiguous => "contiguous",
+            ShardLayout::Cyclic => "cyclic",
+        }
+    }
+
+    /// Parse a CLI spelling (aliases included).  `weighted` is not a
+    /// `ShardLayout` — it is contiguous placement plus an owner hint; the
+    /// CLI and the tuner model it separately.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "contiguous" | "block" => Some(ShardLayout::Contiguous),
+            "cyclic" | "roundrobin" => Some(ShardLayout::Cyclic),
+            _ => None,
+        }
+    }
+}
+
 /// Execution strategy across devices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardStrategy {
@@ -78,6 +99,25 @@ pub enum ShardStrategy {
     /// Seed-synchronous data-parallel: full model per device, batch
     /// sharded, one seed broadcast + one scalar all-reduce per step.
     DataParallel,
+}
+
+impl ShardStrategy {
+    /// The canonical CLI spelling (`--shard dp|pipeline`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardStrategy::Pipeline => "pipeline",
+            ShardStrategy::DataParallel => "dp",
+        }
+    }
+
+    /// Parse a CLI spelling (aliases included).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "dp" | "data-parallel" => Some(ShardStrategy::DataParallel),
+            "pipeline" | "pp" => Some(ShardStrategy::Pipeline),
+            _ => None,
+        }
+    }
 }
 
 /// A sharding configuration: how many devices, which layout, which

@@ -292,6 +292,33 @@ mod tests {
     }
 
     #[test]
+    fn drift_report_on_empty_and_degenerate_traces_round_trips() {
+        // Empty pair: zero makespans must yield explicit null ratios and a
+        // report our own parser accepts (a NaN/Inf ratio would make
+        // `to_string_pretty` emit a non-parseable file).
+        let empty = chrome_trace(&Timeline::new());
+        let rep = drift_report(&empty, &empty).unwrap();
+        assert!(matches!(rep.get("makespan_s").unwrap().get("ratio").unwrap(), Json::Null));
+        let re = Json::parse(&rep.to_string_pretty()).unwrap();
+        assert_eq!(re, rep);
+
+        // Degenerate pair: the sim side has only zero-duration events (zero
+        // busy time on every stream), the measured side is real.
+        let mut sim = Timeline::new();
+        sim.push(ev("compute", "compute", "C b0", 1.0, 1.0));
+        let mut measured = Timeline::new();
+        measured.push(ev("compute", "compute", "C b0", 0.0, 2.0));
+        let rep = drift_report(&chrome_trace(&sim), &chrome_trace(&measured)).unwrap();
+        let streams = rep.get("streams").unwrap().as_arr().unwrap();
+        assert!(
+            matches!(streams[0].get("ratio").unwrap(), Json::Null),
+            "zero sim busy time must report a null ratio, not NaN/Inf"
+        );
+        let re = Json::parse(&rep.to_string_pretty()).unwrap();
+        assert_eq!(re, rep);
+    }
+
+    #[test]
     fn drift_report_joins_streams_and_kinds() {
         let mut sim = Timeline::new();
         sim.push(ev("compute", "compute", "C b0", 0.0, 2.0));

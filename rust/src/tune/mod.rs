@@ -1,0 +1,1016 @@
+//! Simulator-driven autotuner (`zo2 tune`).
+//!
+//! The policy space has grown to shard strategy × layout × microbatches ×
+//! slot-ring depth × DRAM-window depth × disk batch × spill placement; the
+//! analytic simulator already prices all of it.  This module searches that
+//! space with the simulator as the oracle:
+//!
+//! * **Search space** — a declarative [`SearchSpace`]: one value list per
+//!   knob, enumerated as a mixed-radix space so every candidate has a
+//!   stable index (the cache key, the neighbourhood structure and the
+//!   report order all derive from it).
+//! * **Oracle** — [`evaluate`] mirrors `zo2 simulate`'s exact planning +
+//!   pricing path ([`plan_three_tier`]/[`plan_three_tier_owned`] →
+//!   [`build_sharded_plan_tiered`] → [`crate::sched::simulate`]), so the
+//!   best config replays through `simulate --config tuned.json` to the
+//!   same steady-state step time.
+//! * **Constraints** — infeasible points (budget-busting tier plans,
+//!   structurally invalid knob combinations, planner refusals) are pruned
+//!   with a reason, never panics: the tuner sweeps thousands of configs
+//!   programmatically and must survive every edge the CLI guards.
+//! * **Driver** — beam search over single-knob neighbours with a seeded
+//!   simulated-annealing fallback; both draw every random choice from
+//!   [`GaussianRng`] seeded by `--tune-seed`, so the whole run (and the
+//!   emitted `zo2-tune-v1` report) is byte-deterministic.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::Result;
+
+use crate::costmodel::{
+    min_hbm_capacity, plan_three_tier, plan_three_tier_owned, Cluster, ClusterCost, Hardware,
+    Interconnect, MemoryBudget, SimCost, TierPlan, Workload,
+};
+use crate::rng::GaussianRng;
+use crate::sched::{build_plan, simulate, Policy, SpillPlacement, Tiering};
+use crate::shard::{
+    blocks_per_device, blocks_per_device_of, bottleneck_weights, build_sharded_plan_tiered,
+    weighted_contiguous_owners, DeviceTier, ShardLayout, ShardSpec, ShardStrategy,
+};
+use crate::util::json::Json;
+
+/// Schema tag of the tune report (`tuned.json`).
+pub const TUNE_SCHEMA: &str = "zo2-tune-v1";
+
+/// Block placement choice as the CLI models it: the two [`ShardLayout`]s
+/// plus `weighted` (contiguous placement with the bottleneck-aware owner
+/// hint), which is not a `ShardLayout` of its own.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayoutChoice {
+    Contiguous,
+    Cyclic,
+    Weighted,
+}
+
+impl LayoutChoice {
+    /// The canonical CLI spelling (`--layout`).
+    pub fn name(self) -> &'static str {
+        match self {
+            LayoutChoice::Contiguous => "contiguous",
+            LayoutChoice::Cyclic => "cyclic",
+            LayoutChoice::Weighted => "weighted",
+        }
+    }
+
+    /// Parse a CLI spelling (same aliases `main.rs` accepts).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "contiguous" | "block" => Some(LayoutChoice::Contiguous),
+            "cyclic" | "roundrobin" => Some(LayoutChoice::Cyclic),
+            "weighted" | "hint" => Some(LayoutChoice::Weighted),
+            _ => None,
+        }
+    }
+}
+
+/// The fixed part of a tuning problem: what runs, on what cluster, under
+/// which memory regime.  Everything the knobs do *not* vary.
+#[derive(Clone)]
+pub struct Scenario {
+    pub wl: Workload,
+    /// One entry per device; never empty for a well-formed scenario, but
+    /// [`evaluate`] degrades to an infeasible verdict rather than panicking
+    /// if a caller hands it one.
+    pub hw: Vec<Hardware>,
+    /// One sender link per device (ignored for a single device).
+    pub links: Vec<Interconnect>,
+    /// Per-host DDR budgets in bytes; `Some` = three-tier scenario.
+    pub dram_budget_bytes: Option<Vec<u64>>,
+    /// Simulated steps (the steady-state window).
+    pub steps: usize,
+    /// Master-copy bytes per element (the CLI's `wire.bytes_per_el().min(4)`).
+    pub param_bytes: usize,
+}
+
+impl Scenario {
+    pub fn devices(&self) -> usize {
+        self.hw.len()
+    }
+
+    pub fn three_tier(&self) -> bool {
+        self.dram_budget_bytes.is_some()
+    }
+}
+
+/// One point of the search space: the tunable knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    pub strategy: ShardStrategy,
+    pub layout: LayoutChoice,
+    pub microbatches: usize,
+    pub slots: usize,
+    pub dram_slots: usize,
+    pub disk_batch: usize,
+    pub spill_placement: SpillPlacement,
+}
+
+impl Candidate {
+    /// Canonical one-line label: the report's config identity.
+    pub fn key(&self) -> String {
+        format!(
+            "shard={} layout={} microbatches={} slots={} dram-slots={} disk-batch={} \
+             spill-placement={}",
+            self.strategy.name(),
+            self.layout.name(),
+            self.microbatches,
+            self.slots,
+            self.dram_slots,
+            self.disk_batch,
+            self.spill_placement.name()
+        )
+    }
+
+    /// The knobs as CLI flag pairs (keys without the leading `--`); merged
+    /// over the scenario flags these form the replayable config.
+    pub fn flags(&self) -> BTreeMap<String, String> {
+        BTreeMap::from([
+            ("shard".to_string(), self.strategy.name().to_string()),
+            ("layout".to_string(), self.layout.name().to_string()),
+            ("microbatches".to_string(), self.microbatches.to_string()),
+            ("slots".to_string(), self.slots.to_string()),
+            ("dram-slots".to_string(), self.dram_slots.to_string()),
+            ("disk-batch".to_string(), self.disk_batch.to_string()),
+            ("spill-placement".to_string(), self.spill_placement.name().to_string()),
+        ])
+    }
+}
+
+/// Declarative search space: one candidate per element of the cartesian
+/// product of the axes.  Candidates are enumerated in mixed-radix order
+/// (axis 0 least significant), giving every point a stable index.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub strategies: Vec<ShardStrategy>,
+    pub layouts: Vec<LayoutChoice>,
+    pub microbatches: Vec<usize>,
+    pub slots: Vec<usize>,
+    pub dram_slots: Vec<usize>,
+    pub disk_batch: Vec<usize>,
+    pub spill_placements: Vec<SpillPlacement>,
+}
+
+const N_AXES: usize = 7;
+
+impl SearchSpace {
+    /// A sensible default space for a scenario: single-device scenarios
+    /// drop the sharding axes, two-tier scenarios drop the disk knobs.
+    pub fn default_for(devices: usize, three_tier: bool) -> Self {
+        let (strategies, layouts, microbatches) = if devices <= 1 {
+            (vec![ShardStrategy::DataParallel], vec![LayoutChoice::Contiguous], vec![1])
+        } else {
+            (
+                vec![ShardStrategy::DataParallel, ShardStrategy::Pipeline],
+                vec![LayoutChoice::Contiguous, LayoutChoice::Cyclic, LayoutChoice::Weighted],
+                vec![1, 2, 4],
+            )
+        };
+        let (dram_slots, disk_batch, spill_placements) = if three_tier {
+            (
+                vec![2, 4, 8],
+                vec![1, 2, 4],
+                vec![SpillPlacement::Trailing, SpillPlacement::Interleaved],
+            )
+        } else {
+            (vec![4], vec![1], vec![SpillPlacement::Trailing])
+        };
+        Self {
+            strategies,
+            layouts,
+            microbatches,
+            slots: vec![2, 3, 4],
+            dram_slots,
+            disk_batch,
+            spill_placements,
+        }
+    }
+
+    fn radices(&self) -> [usize; N_AXES] {
+        [
+            self.strategies.len(),
+            self.layouts.len(),
+            self.microbatches.len(),
+            self.slots.len(),
+            self.dram_slots.len(),
+            self.disk_batch.len(),
+            self.spill_placements.len(),
+        ]
+    }
+
+    /// Total number of candidates (0 if any axis is empty).
+    pub fn size(&self) -> usize {
+        self.radices().iter().product()
+    }
+
+    /// The candidate at mixed-radix index `i` (must be `< size()`).
+    pub fn candidate_at(&self, i: usize) -> Candidate {
+        let d = digits_of(i, &self.radices());
+        Candidate {
+            strategy: self.strategies[d[0]],
+            layout: self.layouts[d[1]],
+            microbatches: self.microbatches[d[2]],
+            slots: self.slots[d[3]],
+            dram_slots: self.dram_slots[d[4]],
+            disk_batch: self.disk_batch[d[5]],
+            spill_placement: self.spill_placements[d[6]],
+        }
+    }
+
+    /// All candidates in index order.
+    pub fn candidates(&self) -> Vec<Candidate> {
+        (0..self.size()).map(|i| self.candidate_at(i)).collect()
+    }
+}
+
+fn digits_of(mut i: usize, r: &[usize; N_AXES]) -> [usize; N_AXES] {
+    let mut d = [0usize; N_AXES];
+    for (slot, &radix) in d.iter_mut().zip(r) {
+        *slot = i % radix;
+        i /= radix;
+    }
+    d
+}
+
+fn index_of(d: &[usize; N_AXES], r: &[usize; N_AXES]) -> usize {
+    let mut i = 0;
+    let mut mul = 1;
+    for (digit, radix) in d.iter().zip(r) {
+        i += digit * mul;
+        mul *= radix;
+    }
+    i
+}
+
+/// Indices reachable from `i` by moving one axis one position (the beam's
+/// neighbourhood).
+fn neighbors(i: usize, r: &[usize; N_AXES]) -> Vec<usize> {
+    let d = digits_of(i, r);
+    let mut out = Vec::new();
+    for axis in 0..N_AXES {
+        if d[axis] > 0 {
+            let mut m = d;
+            m[axis] -= 1;
+            out.push(index_of(&m, r));
+        }
+        if d[axis] + 1 < r[axis] {
+            let mut m = d;
+            m[axis] += 1;
+            out.push(index_of(&m, r));
+        }
+    }
+    out
+}
+
+/// The oracle's answer for one candidate.
+#[derive(Debug, Clone)]
+pub enum Verdict {
+    Feasible { step_s: f64, tokens_per_s: f64, bottleneck: String },
+    Infeasible { reason: String },
+}
+
+/// A feasible candidate with its predicted performance.
+#[derive(Debug, Clone)]
+pub struct Evaluated {
+    pub cand: Candidate,
+    pub step_s: f64,
+    pub tokens_per_s: f64,
+    pub bottleneck: String,
+}
+
+fn infeasible(reason: impl Into<String>) -> Verdict {
+    Verdict::Infeasible { reason: reason.into() }
+}
+
+/// Non-panicking mirror of the CLI's `ensure_budget_feasible`: `Some`
+/// carries the pruning reason when `plan` does not fit `budget`.
+fn budget_overflow(plan: &TierPlan, budget: &MemoryBudget, who: &str) -> Option<String> {
+    if plan.peaks.dram > budget.dram {
+        return Some(format!(
+            "{who}: DDR peak {} bytes (incl. the {}-slot staging window) exceeds the \
+             {}-byte --dram-budget",
+            plan.peaks.dram, plan.dram_slots, budget.dram
+        ));
+    }
+    if !budget.fits(&plan.peaks) {
+        return Some(format!(
+            "{who}: tier peaks {:?} do not fit the host budget {:?}",
+            plan.peaks, budget
+        ));
+    }
+    None
+}
+
+/// Price one candidate with the analytic simulator, mirroring `zo2
+/// simulate`'s exact planning path so the winner replays bit-for-bit
+/// through `simulate --config tuned.json`.  Every constraint the CLI
+/// enforces with a hard error becomes an [`Verdict::Infeasible`] here —
+/// the tuner prunes, it never panics.
+pub fn evaluate(sc: &Scenario, c: &Candidate) -> Verdict {
+    let devices = sc.devices();
+    if devices == 0 {
+        return infeasible("empty hardware list: --device-spec must name at least one device");
+    }
+    if c.slots == 0 || c.dram_slots == 0 || c.disk_batch == 0 || c.microbatches == 0 {
+        return infeasible("slots, dram-slots, disk-batch and microbatches must all be >= 1");
+    }
+    let (layout, weighted) = match c.layout {
+        LayoutChoice::Contiguous => (ShardLayout::Contiguous, false),
+        LayoutChoice::Cyclic => (ShardLayout::Cyclic, false),
+        LayoutChoice::Weighted => (ShardLayout::Contiguous, true),
+    };
+    if weighted && (devices == 1 || c.strategy != ShardStrategy::Pipeline) {
+        return infeasible(
+            "--layout weighted is a pipeline placement hint: it needs more than one device \
+             with --shard pipeline",
+        );
+    }
+    if c.microbatches > 1 && (devices == 1 || c.strategy != ShardStrategy::Pipeline) {
+        return infeasible(
+            "--microbatches M splits the step for pipeline sharding only: it needs more than \
+             one device with --shard pipeline",
+        );
+    }
+
+    let wl = &sc.wl;
+    let mut policy = Policy {
+        overlap: true,
+        reusable_mem: true,
+        efficient_update: true,
+        slots: c.slots,
+        disk_batch: c.disk_batch,
+        spill_placement: c.spill_placement,
+        dram_slots: c.dram_slots,
+        ..Policy::default()
+    };
+
+    if devices > 1 {
+        if sc.links.len() != devices {
+            return infeasible(format!(
+                "scenario lists {} link(s) for {devices} device(s)",
+                sc.links.len()
+            ));
+        }
+        let spec =
+            ShardSpec { devices, layout, strategy: c.strategy, microbatches: c.microbatches };
+        let cluster = Cluster { devices: sc.hw.clone(), links: sc.links.clone() };
+        let costs = match ClusterCost::new(&cluster, wl) {
+            Ok(cc) => cc,
+            Err(e) => return infeasible(e.to_string()),
+        };
+        let owners: Option<Vec<usize>> = if weighted {
+            let weights = bottleneck_weights(&costs, devices);
+            Some(weighted_contiguous_owners(wl.shape.n_layers, &weights))
+        } else {
+            None
+        };
+        let per_dev = match &owners {
+            Some(o) => blocks_per_device_of(o, devices),
+            None => blocks_per_device(layout, wl.shape.n_layers, devices),
+        };
+
+        let mut tiers: Option<Vec<DeviceTier>> = None;
+        if let Some(budget_bytes) = &sc.dram_budget_bytes {
+            if budget_bytes.len() != devices {
+                return infeasible(format!(
+                    "scenario lists {} DRAM budget(s) for {devices} device(s)",
+                    budget_bytes.len()
+                ));
+            }
+            if c.strategy == ShardStrategy::Pipeline {
+                let budgets: Vec<MemoryBudget> = budget_bytes
+                    .iter()
+                    .zip(&sc.hw)
+                    .map(|(&dram, hw)| MemoryBudget { hbm: hw.hbm_capacity, dram, nvme: 2 << 40 })
+                    .collect();
+                let counts: Vec<usize> = per_dev.iter().map(|v| v.len()).collect();
+                let hws: Vec<&Hardware> = sc.hw.iter().collect();
+                let plans = plan_three_tier_owned(
+                    wl,
+                    &budgets,
+                    &counts,
+                    policy.slots,
+                    c.dram_slots,
+                    sc.param_bytes,
+                    &hws,
+                    c.spill_placement,
+                );
+                for (d, plan) in plans.iter().enumerate() {
+                    if let Some(reason) = budget_overflow(
+                        plan,
+                        &budgets[d],
+                        &format!("device {d} ({})", sc.hw[d].name),
+                    ) {
+                        return infeasible(reason);
+                    }
+                }
+                policy.tiering = Tiering::ThreeTier;
+                policy.spilled = plans.iter().map(|p| p.spilled_blocks).sum();
+                tiers = Some(plans.iter().map(|p| p.device_tier()).collect());
+            } else {
+                // DP: one shared spill plan per replica — distinct per-host
+                // budgets cannot be honoured on this path (same CLI rule).
+                if !budget_bytes.windows(2).all(|w| w[0] == w[1]) {
+                    return infeasible(
+                        "--shard dp runs a full replica per host with one shared spill plan; \
+                         distinct per-host --dram-budget values need --shard pipeline",
+                    );
+                }
+                let hbm = match min_hbm_capacity(&sc.hw) {
+                    Ok(h) => h,
+                    Err(e) => return infeasible(e.to_string()),
+                };
+                let budget = MemoryBudget { hbm, dram: budget_bytes[0], nvme: 2 << 40 };
+                let plan = plan_three_tier(
+                    wl,
+                    &budget,
+                    policy.slots,
+                    c.dram_slots,
+                    sc.param_bytes,
+                    &sc.hw[0],
+                    c.spill_placement,
+                );
+                if let Some(reason) = budget_overflow(&plan, &budget, "each DP replica's host") {
+                    return infeasible(reason);
+                }
+                policy.tiering = Tiering::ThreeTier;
+                policy.spilled = plan.spilled_blocks;
+                policy.dram_slots = plan.dram_slots.max(1);
+            }
+        }
+
+        let plan = build_sharded_plan_tiered(
+            wl.shape.n_layers,
+            sc.steps,
+            policy,
+            &spec,
+            tiers.as_deref(),
+            owners.as_deref(),
+        );
+        let (sched, _) = simulate(&plan, &costs, policy);
+        let tokens_per_step = match c.strategy {
+            ShardStrategy::DataParallel => (devices * wl.batch * wl.seq) as f64,
+            ShardStrategy::Pipeline => (wl.batch * wl.seq) as f64,
+        };
+        return Verdict::Feasible {
+            step_s: sched.steady_step_s,
+            tokens_per_s: tokens_per_step / sched.steady_step_s,
+            bottleneck: sched.bottleneck().to_string(),
+        };
+    }
+
+    // Single device (the paper's setting).
+    let hw = &sc.hw[0];
+    if let Some(budget_bytes) = &sc.dram_budget_bytes {
+        let budget = MemoryBudget { hbm: hw.hbm_capacity, dram: budget_bytes[0], nvme: 2 << 40 };
+        let plan = plan_three_tier(
+            wl,
+            &budget,
+            policy.slots,
+            c.dram_slots,
+            sc.param_bytes,
+            hw,
+            c.spill_placement,
+        );
+        if let Some(reason) = budget_overflow(&plan, &budget, "this host") {
+            return infeasible(reason);
+        }
+        policy.tiering = Tiering::ThreeTier;
+        policy.spilled = plan.spilled_blocks;
+        policy.dram_slots = plan.dram_slots.max(1);
+    }
+    let costs = SimCost::new(hw, wl);
+    let plan = build_plan(wl.shape.n_layers, sc.steps, policy);
+    let (sched, _) = simulate(&plan, &costs, policy);
+    let tokens = (wl.batch * wl.seq) as f64;
+    Verdict::Feasible {
+        step_s: sched.steady_step_s,
+        tokens_per_s: tokens / sched.steady_step_s,
+        bottleneck: sched.bottleneck().to_string(),
+    }
+}
+
+/// Search-driver knobs (all CLI flags of `zo2 tune`).
+#[derive(Debug, Clone, Copy)]
+pub struct TuneOpts {
+    /// Seeds every random draw (`--tune-seed`); same seed + same space +
+    /// same scenario → byte-identical report.
+    pub seed: u64,
+    /// Beam width (`--beam`).
+    pub beam: usize,
+    /// Annealing-fallback iterations (`--anneal-iters`).
+    pub anneal_iters: usize,
+    /// Frontier size in the report (`--topk`).
+    pub topk: usize,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        Self { seed: 0, beam: 4, anneal_iters: 64, topk: 5 }
+    }
+}
+
+/// Outcome of one tune run.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    /// Best feasible candidate (None when the whole space is infeasible).
+    pub best: Option<Evaluated>,
+    /// Top-k feasible candidates, best first.
+    pub frontier: Vec<Evaluated>,
+    /// Distinct candidates priced (feasible + pruned).
+    pub explored: usize,
+    /// Every pruned candidate with its reason, in enumeration order.
+    pub pruned: Vec<(Candidate, String)>,
+    /// Cardinality of the full space.
+    pub space_size: usize,
+}
+
+fn eval_cached(
+    sc: &Scenario,
+    space: &SearchSpace,
+    i: usize,
+    cache: &mut BTreeMap<usize, Verdict>,
+) -> Verdict {
+    if let Some(v) = cache.get(&i) {
+        return v.clone();
+    }
+    let v = evaluate(sc, &space.candidate_at(i));
+    cache.insert(i, v.clone());
+    v
+}
+
+/// Run the search: beam over single-knob neighbours from deterministic
+/// probe points, then a seeded annealing pass that can cross valleys the
+/// beam cannot (and is the only searcher when every beam probe lands
+/// infeasible).  Fully deterministic for a given `(scenario, space, opts)`.
+pub fn tune(sc: &Scenario, space: &SearchSpace, opts: &TuneOpts) -> Result<TuneResult> {
+    let n = space.size();
+    anyhow::ensure!(n > 0, "empty search space: every axis needs at least one value");
+    let radices = space.radices();
+    let beam_w = opts.beam.max(1);
+    let mut rng = GaussianRng::new(opts.seed, 0x7u64);
+    let mut cache: BTreeMap<usize, Verdict> = BTreeMap::new();
+    let mut visited: BTreeSet<usize> = BTreeSet::new();
+
+    // Probe points: evenly spaced across the enumeration plus seeded
+    // random draws — cheap coverage before the beam starts climbing.
+    let mut queue: Vec<usize> = (0..beam_w).map(|k| k * n / beam_w.max(1)).collect();
+    for _ in 0..beam_w {
+        queue.push(rng.next_below(n as u64) as usize);
+    }
+    queue.sort_unstable();
+    queue.dedup();
+
+    let mut rounds = 0usize;
+    while !queue.is_empty() && rounds <= n {
+        rounds += 1;
+        for i in queue.drain(..) {
+            if visited.insert(i) {
+                eval_cached(sc, space, i, &mut cache);
+            }
+        }
+        // Current beam: the best feasible points seen so far.
+        let mut pool: Vec<(f64, usize)> = cache
+            .iter()
+            .filter_map(|(&i, v)| match v {
+                Verdict::Feasible { step_s, .. } => Some((*step_s, i)),
+                Verdict::Infeasible { .. } => None,
+            })
+            .collect();
+        pool.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        pool.truncate(beam_w);
+        let mut next: Vec<usize> = pool
+            .iter()
+            .flat_map(|&(_, i)| neighbors(i, &radices))
+            .filter(|j| !visited.contains(j))
+            .collect();
+        next.sort_unstable();
+        next.dedup();
+        queue = next;
+    }
+
+    // Annealing fallback: random single-axis rerolls with temperature-
+    // gated uphill acceptance.
+    let best_of = |cache: &BTreeMap<usize, Verdict>| -> Option<(f64, usize)> {
+        cache
+            .iter()
+            .filter_map(|(&i, v)| match v {
+                Verdict::Feasible { step_s, .. } => Some((*step_s, i)),
+                Verdict::Infeasible { .. } => None,
+            })
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+    };
+    let (mut cur_step, mut cur) = match best_of(&cache) {
+        Some((s, i)) => (s, i),
+        None => (f64::INFINITY, rng.next_below(n as u64) as usize),
+    };
+    let mut temp = if cur_step.is_finite() { (cur_step * 0.25).max(1e-9) } else { 1.0 };
+    for _ in 0..opts.anneal_iters {
+        let axis = rng.next_below(N_AXES as u64) as usize;
+        let mut d = digits_of(cur, &radices);
+        d[axis] = rng.next_below(radices[axis] as u64) as usize;
+        let j = index_of(&d, &radices);
+        visited.insert(j);
+        if let Verdict::Feasible { step_s, .. } = eval_cached(sc, space, j, &mut cache) {
+            let accept = step_s < cur_step
+                || rng.next_uniform() < (-(step_s - cur_step) / temp.max(1e-12)).exp();
+            if accept {
+                cur = j;
+                cur_step = step_s;
+            }
+        }
+        temp *= 0.9;
+    }
+
+    // Assemble the result from the full evaluation cache.
+    let mut feasible: Vec<(usize, Evaluated)> = cache
+        .iter()
+        .filter_map(|(&i, v)| match v {
+            Verdict::Feasible { step_s, tokens_per_s, bottleneck } => Some((
+                i,
+                Evaluated {
+                    cand: space.candidate_at(i),
+                    step_s: *step_s,
+                    tokens_per_s: *tokens_per_s,
+                    bottleneck: bottleneck.clone(),
+                },
+            )),
+            Verdict::Infeasible { .. } => None,
+        })
+        .collect();
+    feasible.sort_by(|a, b| a.1.step_s.total_cmp(&b.1.step_s).then(a.0.cmp(&b.0)));
+    let pruned: Vec<(Candidate, String)> = cache
+        .iter()
+        .filter_map(|(&i, v)| match v {
+            Verdict::Infeasible { reason } => Some((space.candidate_at(i), reason.clone())),
+            Verdict::Feasible { .. } => None,
+        })
+        .collect();
+    let explored = cache.len();
+    let best = feasible.first().map(|(_, e)| e.clone());
+    let frontier: Vec<Evaluated> =
+        feasible.into_iter().take(opts.topk.max(1)).map(|(_, e)| e).collect();
+    Ok(TuneResult { best, frontier, explored, pruned, space_size: n })
+}
+
+/// Calibration inputs the report records (`tune --calibrate`).
+#[derive(Debug, Clone, Default)]
+pub struct CalibrationReport {
+    /// Files fed to `--calibrate`, in the order given.
+    pub files: Vec<String>,
+    /// Whether host-kernel rates were loaded (and applied to the oracle).
+    pub host_kernels: bool,
+    /// Measured `sim_steady_step_s` gauges: `(model, devices, strategy,
+    /// measured seconds)`.  Drift vs. prediction is reported when an entry
+    /// matches the tuned scenario; the oracle itself is never rescaled by
+    /// these (that would break `--config` replay equality).
+    pub sim_gauges: Vec<(String, usize, String, f64)>,
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn s(v: impl Into<String>) -> Json {
+    Json::Str(v.into())
+}
+
+fn flags_obj(flags: &BTreeMap<String, String>) -> Json {
+    Json::Obj(flags.iter().map(|(k, v)| (k.clone(), s(v.clone()))).collect())
+}
+
+fn cli_of(flags: &BTreeMap<String, String>) -> String {
+    let mut out = String::from("zo2 simulate");
+    for (k, v) in flags {
+        out.push_str(&format!(" --{k} {v}"));
+    }
+    out
+}
+
+fn evaluated_obj(
+    e: &Evaluated,
+    scenario_flags: &BTreeMap<String, String>,
+) -> BTreeMap<String, Json> {
+    let mut flags = scenario_flags.clone();
+    flags.extend(e.cand.flags());
+    BTreeMap::from([
+        ("config".to_string(), s(e.cand.key())),
+        ("predicted_step_s".to_string(), num(e.step_s)),
+        ("predicted_tokens_per_s".to_string(), num(e.tokens_per_s)),
+        ("bottleneck".to_string(), s(e.bottleneck.clone())),
+        ("flags".to_string(), flags_obj(&flags)),
+    ])
+}
+
+/// Render the byte-deterministic `zo2-tune-v1` report.  `scenario_flags`
+/// are the CLI flags that reproduce the scenario (model, devices, budgets,
+/// wire, …); each reported config merges its knob flags over them, so
+/// `simulate --config tuned.json` replays the exact evaluated point.
+pub fn report_json(
+    sc: &Scenario,
+    space: &SearchSpace,
+    opts: &TuneOpts,
+    result: &TuneResult,
+    scenario_flags: &BTreeMap<String, String>,
+    calibration: &CalibrationReport,
+) -> Json {
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), s(TUNE_SCHEMA));
+    doc.insert("objective".to_string(), s("steady_step_s"));
+    doc.insert("seed".to_string(), num(opts.seed as f64));
+
+    let dram_gb: Json = match &sc.dram_budget_bytes {
+        Some(b) => Json::Arr(
+            b.iter().map(|&bytes| num(bytes as f64 / (1u64 << 30) as f64)).collect(),
+        ),
+        None => Json::Null,
+    };
+    doc.insert(
+        "scenario".to_string(),
+        Json::Obj(BTreeMap::from([
+            ("model".to_string(), s(sc.wl.shape.name.clone())),
+            ("devices".to_string(), num(sc.devices() as f64)),
+            (
+                "tiering".to_string(),
+                s(if sc.three_tier() { Tiering::ThreeTier } else { Tiering::TwoTier }.name()),
+            ),
+            ("dram_budget_gb".to_string(), dram_gb),
+            ("sim_steps".to_string(), num(sc.steps as f64)),
+            ("flags".to_string(), flags_obj(scenario_flags)),
+        ])),
+    );
+    doc.insert(
+        "space".to_string(),
+        Json::Obj(BTreeMap::from([
+            ("size".to_string(), num(space.size() as f64)),
+            (
+                "strategies".to_string(),
+                Json::Arr(space.strategies.iter().map(|v| s(v.name())).collect()),
+            ),
+            (
+                "layouts".to_string(),
+                Json::Arr(space.layouts.iter().map(|v| s(v.name())).collect()),
+            ),
+            (
+                "microbatches".to_string(),
+                Json::Arr(space.microbatches.iter().map(|&v| num(v as f64)).collect()),
+            ),
+            ("slots".to_string(), Json::Arr(space.slots.iter().map(|&v| num(v as f64)).collect())),
+            (
+                "dram_slots".to_string(),
+                Json::Arr(space.dram_slots.iter().map(|&v| num(v as f64)).collect()),
+            ),
+            (
+                "disk_batch".to_string(),
+                Json::Arr(space.disk_batch.iter().map(|&v| num(v as f64)).collect()),
+            ),
+            (
+                "spill_placements".to_string(),
+                Json::Arr(space.spill_placements.iter().map(|v| s(v.name())).collect()),
+            ),
+        ])),
+    );
+    doc.insert(
+        "search".to_string(),
+        Json::Obj(BTreeMap::from([
+            ("algorithm".to_string(), s("beam+anneal")),
+            ("beam".to_string(), num(opts.beam.max(1) as f64)),
+            ("anneal_iters".to_string(), num(opts.anneal_iters as f64)),
+            ("explored".to_string(), num(result.explored as f64)),
+            ("pruned".to_string(), num(result.pruned.len() as f64)),
+            ("space_size".to_string(), num(result.space_size as f64)),
+        ])),
+    );
+    doc.insert(
+        "pruned_examples".to_string(),
+        Json::Arr(
+            result
+                .pruned
+                .iter()
+                .take(8)
+                .map(|(c, reason)| {
+                    Json::Obj(BTreeMap::from([
+                        ("config".to_string(), s(c.key())),
+                        ("reason".to_string(), s(reason.clone())),
+                    ]))
+                })
+                .collect(),
+        ),
+    );
+    doc.insert(
+        "best".to_string(),
+        match &result.best {
+            Some(e) => {
+                let mut obj = evaluated_obj(e, scenario_flags);
+                let mut flags = scenario_flags.clone();
+                flags.extend(e.cand.flags());
+                obj.insert("cli".to_string(), s(cli_of(&flags)));
+                Json::Obj(obj)
+            }
+            None => Json::Null,
+        },
+    );
+    doc.insert(
+        "frontier".to_string(),
+        Json::Arr(
+            result.frontier.iter().map(|e| Json::Obj(evaluated_obj(e, scenario_flags))).collect(),
+        ),
+    );
+
+    let gauges = Json::Arr(
+        calibration
+            .sim_gauges
+            .iter()
+            .map(|(model, devices, strategy, measured)| {
+                // Predicted-vs-measured drift where the gauge matches the
+                // tuned scenario: the best frontier point with the gauge's
+                // strategy is the prediction for that row.
+                let predicted = if *model == sc.wl.shape.name && *devices == sc.devices() {
+                    result
+                        .frontier
+                        .iter()
+                        .find(|e| e.cand.strategy.name() == strategy.as_str())
+                        .map(|e| e.step_s)
+                } else {
+                    None
+                };
+                Json::Obj(BTreeMap::from([
+                    ("model".to_string(), s(model.clone())),
+                    ("devices".to_string(), num(*devices as f64)),
+                    ("strategy".to_string(), s(strategy.clone())),
+                    ("measured_step_s".to_string(), num(*measured)),
+                    (
+                        "predicted_step_s".to_string(),
+                        predicted.map(num).unwrap_or(Json::Null),
+                    ),
+                ]))
+            })
+            .collect(),
+    );
+    doc.insert(
+        "calibration".to_string(),
+        Json::Obj(BTreeMap::from([
+            (
+                "files".to_string(),
+                Json::Arr(calibration.files.iter().map(|f| s(f.clone())).collect()),
+            ),
+            ("host_kernels".to_string(), Json::Bool(calibration.host_kernels)),
+            ("sim_gauges".to_string(), gauges),
+        ])),
+    );
+    Json::Obj(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::ComputeMode;
+    use crate::model::opt_by_name;
+    use crate::precision::Codec;
+
+    fn scenario(devices: usize, dram_gb: Option<u64>) -> Scenario {
+        let hw: Vec<Hardware> = vec![Hardware::a100_pcie4(); devices];
+        let wl = Workload {
+            shape: opt_by_name("OPT-13B").unwrap(),
+            batch: 1,
+            seq: 2048,
+            wire: Codec::Fp16,
+            compute: ComputeMode::Fp16,
+        };
+        Scenario {
+            wl,
+            links: vec![Interconnect::nvlink(); devices],
+            hw,
+            dram_budget_bytes: dram_gb.map(|gb| vec![gb << 30; devices]),
+            steps: 4,
+            param_bytes: 2,
+        }
+    }
+
+    #[test]
+    fn mixed_radix_enumeration_round_trips() {
+        let space = SearchSpace::default_for(2, true);
+        let r = space.radices();
+        assert_eq!(space.size(), r.iter().product::<usize>());
+        for i in (0..space.size()).step_by(7) {
+            assert_eq!(index_of(&digits_of(i, &r), &r), i);
+        }
+        // Neighbours differ in exactly one axis by exactly one position.
+        for j in neighbors(17 % space.size(), &r) {
+            let a = digits_of(17 % space.size(), &r);
+            let b = digits_of(j, &r);
+            let diffs: Vec<usize> = (0..N_AXES).filter(|&k| a[k] != b[k]).collect();
+            assert_eq!(diffs.len(), 1);
+            assert_eq!(a[diffs[0]].abs_diff(b[diffs[0]]), 1);
+        }
+    }
+
+    #[test]
+    fn evaluate_never_panics_and_prunes_structural_combos() {
+        let sc = scenario(1, None);
+        // Microbatches / weighted layout without a pipeline are pruned.
+        let c = Candidate {
+            strategy: ShardStrategy::DataParallel,
+            layout: LayoutChoice::Weighted,
+            microbatches: 1,
+            slots: 3,
+            dram_slots: 4,
+            disk_batch: 1,
+            spill_placement: SpillPlacement::Trailing,
+        };
+        assert!(matches!(evaluate(&sc, &c), Verdict::Infeasible { .. }));
+        let c = Candidate { layout: LayoutChoice::Contiguous, microbatches: 2, ..c };
+        assert!(matches!(evaluate(&sc, &c), Verdict::Infeasible { .. }));
+        // An empty hardware list is a pruned point, not a panic — the
+        // min().unwrap() regression the tuner previously could hit.
+        let mut empty = scenario(2, Some(24));
+        empty.hw.clear();
+        empty.links.clear();
+        let c = Candidate { layout: LayoutChoice::Contiguous, microbatches: 1, ..c };
+        match evaluate(&empty, &c) {
+            Verdict::Infeasible { reason } => assert!(reason.contains("--device-spec"), "{reason}"),
+            Verdict::Feasible { .. } => panic!("empty cluster must be infeasible"),
+        }
+    }
+
+    #[test]
+    fn tune_is_deterministic_and_respects_the_objective() {
+        let sc = scenario(2, Some(24));
+        let space = SearchSpace::default_for(2, true);
+        let opts = TuneOpts { seed: 11, beam: 3, anneal_iters: 24, topk: 4 };
+        let a = tune(&sc, &space, &opts).unwrap();
+        let b = tune(&sc, &space, &opts).unwrap();
+        assert_eq!(a.explored, b.explored);
+        assert_eq!(a.pruned.len(), b.pruned.len());
+        let ea = a.best.as_ref().expect("a feasible point exists");
+        let eb = b.best.as_ref().unwrap();
+        assert_eq!(ea.cand, eb.cand);
+        assert_eq!(ea.step_s.to_bits(), eb.step_s.to_bits());
+        // The frontier is sorted by the objective and bounded by topk.
+        assert!(a.frontier.len() <= 4 && !a.frontier.is_empty());
+        for w in a.frontier.windows(2) {
+            assert!(w[0].step_s <= w[1].step_s);
+        }
+        // The reported best is exactly reproducible through the oracle.
+        match evaluate(&sc, &ea.cand) {
+            Verdict::Feasible { step_s, .. } => assert_eq!(step_s.to_bits(), ea.step_s.to_bits()),
+            Verdict::Infeasible { reason } => panic!("best became infeasible: {reason}"),
+        }
+    }
+
+    #[test]
+    fn pruned_points_reproduce_their_infeasibility() {
+        // A 1 GB budget on OPT-13B×2 prunes real points (deep windows that
+        // cannot fit); every recorded prune must reproduce.
+        let sc = scenario(2, Some(1));
+        let space = SearchSpace::default_for(2, true);
+        let r = tune(&sc, &space, &TuneOpts { seed: 3, ..TuneOpts::default() }).unwrap();
+        assert!(!r.pruned.is_empty(), "expected infeasible points at a 1 GB budget");
+        for (cand, reason) in &r.pruned {
+            match evaluate(&sc, cand) {
+                Verdict::Infeasible { reason: again } => assert_eq!(&again, reason),
+                Verdict::Feasible { .. } => panic!("pruned {} re-evaluates feasible", cand.key()),
+            }
+        }
+    }
+
+    #[test]
+    fn report_is_byte_deterministic_and_parses() {
+        let sc = scenario(2, Some(24));
+        let space = SearchSpace::default_for(2, true);
+        let opts = TuneOpts { seed: 5, beam: 2, anneal_iters: 12, topk: 3 };
+        let flags: BTreeMap<String, String> = BTreeMap::from([
+            ("model".to_string(), "OPT-13B".to_string()),
+            ("devices".to_string(), "2".to_string()),
+            ("tiering".to_string(), "three".to_string()),
+            ("dram-budget".to_string(), "24".to_string()),
+            ("wire".to_string(), "fp16".to_string()),
+            ("compute".to_string(), "fp16".to_string()),
+        ]);
+        let cal = CalibrationReport {
+            files: vec!["BENCH_multi_gpu.json".to_string()],
+            host_kernels: false,
+            sim_gauges: vec![("OPT-13B".to_string(), 2, "dp".to_string(), 1.5)],
+        };
+        let r1 = tune(&sc, &space, &opts).unwrap();
+        let r2 = tune(&sc, &space, &opts).unwrap();
+        let j1 = report_json(&sc, &space, &opts, &r1, &flags, &cal).to_string_pretty();
+        let j2 = report_json(&sc, &space, &opts, &r2, &flags, &cal).to_string_pretty();
+        assert_eq!(j1, j2, "same seed + space must render byte-identical reports");
+        let doc = Json::parse(&j1).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), TUNE_SCHEMA);
+        let best = doc.get("best").unwrap();
+        let replay = best.get("flags").unwrap().as_obj().unwrap();
+        assert_eq!(replay.get("model").unwrap().as_str().unwrap(), "OPT-13B");
+        assert!(replay.contains_key("shard") && replay.contains_key("slots"));
+        assert!(best.get("cli").unwrap().as_str().unwrap().starts_with("zo2 simulate --"));
+    }
+}

@@ -80,7 +80,11 @@ impl Json {
                 let _ = write!(out, "{b}");
             }
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; emitting `{n}` here
+                    // would produce output our own parser rejects.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -321,6 +325,20 @@ mod tests {
         assert_eq!(v.get("s").unwrap().as_str().unwrap(), "a\"b\\c\ndAé");
         let re = Json::parse(&v.to_string_pretty()).unwrap();
         assert_eq!(re, v);
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_null() {
+        // A NaN/Inf smuggled into a report (e.g. a 0/0 drift ratio) must not
+        // make the writer produce non-parseable output.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = Json::Obj(BTreeMap::from([("r".to_string(), Json::Num(bad))]));
+            let text = v.to_string_pretty();
+            let re = Json::parse(&text).unwrap();
+            assert_eq!(re.get("r").unwrap(), &Json::Null, "emitted: {text}");
+        }
+        // Finite numbers are unaffected.
+        assert_eq!(Json::parse(&Json::Num(1.5).to_string_pretty()).unwrap(), Json::Num(1.5));
     }
 
     #[test]

@@ -35,7 +35,9 @@
 //! 15. per-host spill sets respect their *own* budget when budgets differ,
 //!     and raising one host's budget never changes a sibling's plan.
 
-use zo2::costmodel::{plan_three_tier_partitioned, ComputeMode, Hardware, MemoryBudget, Workload};
+use zo2::costmodel::{
+    plan_three_tier, plan_three_tier_partitioned, ComputeMode, Hardware, MemoryBudget, Workload,
+};
 use zo2::model::opt_by_name;
 use zo2::precision::Codec;
 use zo2::rng::GaussianRng;
@@ -1236,4 +1238,58 @@ fn per_partition_spill_sets_are_disjoint_and_fit_their_hosts() {
             assert_eq!(all.len(), total, "{layout:?} {placement:?}: overlapping spill sets");
         }
     }
+}
+
+/// 16. `plan_three_tier` is monotone in the DDR budget — raising a host's
+///     budget never grows its spill set — and an exact-fit budget
+///     (`n_blocks * block_wire_bytes`) is window-free: everything resident,
+///     no staging window reserved on top, and the planner's u128 sizing
+///     math never wraps into a bogus all-resident answer.
+#[test]
+fn prop_three_tier_spill_monotone_in_budget_and_exact_fit_window_free() {
+    let hw = Hardware::a100_pcie4();
+    let wl = Workload {
+        shape: opt_by_name("OPT-30B").unwrap(),
+        batch: 1,
+        seq: 2048,
+        wire: Codec::Fp16,
+        compute: ComputeMode::Fp16,
+    };
+    let gb = 1u64 << 30;
+    let mut rng = GaussianRng::new(0x3717, 16);
+    let plan = |dram: u64, slots: usize, dram_slots: usize, placement: SpillPlacement| {
+        let budget = MemoryBudget { hbm: 18 * gb, dram, nvme: 2 << 40 };
+        plan_three_tier(&wl, &budget, slots, dram_slots, 2, &hw, placement)
+    };
+    for case in 0..40 {
+        let slots = 2 + rng.next_below(4) as usize;
+        let dram_slots = 1 + rng.next_below(8) as usize;
+        let placement = if rng.next_below(2) == 0 {
+            SpillPlacement::Trailing
+        } else {
+            SpillPlacement::Interleaved
+        };
+        let b1 = gb * (1 + rng.next_below(96));
+        let b2 = b1 + gb * rng.next_below(64);
+        let lo = plan(b1, slots, dram_slots, placement);
+        let hi = plan(b2, slots, dram_slots, placement);
+        assert!(
+            hi.spilled_blocks <= lo.spilled_blocks,
+            "case {case}: raising the budget {b1} -> {b2} grew the spill set ({} -> {})",
+            lo.spilled_blocks,
+            hi.spilled_blocks
+        );
+        // Placement is total: every block is resident or spilled.
+        assert_eq!(lo.resident_blocks + lo.spilled_blocks, wl.shape.n_layers);
+        assert_eq!(hi.resident_blocks + hi.spilled_blocks, wl.shape.n_layers);
+    }
+
+    // Exact fit is window-free; one byte less must spill.
+    let exact = wl.shape.n_layers as u64 * wl.block_wire_bytes();
+    let p = plan(exact, 3, 4, SpillPlacement::Trailing);
+    assert_eq!(p.spilled_blocks, 0, "exact-fit budget must keep every block resident");
+    assert_eq!(p.dram_slots, 0, "an all-resident plan needs no staging window");
+    assert_eq!(p.peaks.dram, exact, "exact fit must not reserve a window on top");
+    let q = plan(exact - 1, 3, 4, SpillPlacement::Trailing);
+    assert!(q.spilled_blocks > 0, "one byte under the exact fit must spill");
 }

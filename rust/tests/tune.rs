@@ -1,0 +1,285 @@
+//! End-to-end tests of `zo2 tune`: byte-determinism of the report under a
+//! fixed `--tune-seed`, replay equality of the winning config through
+//! `simulate --config tuned.json`, pruning correctness, and the
+//! `--calibrate` round trip over bench-shaped fixtures.
+
+use std::path::{Path, PathBuf};
+
+use zo2::costmodel::{HostKernels, SimCost};
+use zo2::telemetry::metrics::find_value;
+use zo2::util::json::Json;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("zo2_tune_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run the compiled `zo2` binary, panicking (with stderr) on failure.
+fn zo2_ok(cwd: &Path, args: &[&str]) -> String {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_zo2"))
+        .current_dir(cwd)
+        .args(args)
+        .output()
+        .expect("spawn zo2");
+    assert!(
+        out.status.success(),
+        "zo2 {args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn zo2_err(cwd: &Path, args: &[&str]) -> String {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_zo2"))
+        .current_dir(cwd)
+        .args(args)
+        .output()
+        .expect("spawn zo2");
+    assert!(!out.status.success(), "zo2 {args:?} unexpectedly succeeded");
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+#[test]
+fn tune_reports_are_byte_identical_for_the_same_seed() {
+    let dir = temp_dir("det");
+    let t1 = dir.join("t1.json");
+    let t2 = dir.join("t2.json");
+    let base = [
+        "tune",
+        "--model",
+        "OPT-13B",
+        "--devices",
+        "2",
+        "--wire",
+        "fp16",
+        "--compute",
+        "fp16",
+        "--tiering",
+        "three",
+        "--dram-budget",
+        "24",
+        "--tune-seed",
+        "7",
+        "--out",
+    ];
+    let mut a1: Vec<&str> = base.to_vec();
+    a1.push(t1.to_str().unwrap());
+    let mut a2: Vec<&str> = base.to_vec();
+    a2.push(t2.to_str().unwrap());
+    zo2_ok(&dir, &a1);
+    zo2_ok(&dir, &a2);
+    let b1 = std::fs::read(&t1).unwrap();
+    let b2 = std::fs::read(&t2).unwrap();
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b2, "same --tune-seed must produce byte-identical reports");
+
+    // A different seed still converges on a frontier (the report stays
+    // well-formed), though the explored set may differ.
+    let t3 = dir.join("t3.json");
+    let mut a3: Vec<&str> = base.to_vec();
+    a3.truncate(base.len() - 3); // drop `--tune-seed 7 --out`
+    a3.extend(["--tune-seed", "8", "--out", t3.to_str().unwrap()]);
+    zo2_ok(&dir, &a3);
+    let doc = Json::parse(&std::fs::read_to_string(&t3).unwrap()).unwrap();
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "zo2-tune-v1");
+    assert!(!doc.get("frontier").unwrap().as_arr().unwrap().is_empty());
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn best_config_replays_through_simulate_within_1e9() {
+    let dir = temp_dir("replay");
+    let tuned = dir.join("tuned.json");
+    zo2_ok(
+        &dir,
+        &[
+            "tune",
+            "--model",
+            "OPT-13B",
+            "--devices",
+            "2",
+            "--wire",
+            "fp16",
+            "--compute",
+            "fp16",
+            "--tiering",
+            "three",
+            "--dram-budget",
+            "24",
+            "--tune-seed",
+            "7",
+            "--out",
+            tuned.to_str().unwrap(),
+        ],
+    );
+    let doc = Json::parse(&std::fs::read_to_string(&tuned).unwrap()).unwrap();
+    let best = doc.get("best").unwrap();
+    let predicted = best.get("predicted_step_s").unwrap().as_f64().unwrap();
+    assert!(predicted.is_finite() && predicted > 0.0);
+    // The report's replay flags carry the full scenario + the winning knobs.
+    let flags = best.get("flags").unwrap().as_obj().unwrap();
+    for key in ["model", "devices", "tiering", "dram-budget", "shard", "slots", "dram-slots"] {
+        assert!(flags.contains_key(key), "replay flags miss `{key}`");
+    }
+
+    let metrics = dir.join("metrics.json");
+    zo2_ok(
+        &dir,
+        &[
+            "simulate",
+            "--config",
+            tuned.to_str().unwrap(),
+            "--metrics-out",
+            metrics.to_str().unwrap(),
+        ],
+    );
+    let snapshot = Json::parse(&std::fs::read_to_string(&metrics).unwrap()).unwrap();
+    let replayed = find_value(&snapshot, "sim_steady_step_s", &[])
+        .expect("simulate --metrics-out writes sim_steady_step_s");
+    assert!(
+        (replayed - predicted).abs() < 1e-9,
+        "replayed step {replayed} drifts from predicted {predicted}"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn infeasible_spaces_prune_everything_and_refuse_replay() {
+    // A 1 GB DDR budget cannot even hold the staging window of one
+    // OPT-13B fp16 block pair: every three-tier candidate must be pruned
+    // (never a panic), the report's best must be null, and replaying the
+    // report must be a loud error.
+    let dir = temp_dir("prune");
+    let tuned = dir.join("tuned.json");
+    zo2_ok(
+        &dir,
+        &[
+            "tune",
+            "--model",
+            "OPT-13B",
+            "--devices",
+            "2",
+            "--wire",
+            "fp16",
+            "--compute",
+            "fp16",
+            "--tiering",
+            "three",
+            "--dram-budget",
+            "1",
+            "--tune-seed",
+            "1",
+            "--out",
+            tuned.to_str().unwrap(),
+        ],
+    );
+    let doc = Json::parse(&std::fs::read_to_string(&tuned).unwrap()).unwrap();
+    assert!(matches!(doc.get("best").unwrap(), Json::Null), "1 GB budget must have no winner");
+    assert!(doc.get("frontier").unwrap().as_arr().unwrap().is_empty());
+    let search = doc.get("search").unwrap();
+    let explored = search.get("explored").unwrap().as_f64().unwrap();
+    let pruned = search.get("pruned").unwrap().as_f64().unwrap();
+    assert!(explored > 0.0 && pruned == explored, "explored {explored} vs pruned {pruned}");
+    // Pruned examples carry reasons (budget feasibility, not panics).
+    let examples = doc.get("pruned_examples").unwrap().as_arr().unwrap();
+    assert!(!examples.is_empty());
+    for ex in examples {
+        assert!(!ex.get("reason").unwrap().as_str().unwrap().is_empty());
+    }
+    let e = zo2_err(&dir, &["simulate", "--config", tuned.to_str().unwrap()]);
+    assert!(e.contains("no feasible"), "{e}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn calibrate_round_trip_feeds_both_oracles() {
+    let dir = temp_dir("cal");
+
+    // Host-kernel fixture: the legacy flat `calibration` block.
+    let hk_path = dir.join("BENCH_host_kernels.json");
+    std::fs::write(
+        &hk_path,
+        r#"{
+  "calibration": {
+    "fp32_bytes_per_s_per_thread": 1500000000,
+    "bf16_bytes_per_s_per_thread": 2000000000,
+    "fp16_bytes_per_s_per_thread": 2100000000,
+    "fp8_bytes_per_s_per_thread": 3000000000
+  }
+}"#,
+    )
+    .unwrap();
+    let hk = HostKernels::from_bench_json(hk_path.to_str().unwrap()).unwrap();
+    assert_eq!(hk.fp32_bytes_per_s, 1.5e9);
+    assert_eq!(hk.fp8_bytes_per_s, 3.0e9);
+
+    // Sim-gauge fixture: a `BENCH_multi_gpu.json`-style metrics snapshot.
+    let mg_path = dir.join("BENCH_multi_gpu.json");
+    std::fs::write(
+        &mg_path,
+        r#"{
+  "metrics": {
+    "schema": "zo2-metrics-v1",
+    "metrics": [
+      {
+        "name": "sim_steady_step_s",
+        "labels": {"model": "OPT-13B", "devices": "2", "strategy": "dp"},
+        "kind": "gauge",
+        "value": 1.25
+      }
+    ]
+  }
+}"#,
+    )
+    .unwrap();
+    let gauges = SimCost::from_bench_json(mg_path.to_str().unwrap()).unwrap();
+    assert_eq!(gauges.steady_step_s("OPT-13B", 2, "dp"), Some(1.25));
+
+    // The CLI loop: both files through --calibrate, recorded in the report.
+    let tuned = dir.join("tuned.json");
+    let cal_arg = format!("{},{}", hk_path.to_str().unwrap(), mg_path.to_str().unwrap());
+    zo2_ok(
+        &dir,
+        &[
+            "tune",
+            "--model",
+            "OPT-13B",
+            "--devices",
+            "2",
+            "--wire",
+            "fp16",
+            "--compute",
+            "fp16",
+            "--calibrate",
+            &cal_arg,
+            "--tune-seed",
+            "2",
+            "--out",
+            tuned.to_str().unwrap(),
+        ],
+    );
+    let doc = Json::parse(&std::fs::read_to_string(&tuned).unwrap()).unwrap();
+    let cal = doc.get("calibration").unwrap();
+    assert_eq!(cal.get("files").unwrap().as_arr().unwrap().len(), 2);
+    assert!(matches!(cal.get("host_kernels").unwrap(), Json::Bool(true)));
+    let rows = cal.get("sim_gauges").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].get("measured_step_s").unwrap().as_f64().unwrap(), 1.25);
+    // The gauge matches the tuned scenario (OPT-13B × 2 devices), so a
+    // predicted counterpart must be attached when dp made the frontier.
+    let best = doc.get("best").unwrap();
+    assert!(best.get("predicted_step_s").unwrap().as_f64().unwrap() > 0.0);
+
+    // A file that is neither shape is a loud error naming the path.
+    let junk = dir.join("junk.json");
+    std::fs::write(&junk, r#"{"hello": 1}"#).unwrap();
+    let e = zo2_err(
+        &dir,
+        &["tune", "--model", "OPT-13B", "--calibrate", junk.to_str().unwrap()],
+    );
+    assert!(e.contains("--calibrate") && e.contains("junk.json"), "{e}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
