@@ -1,0 +1,422 @@
+//! A minimal, dependency-free Rust lexer for the `zo2 lint` pass.
+//!
+//! This is **not** a full Rust grammar — the lint rules only need a token
+//! stream that is comment-, string- and raw-string-aware, so that e.g. the
+//! word `unsafe` inside a doc comment or a string literal is never mistaken
+//! for the keyword, and schema literals like `"zo2-tune-v1"` are seen as one
+//! string token with known contents.  Every token and comment carries its
+//! 1-based source line, which is all the rule engine needs to attach
+//! findings and resolve inline waivers.
+//!
+//! The lexer is intentionally forgiving: on malformed input (unterminated
+//! string, stray byte) it degrades to single-character punctuation tokens
+//! rather than failing, because lint must never be the reason a build
+//! breaks on a file rustc itself accepts.
+
+/// One lexed token with its source line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    /// 1-based line the token starts on.
+    pub line: usize,
+    pub tok: Tok,
+}
+
+/// Token kinds.  Only the distinctions the rules need are made: identifiers
+/// and string contents are kept verbatim, everything else collapses to a
+/// coarse class.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (`unsafe`, `HashMap`, `unwrap`, ...).
+    Ident(String),
+    /// String literal *contents* (cooked, raw, or byte), escapes unresolved.
+    Str(String),
+    /// Numeric literal (value irrelevant to every rule).
+    Num,
+    /// Character or byte literal.
+    Char,
+    /// Lifetime (`'a`) — distinguished from `Char` so `'static` never looks
+    /// like a literal.
+    Life,
+    /// Any other single character (`.`, `!`, `#`, `{`, ...).
+    Punct(char),
+}
+
+/// One comment (line or block) with the line range it covers.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub start_line: usize,
+    /// 1-based line the comment ends on (== `start_line` for line comments).
+    pub end_line: usize,
+    /// Raw comment text including the `//` / `/* */` markers.
+    pub text: String,
+}
+
+/// The result of lexing one source file.
+#[derive(Debug, Clone, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+impl Lexed {
+    /// All comments whose line range covers `line`.
+    pub fn comments_covering(&self, line: usize) -> impl Iterator<Item = &Comment> {
+        self.comments
+            .iter()
+            .filter(move |c| c.start_line <= line && line <= c.end_line)
+    }
+
+    /// The comment (if any) that *ends* exactly on `line`.
+    pub fn comment_ending_on(&self, line: usize) -> Option<&Comment> {
+        self.comments.iter().find(|c| c.end_line == line)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+/// Lex one source file into tokens + comments.
+pub fn lex(source: &str) -> Lexed {
+    let cs: Vec<char> = source.chars().collect();
+    let n = cs.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut out = Lexed::default();
+
+    while i < n {
+        let c = cs[i];
+        // Newlines drive the line counter everywhere below; handle the
+        // common top-level case first.
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push(Comment {
+                start_line: line,
+                end_line: line,
+                text: cs[start..i].iter().collect(),
+            });
+            continue;
+        }
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.comments.push(Comment {
+                start_line,
+                end_line: line,
+                text: cs[start..i.min(n)].iter().collect(),
+            });
+            continue;
+        }
+        // Raw / byte-raw strings: r"...", r#"..."#, br"...", br#"..."#.
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            let (prefix_len, is_raw) = match (c, cs[i + 1]) {
+                ('r', '"') | ('r', '#') => (1, true),
+                ('b', 'r') if i + 2 < n && (cs[i + 2] == '"' || cs[i + 2] == '#') => (2, true),
+                _ => (0, false),
+            };
+            if is_raw {
+                let tok_line = line;
+                let mut j = i + prefix_len;
+                let mut hashes = 0usize;
+                while j < n && cs[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && cs[j] == '"' {
+                    j += 1;
+                    let content_start = j;
+                    // Scan for `"` followed by `hashes` hashes.
+                    let mut content_end = n;
+                    while j < n {
+                        if cs[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                            continue;
+                        }
+                        if cs[j] == '"' {
+                            let mut k = j + 1;
+                            let mut seen = 0usize;
+                            while k < n && seen < hashes && cs[k] == '#' {
+                                seen += 1;
+                                k += 1;
+                            }
+                            if seen == hashes {
+                                content_end = j;
+                                j = k;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    out.tokens.push(Token {
+                        line: tok_line,
+                        tok: Tok::Str(cs[content_start..content_end.min(n)].iter().collect()),
+                    });
+                    i = j;
+                    continue;
+                }
+                // `r` / `b` not actually starting a raw string (e.g. ident
+                // `r#foo` raw identifier) — fall through to ident handling.
+            }
+        }
+        // Byte string b"..." and byte char b'..'.
+        if c == 'b' && i + 1 < n && (cs[i + 1] == '"' || cs[i + 1] == '\'') {
+            if cs[i + 1] == '"' {
+                let tok_line = line;
+                let mut j = i + 2;
+                let content_start = j;
+                while j < n {
+                    if cs[j] == '\\' {
+                        j += 2;
+                    } else if cs[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                    } else if cs[j] == '"' {
+                        break;
+                    } else {
+                        j += 1;
+                    }
+                }
+                out.tokens.push(Token {
+                    line: tok_line,
+                    tok: Tok::Str(cs[content_start..j.min(n)].iter().collect()),
+                });
+                i = (j + 1).min(n);
+                continue;
+            }
+            // b'x' byte literal.
+            let mut j = i + 2;
+            if j < n && cs[j] == '\\' {
+                j += 2;
+            } else {
+                j += 1;
+            }
+            while j < n && cs[j] != '\'' {
+                j += 1;
+            }
+            out.tokens.push(Token { line, tok: Tok::Char });
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Cooked strings.
+        if c == '"' {
+            let tok_line = line;
+            let mut j = i + 1;
+            let content_start = j;
+            while j < n {
+                if cs[j] == '\\' {
+                    j += 2;
+                } else if cs[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if cs[j] == '"' {
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            out.tokens.push(Token {
+                line: tok_line,
+                tok: Tok::Str(cs[content_start..j.min(n)].iter().collect()),
+            });
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && cs[i + 1] == '\\' {
+                // Escaped char literal: skip the escape pair, then to the
+                // closing quote.
+                let mut j = i + 3;
+                while j < n && cs[j] != '\'' {
+                    j += 1;
+                }
+                out.tokens.push(Token { line, tok: Tok::Char });
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 2 < n && cs[i + 2] == '\'' {
+                out.tokens.push(Token { line, tok: Tok::Char });
+                i += 3;
+                continue;
+            }
+            // Lifetime: consume ident chars after the quote.
+            let mut j = i + 1;
+            while j < n && is_ident_cont(cs[j]) {
+                j += 1;
+            }
+            out.tokens.push(Token { line, tok: Tok::Life });
+            i = j;
+            continue;
+        }
+        // Numbers.  `0..5` must lex as Num, '.', '.', Num — so '.' is only
+        // consumed when followed by a digit.
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n {
+                let d = cs[j];
+                if is_ident_cont(d) {
+                    j += 1;
+                } else if d == '.' && j + 1 < n && cs[j + 1].is_ascii_digit() {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Token { line, tok: Tok::Num });
+            i = j;
+            continue;
+        }
+        // Identifiers / keywords.
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(cs[j]) {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                line,
+                tok: Tok::Ident(cs[i..j].iter().collect()),
+            });
+            i = j;
+            continue;
+        }
+        // Everything else: single-char punctuation.
+        out.tokens.push(Token { line, tok: Tok::Punct(c) });
+        i += 1;
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(lexed: &Lexed) -> Vec<&str> {
+        lexed
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_are_not_tokens() {
+        let l = lex("// unsafe HashMap\nfn f() {}\n/* unwrap */ let x = 1;");
+        assert!(!idents(&l).contains(&"unsafe"));
+        assert!(!idents(&l).contains(&"HashMap"));
+        assert!(!idents(&l).contains(&"unwrap"));
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].start_line, 1);
+        assert_eq!(l.comments[1].start_line, 3);
+    }
+
+    #[test]
+    fn strings_keep_contents_and_hide_keywords() {
+        let l = lex(r#"let s = "unsafe zo2-tune-v1";"#);
+        assert!(!idents(&l).contains(&"unsafe"));
+        let strs: Vec<&str> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, vec!["unsafe zo2-tune-v1"]);
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let l = lex("let s = r#\"a \"quoted\" zo2-x-v2\"#; let t = r\"plain\";");
+        let strs: Vec<&str> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, vec!["a \"quoted\" zo2-x-v2", "plain"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let e = '\\n'; }");
+        let lifes = l.tokens.iter().filter(|t| t.tok == Tok::Life).count();
+        let chars = l.tokens.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!(lifes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn ranges_do_not_eat_dots() {
+        let l = lex("for i in 0..5 {}");
+        let dots = l
+            .tokens
+            .iter()
+            .filter(|t| t.tok == Tok::Punct('.'))
+            .count();
+        assert_eq!(dots, 2);
+        let nums = l.tokens.iter().filter(|t| t.tok == Tok::Num).count();
+        assert_eq!(nums, 2);
+    }
+
+    #[test]
+    fn multiline_block_comment_line_tracking() {
+        let l = lex("/* a\n b\n c */\nlet x = 1;");
+        assert_eq!(l.comments[0].start_line, 1);
+        assert_eq!(l.comments[0].end_line, 3);
+        // `let` lands on line 4.
+        assert_eq!(l.tokens[0].line, 4);
+    }
+
+    #[test]
+    fn line_numbers_across_strings() {
+        let l = lex("let a = \"x\ny\";\nlet b = 1;");
+        // `b` is on line 3 (string spans lines 1-2).
+        let b = l
+            .tokens
+            .iter()
+            .find(|t| t.tok == Tok::Ident("b".into()))
+            .unwrap();
+        assert_eq!(b.line, 3);
+    }
+}

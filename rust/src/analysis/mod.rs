@@ -1,0 +1,310 @@
+//! `zo2 lint` — the repo-native static-analysis pass.
+//!
+//! This crate's correctness story rests on contracts that rustc cannot
+//! check: schedules and reports must be byte-deterministic (golden-file
+//! freezes diff them), wall-clock time must never leak into a committed
+//! trajectory, CLI-reachable paths must fail with checked errors, every
+//! `unsafe` must carry its safety argument, and schema version strings
+//! must have exactly one spelling.  `zo2 lint` machine-checks all of them:
+//!
+//! * a hand-rolled lexer ([`lexer`]) tokenises each source file
+//!   (comment-, string- and raw-string-aware — no external parser);
+//! * a rule engine ([`rules`]) walks the token stream with five rules and
+//!   an inline-waiver protocol (`// zo2-lint: allow(<rule>): <reason>`);
+//! * a semantic pass ([`crate::sched::validate_plan`]) re-checks built
+//!   scheduling DAGs against the dependency contract — run on every plan
+//!   in debug builds, and swept over a policy grid by `zo2 lint --plans`.
+//!
+//! The report serialises as deterministic `zo2-lint-v1` JSON (sorted keys,
+//! sorted findings), so two runs over the same tree are byte-identical and
+//! CI can archive and diff them.  The CLI gate exits nonzero on any
+//! unwaived finding.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub use crate::util::schema::LINT_SCHEMA;
+pub use rules::{lint_source, FileReport, Finding, UnsafeSite, Waiver, RULES};
+
+/// Result of the `--plans` semantic sweep: how many built plans were
+/// checked against [`crate::sched::validate_plan`], and every violation.
+#[derive(Debug, Clone, Default)]
+pub struct PlanSummary {
+    pub checked: usize,
+    pub violations: Vec<String>,
+}
+
+/// Aggregated lint results over a source tree.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub waivers: Vec<Waiver>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    pub plans: Option<PlanSummary>,
+}
+
+impl LintReport {
+    /// Findings not covered by a waiver — the gate count.
+    pub fn unwaived(&self) -> usize {
+        self.findings.iter().filter(|f| !f.waived).count()
+    }
+
+    /// Unsafe sites still missing a safety comment.
+    pub fn undocumented_unsafe(&self) -> usize {
+        self.unsafe_sites.iter().filter(|s| !s.documented).count()
+    }
+
+    /// Plan violations found by the `--plans` sweep (0 when not run).
+    pub fn plan_violations(&self) -> usize {
+        self.plans.as_ref().map_or(0, |p| p.violations.len())
+    }
+
+    /// The deterministic `zo2-lint-v1` report document.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Str(LINT_SCHEMA.to_string()));
+        root.insert("files_scanned".to_string(), Json::Num(self.files_scanned as f64));
+
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut m = BTreeMap::new();
+                m.insert("rule".to_string(), Json::Str(f.rule.to_string()));
+                m.insert("file".to_string(), Json::Str(f.file.clone()));
+                m.insert("line".to_string(), Json::Num(f.line as f64));
+                m.insert("message".to_string(), Json::Str(f.message.clone()));
+                m.insert("waived".to_string(), Json::Bool(f.waived));
+                if let Some(r) = &f.waiver_reason {
+                    m.insert("waiver_reason".to_string(), Json::Str(r.clone()));
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("findings".to_string(), Json::Arr(findings));
+
+        let waivers: Vec<Json> = self
+            .waivers
+            .iter()
+            .map(|w| {
+                let mut m = BTreeMap::new();
+                m.insert("file".to_string(), Json::Str(w.file.clone()));
+                m.insert("line".to_string(), Json::Num(w.line as f64));
+                m.insert("rule".to_string(), Json::Str(w.rule.clone()));
+                m.insert("reason".to_string(), Json::Str(w.reason.clone()));
+                m.insert("file_level".to_string(), Json::Bool(w.file_level));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("waivers".to_string(), Json::Arr(waivers));
+
+        let inventory: Vec<Json> = self
+            .unsafe_sites
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("file".to_string(), Json::Str(s.file.clone()));
+                m.insert("line".to_string(), Json::Num(s.line as f64));
+                m.insert("context".to_string(), Json::Str(s.context.clone()));
+                m.insert("documented".to_string(), Json::Bool(s.documented));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("unsafe_inventory".to_string(), Json::Arr(inventory));
+
+        if let Some(p) = &self.plans {
+            let mut m = BTreeMap::new();
+            m.insert("checked".to_string(), Json::Num(p.checked as f64));
+            m.insert(
+                "violations".to_string(),
+                Json::Arr(p.violations.iter().map(|v| Json::Str(v.clone())).collect()),
+            );
+            root.insert("plans".to_string(), Json::Obj(m));
+        }
+
+        let mut summary = BTreeMap::new();
+        summary.insert("findings".to_string(), Json::Num(self.findings.len() as f64));
+        summary.insert("unwaived".to_string(), Json::Num(self.unwaived() as f64));
+        summary.insert("waivers".to_string(), Json::Num(self.waivers.len() as f64));
+        summary.insert("unsafe_sites".to_string(), Json::Num(self.unsafe_sites.len() as f64));
+        summary.insert(
+            "undocumented_unsafe".to_string(),
+            Json::Num(self.undocumented_unsafe() as f64),
+        );
+        summary.insert("plan_violations".to_string(), Json::Num(self.plan_violations() as f64));
+        root.insert("summary".to_string(), Json::Obj(summary));
+
+        Json::Obj(root)
+    }
+
+    /// Pretty-printed report (what `--json` writes) — deterministic: keys
+    /// are BTreeMap-ordered and every list is sorted.
+    pub fn render(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+}
+
+/// Lint every `.rs` file under `src_root` (recursive, sorted walk).
+pub fn run_lint(src_root: &Path) -> Result<LintReport> {
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    collect_rs(src_root, src_root, &mut files)
+        .with_context(|| format!("scanning {}", src_root.display()))?;
+    files.sort();
+    let mut rep = LintReport { files_scanned: files.len(), ..LintReport::default() };
+    for (label, path) in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let fr = rules::lint_source(label, &text);
+        rep.findings.extend(fr.findings);
+        rep.waivers.extend(fr.waivers);
+        rep.unsafe_sites.extend(fr.unsafe_sites);
+    }
+    rep.findings
+        .sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    rep.waivers.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    rep.unsafe_sites.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    Ok(rep)
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<(String, PathBuf)>) -> Result<()> {
+    let mut entries: Vec<std::fs::DirEntry> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(root, &p, out)?;
+        } else if p.extension().and_then(|s| s.to_str()) == Some("rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(p.as_path())
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, p));
+        }
+    }
+    Ok(())
+}
+
+/// The `--plans` semantic sweep: build the scheduling DAG for a grid of
+/// policies × shard specs (ablations, tiering, spill placements, slot and
+/// window depths, microbatching, per-partition tiers, weighted owners) and
+/// check every one against [`crate::sched::validate_plan`].
+pub fn lint_plans() -> PlanSummary {
+    use crate::sched::{validate_plan, Policy, SpillPlacement, Task};
+    use crate::shard::{
+        build_sharded_plan, build_sharded_plan_tiered, weighted_contiguous_owners, DeviceTier,
+        ShardLayout, ShardSpec,
+    };
+
+    let n_blocks = 8usize;
+    let steps = 2usize;
+    let mut checked = 0usize;
+    let mut violations: Vec<String> = Vec::new();
+    let mut check = |name: String, tasks: &[Task], policy: &Policy, dram: Option<&[usize]>| {
+        checked += 1;
+        if let Err(errs) = validate_plan(tasks, policy, dram) {
+            for e in errs.into_iter().take(8) {
+                violations.push(format!("{name}: {e}"));
+            }
+        }
+    };
+
+    let policies = [
+        Policy::default(),
+        Policy::naive(),
+        Policy { reusable_mem: false, ..Policy::default() },
+        Policy { efficient_update: false, ..Policy::default() },
+        Policy { slots: 1, ..Policy::default() },
+        Policy { slots: 2, ..Policy::default() },
+        Policy::three_tier(3, 2),
+        Policy::three_tier(n_blocks, 1),
+        Policy { spill_placement: SpillPlacement::Interleaved, ..Policy::three_tier(4, 2) },
+        Policy { overlap: false, ..Policy::three_tier(5, 3) },
+        Policy { efficient_update: false, ..Policy::three_tier(4, 2) },
+    ];
+    let specs = [
+        ShardSpec::single(),
+        ShardSpec::pipeline(2, ShardLayout::Contiguous),
+        ShardSpec::pipeline(4, ShardLayout::Cyclic),
+        ShardSpec::pipeline_microbatched(2, ShardLayout::Contiguous, 4),
+        ShardSpec::pipeline_microbatched(4, ShardLayout::Cyclic, 3),
+        ShardSpec::data_parallel(2),
+        ShardSpec::data_parallel(4),
+    ];
+    for (pi, policy) in policies.iter().enumerate() {
+        for spec in &specs {
+            let tasks = build_sharded_plan(n_blocks, steps, *policy, spec);
+            let name = format!(
+                "policy{pi}/{}x{}m{}",
+                spec.strategy.name(),
+                spec.devices,
+                spec.microbatches
+            );
+            check(name, &tasks, policy, None);
+        }
+    }
+
+    // Per-partition tiers: each pipeline device spills through its own
+    // DRAM window depth.
+    let policy = Policy::three_tier(0, 4);
+    let spec = ShardSpec::pipeline(2, ShardLayout::Contiguous);
+    let tiers =
+        [DeviceTier { spilled: 3, dram_slots: 1 }, DeviceTier { spilled: 2, dram_slots: 3 }];
+    let tasks =
+        build_sharded_plan_tiered(n_blocks, steps, policy, &spec, Some(tiers.as_slice()), None);
+    let dram: Vec<usize> = tiers.iter().map(|t| t.dram_slots).collect();
+    check("tiered/pipelinex2".to_string(), &tasks, &policy, Some(dram.as_slice()));
+
+    // Weighted (bottleneck-aware) owner map.
+    let owners = weighted_contiguous_owners(n_blocks, &[2.0, 1.0]);
+    let wpolicy = Policy::default();
+    let tasks =
+        build_sharded_plan_tiered(n_blocks, steps, wpolicy, &spec, None, Some(owners.as_slice()));
+    check("weighted/pipelinex2".to_string(), &tasks, &wpolicy, None);
+
+    PlanSummary { checked, violations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_sweep_is_clean() {
+        let p = lint_plans();
+        assert!(p.checked >= 70, "grid shrank to {}", p.checked);
+        assert!(p.violations.is_empty(), "{:?}", p.violations);
+    }
+
+    #[test]
+    fn report_rendering_is_deterministic() {
+        let mut rep = LintReport::default();
+        let fr = rules::lint_source(
+            "zo/x.rs",
+            "fn f() { let t = std::time::Instant::now(); }\n",
+        );
+        rep.files_scanned = 1;
+        rep.findings.extend(fr.findings);
+        rep.waivers.extend(fr.waivers);
+        rep.unsafe_sites.extend(fr.unsafe_sites);
+        let a = rep.render();
+        let b = rep.clone().render();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).expect("report must parse");
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), LINT_SCHEMA);
+        assert_eq!(
+            parsed.get("summary").unwrap().get("unwaived").unwrap().as_usize().unwrap(),
+            1
+        );
+    }
+}

@@ -1,0 +1,672 @@
+//! The `zo2 lint` rule engine: five source rules over the token stream of
+//! [`super::lexer`], plus the inline waiver protocol.
+//!
+//! # Rules
+//!
+//! * `unsafe-needs-safety-comment` — every `unsafe` keyword (block, fn,
+//!   impl, trait) must carry a safety argument: a comment containing the
+//!   word "safety" on the same line or in the contiguous comment run above
+//!   it (attribute lines are skipped, so `// SAFETY:` above
+//!   `#[target_feature]` counts, as does a `/// # Safety` doc section).
+//!   Every site — documented or not — lands in the unsafe inventory.
+//! * `deterministic-collections` — no `HashMap`/`HashSet` in the modules
+//!   whose iteration order reaches plans, reports or golden files
+//!   (`sched/`, `shard/`, `tune/`, `telemetry/`, `dp/`, `costmodel/`);
+//!   `BTreeMap`/`BTreeSet` iterate canonically.
+//! * `no-wall-clock` — no `Instant::now()` / `SystemTime::now()` outside
+//!   `clock/`: wall-clock reads are nondeterminism on the committed
+//!   trajectory unless a waiver argues they are telemetry-only.
+//! * `no-panic-in-cli-planner` — no `.unwrap()` / `.expect()` / `panic!`
+//!   on CLI-reachable paths (`main.rs`, `tune/`): user errors surface as
+//!   checked `anyhow` errors, not panics.
+//! * `schema-version-literal` — every versioned schema string
+//!   (`zo2-*-vN`) is spelled exactly once, in `util/schema.rs`; all other
+//!   sites must route through those constants so readers and writers can
+//!   never drift apart.
+//!
+//! # Waivers
+//!
+//! A violation is acknowledged — not silenced — with an inline waiver that
+//! must argue *why* the site is sound:
+//!
+//! ```text
+//! // zo2-lint: allow(no-wall-clock): step-duration telemetry only
+//! ```
+//!
+//! covers findings of that rule on the comment's lines and the two lines
+//! after it; `allow-file(<rule>): <reason>` covers the whole file.  A
+//! waiver with an empty reason is ignored.  Waived findings stay in the
+//! report (marked, with the reason) — the waiver ledger is part of the
+//! audit, so `--json` consumers can diff it across revisions.
+
+use super::lexer::{lex, Lexed, Tok};
+
+pub const RULE_UNSAFE: &str = "unsafe-needs-safety-comment";
+pub const RULE_DET_COLLECTIONS: &str = "deterministic-collections";
+pub const RULE_WALL_CLOCK: &str = "no-wall-clock";
+pub const RULE_PANIC: &str = "no-panic-in-cli-planner";
+pub const RULE_SCHEMA: &str = "schema-version-literal";
+
+/// Every rule the engine knows, in report order.
+pub const RULES: &[&str] =
+    &[RULE_DET_COLLECTIONS, RULE_PANIC, RULE_SCHEMA, RULE_UNSAFE, RULE_WALL_CLOCK];
+
+/// Directories (relative to `src/`) whose collections must iterate in a
+/// canonical order: their outputs land in plans, tuning reports, traces and
+/// golden files.
+const DETERMINISTIC_DIRS: &[&str] =
+    &["costmodel/", "dp/", "sched/", "shard/", "telemetry/", "tune/"];
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    /// `true` when an inline or file-level waiver acknowledges this site.
+    pub waived: bool,
+    /// The waiver's stated reason, when waived.
+    pub waiver_reason: Option<String>,
+}
+
+/// One parsed waiver comment.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub file: String,
+    /// Line the waiver comment starts on.
+    pub line: usize,
+    /// Line the waiver comment ends on (inline waivers cover findings up to
+    /// two lines below this).
+    pub end_line: usize,
+    pub rule: String,
+    pub reason: String,
+    /// `allow-file` covers the whole file for `rule`.
+    pub file_level: bool,
+}
+
+/// One `unsafe` occurrence, for the audit inventory.
+#[derive(Debug, Clone)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: usize,
+    /// "unsafe block" / "unsafe fn" / "unsafe impl" / "unsafe trait".
+    pub context: String,
+    pub documented: bool,
+}
+
+/// Everything the engine extracted from one source file.
+#[derive(Debug, Clone, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub waivers: Vec<Waiver>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+}
+
+impl FileReport {
+    pub fn unwaived(&self) -> usize {
+        self.findings.iter().filter(|f| !f.waived).count()
+    }
+}
+
+/// Lint one source file.  `path` is the file's path relative to the source
+/// root with `/` separators (e.g. `sched/mod.rs`) — rule scoping keys on it.
+pub fn lint_source(path: &str, source: &str) -> FileReport {
+    let lexed = lex(source);
+    let ctx = FileCtx::new(&lexed);
+    let mut rep = FileReport {
+        waivers: parse_waivers(path, &lexed),
+        ..FileReport::default()
+    };
+    rule_unsafe(path, &lexed, &ctx, &mut rep);
+    rule_deterministic_collections(path, &lexed, &mut rep);
+    rule_wall_clock(path, &lexed, &ctx, &mut rep);
+    rule_panic(path, &lexed, &ctx, &mut rep);
+    rule_schema_literal(path, &lexed, &ctx, &mut rep);
+    apply_waivers(&mut rep);
+    rep.findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    rep
+}
+
+/// Per-file precomputation shared by the rules.
+struct FileCtx {
+    /// Lines whose first token is `#` (attribute lines — skipped when
+    /// walking upward looking for a safety comment).
+    attr_lines: std::collections::BTreeSet<usize>,
+    /// Line ranges (inclusive) of `#[cfg(test)]` items.
+    test_ranges: Vec<(usize, usize)>,
+}
+
+impl FileCtx {
+    fn new(lexed: &Lexed) -> Self {
+        let mut first_on_line: std::collections::BTreeMap<usize, &Tok> =
+            std::collections::BTreeMap::new();
+        for t in &lexed.tokens {
+            first_on_line.entry(t.line).or_insert(&t.tok);
+        }
+        let attr_lines = first_on_line
+            .iter()
+            .filter(|(_, tok)| matches!(tok, Tok::Punct('#')))
+            .map(|(&l, _)| l)
+            .collect();
+        Self { attr_lines, test_ranges: test_ranges(lexed) }
+    }
+
+    /// Is `line` inside a `#[cfg(test)]` item?
+    fn in_test(&self, line: usize) -> bool {
+        self.test_ranges.iter().any(|&(s, e)| s <= line && line <= e)
+    }
+}
+
+/// Line ranges of `#[cfg(test)]` items: the attribute, any further
+/// attributes, then the brace-matched body (or the item up to `;`).
+fn test_ranges(lexed: &Lexed) -> Vec<(usize, usize)> {
+    let t = &lexed.tokens;
+    let n = t.len();
+    let is = |k: usize, want: char| {
+        matches!(t.get(k).map(|x| &x.tok), Some(Tok::Punct(c)) if *c == want)
+    };
+    let is_ident = |k: usize, want: &str| {
+        matches!(t.get(k).map(|x| &x.tok), Some(Tok::Ident(s)) if s == want)
+    };
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k < n {
+        let hit = is(k, '#')
+            && is(k + 1, '[')
+            && is_ident(k + 2, "cfg")
+            && is(k + 3, '(')
+            && is_ident(k + 4, "test")
+            && is(k + 5, ')')
+            && is(k + 6, ']');
+        if !hit {
+            k += 1;
+            continue;
+        }
+        let start_line = t[k].line;
+        let mut j = k + 7;
+        // Skip any further attributes on the same item.
+        while j < n && is(j, '#') && is(j + 1, '[') {
+            let mut depth = 0usize;
+            let mut m = j + 1;
+            while m < n {
+                match t[m].tok {
+                    Tok::Punct('[') => depth += 1,
+                    Tok::Punct(']') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            m += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                m += 1;
+            }
+            j = m;
+        }
+        // The item body: brace-match the first `{`, or end at `;` for
+        // braceless items (`#[cfg(test)] use ...;`).
+        let mut end_line = start_line;
+        let mut m = j;
+        while m < n {
+            match t[m].tok {
+                Tok::Punct(';') => {
+                    end_line = t[m].line;
+                    m += 1;
+                    break;
+                }
+                Tok::Punct('{') => {
+                    let mut depth = 0usize;
+                    while m < n {
+                        match t[m].tok {
+                            Tok::Punct('{') => depth += 1,
+                            Tok::Punct('}') => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    end_line = t[m].line;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        m += 1;
+                    }
+                    m += 1;
+                    break;
+                }
+                _ => m += 1,
+            }
+        }
+        out.push((start_line, end_line));
+        k = m.max(k + 1);
+    }
+    out
+}
+
+/// Parse every waiver comment of the file.
+fn parse_waivers(path: &str, lexed: &Lexed) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for c in &lexed.comments {
+        let Some((rule, reason, file_level)) = parse_waiver_text(&c.text) else { continue };
+        out.push(Waiver {
+            file: path.to_string(),
+            line: c.start_line,
+            end_line: c.end_line,
+            rule,
+            reason,
+            file_level,
+        });
+    }
+    out
+}
+
+/// `zo2-lint: allow(<rule>): <reason>` / `zo2-lint: allow-file(<rule>):
+/// <reason>` anywhere inside a comment.  Returns `None` (waiver ignored)
+/// when the rule or the reason is empty — a waiver must argue its case.
+fn parse_waiver_text(text: &str) -> Option<(String, String, bool)> {
+    let pos = text.find("zo2-lint:")?;
+    let rest = text[pos + "zo2-lint:".len()..].trim_start();
+    let (file_level, rest) = if let Some(r) = rest.strip_prefix("allow-file(") {
+        (true, r)
+    } else if let Some(r) = rest.strip_prefix("allow(") {
+        (false, r)
+    } else {
+        return None;
+    };
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let after = rest[close + 1..].trim_start();
+    let reason_raw = after.strip_prefix(':')?;
+    let reason = reason_raw.trim().trim_end_matches("*/").trim().to_string();
+    if rule.is_empty() || reason.is_empty() {
+        return None;
+    }
+    Some((rule, reason, file_level))
+}
+
+/// Mark findings covered by a waiver: file-level waivers cover the whole
+/// file for their rule; inline waivers cover the comment's own lines plus
+/// the two lines after (comment directly above the site, or trailing on the
+/// same line).
+fn apply_waivers(rep: &mut FileReport) {
+    for f in &mut rep.findings {
+        for w in &rep.waivers {
+            if w.rule != f.rule {
+                continue;
+            }
+            let hit = w.file_level || (f.line >= w.line && f.line <= w.end_line + 2);
+            if hit {
+                f.waived = true;
+                f.waiver_reason = Some(w.reason.clone());
+                break;
+            }
+        }
+    }
+}
+
+fn push(rep: &mut FileReport, rule: &'static str, path: &str, line: usize, message: String) {
+    rep.findings.push(Finding {
+        rule,
+        file: path.to_string(),
+        line,
+        message,
+        waived: false,
+        waiver_reason: None,
+    });
+}
+
+fn has_safety_word(text: &str) -> bool {
+    text.to_lowercase().contains("safety")
+}
+
+/// `unsafe-needs-safety-comment` + the unsafe inventory.
+fn rule_unsafe(path: &str, lexed: &Lexed, ctx: &FileCtx, rep: &mut FileReport) {
+    for (k, t) in lexed.tokens.iter().enumerate() {
+        let Tok::Ident(name) = &t.tok else { continue };
+        if name != "unsafe" {
+            continue;
+        }
+        let context = match lexed.tokens.get(k + 1).map(|n| &n.tok) {
+            Some(Tok::Ident(s)) if s == "fn" => "unsafe fn",
+            Some(Tok::Ident(s)) if s == "impl" => "unsafe impl",
+            Some(Tok::Ident(s)) if s == "trait" => "unsafe trait",
+            Some(Tok::Punct('{')) => "unsafe block",
+            _ => "unsafe",
+        };
+        let documented = unsafe_documented(lexed, ctx, t.line);
+        rep.unsafe_sites.push(UnsafeSite {
+            file: path.to_string(),
+            line: t.line,
+            context: context.to_string(),
+            documented,
+        });
+        if !documented {
+            push(
+                rep,
+                RULE_UNSAFE,
+                path,
+                t.line,
+                format!("{context} without a safety comment (`// SAFETY: ...` or `# Safety`)"),
+            );
+        }
+    }
+}
+
+/// A site is documented if a comment mentioning "safety" sits on its line
+/// or in the contiguous comment run above it (attribute lines skipped).
+fn unsafe_documented(lexed: &Lexed, ctx: &FileCtx, line: usize) -> bool {
+    if lexed.comments_covering(line).any(|c| has_safety_word(&c.text)) {
+        return true;
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        if ctx.attr_lines.contains(&l) {
+            l -= 1;
+            continue;
+        }
+        if let Some(c) = lexed.comments.iter().find(|c| c.start_line <= l && l <= c.end_line) {
+            if has_safety_word(&c.text) {
+                return true;
+            }
+            if c.start_line == 0 || c.start_line == 1 {
+                return false;
+            }
+            l = c.start_line - 1;
+            continue;
+        }
+        // Code or blank line: the comment run (if any) ended.
+        return false;
+    }
+    false
+}
+
+/// `deterministic-collections`.
+fn rule_deterministic_collections(path: &str, lexed: &Lexed, rep: &mut FileReport) {
+    if !DETERMINISTIC_DIRS.iter().any(|d| path.starts_with(d)) {
+        return;
+    }
+    for t in &lexed.tokens {
+        let Tok::Ident(name) = &t.tok else { continue };
+        if name == "HashMap" || name == "HashSet" {
+            push(
+                rep,
+                RULE_DET_COLLECTIONS,
+                path,
+                t.line,
+                format!("{name} in a determinism-critical module; use the BTree equivalent"),
+            );
+        }
+    }
+}
+
+/// `no-wall-clock`: `Instant::now` / `SystemTime::now` outside `clock/`.
+fn rule_wall_clock(path: &str, lexed: &Lexed, ctx: &FileCtx, rep: &mut FileReport) {
+    if path.starts_with("clock/") {
+        return;
+    }
+    let toks = &lexed.tokens;
+    for k in 0..toks.len() {
+        let Tok::Ident(name) = &toks[k].tok else { continue };
+        if name != "Instant" && name != "SystemTime" {
+            continue;
+        }
+        let call = matches!(toks.get(k + 1).map(|t| &t.tok), Some(Tok::Punct(':')))
+            && matches!(toks.get(k + 2).map(|t| &t.tok), Some(Tok::Punct(':')))
+            && matches!(toks.get(k + 3).map(|t| &t.tok), Some(Tok::Ident(s)) if s == "now");
+        if call && !ctx.in_test(toks[k].line) {
+            push(
+                rep,
+                RULE_WALL_CLOCK,
+                path,
+                toks[k].line,
+                format!("{name}::now outside clock/ (wall-clock nondeterminism)"),
+            );
+        }
+    }
+}
+
+/// `no-panic-in-cli-planner`: `.unwrap()` / `.expect()` / `panic!` on
+/// CLI-reachable paths.
+fn rule_panic(path: &str, lexed: &Lexed, ctx: &FileCtx, rep: &mut FileReport) {
+    let in_scope = path == "main.rs" || path.starts_with("tune/");
+    if !in_scope {
+        return;
+    }
+    let toks = &lexed.tokens;
+    for k in 0..toks.len() {
+        let Tok::Ident(name) = &toks[k].tok else { continue };
+        if ctx.in_test(toks[k].line) {
+            continue;
+        }
+        let dotted = k > 0 && matches!(&toks[k - 1].tok, Tok::Punct('.'));
+        if dotted && (name == "unwrap" || name == "expect") {
+            push(
+                rep,
+                RULE_PANIC,
+                path,
+                toks[k].line,
+                format!(".{name}() on a CLI-reachable path; return a checked error instead"),
+            );
+        }
+        if name == "panic" && matches!(toks.get(k + 1).map(|t| &t.tok), Some(Tok::Punct('!'))) {
+            push(
+                rep,
+                RULE_PANIC,
+                path,
+                toks[k].line,
+                "panic! on a CLI-reachable path; return a checked error instead".to_string(),
+            );
+        }
+    }
+}
+
+/// `schema-version-literal`: versioned `zo2-*-vN` strings outside
+/// `util/schema.rs`.
+fn rule_schema_literal(path: &str, lexed: &Lexed, ctx: &FileCtx, rep: &mut FileReport) {
+    if path == "util/schema.rs" {
+        return;
+    }
+    for t in &lexed.tokens {
+        let Tok::Str(s) = &t.tok else { continue };
+        if ctx.in_test(t.line) {
+            continue;
+        }
+        if let Some(lit) = find_schema_literal(s) {
+            push(
+                rep,
+                RULE_SCHEMA,
+                path,
+                t.line,
+                format!("schema literal \"{lit}\" inline; use the util::schema constant"),
+            );
+        }
+    }
+}
+
+/// First `zo2-...-vN` schema-version literal embedded in `s`, if any.
+fn find_schema_literal(s: &str) -> Option<String> {
+    let mut start = 0usize;
+    while let Some(off) = s[start..].find("zo2-") {
+        let p = start + off;
+        let run: String = s[p..]
+            .chars()
+            .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '-')
+            .collect();
+        if let Some(vpos) = run.rfind("-v") {
+            let tail = &run[vpos + 2..];
+            if !tail.is_empty() && tail.bytes().all(|b| b.is_ascii_digit()) {
+                return Some(run);
+            }
+        }
+        start = p + 4;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unwaived_rules(rep: &FileReport) -> Vec<&'static str> {
+        rep.findings.iter().filter(|f| !f.waived).map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn undocumented_unsafe_fires_and_safety_comment_clears() {
+        let bad = "fn f() {\n    let x = unsafe { g() };\n}\n";
+        let rep = lint_source("memory/x.rs", bad);
+        assert_eq!(unwaived_rules(&rep), vec![RULE_UNSAFE]);
+        assert_eq!(rep.unsafe_sites.len(), 1);
+        assert!(!rep.unsafe_sites[0].documented);
+        assert_eq!(rep.unsafe_sites[0].context, "unsafe block");
+
+        let good = "fn f() {\n    // SAFETY: g touches only its own buffer.\n    \
+                    let x = unsafe { g() };\n}\n";
+        let rep = lint_source("memory/x.rs", good);
+        assert!(rep.findings.is_empty());
+        assert!(rep.unsafe_sites[0].documented);
+    }
+
+    #[test]
+    fn safety_comment_skips_attribute_lines_and_doc_sections() {
+        let src = "\
+/// Does vector things.
+// SAFETY: register-only; callers carry the target feature.
+#[inline]
+#[target_feature(enable = \"avx2\")]
+unsafe fn v() {}
+";
+        let rep = lint_source("simd/x.rs", src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        assert_eq!(rep.unsafe_sites[0].context, "unsafe fn");
+
+        let doc = "\
+/// Fills the buffer.
+///
+/// # Safety
+/// Caller guarantees `out` is 8-aligned.
+pub unsafe fn fill() {}
+";
+        let rep = lint_source("simd/x.rs", doc);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn hashmap_fires_only_in_deterministic_dirs() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(unwaived_rules(&lint_source("sched/x.rs", src)), vec![RULE_DET_COLLECTIONS]);
+        assert_eq!(unwaived_rules(&lint_source("dp/x.rs", src)), vec![RULE_DET_COLLECTIONS]);
+        assert!(lint_source("memory/x.rs", src).findings.is_empty());
+        // Mentions in comments and strings don't count.
+        let quoted = "// HashMap is banned here\nconst S: &str = \"HashMap\";\n";
+        assert!(lint_source("sched/x.rs", quoted).findings.is_empty());
+    }
+
+    #[test]
+    fn wall_clock_fires_outside_clock_and_respects_waivers() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(unwaived_rules(&lint_source("zo/x.rs", src)), vec![RULE_WALL_CLOCK]);
+        assert!(lint_source("clock/mod.rs", src).findings.is_empty());
+        // An Instant in type position is not a wall-clock read.
+        let ty = "struct S { t0: std::time::Instant }\n";
+        assert!(lint_source("zo/x.rs", ty).findings.is_empty());
+
+        let waived = "\
+fn f() {
+    // zo2-lint: allow(no-wall-clock): duration telemetry only
+    let t = std::time::Instant::now();
+}
+";
+        let rep = lint_source("zo/x.rs", waived);
+        assert_eq!(rep.findings.len(), 1);
+        assert!(rep.findings[0].waived);
+        assert_eq!(rep.findings[0].waiver_reason.as_deref(), Some("duration telemetry only"));
+        assert_eq!(rep.unwaived(), 0);
+    }
+
+    #[test]
+    fn file_level_waiver_covers_everything_and_empty_reason_is_ignored() {
+        let src = "\
+// zo2-lint: allow-file(no-wall-clock): deadline timers never feed results
+fn f() { let a = std::time::Instant::now(); }
+fn g() { let b = std::time::Instant::now(); }
+";
+        let rep = lint_source("dp/x.rs", src);
+        assert_eq!(rep.findings.len(), 2);
+        assert!(rep.findings.iter().all(|f| f.waived));
+
+        let empty = "\
+// zo2-lint: allow(no-wall-clock):
+fn f() { let a = std::time::Instant::now(); }
+";
+        let rep = lint_source("zo/x.rs", empty);
+        assert_eq!(rep.unwaived(), 1, "empty-reason waiver must not count");
+        assert!(rep.waivers.is_empty());
+    }
+
+    #[test]
+    fn panic_rule_scopes_to_cli_paths_and_skips_tests() {
+        let src = "fn f(v: Option<u32>) -> u32 { v.unwrap() }\n";
+        assert_eq!(unwaived_rules(&lint_source("main.rs", src)), vec![RULE_PANIC]);
+        assert_eq!(unwaived_rules(&lint_source("tune/mod.rs", src)), vec![RULE_PANIC]);
+        assert!(lint_source("zo/x.rs", src).findings.is_empty());
+
+        let kinds = "fn f() { x.expect(\"boom\"); panic!(\"no\"); }\n";
+        let rep = lint_source("main.rs", kinds);
+        assert_eq!(rep.findings.len(), 2);
+
+        let tested = "\
+fn ok() -> u32 { 1 }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { Some(1).unwrap(); panic!(\"fine in tests\"); }
+}
+";
+        assert!(lint_source("main.rs", tested).findings.is_empty());
+    }
+
+    #[test]
+    fn schema_literal_fires_outside_schema_rs() {
+        let src = "const S: &str = \"zo2-tune-v1\";\n";
+        assert_eq!(unwaived_rules(&lint_source("tune/mod.rs", src)), vec![RULE_SCHEMA]);
+        assert!(lint_source("util/schema.rs", src).findings.is_empty());
+        // Embedded in a larger string still fires; non-versioned zo2-
+        // strings (like the waiver marker itself) do not.
+        assert_eq!(
+            unwaived_rules(&lint_source("x.rs", "let s = \"schema is zo2-trace-v2 here\";\n")),
+            vec![RULE_SCHEMA]
+        );
+        assert!(lint_source("x.rs", "let s = \"zo2-lint: allow(x): y\";\n").findings.is_empty());
+        assert!(lint_source("x.rs", "let s = \"zo2-tune\";\n").findings.is_empty());
+    }
+
+    #[test]
+    fn findings_sort_by_line_then_rule() {
+        let src = "\
+use std::collections::HashMap;
+fn f() { let t = std::time::Instant::now(); }
+";
+        let rep = lint_source("sched/x.rs", src);
+        let lines: Vec<usize> = rep.findings.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![1, 2]);
+    }
+
+    #[test]
+    fn cfg_test_region_detection_handles_nested_braces() {
+        let src = "\
+fn live() { let t = std::time::Instant::now(); }
+#[cfg(test)]
+mod tests {
+    fn helper() { if true { { } } }
+    #[test]
+    fn t() { let t = std::time::Instant::now(); }
+}
+fn live2() { let t = std::time::Instant::now(); }
+";
+        let rep = lint_source("zo/x.rs", src);
+        let lines: Vec<usize> = rep.findings.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![1, 8], "test-region clock reads must be exempt");
+    }
+}

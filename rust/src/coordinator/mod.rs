@@ -256,6 +256,7 @@ pub fn train(cfg: &TrainConfig, verbose: bool) -> Result<TrainReport> {
     // end-to-end (each step's events are step-relative).
     let mut run_timeline =
         cfg.trace_out.as_ref().map(|_| (crate::telemetry::Timeline::new(), 0.0));
+    // zo2-lint: allow(no-wall-clock): tokens/sec telemetry only — reported, never fed back
     let t0 = std::time::Instant::now();
     let shards = engine.batches_per_step();
     for step in 0..cfg.steps {
@@ -358,7 +359,7 @@ pub struct ElasticTrainConfig {
 pub fn elastic_losses_json(outcome: &crate::dp::RunOutcome) -> String {
     use std::fmt::Write as _;
     let mut s = String::new();
-    s.push_str("{\n  \"schema\": \"zo2-dp-losses-v1\",\n");
+    let _ = writeln!(s, "{{\n  \"schema\": \"{}\",", crate::util::schema::DP_LOSSES_SCHEMA);
     let _ = writeln!(s, "  \"final_step\": {},", outcome.final_snap.step);
     let fnv = crate::dp::params_fingerprint(&outcome.final_snap.params);
     let _ = writeln!(s, "  \"final_params_fnv\": \"{fnv:#018x}\",");
@@ -388,6 +389,7 @@ pub fn train_elastic(cfg: &ElasticTrainConfig, verbose: bool) -> Result<crate::d
     if cfg.metrics_out.is_some() {
         crate::telemetry::metrics::global().reset();
     }
+    // zo2-lint: allow(no-wall-clock): run-duration telemetry for the log line only
     let t0 = std::time::Instant::now();
     let outcome = crate::dp::run_elastic(&cfg.run)?;
     let wall = t0.elapsed().as_secs_f64();

@@ -18,7 +18,7 @@ use crate::memory::{DiskBucket, DiskPool, TransferModel};
 use crate::precision::Codec;
 
 /// Schema tag written into the sidecar; bump on layout changes.
-pub const CKPT_SCHEMA: &str = "zo2-dp-ckpt-v1";
+pub use crate::util::schema::DP_CKPT_SCHEMA as CKPT_SCHEMA;
 
 fn meta_path(pool_path: &Path) -> std::path::PathBuf {
     let mut s = pool_path.as_os_str().to_os_string();

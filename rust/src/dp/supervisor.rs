@@ -17,6 +17,9 @@
 //! reassigned round-robin to the survivors. The run degrades gracefully to
 //! K=1 and only fails when no member is left and no joiner is due.
 
+// zo2-lint: allow-file(no-wall-clock): heartbeat/hello/ack deadlines and recovery
+// timing are inherently wall-clock; none of them feed the committed trajectory.
+
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 

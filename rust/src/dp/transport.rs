@@ -14,6 +14,9 @@
 //! the peer is gone for good — the supervisor maps the former to heartbeat
 //! misses and the latter to membership removal.
 
+// zo2-lint: allow-file(no-wall-clock): recv_timeout deadlines over real sockets
+// are wall-clock by nature; timeouts surface as `Ok(None)`, never as data.
+
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};

@@ -69,7 +69,13 @@ struct Job {
 /// the pointee outlives every dereference.
 struct RawFn(*const (dyn Fn(usize) + Sync));
 
+// SAFETY: the pointee is a `dyn Fn(usize) + Sync` borrowed by `run`, which
+// parks on the finish gate until `done == n_chunks` — so the closure
+// outlives every cross-thread access, and `Sync` makes the shared calls
+// sound.
 unsafe impl Send for RawFn {}
+// SAFETY: same invariant as `Send` above — `run` pins the closure for the
+// whole job and the erased target is `Sync`.
 unsafe impl Sync for RawFn {}
 
 struct Slot {
@@ -361,7 +367,9 @@ fn pin_current_thread(cpu: usize) {
     extern "C" {
         fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
     }
-    // pid 0 = the calling thread.
+    // SAFETY: plain syscall with pid 0 (= the calling thread) and a mask
+    // buffer of exactly `cpusetsize` bytes that outlives the call; the
+    // kernel only reads it, and a failure return is deliberately ignored.
     let _ = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
 }
 
@@ -374,7 +382,13 @@ fn pin_current_thread(_cpu: usize) {}
 /// disjoint by construction.
 pub(crate) struct SlicePtr<T>(*mut T);
 
+// SAFETY: the base pointer is only turned into element pointers via `at`,
+// whose callers take disjoint chunk-grid ranges of a slice that `run`
+// keeps mutably borrowed for the whole job; `T: Send` lets those disjoint
+// views move across worker threads.
 unsafe impl<T: Send> Send for SlicePtr<T> {}
+// SAFETY: workers never alias an index (the chunk grid partitions the
+// slice), so sharing `&SlicePtr` across threads is sound for `T: Send`.
 unsafe impl<T: Send> Sync for SlicePtr<T> {}
 
 impl<T> SlicePtr<T> {

@@ -66,7 +66,13 @@
 //!   time as the objective, and a replayable `zo2-tune-v1` report.
 //! * [`runtime`] — PJRT client, artifact manifests, executable cache.
 //! * [`coordinator`] — the trainer: data, train/eval loops, metrics.
+//! * [`analysis`] — `zo2 lint`: the repo-native static-analysis pass that
+//!   machine-checks the determinism, panic-freedom, unsafe-audit and
+//!   schema-literal contracts (five token-level rules with an inline
+//!   waiver protocol) and re-validates built scheduling DAGs against the
+//!   dependency rules ([`sched::validate_plan`], `--plans`).
 
+pub mod analysis;
 pub mod baselines;
 pub mod clock;
 pub mod coordinator;

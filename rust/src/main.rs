@@ -13,6 +13,9 @@
 //!              fault schedules, checkpoints — see README "Fault tolerance")
 //!   dp-worker  internal: one DP worker process (spawned by `dp` with
 //!              `--dp-processes`)
+//!   lint       repo-native static analysis: the determinism, panic-freedom,
+//!              unsafe-audit and schema-literal rules plus the scheduling-DAG
+//!              validator (`--plans`) — exits nonzero on unwaived findings
 //!
 //! `train` and `simulate` accept `--trace-out FILE.json` (Chrome
 //! trace-event JSON, openable in chrome://tracing or ui.perfetto.dev) and
@@ -55,8 +58,15 @@ use zo2::zo::{RunMode, UpdateSite, ZoConfig};
 
 /// Flags that never take a value (so `zo2 run --timeline cfg.json` keeps
 /// `cfg.json` positional — see `util::cli`).
-const BOOL_FLAGS: &[&str] =
-    &["timeline", "no-reusable-mem", "no-efficient-update", "resume", "dp-processes", "host-pin"];
+const BOOL_FLAGS: &[&str] = &[
+    "timeline",
+    "no-reusable-mem",
+    "no-efficient-update",
+    "resume",
+    "dp-processes",
+    "host-pin",
+    "plans",
+];
 
 /// Apply the process-wide host-kernel switches (`--host-simd`,
 /// `--disk-uring`) before any subcommand builds an engine.  Both default to
@@ -96,9 +106,10 @@ fn main() -> Result<()> {
         Some("report") => cmd_report(&args),
         Some("dp") => cmd_dp(&args),
         Some("dp-worker") => cmd_dp_worker(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             eprintln!(
-                "usage: zo2 <train|simulate|tune|memory|info|report> [--config tiny] [--engine zo2|mezo]\n\
+                "usage: zo2 <train|simulate|tune|memory|info|report|lint> [--config tiny] [--engine zo2|mezo]\n\
                  \x20      [--steps N] [--lr F] [--eps F] [--seed N] [--wire fp32|bf16|fp16|fp8]\n\
                  \x20      [--mode seq|overlap] [--model OPT-13B] [--compute fp32|tf32|fp16]\n\
                  \x20      [--tiering two|three] [--dram-budget GB[,GB,...]] [--dram-slots N]\n\
@@ -117,6 +128,7 @@ fn main() -> Result<()> {
                  \x20      [--tune-layouts contiguous,cyclic,weighted] [--tune-spill trailing,...]\n\
                  \x20  simulate|train --config tuned.json   (replay a tune report's best flags)\n\
                  \x20  report --sim sim_trace.json --measured run_trace.json [--out drift.json]\n\
+                 \x20  lint [--src DIR] [--json REPORT.json] [--plans]\n\
                  \x20  dp [--dp-transport chan|unix[:/path]|tcp[:host:port]] [--dp-workers K]\n\
                  \x20      [--dp-shards S] [--steps N] [--fault-schedule SPEC|seeded:N|none]\n\
                  \x20      [--checkpoint FILE.pool] [--checkpoint-every N] [--resume]\n\
@@ -980,6 +992,54 @@ fn cmd_report(args: &Args) -> Result<()> {
         println!("wrote drift report {out}");
     } else {
         println!("{}", rep.to_string_pretty());
+    }
+    Ok(())
+}
+
+/// `zo2 lint [--src DIR] [--json FILE] [--plans]` — the repo-native
+/// static-analysis pass (see [`zo2::analysis`]).  Prints every unwaived
+/// finding, optionally writes the deterministic `zo2-lint-v1` report, and
+/// exits nonzero whenever an unwaived finding or a plan violation exists —
+/// that nonzero exit is the CI gate.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let src = args.get_or("src", "src");
+    let mut rep = zo2::analysis::run_lint(std::path::Path::new(&src))?;
+    if args.get_bool("plans") {
+        rep.plans = Some(zo2::analysis::lint_plans());
+    }
+
+    for f in rep.findings.iter().filter(|f| !f.waived) {
+        eprintln!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+    }
+    if let Some(p) = &rep.plans {
+        for v in &p.violations {
+            eprintln!("plan: {v}");
+        }
+    }
+
+    println!(
+        "lint: {} file(s), {} finding(s) ({} unwaived), {} waiver(s), {} unsafe site(s) \
+         ({} undocumented)",
+        rep.files_scanned,
+        rep.findings.len(),
+        rep.unwaived(),
+        rep.waivers.len(),
+        rep.unsafe_sites.len(),
+        rep.undocumented_unsafe(),
+    );
+    if let Some(p) = &rep.plans {
+        println!("plans: {} checked, {} violation(s)", p.checked, p.violations.len());
+    }
+
+    if let Some(out) = args.get("json") {
+        std::fs::write(out, rep.render())
+            .map_err(|e| anyhow::anyhow!("writing lint report {out}: {e}"))?;
+        println!("wrote lint report {out}");
+    }
+
+    let bad = rep.unwaived() + rep.plan_violations();
+    if bad > 0 {
+        bail!("lint: {bad} unwaived finding(s) / plan violation(s)");
     }
     Ok(())
 }

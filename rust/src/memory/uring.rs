@@ -194,6 +194,8 @@ impl UringReader {
         let sq_ptr = match map(sq_map_len, IORING_OFF_SQ_RING) {
             Ok(p) => p,
             Err(e) => {
+                // SAFETY: fd came from io_uring_setup above and nothing else
+                // owns it yet; closing it on the error path is the only use.
                 unsafe { close(fd) };
                 return Err(e);
             }
@@ -204,6 +206,8 @@ impl UringReader {
             match map(cq_map_len, IORING_OFF_CQ_RING) {
                 Ok(p) => p,
                 Err(e) => {
+                    // SAFETY: undoing exactly what succeeded so far — the SQ
+                    // mapping of sq_map_len bytes and the setup fd.
                     unsafe {
                         munmap(sq_ptr, sq_map_len);
                         close(fd);
@@ -216,6 +220,8 @@ impl UringReader {
         let sqes = match map(sqes_len, IORING_OFF_SQES) {
             Ok(p) => p as *mut Sqe,
             Err(e) => {
+                // SAFETY: undoing exactly the mappings made above (CQ only
+                // when it was a second mapping) plus the setup fd.
                 unsafe {
                     munmap(sq_ptr, sq_map_len);
                     if !single_mmap {

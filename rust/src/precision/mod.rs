@@ -81,6 +81,10 @@ impl Codec {
         match self {
             Codec::F32 => {
                 // Identity format: single memcpy (hot offload path).
+                // SAFETY: reinterpreting `src` as bytes is valid for any f32
+                // payload; the assert above pins `out.len()` to exactly
+                // `src.len() * 4`, and `src`/`out` are distinct borrowed
+                // slices, so the copy is in-bounds and non-overlapping.
                 unsafe {
                     std::ptr::copy_nonoverlapping(
                         src.as_ptr() as *const u8,
@@ -127,6 +131,11 @@ impl Codec {
         match self {
             Codec::F32 => {
                 // Identity format: single memcpy (hot upload path).
+                // SAFETY: every 4-byte pattern is a valid f32, so filling
+                // `out` bytewise is sound; the assert above pins `src.len()`
+                // to exactly `out.len() * 4`, and `src`/`out` are distinct
+                // borrowed slices, so the copy is in-bounds and
+                // non-overlapping.
                 unsafe {
                     std::ptr::copy_nonoverlapping(
                         src.as_ptr(),

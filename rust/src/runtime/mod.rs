@@ -15,7 +15,7 @@ mod manifest;
 pub use manifest::{BucketSpec, Manifest, ModelDims, ParamEntry};
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
@@ -32,7 +32,7 @@ pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    exes: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
 }
 
 impl Runtime {
@@ -42,7 +42,7 @@ impl Runtime {
             .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
         let manifest = Manifest::load(&dir.join("manifest.json"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        Ok(Self { client, dir: dir.to_path_buf(), manifest, exes: RefCell::new(HashMap::new()) })
+        Ok(Self { client, dir: dir.to_path_buf(), manifest, exes: RefCell::new(BTreeMap::new()) })
     }
 
     /// Load by config name from the repo artifacts dir.
@@ -109,6 +109,10 @@ impl Runtime {
 
 fn as_bytes<T>(data: &[T]) -> &[u8] {
     // Plain-old-data views for literal construction (single-copy path).
+    // SAFETY: every caller instantiates T with a plain-old-data scalar
+    // (f32/i32/u32), so all byte patterns are valid; the u8 view covers
+    // exactly `size_of_val(data)` bytes of the borrowed slice and inherits
+    // its lifetime, so it cannot outlive or exceed the allocation.
     unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
     }

@@ -10,7 +10,7 @@
 //! device 0's streams, a sharded plan ([`crate::shard`]) one set of streams
 //! per device plus the interconnect.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::{CostProvider, DeviceId, Policy, StreamId, StreamKind, Task, TaskKind};
 use crate::telemetry::{TraceEvent, Timeline};
@@ -25,7 +25,10 @@ pub struct Schedule {
     /// (steps − 1), falling back to makespan for single-step plans.
     pub steady_step_s: f64,
     /// Seconds each stream spent busy, keyed by device-indexed stream.
-    pub busy: HashMap<StreamId, f64>,
+    /// `BTreeMap` so every iteration (reports, traces, totals) walks
+    /// streams in one canonical order — the determinism contract the
+    /// `deterministic-collections` lint rule enforces for this module.
+    pub busy: BTreeMap<StreamId, f64>,
 }
 
 /// Shared 4-way diagnosis used at device and cluster level: interconnect
@@ -125,15 +128,15 @@ impl Schedule {
 pub fn simulate(tasks: &[Task], costs: &dyn CostProvider, policy: Policy) -> (Schedule, Timeline) {
     let mut start = vec![0.0f64; tasks.len()];
     let mut end = vec![0.0f64; tasks.len()];
-    let mut stream_free: HashMap<StreamId, f64> = HashMap::new();
-    let mut busy: HashMap<StreamId, f64> = HashMap::new();
+    let mut stream_free: BTreeMap<StreamId, f64> = BTreeMap::new();
+    let mut busy: BTreeMap<StreamId, f64> = BTreeMap::new();
     let mut timeline = Timeline::new();
     // Disk-read batching state, per read stream (one per device): length of
     // the current batch, and whether the previous task on the stream was
     // itself a read (batches never span interleaved foreign tasks, which
     // only occur in naive mode).
-    let mut read_batch_len: HashMap<StreamId, usize> = HashMap::new();
-    let mut last_was_read: HashMap<StreamId, bool> = HashMap::new();
+    let mut read_batch_len: BTreeMap<StreamId, usize> = BTreeMap::new();
+    let mut last_was_read: BTreeMap<StreamId, bool> = BTreeMap::new();
 
     for t in tasks {
         let stream_prev: f64 = *stream_free.get(&t.stream).unwrap_or(&0.0);

@@ -552,6 +552,381 @@ pub trait CostProvider {
     }
 }
 
+// --- plan validation ---------------------------------------------------------
+
+/// Orderable key for [`Module`] (which deliberately doesn't derive `Ord` —
+/// block indices and the Embed/Head sentinels are not one number line).
+fn mkey(m: Module) -> (u8, usize) {
+    match m {
+        Module::Embed => (0, 0),
+        Module::Block(i) => (1, i),
+        Module::Head => (2, 0),
+    }
+}
+
+/// Orderable key for [`TaskKind`] (map-key use only).
+fn kkey(k: TaskKind) -> u8 {
+    match k {
+        TaskKind::Upload => 0,
+        TaskKind::Compute => 1,
+        TaskKind::Offload => 2,
+        TaskKind::Update => 3,
+        TaskKind::DiskRead => 4,
+        TaskKind::DiskWrite => 5,
+        TaskKind::ActivationXfer => 6,
+        TaskKind::SeedBcast => 7,
+        TaskKind::GradReduce => 8,
+    }
+}
+
+/// Statically check a built plan against the scheduling contract this
+/// module's header documents — the semantic half of `zo2 lint`.
+///
+/// Checks, in order:
+///
+/// 1. **structure** — ids are the positions, deps are strictly ascending
+///    and backward-only (so the DAG is acyclic by construction);
+/// 2. **stream assignment** — overlapped plans put every task on its kind's
+///    stream, naive plans serialise everything onto the compute stream;
+/// 3. **per-stream FIFO** (rule 2) — every task depends on its stream
+///    predecessor;
+/// 4. **per-block chain** (rules 1 and the three-tier R→U / O→W links) —
+///    within one `(device, step, block)` round-slot, each upload feeds a
+///    compute, each first-microbatch compute consumes an upload, each
+///    offload follows a compute, each disk read feeds an upload and each
+///    disk write follows an offload;
+/// 5. **read-after-write** (rule 4) — a disk read of a bucket depends on
+///    the write that last updated it;
+/// 6. **slot ring** — the k-th upload on a device waits for the offload
+///    that freed its reusable-buffer slot (`policy.slots` earlier);
+/// 7. **DRAM window** (rule 3) — the k-th disk read waits for the write
+///    that freed its staging slot (that device's window depth earlier;
+///    `dram_slots_per_device` carries per-partition depths, `None` means
+///    the global `policy.dram_slots`);
+/// 8. **placement** — pipeline plans upload each block on exactly one
+///    device, DP plans (recognised by their seed broadcast) upload every
+///    block on every device, once per step (twice when the efficient-update
+///    ablation adds the standalone round), with identical per-replica spill
+///    sets;
+/// 9. **microbatches** — tags only on compute/activation tasks, one `of`
+///    per plan, indices in range and strictly increasing within a stream's
+///    per-module slice sequence.
+///
+/// Debug builds run this on every plan the builders emit (see
+/// [`crate::shard::build_sharded_plan_tiered`]); `zo2 lint --plans` sweeps
+/// it over a policy grid in release builds too.
+pub fn validate_plan(
+    tasks: &[Task],
+    policy: &Policy,
+    dram_slots_per_device: Option<&[usize]>,
+) -> Result<(), Vec<String>> {
+    use std::collections::BTreeSet;
+
+    let mut errs: Vec<String> = Vec::new();
+
+    // 1. Structure first: everything after indexes tasks by dep id.
+    for (i, t) in tasks.iter().enumerate() {
+        if t.id != i {
+            errs.push(format!("task at position {i} carries id {}", t.id));
+        }
+        let mut prev: Option<usize> = None;
+        for &d in &t.deps {
+            if d >= t.id {
+                errs.push(format!("task {}: dep {d} is not backward", t.id));
+            }
+            if let Some(p) = prev {
+                if d <= p {
+                    errs.push(format!("task {}: deps not strictly ascending", t.id));
+                    break;
+                }
+            }
+            prev = Some(d);
+        }
+    }
+    if !errs.is_empty() {
+        return Err(errs);
+    }
+    let has_dep = |t: &Task, id: usize| t.deps.binary_search(&id).is_ok();
+
+    // 2. Stream assignment.
+    for t in tasks {
+        let want = if policy.overlap { t.kind.stream_kind() } else { StreamKind::Compute };
+        if t.stream.kind != want {
+            errs.push(format!(
+                "task {} ({}): on stream {} but belongs on {}",
+                t.id,
+                t.kind.cat_name(),
+                t.stream.kind.name(),
+                want.name()
+            ));
+        }
+    }
+
+    // 3. Per-stream FIFO.
+    let mut last_on: BTreeMap<StreamId, usize> = BTreeMap::new();
+    for t in tasks {
+        if let Some(&p) = last_on.get(&t.stream) {
+            if !has_dep(t, p) {
+                errs.push(format!(
+                    "task {} ({}): skips its {} stream predecessor {p}",
+                    t.id,
+                    t.kind.cat_name(),
+                    t.stream.name()
+                ));
+            }
+        }
+        last_on.insert(t.stream, t.id);
+    }
+
+    // 4. Per-block chain, within each (device, step, block) round-slot.
+    #[derive(Default)]
+    struct Slot {
+        reads: Vec<usize>,
+        uploads: Vec<usize>,
+        computes: Vec<usize>,
+        offloads: Vec<usize>,
+        writes: Vec<usize>,
+    }
+    let mut slots: BTreeMap<(usize, usize, usize), Slot> = BTreeMap::new();
+    for t in tasks {
+        let bi = match t.module {
+            Module::Block(i) => i,
+            _ => continue,
+        };
+        let slot = slots.entry((t.device().0, t.step, bi)).or_default();
+        match t.kind {
+            TaskKind::DiskRead => slot.reads.push(t.id),
+            TaskKind::Upload => slot.uploads.push(t.id),
+            TaskKind::Compute | TaskKind::Update => slot.computes.push(t.id),
+            TaskKind::Offload => slot.offloads.push(t.id),
+            TaskKind::DiskWrite => slot.writes.push(t.id),
+            _ => {}
+        }
+    }
+    for ((dev, step, bi), slot) in &slots {
+        let ctx = format!("device {dev} step {step} block {bi}");
+        for &u in &slot.uploads {
+            if !slot.computes.iter().any(|&c| has_dep(&tasks[c], u)) {
+                errs.push(format!("{ctx}: upload {u} feeds no compute of its round"));
+            }
+        }
+        for &c in &slot.computes {
+            let t = &tasks[c];
+            if t.microbatch.map_or(0, |m| m.index) == 0
+                && !slot.uploads.iter().any(|&u| has_dep(t, u))
+            {
+                errs.push(format!("{ctx}: compute {c} runs without its round's upload"));
+            }
+        }
+        for &o in &slot.offloads {
+            if !slot.computes.iter().any(|&c| has_dep(&tasks[o], c)) {
+                errs.push(format!("{ctx}: offload {o} does not follow a compute"));
+            }
+        }
+        for &r in &slot.reads {
+            if !slot.uploads.iter().any(|&u| has_dep(&tasks[u], r)) {
+                errs.push(format!("{ctx}: disk read {r} feeds no upload"));
+            }
+        }
+        for &w in &slot.writes {
+            if !slot.offloads.iter().any(|&o| has_dep(&tasks[w], o)) {
+                errs.push(format!("{ctx}: disk write {w} does not follow an offload"));
+            }
+        }
+    }
+
+    // 5. Read-after-write, per (device, block) in emission order.
+    let mut last_w: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    for t in tasks {
+        let bi = match t.module {
+            Module::Block(i) => i,
+            _ => continue,
+        };
+        let key = (t.device().0, bi);
+        match t.kind {
+            TaskKind::DiskRead => {
+                if let Some(&w) = last_w.get(&key) {
+                    if !has_dep(t, w) {
+                        errs.push(format!(
+                            "task {}: disk read of block {bi} ignores its last write {w}",
+                            t.id
+                        ));
+                    }
+                }
+            }
+            TaskKind::DiskWrite => {
+                last_w.insert(key, t.id);
+            }
+            _ => {}
+        }
+    }
+
+    // 6 + 7. Resource rings: uploads/offloads and reads/writes strictly
+    // alternate per device (each round opens with one and closes with the
+    // other), so the k-th acquirer must wait on the (k - depth)-th releaser.
+    let mut ups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    let mut offs: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    let mut reads: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    let mut writes: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for t in tasks {
+        let d = t.device().0;
+        match t.kind {
+            TaskKind::Upload => ups.entry(d).or_default().push(t.id),
+            TaskKind::Offload => offs.entry(d).or_default().push(t.id),
+            TaskKind::DiskRead => reads.entry(d).or_default().push(t.id),
+            TaskKind::DiskWrite => writes.entry(d).or_default().push(t.id),
+            _ => {}
+        }
+    }
+    let n_slots = policy.slots.max(1);
+    for (dev, us) in &ups {
+        let os = offs.get(dev).map_or(&[][..], |v| v.as_slice());
+        for (k, &u) in us.iter().enumerate() {
+            if k < n_slots {
+                continue;
+            }
+            match os.get(k - n_slots) {
+                Some(&o) if has_dep(&tasks[u], o) => {}
+                _ => errs.push(format!(
+                    "device {dev}: upload {u} reuses slot {} without waiting for its offload",
+                    k % n_slots
+                )),
+            }
+        }
+    }
+    for (dev, rs) in &reads {
+        let depth = dram_slots_per_device
+            .and_then(|v| v.get(*dev).copied())
+            .unwrap_or(policy.dram_slots)
+            .max(1);
+        let ws = writes.get(dev).map_or(&[][..], |v| v.as_slice());
+        for (k, &r) in rs.iter().enumerate() {
+            if k < depth {
+                continue;
+            }
+            match ws.get(k - depth) {
+                Some(&w) if has_dep(&tasks[r], w) => {}
+                _ => errs.push(format!(
+                    "device {dev}: disk read {r} reuses DRAM slot {} without its write-back",
+                    k % depth
+                )),
+            }
+        }
+    }
+
+    // 8. Placement: DP plans (which open each step with a seed broadcast)
+    // replicate every block on every device; pipeline plans upload each
+    // block on exactly one.  Both move each block once per step — twice
+    // when the efficient-update ablation appends the standalone round.
+    let steps = tasks.iter().map(|t| t.step + 1).max().unwrap_or(0);
+    let rounds = if policy.efficient_update { 1 } else { 2 };
+    let is_dp = tasks.iter().any(|t| t.kind == TaskKind::SeedBcast);
+    let block_set: BTreeSet<usize> = tasks
+        .iter()
+        .filter_map(|t| match t.module {
+            Module::Block(i) => Some(i),
+            _ => None,
+        })
+        .collect();
+    if is_dp {
+        let dev_set: BTreeSet<usize> =
+            tasks.iter().filter(|t| t.kind == TaskKind::Compute).map(|t| t.device().0).collect();
+        for &d in &dev_set {
+            for &bi in &block_set {
+                for s in 0..steps {
+                    let got = slots.get(&(d, s, bi)).map_or(0, |sl| sl.uploads.len());
+                    if got != rounds {
+                        errs.push(format!(
+                            "device {d} step {s} block {bi}: {got} uploads, replica needs {rounds}"
+                        ));
+                    }
+                }
+            }
+        }
+        // Seed-synchronous replicas must agree on what spills: the on-disk
+        // set is a property of the (shared) model + budget, not the worker.
+        let mut spill_sets: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+        for &d in &dev_set {
+            spill_sets.insert(d, BTreeSet::new());
+        }
+        for t in tasks.iter().filter(|t| t.kind == TaskKind::DiskRead) {
+            if let Module::Block(bi) = t.module {
+                spill_sets.entry(t.device().0).or_default().insert(bi);
+            }
+        }
+        let mut iter = spill_sets.values();
+        if let Some(first) = iter.next() {
+            if iter.any(|s| s != first) {
+                errs.push("DP replicas disagree on the spill set".to_string());
+            }
+        }
+    } else {
+        for &bi in &block_set {
+            let devs: BTreeSet<usize> = tasks
+                .iter()
+                .filter(|t| t.kind == TaskKind::Upload && t.module == Module::Block(bi))
+                .map(|t| t.device().0)
+                .collect();
+            if devs.len() > 1 {
+                errs.push(format!(
+                    "block {bi} uploads on {} devices; pipeline owns it once",
+                    devs.len()
+                ));
+            }
+            if let Some(&d) = devs.iter().next() {
+                for s in 0..steps {
+                    let got = slots.get(&(d, s, bi)).map_or(0, |sl| sl.uploads.len());
+                    if got != rounds {
+                        errs.push(format!(
+                            "device {d} step {s} block {bi}: {got} uploads, expected {rounds}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // 9. Microbatch tags.
+    let mut of_seen: Option<usize> = None;
+    let mut mb_last: BTreeMap<(usize, usize, (u8, usize), u8), usize> = BTreeMap::new();
+    for t in tasks {
+        let Some(m) = t.microbatch else { continue };
+        if !matches!(t.kind, TaskKind::Compute | TaskKind::ActivationXfer) {
+            errs.push(format!(
+                "task {} ({}): only compute/activation tasks carry microbatch tags",
+                t.id,
+                t.kind.cat_name()
+            ));
+        }
+        match of_seen {
+            None => of_seen = Some(m.of),
+            Some(o) if o != m.of => {
+                errs.push(format!("task {}: microbatch of={} vs plan-wide of={o}", t.id, m.of));
+            }
+            _ => {}
+        }
+        if m.index >= m.of {
+            errs.push(format!("task {}: microbatch index {} out of {}", t.id, m.index, m.of));
+        }
+        let key = (t.device().0, t.step, mkey(t.module), kkey(t.kind));
+        if let Some(&prev) = mb_last.get(&key) {
+            if m.index <= prev {
+                errs.push(format!(
+                    "task {}: microbatch index {} does not advance past {prev}",
+                    t.id, m.index
+                ));
+            }
+        }
+        mb_last.insert(key, m.index);
+    }
+
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -534,7 +534,7 @@ pub fn build_sharded_plan_tiered(
         assert_eq!(o.len(), n_blocks, "owners must name every block's device");
         assert!(o.iter().all(|&d| d < devices), "owner out of range");
     }
-    match spec.strategy {
+    let tasks = match spec.strategy {
         ShardStrategy::Pipeline => pipeline_plan(
             n_blocks,
             steps,
@@ -546,7 +546,30 @@ pub fn build_sharded_plan_tiered(
             owners,
         ),
         ShardStrategy::DataParallel => dp_plan(n_blocks, steps, policy, devices),
+    };
+    // Debug builds statically re-check every plan the builders emit against
+    // the scheduling contract (linear in tasks + deps); release builds get
+    // the same sweep on demand via `zo2 lint --plans`.
+    #[cfg(debug_assertions)]
+    {
+        let dram: Option<Vec<usize>> = match spec.strategy {
+            // DP replicas always use the global window depth; per-device
+            // tiers only steer pipeline partitions.
+            ShardStrategy::Pipeline => {
+                tiers.map(|tv| tv.iter().map(|t| t.dram_slots).collect())
+            }
+            ShardStrategy::DataParallel => None,
+        };
+        if let Err(errs) = crate::sched::validate_plan(&tasks, &policy, dram.as_deref()) {
+            panic!(
+                "plan builder violated the scheduling contract ({} finding{}):\n{}",
+                errs.len(),
+                if errs.len() == 1 { "" } else { "s" },
+                errs.join("\n")
+            );
+        }
     }
+    tasks
 }
 
 fn spilled_count(policy: &Policy, n_blocks: usize) -> usize {

@@ -37,6 +37,8 @@ use crate::zo::AdamHp;
 
 /// `(a * b) mod 2^64` per lane: AVX2 has no 64-bit multiply, so assemble it
 /// from 32×32→64 partial products (the high×high term shifts out).
+// SAFETY: pure register arithmetic — no memory access; callers are
+// themselves `avx2` target-feature fns, so the intrinsics are available.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn mul64(a: __m256i, b: __m256i) -> __m256i {
@@ -49,6 +51,8 @@ unsafe fn mul64(a: __m256i, b: __m256i) -> __m256i {
 
 /// Four independent SplitMix64 finalisations — same constants and op order
 /// as the scalar `splitmix64`.
+// SAFETY: register-only; unsafe solely for the avx2 target-feature, which
+// every caller in this module already carries.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn splitmix64x4(x: __m256i) -> __m256i {
@@ -62,6 +66,8 @@ unsafe fn splitmix64x4(x: __m256i) -> __m256i {
 
 /// Exact u64-lane (< 2³²) → f64 conversion: OR the value into the mantissa
 /// of 2⁵² and subtract 2⁵² (both steps exact).
+// SAFETY: register-only bit manipulation; avx2 guaranteed by the callers'
+// own target-feature attributes.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn u32s_to_f64(v: __m256i) -> __m256d {
@@ -76,6 +82,7 @@ unsafe fn u32s_to_f64(v: __m256i) -> __m256d {
 
 /// Vector mirror of [`fastmath::ln`]: same decomposition, same constants,
 /// one vector instruction per scalar op.
+// SAFETY: register-only polynomial evaluation; avx2 guaranteed by callers.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn ln4(x: __m256d) -> __m256d {
@@ -113,6 +120,7 @@ unsafe fn ln4(x: __m256d) -> __m256d {
 
 /// Vector mirror of [`fastmath::sincos_2pi`].  Quadrant selection is
 /// blend + sign-bit XOR, both exact, so it equals the scalar `match`.
+// SAFETY: register-only polynomial evaluation; avx2 guaranteed by callers.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn sincos_2pi4(u: __m256d) -> (__m256d, __m256d) {
@@ -201,6 +209,8 @@ pub unsafe fn fill_gaussian(state: RngState, out: &mut [f32]) {
 
 /// Pack 8 u32 lanes (each ≤ 0xFFFF — saturation never fires) into 8 u16
 /// and store them little-endian at `dst`.
+// SAFETY: the single unaligned store writes exactly 16 bytes at `dst`;
+// callers pass pointers into an output slice with ≥ 16 bytes remaining.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn store_u16x8(v: __m256i, dst: *mut u8) {
@@ -293,6 +303,9 @@ pub unsafe fn encode_chunk(codec: Codec, src: &[f32], out: &mut [u8]) {
     }
 }
 
+// SAFETY: all loads/stores stay inside `src`/`out` — the vector loop stops
+// at the last full 8-lane group (n8 ≤ n, with `out` sized 2 bytes per
+// element by `encode_chunk`'s contract) and the scalar tail covers the rest.
 #[target_feature(enable = "avx2")]
 unsafe fn encode_bf16(src: &[f32], out: &mut [u8]) {
     let n = src.len();
@@ -318,6 +331,9 @@ unsafe fn encode_bf16(src: &[f32], out: &mut [u8]) {
     }
 }
 
+// SAFETY: same bounds discipline as `encode_bf16` (8-lane groups within
+// `src`, 16-byte stores within `out`, scalar tail); the gathers index the
+// 512-entry f16 class tables with a 9-bit class, which cannot overrun.
 #[target_feature(enable = "avx2")]
 unsafe fn encode_fp16(src: &[f32], out: &mut [u8]) {
     let t = precision::f16_enc_w();

@@ -24,7 +24,7 @@ use std::sync::{Mutex, OnceLock};
 use crate::util::json::Json;
 
 /// Schema tag written into every snapshot.
-pub const METRICS_SCHEMA: &str = "zo2-metrics-v1";
+pub use crate::util::schema::METRICS_SCHEMA;
 
 #[derive(Debug, Clone)]
 enum Value {

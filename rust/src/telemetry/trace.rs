@@ -21,10 +21,10 @@ use crate::telemetry::Timeline;
 use crate::util::json::Json;
 
 /// Schema tag embedded in every exported trace (under `otherData`).
-pub const TRACE_SCHEMA: &str = "zo2-trace-v1";
+pub use crate::util::schema::TRACE_SCHEMA;
 
 /// Schema tag of the drift-report JSON.
-pub const DRIFT_SCHEMA: &str = "zo2-drift-v1";
+pub use crate::util::schema::DRIFT_SCHEMA;
 
 /// `tid` used for stream names outside the fixed kind vocabulary.
 const TID_OTHER: usize = STREAM_KINDS.len();

@@ -40,7 +40,7 @@ use crate::shard::{
 use crate::util::json::Json;
 
 /// Schema tag of the tune report (`tuned.json`).
-pub const TUNE_SCHEMA: &str = "zo2-tune-v1";
+pub use crate::util::schema::TUNE_SCHEMA;
 
 /// Block placement choice as the CLI models it: the two [`ShardLayout`]s
 /// plus `weighted` (contiguous placement with the bottleneck-aware owner

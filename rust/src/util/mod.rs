@@ -3,6 +3,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod schema;
 pub mod stats;
 
 /// Release `Vec` capacity beyond 2× the live need — the scratch shrink

@@ -1,0 +1,32 @@
+//! Canonical schema-version tags for every JSON artifact the crate emits
+//! or parses.
+//!
+//! Each `zo2-*-vN` string names a frozen wire format: the tune report, the
+//! Chrome trace, the metrics snapshot, the drift report, the DP checkpoint
+//! sidecar, the DP loss trajectory, and the lint report.  This module is
+//! the **only** place those literals may appear — the
+//! `schema-version-literal` lint rule (see [`crate::analysis`]) flags the
+//! tag pattern anywhere else in `src/`, so an emit site and its parse site
+//! can never drift apart by one silently re-typed string.  Bump a tag here
+//! (and only here) when its format changes.
+
+/// Autotuner report (`zo2 tune --out`); replayable via `--config`.
+pub const TUNE_SCHEMA: &str = "zo2-tune-v1";
+
+/// Chrome-trace-event export (`--trace-out`), under `otherData`.
+pub const TRACE_SCHEMA: &str = "zo2-trace-v1";
+
+/// Labeled metrics snapshot (`--metrics-out`, bench calibration blocks).
+pub const METRICS_SCHEMA: &str = "zo2-metrics-v1";
+
+/// Predicted-vs-measured drift report (`zo2 report --out`).
+pub const DRIFT_SCHEMA: &str = "zo2-drift-v1";
+
+/// DP checkpoint sidecar (`<pool>.meta.json`).
+pub const DP_CKPT_SCHEMA: &str = "zo2-dp-ckpt-v1";
+
+/// Canonical DP loss trajectory (`zo2 dp --losses-out`), byte-comparable.
+pub const DP_LOSSES_SCHEMA: &str = "zo2-dp-losses-v1";
+
+/// Static-analysis report (`zo2 lint --json`).
+pub const LINT_SCHEMA: &str = "zo2-lint-v1";

@@ -65,6 +65,7 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Samples {
     }
     let mut s = Samples::new();
     for _ in 0..iters {
+        // zo2-lint: allow(no-wall-clock): bench timing is the whole point here
         let t = std::time::Instant::now();
         f();
         s.push(t.elapsed().as_secs_f64());

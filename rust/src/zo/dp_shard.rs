@@ -127,6 +127,7 @@ impl<W: DpWorker> DpSimShard<W> {
     /// Only when every worker fails does the step itself fail — and then
     /// without having delivered a partial update to anyone.
     pub fn train_step(&mut self, ids: &[i32]) -> Result<StepStats> {
+        // zo2-lint: allow(no-wall-clock): step-duration telemetry returned in StepStats
         let t0 = std::time::Instant::now();
         let s = self.shards;
         anyhow::ensure!(

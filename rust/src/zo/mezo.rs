@@ -82,6 +82,7 @@ impl MezoEngine {
 
     /// One Algorithm-1 iteration on a [B, T] batch of token ids.
     pub fn train_step(&mut self, ids: &[i32]) -> Result<StepStats> {
+        // zo2-lint: allow(no-wall-clock): step-duration telemetry returned in StepStats
         let t0 = std::time::Instant::now();
         let m = self.rt.manifest();
         let (b, t) = (m.config.batch as i64, m.config.seq_len as i64);

@@ -329,6 +329,7 @@ impl Zo2Engine {
 
     /// One Algorithm-2 iteration.
     pub fn train_step(&mut self, ids: &[i32]) -> Result<StepStats> {
+        // zo2-lint: allow(no-wall-clock): step-duration telemetry returned in StepStats
         let t0 = std::time::Instant::now();
         let m = self.rt.manifest();
         let (b, t) = (m.config.batch as i64, m.config.seq_len as i64);
@@ -398,6 +399,7 @@ impl Zo2Engine {
         // --- offloaded transformer blocks ---------------------------------
         let n_blocks = self.params.n_blocks();
         let mut timeline = Timeline::new();
+        // zo2-lint: allow(no-wall-clock): timeline event timestamps (trace export only)
         let wall0 = std::time::Instant::now();
 
         match self.opts.run_mode {
@@ -843,6 +845,7 @@ impl Zo2Engine {
                                 // Time blocked on a free DRAM-window slot:
                                 // the prefetcher's stall when write-backs
                                 // can't retire staged buckets fast enough.
+                                // zo2-lint: allow(no-wall-clock): stall-time metric, gated on metrics::enabled()
                                 let t_wait = crate::telemetry::metrics::enabled()
                                     .then(std::time::Instant::now);
                                 if rx_tok.recv().is_err() {

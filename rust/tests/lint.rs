@@ -1,0 +1,161 @@
+//! Integration tests for `zo2 lint` — the repo-native static-analysis pass.
+//!
+//! Three layers:
+//!
+//! 1. a fixture corpus exercising every rule's fire / scope / waive paths
+//!    through the public [`zo2::analysis::lint_source`] entry point;
+//! 2. the self-hosting gate — the shipped source tree must lint clean,
+//!    which is exactly what the CI `zo2 lint` step enforces;
+//! 3. byte-determinism of the rendered `zo2-lint-v1` report (two full
+//!    runs over the same tree serialise identically).
+
+use std::path::Path;
+
+use zo2::analysis::rules::{
+    RULE_DET_COLLECTIONS, RULE_PANIC, RULE_SCHEMA, RULE_UNSAFE, RULE_WALL_CLOCK,
+};
+use zo2::analysis::{lint_plans, lint_source, run_lint, LINT_SCHEMA};
+use zo2::util::json::Json;
+
+/// Distinct rules with at least one unwaived finding, in report order.
+fn rules_fired(path: &str, src: &str) -> Vec<&'static str> {
+    let mut fired: Vec<&'static str> =
+        lint_source(path, src).findings.iter().filter(|f| !f.waived).map(|f| f.rule).collect();
+    fired.dedup();
+    fired
+}
+
+#[test]
+fn unsafe_rule_fires_clears_and_waives() {
+    let bad = "pub fn read(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    assert_eq!(rules_fired("memory/x.rs", bad), vec![RULE_UNSAFE]);
+    let rep = lint_source("memory/x.rs", bad);
+    assert_eq!(rep.unsafe_sites.len(), 1);
+    assert!(!rep.unsafe_sites[0].documented);
+
+    let good = "pub fn read(p: *const u8) -> u8 {\n    \
+                // SAFETY: the caller guarantees `p` is valid for reads.\n    \
+                unsafe { *p }\n}\n";
+    assert!(rules_fired("memory/x.rs", good).is_empty());
+    assert!(lint_source("memory/x.rs", good).unsafe_sites[0].documented);
+
+    let waived = "// zo2-lint: allow(unsafe-needs-safety-comment): fixture for the waiver path\n\
+                  pub fn read(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let rep = lint_source("memory/x.rs", waived);
+    assert_eq!(rep.unwaived(), 0);
+    assert_eq!(rep.waivers.len(), 1);
+    // The waiver silences the finding but the inventory still lists the
+    // site as undocumented — waivers are not safety arguments.
+    assert!(!rep.unsafe_sites[0].documented);
+}
+
+#[test]
+fn deterministic_collections_rule_is_scoped() {
+    let src = "use std::collections::HashMap;\n\
+               pub fn f() -> HashMap<u32, u32> {\n    HashMap::new()\n}\n";
+    assert_eq!(rules_fired("sched/x.rs", src), vec![RULE_DET_COLLECTIONS]);
+    assert_eq!(rules_fired("tune/x.rs", src), vec![RULE_DET_COLLECTIONS]);
+    // Outside the determinism-audited directories the rule stays silent.
+    assert!(rules_fired("memory/x.rs", src).is_empty());
+
+    let btree = "use std::collections::BTreeMap;\n\
+                 pub fn f() -> BTreeMap<u32, u32> {\n    BTreeMap::new()\n}\n";
+    assert!(rules_fired("sched/x.rs", btree).is_empty());
+
+    let waived = "// zo2-lint: allow(deterministic-collections): order never observed here\n\
+                  use std::collections::HashSet;\n";
+    assert!(rules_fired("dp/x.rs", waived).is_empty());
+}
+
+#[test]
+fn wall_clock_rule_exempts_the_clock_module() {
+    let src = "pub fn stamp() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+    assert_eq!(rules_fired("telemetry/x.rs", src), vec![RULE_WALL_CLOCK]);
+    assert!(rules_fired("clock/mod.rs", src).is_empty());
+
+    let sys = "pub fn epoch() {\n    let _ = std::time::SystemTime::now();\n}\n";
+    assert_eq!(rules_fired("coordinator/x.rs", sys), vec![RULE_WALL_CLOCK]);
+
+    let waived = "pub fn stamp() -> std::time::Instant {\n    \
+                  // zo2-lint: allow(no-wall-clock): fixture; never feeds a trajectory\n    \
+                  std::time::Instant::now()\n}\n";
+    assert!(rules_fired("telemetry/x.rs", waived).is_empty());
+}
+
+#[test]
+fn panic_rule_covers_cli_and_planner_only() {
+    let src = "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n";
+    assert_eq!(rules_fired("main.rs", src), vec![RULE_PANIC]);
+    assert_eq!(rules_fired("tune/search.rs", src), vec![RULE_PANIC]);
+    // Library crates use assert!/panic! as contract checks — out of scope.
+    assert!(rules_fired("sched/mod.rs", src).is_empty());
+
+    let expl = "pub fn g() {\n    panic!(\"boom\");\n}\n";
+    assert_eq!(rules_fired("main.rs", expl), vec![RULE_PANIC]);
+
+    // Test modules may unwrap freely even inside the scoped files.
+    let tests = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+                 Some(1).unwrap();\n    }\n}\n";
+    assert!(rules_fired("main.rs", tests).is_empty());
+
+    let waived = "pub fn f(v: Option<u32>) -> u32 {\n    \
+                  // zo2-lint: allow(no-panic-in-cli-planner): invariant upheld by caller\n    \
+                  v.unwrap()\n}\n";
+    assert!(rules_fired("main.rs", waived).is_empty());
+}
+
+#[test]
+fn schema_literal_rule_pins_util_schema() {
+    let src = "pub const S: &str = \"zo2-tune-v1\";\n";
+    assert_eq!(rules_fired("tune/mod.rs", src), vec![RULE_SCHEMA]);
+    // The one authorised home for version literals.
+    assert!(rules_fired("util/schema.rs", src).is_empty());
+
+    // zo2-prefixed strings without a version suffix are fine anywhere.
+    let plain = "pub const S: &str = \"zo2-lint\";\n";
+    assert!(rules_fired("tune/mod.rs", plain).is_empty());
+
+    let waived = "// zo2-lint: allow(schema-version-literal): doc example, not a live literal\n\
+                  pub const S: &str = \"zo2-dp-ckpt-v1\";\n";
+    assert!(rules_fired("tune/mod.rs", waived).is_empty());
+}
+
+#[test]
+fn waivers_without_reasons_do_not_waive() {
+    let src = "// zo2-lint: allow(no-wall-clock):\n\
+               pub fn stamp() {\n    let _ = std::time::Instant::now();\n}\n";
+    let rep = lint_source("telemetry/x.rs", src);
+    assert_eq!(rep.unwaived(), 1, "a reason-less waiver must be ignored");
+    assert!(rep.waivers.is_empty());
+}
+
+#[test]
+fn shipped_source_tree_lints_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let rep = run_lint(&src).expect("lint walk over src/");
+    let loud: Vec<_> = rep.findings.iter().filter(|f| !f.waived).collect();
+    assert!(loud.is_empty(), "unwaived findings in the shipped tree: {loud:#?}");
+    let undoc: Vec<_> = rep.unsafe_sites.iter().filter(|s| !s.documented).collect();
+    assert!(undoc.is_empty(), "undocumented unsafe in the shipped tree: {undoc:#?}");
+    assert!(rep.files_scanned > 40, "walk found only {} files", rep.files_scanned);
+    // Every waiver in the tree must carry a reason (the parser enforces
+    // this, so an empty reason here means the parser regressed).
+    assert!(rep.waivers.iter().all(|w| !w.reason.is_empty()));
+}
+
+#[test]
+fn report_is_byte_deterministic() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut a = run_lint(&src).expect("first lint run");
+    a.plans = Some(lint_plans());
+    let mut b = run_lint(&src).expect("second lint run");
+    b.plans = Some(lint_plans());
+    let ra = a.render();
+    assert_eq!(ra, b.render(), "two lint runs must serialise byte-identically");
+
+    let doc = Json::parse(&ra).expect("report must be valid JSON");
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), LINT_SCHEMA);
+    let plans = doc.get("plans").unwrap();
+    assert!(plans.get("checked").unwrap().as_usize().unwrap() >= 70);
+    assert_eq!(plans.get("violations").unwrap().as_arr().unwrap().len(), 0);
+}

@@ -42,12 +42,12 @@ use zo2::model::opt_by_name;
 use zo2::precision::Codec;
 use zo2::rng::GaussianRng;
 use zo2::sched::{
-    build_plan, simulate, CostProvider, DeviceId, Module, Policy, SpillPlacement, StreamId,
-    StreamKind, Task, TaskKind, Tiering, STREAM_KINDS,
+    build_plan, simulate, validate_plan, CostProvider, DeviceId, Module, Policy, SpillPlacement,
+    StreamId, StreamKind, Task, TaskKind, Tiering, STREAM_KINDS,
 };
 use zo2::shard::{
-    block_owner, blocks_per_device, build_sharded_plan, build_sharded_plan_spilled, ShardLayout,
-    ShardSpec,
+    block_owner, blocks_per_device, build_sharded_plan, build_sharded_plan_spilled,
+    build_sharded_plan_tiered, DeviceTier, ShardLayout, ShardSpec,
 };
 use zo2::zo::{DpSimShard, DpWorker};
 
@@ -1292,4 +1292,121 @@ fn prop_three_tier_spill_monotone_in_budget_and_exact_fit_window_free() {
     assert_eq!(p.peaks.dram, exact, "exact fit must not reserve a window on top");
     let q = plan(exact - 1, 3, 4, SpillPlacement::Trailing);
     assert!(q.spilled_blocks > 0, "one byte under the exact fit must spill");
+}
+
+// --- static plan validation (`zo2 lint --plans` backbone, rules 17-19) --------
+
+#[test]
+fn validate_plan_accepts_every_randomly_built_plan() {
+    // Rule 17: the static checker accepts every plan the builders produce —
+    // 200 random policies (both tierings, random spills/windows/slots, both
+    // ablations) across single-device, sharded and microbatched builders.
+    // In debug builds the builders already self-check, so a false positive
+    // would panic inside `build_sharded_plan`; this test additionally pins
+    // the public entry point and the release-build behaviour.
+    let mut rng = GaussianRng::new(0x11A7, 17);
+    for case in 0..200 {
+        let (n, steps, _costs, policy) = rand_case(&mut rng);
+        let plan = build_plan(n, steps, policy);
+        if let Err(errs) = validate_plan(&plan, &policy, None) {
+            panic!("case {case}: build_plan plan rejected:\n{}", errs.join("\n"));
+        }
+
+        let spec = rand_spec(&mut rng);
+        let plan = build_sharded_plan(n, steps, policy, &spec);
+        if let Err(errs) = validate_plan(&plan, &policy, None) {
+            panic!("case {case} {spec:?}: sharded plan rejected:\n{}", errs.join("\n"));
+        }
+
+        let devices = [2usize, 4][rng.next_below(2) as usize];
+        let layout = [ShardLayout::Contiguous, ShardLayout::Cyclic][rng.next_below(2) as usize];
+        let m = [2usize, 3, 4, 8][rng.next_below(4) as usize];
+        let mspec = ShardSpec::pipeline_microbatched(devices, layout, m);
+        let plan = build_sharded_plan(n, steps, policy, &mspec);
+        if let Err(errs) = validate_plan(&plan, &policy, None) {
+            panic!("case {case} {mspec:?}: microbatched plan rejected:\n{}", errs.join("\n"));
+        }
+    }
+}
+
+#[test]
+fn validate_plan_accepts_the_golden_freeze_configurations() {
+    // Rule 18: the configurations frozen by tests/sched_golden_v1.rs (the
+    // single-device v1 plans and the M = 1 microbatched pipeline) must pass
+    // the validator — the golden files prove the plans are byte-stable, the
+    // validator proves they are *contract*-stable.
+    for policy in [
+        Policy::default(),
+        Policy::naive(),
+        Policy { reusable_mem: false, ..Policy::default() },
+        Policy { efficient_update: false, ..Policy::default() },
+        Policy::three_tier(3, 2),
+        Policy { spill_placement: SpillPlacement::Interleaved, ..Policy::three_tier(5, 2) },
+    ] {
+        let plan = build_plan(12, 3, policy);
+        assert!(
+            validate_plan(&plan, &policy, None).is_ok(),
+            "golden single-device config rejected: {policy:?}"
+        );
+        for devices in [1usize, 2, 4] {
+            for layout in [ShardLayout::Contiguous, ShardLayout::Cyclic] {
+                let spec = ShardSpec::pipeline_microbatched(devices, layout, 1);
+                let plan = build_sharded_plan(12, 3, policy, &spec);
+                assert!(
+                    validate_plan(&plan, &policy, None).is_ok(),
+                    "golden M=1 pipeline config rejected: {policy:?} N={devices} {layout:?}"
+                );
+            }
+        }
+    }
+
+    // Per-partition tiers thread their own DRAM window depths through.
+    let policy = Policy::three_tier(0, 4);
+    let spec = ShardSpec::pipeline(2, ShardLayout::Contiguous);
+    let tiers =
+        [DeviceTier { spilled: 3, dram_slots: 1 }, DeviceTier { spilled: 2, dram_slots: 3 }];
+    let plan = build_sharded_plan_tiered(12, 3, policy, &spec, Some(tiers.as_slice()), None);
+    let dram: Vec<usize> = tiers.iter().map(|t| t.dram_slots).collect();
+    assert!(validate_plan(&plan, &policy, Some(dram.as_slice())).is_ok());
+}
+
+#[test]
+fn validate_plan_rejects_corrupted_plans() {
+    // Rule 19: the checker is not vacuous — removing a dependency, moving a
+    // task to the wrong stream, pointing a dep forward, or validating
+    // against the wrong policy all produce findings.
+    let policy = Policy::default();
+    let good = build_plan(6, 2, policy);
+    assert!(validate_plan(&good, &policy, None).is_ok());
+
+    // (a) dropped dependencies on a mid-plan compute.
+    let mut bad = good.clone();
+    let idx = bad
+        .iter()
+        .position(|t| t.kind == TaskKind::Compute && t.module == Module::Block(2))
+        .expect("block 2 computes somewhere");
+    bad[idx].deps.clear();
+    assert!(validate_plan(&bad, &policy, None).is_err(), "dropped deps must be caught");
+
+    // (b) an upload mis-filed onto the compute stream.
+    let mut bad = good.clone();
+    let idx = bad.iter().position(|t| t.kind == TaskKind::Upload).expect("some upload");
+    bad[idx].stream = StreamId::new(0, StreamKind::Compute);
+    assert!(validate_plan(&bad, &policy, None).is_err(), "wrong stream must be caught");
+
+    // (c) a forward dependency.
+    let mut bad = good.clone();
+    let last = bad.len() - 1;
+    bad[0].deps = vec![last];
+    assert!(validate_plan(&bad, &policy, None).is_err(), "forward dep must be caught");
+
+    // (d) policy mismatch: a 4-slot plan checked against a 1-slot ring.
+    let roomy = Policy { slots: 4, ..Policy::default() };
+    let tight = Policy { slots: 1, ..roomy };
+    let plan = build_plan(8, 2, roomy);
+    assert!(validate_plan(&plan, &roomy, None).is_ok());
+    assert!(
+        validate_plan(&plan, &tight, None).is_err(),
+        "slot-ring depth mismatch must be caught"
+    );
 }
